@@ -1,0 +1,161 @@
+//! End-to-end DB-search driver (paper Fig. 2): open-modification search of
+//! a HEK293-like synthetic query set against a target+decoy library, with
+//! quality compared against ANN-SoLo-like (exact cosine) and HyperOMS-like
+//! (exact binary HD) software baselines at the same 1% FDR.
+//!
+//! Run: `cargo run --release --example db_search [scale]`
+
+use specpcm::baselines::{exact, hd_soft, levels_to_f32};
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::{HdFrontend, SearchPipeline};
+use specpcm::hd;
+use specpcm::ms::{SearchDataset, Spectrum};
+use specpcm::runtime::Runtime;
+use specpcm::search::fdr_filter;
+use specpcm::telemetry::render_table;
+
+/// Run a software baseline: score all queries vs all refs (targets then
+/// decoys), pick best target/decoy per query, FDR-filter, count correct.
+fn baseline_identify(
+    scores: impl Fn(usize) -> Vec<f32>, // per-query score row over all refs
+    ds: &SearchDataset,
+    fdr: f64,
+) -> (usize, usize) {
+    let nt = ds.library.len();
+    let mut pairs = Vec::with_capacity(ds.queries.len());
+    let mut matched: Vec<Option<u32>> = Vec::with_capacity(ds.queries.len());
+    for qi in 0..ds.queries.len() {
+        let row = scores(qi);
+        let (ti, ts) = row[..nt]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap();
+        let dsc = row[nt..].iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        pairs.push((*ts, dsc));
+        matched.push(ds.library[ti].peptide_id);
+    }
+    let r = fdr_filter(&pairs, fdr);
+    let correct = r
+        .accepted
+        .iter()
+        .filter(|&&qi| matched[qi].is_some() && matched[qi] == ds.queries[qi].peptide_id)
+        .count();
+    (r.accepted.len(), correct)
+}
+
+fn main() -> anyhow::Result<()> {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+
+    let cfg = SpecPcmConfig::paper_search();
+    let ds = SearchDataset::hek293_like(cfg.seed, scale);
+    println!(
+        "dataset: {} -> {} queries vs {} targets + {} decoys (stands in for {} queries x {} refs)",
+        ds.name,
+        ds.queries.len(),
+        ds.library.len(),
+        ds.decoys.len(),
+        ds.paper_queries,
+        ds.paper_library
+    );
+
+    let mut rt = Runtime::load(&cfg.artifacts_dir).ok();
+    println!(
+        "execution path: {}",
+        if rt.is_some() { "PJRT artifacts (D=8192, MLC3)" } else { "rust reference" }
+    );
+
+    // ---- SpecPCM ------------------------------------------------------------
+    let fdr = cfg.fdr;
+    let t0 = std::time::Instant::now();
+    let out = SearchPipeline::new(cfg.clone()).run(&ds, rt.as_mut())?;
+    let host_s = t0.elapsed().as_secs_f64();
+    println!("\n== SpecPCM (simulated accelerator) ==");
+    println!(
+        "  identified {}/{} at {:.0}% FDR ({} correct, {} distinct peptides)",
+        out.identified,
+        out.total_queries,
+        fdr * 100.0,
+        out.correct,
+        out.identified_peptides.len()
+    );
+    println!("  array MVMs: {}   program rounds: {}", out.ops.mvm_ops, out.ops.program_rounds);
+    println!(
+        "  simulated: {:.4} mJ, {:.4} ms (overlapped)",
+        out.report.total_j() * 1e3,
+        out.report.overlapped_latency_s() * 1e3
+    );
+    for (stage, t, f) in out.wall.breakdown() {
+        println!("    {stage:<20} {t:>8.3} s  {:>5.1}%", f * 100.0);
+    }
+
+    // ---- Baselines ------------------------------------------------------------
+    let fe = HdFrontend::new(&cfg);
+    let all_refs: Vec<&Spectrum> = ds.library.iter().chain(ds.decoys.iter()).collect();
+    let ref_levels = fe.levels_of(&all_refs);
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let q_levels = fe.levels_of(&queries);
+
+    // ANN-SoLo-like: exact cosine with the shifted-dot-product open-mod
+    // alignment (see baselines::exact::search_scores_shifted).
+    let t0 = std::time::Instant::now();
+    let ref_floats: Vec<Vec<f32>> = ref_levels.iter().map(|l| levels_to_f32(l)).collect();
+    let bin_w = (1900.0 - 100.0) / 512.0;
+    let shifts: Vec<i64> = specpcm::ms::synth::PTM_SHIFTS
+        .iter()
+        .map(|&d| (d / bin_w).round() as i64)
+        .collect();
+    let (ann_id, ann_ok) = baseline_identify(
+        |qi| exact::search_scores_shifted(&levels_to_f32(&q_levels[qi]), &ref_floats, &shifts),
+        &ds,
+        fdr,
+    );
+    let ann_s = t0.elapsed().as_secs_f64();
+
+    // HyperOMS-like exact binary HD.
+    let t0 = std::time::Instant::now();
+    let ref_hvs: Vec<hd::Hv> = ref_levels.iter().map(|l| hd::encode(l, &fe.im)).collect();
+    let (oms_id, oms_ok) = baseline_identify(
+        |qi| hd_soft::search_scores(&hd::encode(&q_levels[qi], &fe.im), &ref_hvs),
+        &ds,
+        fdr,
+    );
+    let oms_s = t0.elapsed().as_secs_f64();
+
+    let rows = vec![
+        vec![
+            "ANN-SoLo-like (shifted cosine)".into(),
+            format!("{ann_id}"),
+            format!("{ann_ok}"),
+            format!("{ann_s:.2}s"),
+        ],
+        vec![
+            "HyperOMS-like (exact HD)".into(),
+            format!("{oms_id}"),
+            format!("{oms_ok}"),
+            format!("{oms_s:.2}s"),
+        ],
+        vec![
+            "SpecPCM (MLC3 + PCM noise)".into(),
+            format!("{}", out.identified),
+            format!("{}", out.correct),
+            format!("{host_s:.2}s host"),
+        ],
+    ];
+    println!(
+        "\n{}",
+        render_table(
+            "identifications at 1% FDR (synthetic HEK293-like)",
+            &["tool", "identified", "correct", "host time"],
+            &rows
+        )
+    );
+    println!(
+        "expected shape (paper Fig. 10): ANN-SoLo highest, SpecPCM within a few\n\
+         percent of HyperOMS (the MLC/ADC/noise cost), all well above chance."
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Design-space exploration (paper §IV-B "Accuracy and efficiency
+//! trade-offs"): sweeps the ISA-controlled knobs — bits per cell, ADC
+//! precision, write-verify cycles — on a fixed search workload and prints
+//! the quality/energy/latency matrix the instruction set lets software
+//! navigate.
+//!
+//! Run: `cargo run --release --example design_space`
+
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::SearchPipeline;
+use specpcm::ms::SearchDataset;
+use specpcm::runtime::Runtime;
+use specpcm::telemetry::render_table;
+
+fn main() -> anyhow::Result<()> {
+    let base = SpecPcmConfig {
+        hd_dim: 2048, // keep the sweep fast; shapes match D=8192
+        ..SpecPcmConfig::paper_search()
+    };
+    let ds = SearchDataset::iprg2012_like(base.seed, 0.3);
+    println!(
+        "workload: {} queries vs {} refs (+decoys), D={}, FDR {:.0}%\n",
+        ds.queries.len(),
+        ds.library.len(),
+        base.hd_dim,
+        base.fdr * 100.0
+    );
+    let mut rt = Runtime::load(&base.artifacts_dir).ok();
+
+    let mut rows = Vec::new();
+    let mut run = |label: String, cfg: SpecPcmConfig| -> anyhow::Result<()> {
+        let out = SearchPipeline::new(cfg).run(&ds, rt.as_mut())?;
+        rows.push(vec![
+            label,
+            format!("{}", out.identified),
+            format!("{}", out.correct),
+            format!("{:.4}", out.report.total_j() * 1e3),
+            format!("{:.4}", out.report.overlapped_latency_s() * 1e3),
+        ]);
+        Ok(())
+    };
+
+    // (1) bits per cell (§IV-B (1)): SLC / MLC2 / MLC3.
+    for mlc in [1u8, 2, 3] {
+        run(
+            format!("MLC{mlc} (n={mlc})"),
+            SpecPcmConfig { mlc_bits: mlc, ..base.clone() },
+        )?;
+    }
+    // (2) ADC resolution (§IV-B (4)): 6 -> 1 bits.
+    for adc in [6u32, 4, 3, 2, 1] {
+        run(
+            format!("ADC {adc}-bit"),
+            SpecPcmConfig { adc_bits: adc, ..base.clone() },
+        )?;
+    }
+    // (3) write-verify cycles (§IV-B (3)).
+    for wv in [0u32, 1, 3, 6] {
+        run(
+            format!("write-verify x{wv}"),
+            SpecPcmConfig { write_verify: wv, ..base.clone() },
+        )?;
+    }
+
+    println!(
+        "{}",
+        render_table(
+            "design space (fixed workload)",
+            &["config", "identified", "correct", "energy mJ", "latency ms"],
+            &rows
+        )
+    );
+    println!(
+        "expected shapes (paper Figs. 9/10, S3): identifications fall slowly\n\
+         from SLC to MLC3; 4-bit ADC nearly matches 6-bit at ~4x less ADC\n\
+         energy; more write-verify raises quality and programming latency."
+    );
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Quickstart: the whole SpecPCM stack in ~60 lines.
+//!
+//! Generates a small synthetic MS workload, runs both paper pipelines
+//! (spectral clustering + DB search) through the analog-IMC simulator, and
+//! prints quality plus the simulated energy/latency of the accelerator.
+//! Uses the AOT PJRT artifacts when `artifacts/` exists, else the
+//! bit-identical rust reference path.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use specpcm::cluster::quality::clustered_at_incorrect;
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::{ClusteringPipeline, SearchPipeline};
+use specpcm::ms::{ClusteringDataset, SearchDataset};
+use specpcm::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let mut rt = Runtime::load("artifacts").ok();
+    match &rt {
+        Some(r) => println!("PJRT runtime up (platform: {})", r.platform()),
+        None => println!("artifacts/ not built; using the rust reference path"),
+    }
+
+    // --- Clustering (paper Fig. 1; defaults from §IV-A) -------------------
+    let cfg = SpecPcmConfig {
+        bucket_width: 50.0,
+        ..SpecPcmConfig::paper_clustering()
+    };
+    let ds = ClusteringDataset::pxd001468_like(cfg.seed, 0.2);
+    println!("\n[clustering] {} spectra ({})", ds.len(), ds.name);
+    let out = ClusteringPipeline::new(cfg).run(&ds, rt.as_mut())?;
+    println!(
+        "  clustered {:.1}% of spectra at <=1.5% incorrect ratio",
+        100.0 * clustered_at_incorrect(&out.curve, 0.015)
+    );
+    println!(
+        "  simulated accelerator: {:.3} mJ, {:.3} ms ({} array MVMs)",
+        out.report.total_j() * 1e3,
+        out.report.overlapped_latency_s() * 1e3,
+        out.ops.mvm_ops
+    );
+
+    // --- DB search (paper Fig. 2) -----------------------------------------
+    let cfg = SpecPcmConfig {
+        hd_dim: 2048, // keep the quickstart snappy; the paper default is 8192
+        ..SpecPcmConfig::paper_search()
+    };
+    let fdr = cfg.fdr;
+    let ds = SearchDataset::iprg2012_like(cfg.seed, 0.15);
+    println!(
+        "\n[db search] {} queries vs {} refs + {} decoys ({})",
+        ds.queries.len(),
+        ds.library.len(),
+        ds.decoys.len(),
+        ds.name
+    );
+    let out = SearchPipeline::new(cfg).run(&ds, rt.as_mut())?;
+    println!(
+        "  identified {}/{} queries at {:.0}% FDR ({} ground-truth correct)",
+        out.identified,
+        out.total_queries,
+        fdr * 100.0,
+        out.correct
+    );
+    println!(
+        "  simulated accelerator: {:.3} mJ, {:.3} ms",
+        out.report.total_j() * 1e3,
+        out.report.overlapped_latency_s() * 1e3
+    );
+
+    if let Some(r) = &rt {
+        println!("\nartifact executions: {:?}", r.exec_counts);
+    }
+    Ok(())
+}

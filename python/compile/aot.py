@@ -1,0 +1,174 @@
+"""AOT-lower every SpecPCM graph variant to HLO text + manifest.json.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` rust crate) rejects with
+``proto.id() <= INT_MAX``. The HLO text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+AOT shapes are static, so we emit one executable per model variant (one
+per HD dimension / bits-per-cell combination the evaluation sweeps) plus a
+manifest the rust runtime uses to pick and pad. Run via ``make artifacts``;
+python never runs on the request path.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.pack import padded_packed_len
+
+# Fixed batch geometry (rust pads to these; see rust/src/coordinator/).
+BATCH = 64  # spectra per encoder call / queries per MVM call
+ROWS = 1024  # reference rows per MVM call = 8 stacked 128-row arrays
+FEATURES = 512  # m/z feature positions per preprocessed spectrum
+LEVELS = 64  # intensity quantization levels (m in Eq. 1)
+
+# (D, n) variants: paper defaults are D=2048 for clustering, D=8192 for DB
+# search, n in {1 (SLC), 2 (MLC2), 3 (MLC3)}; the extra D points feed the
+# Fig. S4/S5 dimension sweeps.
+ENC_VARIANTS = [
+    (512, 3),
+    (1024, 3),
+    (2048, 1),
+    (2048, 2),
+    (2048, 3),
+    (4096, 3),
+    (8192, 1),
+    (8192, 3),
+]
+
+
+def mvm_variants() -> list[int]:
+    """Distinct padded packed widths implied by ENC_VARIANTS."""
+    return sorted({padded_packed_len(d, n) for d, n in ENC_VARIANTS})
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_enc_pack(d: int, n: int) -> str:
+    fn = partial(model.encode_pack, n=n)
+    lowered = jax.jit(fn).lower(
+        _spec((BATCH, FEATURES), jnp.int32),
+        _spec((FEATURES, d)),
+        _spec((LEVELS, d)),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_mvm(c: int) -> str:
+    lowered = jax.jit(model.mvm_scores).lower(
+        _spec((BATCH, c)),
+        _spec((ROWS, c)),
+        _spec((1, 1)),
+        _spec((1, 1)),
+    )
+    return to_hlo_text(lowered)
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = []
+
+    for d, n in ENC_VARIANTS:
+        name = f"enc_pack_d{d}_n{n}"
+        text = lower_enc_pack(d, n)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "kind": "enc_pack",
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "params": {
+                    "d": d,
+                    "n": n,
+                    "batch": BATCH,
+                    "features": FEATURES,
+                    "levels": LEVELS,
+                    "packed": padded_packed_len(d, n),
+                },
+                "inputs": [
+                    {"name": "levels", "shape": [BATCH, FEATURES], "dtype": "s32"},
+                    {"name": "id_hvs", "shape": [FEATURES, d], "dtype": "f32"},
+                    {"name": "level_hvs", "shape": [LEVELS, d], "dtype": "f32"},
+                ],
+                "outputs": [
+                    {
+                        "name": "packed_hvs",
+                        "shape": [BATCH, padded_packed_len(d, n)],
+                        "dtype": "f32",
+                    }
+                ],
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars")
+
+    for c in mvm_variants():
+        name = f"mvm_c{c}"
+        text = lower_mvm(c)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        artifacts.append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "kind": "mvm",
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "params": {"c": c, "batch": BATCH, "rows": ROWS},
+                "inputs": [
+                    {"name": "queries", "shape": [BATCH, c], "dtype": "f32"},
+                    {"name": "refs", "shape": [ROWS, c], "dtype": "f32"},
+                    {"name": "adc_lsb", "shape": [1, 1], "dtype": "f32"},
+                    {"name": "adc_qmax", "shape": [1, 1], "dtype": "f32"},
+                ],
+                "outputs": [
+                    {"name": "scores", "shape": [BATCH, ROWS], "dtype": "f32"}
+                ],
+            }
+        )
+        print(f"lowered {name}: {len(text)} chars")
+
+    manifest = {
+        "schema": 1,
+        "batch": BATCH,
+        "rows": ROWS,
+        "features": FEATURES,
+        "levels": LEVELS,
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    manifest = build_all(args.out_dir)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

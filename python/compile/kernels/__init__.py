@@ -1,0 +1,20 @@
+"""Layer-1 Pallas kernels for the SpecPCM analog-IMC pipeline.
+
+Every kernel here lowers with ``interpret=True`` so that the resulting HLO
+runs on any PJRT backend (the rust coordinator uses the CPU client). Real
+TPU lowering would emit Mosaic custom-calls the CPU plugin cannot execute;
+see DESIGN.md §2 and /opt/xla-example/README.md.
+"""
+
+from .imc_mvm import imc_mvm, adc_params, DAC_BITS, ARRAY_DIM
+from .pack import pack_dims
+from . import ref
+
+__all__ = [
+    "imc_mvm",
+    "adc_params",
+    "DAC_BITS",
+    "ARRAY_DIM",
+    "pack_dims",
+    "ref",
+]

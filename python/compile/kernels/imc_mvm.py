@@ -1,0 +1,134 @@
+"""Pallas kernel: analog in-memory-computing matrix-vector multiply.
+
+This is the paper's compute hot-spot (SpecPCM §III-C): a 128x128 2T2R PCM
+array performs a signed dot product between a DAC-driven input vector on the
+source lines and the conductances stored in every row simultaneously; the
+bit-line partial sums are digitized by a shared 6-bit flash ADC.
+
+TPU adaptation (DESIGN.md §3): one PCM array == one 128x128 Pallas block.
+The grid iterates (row-tile, col-tile); each step performs one 128x128
+block matmul (MXU-shaped) with the DAC quantization fused on the input side
+and the flash-ADC transfer function fused on the partial sums, exactly
+mirroring the per-array analog path. Accumulation across col-tiles models
+the digital accumulation of per-array partial sums in the near-memory ASIC.
+
+Numeric contract (shared bit-exactly with the rust reference
+`rust/src/array/transfer.rs` and the jnp oracle `ref.py`):
+
+    dac(x)   = clip(round_away(x), -2^(DAC_BITS-1), 2^(DAC_BITS-1)-1)
+    part     = dac(q_tile) @ g_tile^T                       (f32, exact)
+    adc(s)   = clip(round_away(s / lsb), -(qmax+1), qmax) * lsb
+    score    = sum over col-tiles of adc(part)
+
+where round_away is round-half-away-from-zero (rust ``f32::round``).
+Conductance non-idealities (programming noise after write-verify, drift)
+are applied by the device model *when the refs are programmed*, i.e. the
+``g`` argument already carries them; see rust/src/device/.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Geometry of one PCM bank array (paper Table 1): 128x128 2T2R cells.
+ARRAY_DIM = 128
+# Source-line DAC resolution (paper Table 1): 3-bit signed.
+DAC_BITS = 3
+
+_DAC_LO = float(-(2 ** (DAC_BITS - 1)))  # -4
+_DAC_HI = float(2 ** (DAC_BITS - 1) - 1)  # +3
+
+
+def adc_params(adc_bits: int, clip: float) -> tuple[float, float]:
+    """Derive the flash-ADC (lsb, qmax) pair from a bit width and full-scale.
+
+    ``qmax`` is the largest positive code; codes span [-(qmax+1), qmax].
+    The rust side computes the same pair in ``rust/src/array/adc.rs``.
+
+    Exactness note: when ``clip`` is a power of two the LSB is too, and the
+    whole pipeline (integer packed values -> integer partial sums -> code *
+    lsb -> accumulation) stays exactly representable in f32, making the
+    XLA-compiled kernel bit-identical to the oracle and to the rust
+    reference regardless of FMA contraction. The coordinator therefore
+    always rounds the configured full-scale up to a power of two.
+    """
+    if not 1 <= adc_bits <= 20:
+        raise ValueError(f"adc_bits out of range: {adc_bits}")
+    qmax = float(2 ** (adc_bits - 1) - 1)
+    lsb = clip / float(2 ** (adc_bits - 1))
+    return lsb, qmax
+
+
+def _round_away(x):
+    """Round half away from zero — matches rust ``f32::round``."""
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def _imc_mvm_kernel(lsb_ref, qmax_ref, q_ref, g_ref, o_ref):
+    c = pl.program_id(0)
+    lsb = lsb_ref[0, 0]
+    qmax = qmax_ref[0, 0]
+
+    # DAC: the SL drivers can only realize 2^DAC_BITS signed input levels.
+    q = jnp.clip(_round_away(q_ref[...]), _DAC_LO, _DAC_HI)
+    g = g_ref[...]
+
+    # Analog MAC across every bank holding this 128-column segment at once:
+    # each 128-row slice of `g` is one physical array, but the per-element
+    # partial sum is independent of row tiling, so all R rows multiply in a
+    # single (B, 128) @ (128, R) MXU-shaped matmul. (Perf note: the original
+    # kernel also gridded over 128-row tiles; collapsing the row dimension
+    # cut the grid from R/128 * C/128 tiny steps to C/128 large ones — see
+    # EXPERIMENTS.md §Perf L1.)
+    part = jnp.dot(q, g.T)
+
+    # Flash ADC on the bit-line voltages (per 128-col array segment => per
+    # grid step, fused here).
+    y = jnp.clip(_round_away(part / lsb), -(qmax + 1.0), qmax) * lsb
+
+    @pl.when(c == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += y
+
+
+@partial(jax.jit, static_argnames=())
+def imc_mvm(queries, refs, adc_lsb, adc_qmax):
+    """Batched analog-IMC MVM: scores[b, r] = <queries[b], refs[r]> via PCM.
+
+    Args:
+      queries:  (B, C) f32 packed query HVs (values in [-n, n]).
+      refs:     (R, C) f32 packed, *device-noised* reference conductances.
+      adc_lsb:  (1, 1) f32 — ADC LSB (runtime scalar so one AOT artifact
+                serves every ISA ``ADC_bits`` setting).
+      adc_qmax: (1, 1) f32 — largest positive ADC code.
+
+    Returns:
+      (B, R) f32 scores, the sum of per-array ADC outputs.
+
+    B, R, C must be multiples of ARRAY_DIM (the coordinator pads).
+    """
+    b, c = queries.shape
+    r, c2 = refs.shape
+    if c != c2:
+        raise ValueError(f"queries C={c} != refs C={c2}")
+    if r % ARRAY_DIM or c % ARRAY_DIM:
+        raise ValueError(f"R={r}, C={c} must be multiples of {ARRAY_DIM}")
+
+    grid = (c // ARRAY_DIM,)
+    return pl.pallas_call(
+        _imc_mvm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),  # adc_lsb
+            pl.BlockSpec((1, 1), lambda j: (0, 0)),  # adc_qmax
+            pl.BlockSpec((b, ARRAY_DIM), lambda j: (0, j)),  # queries
+            pl.BlockSpec((r, ARRAY_DIM), lambda j: (0, j)),  # refs
+        ],
+        out_specs=pl.BlockSpec((b, r), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r), jnp.float32),
+        interpret=True,
+    )(adc_lsb, adc_qmax, queries, refs)

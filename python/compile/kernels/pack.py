@@ -1,0 +1,62 @@
+"""Pallas kernel: HD dimension packing (SpecPCM §III-B).
+
+Dimension packing converts a binary (+/-1) hypervector of length D into a
+compressed vector of length ceil(D/n) by summing n adjacent elements, so a
+single n-bit MLC PCM cell stores what previously needed n SLC cells. The
+packed values lie in {-n, -n+2, ..., n} and are exactly representable by
+the 2T2R differential pair.
+
+The kernel runs at encode time inside the near-memory ASIC in the paper;
+here it is fused into the encoder artifact so the rust coordinator receives
+array-ready packed HVs in one PJRT call.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .imc_mvm import ARRAY_DIM
+
+
+def packed_len(d: int, n: int) -> int:
+    """Packed length before array-tile padding."""
+    return -(-d // n)
+
+
+def padded_packed_len(d: int, n: int) -> int:
+    """Packed length padded up to a multiple of ARRAY_DIM (coordinator pads
+    queries/refs identically, and zero columns contribute nothing)."""
+    p = packed_len(d, n)
+    return -(-p // ARRAY_DIM) * ARRAY_DIM
+
+
+def _pack_kernel(n: int, hv_ref, o_ref):
+    x = hv_ref[...]  # (B, ARRAY_DIM * n)
+    b = x.shape[0]
+    o_ref[...] = x.reshape(b, ARRAY_DIM, n).sum(axis=-1)
+
+
+def pack_dims(hv, n: int):
+    """Pack (B, D) +/-1 hypervectors into (B, padded_packed_len(D, n)).
+
+    D is zero-padded to n * padded_packed_len first; zero elements do not
+    change the adjacent-sum, so the tail packed values are exact.
+    """
+    b, d = hv.shape
+    cp = padded_packed_len(d, n)
+    dp = cp * n
+    if dp != d:
+        hv = jnp.pad(hv, ((0, 0), (0, dp - d)))
+
+    if n == 1:
+        return hv  # packing is the identity for SLC
+
+    grid = (cp // ARRAY_DIM,)
+    return pl.pallas_call(
+        lambda hv_ref, o_ref: _pack_kernel(n, hv_ref, o_ref),
+        grid=grid,
+        in_specs=[pl.BlockSpec((b, ARRAY_DIM * n), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((b, ARRAY_DIM), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, cp), jnp.float32),
+        interpret=True,
+    )(hv)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracle for every Pallas kernel and L2 graph.
+
+These reference implementations use no Pallas, no tiling and no fused
+quantization tricks — just the written-out math from DESIGN.md §2/§3. The
+pytest suite asserts the production kernels match them exactly (the whole
+pipeline is integer-valued until the ADC divide, so exact equality holds).
+"""
+
+import jax.numpy as jnp
+
+from .imc_mvm import ARRAY_DIM, DAC_BITS
+
+
+def round_away(x):
+    """Round half away from zero (matches rust ``f32::round``)."""
+    return jnp.sign(x) * jnp.floor(jnp.abs(x) + 0.5)
+
+
+def dac(x, bits: int = DAC_BITS):
+    lo = -(2 ** (bits - 1))
+    hi = 2 ** (bits - 1) - 1
+    return jnp.clip(round_away(x), float(lo), float(hi))
+
+
+def adc(s, lsb: float, qmax: float):
+    # f32 throughout: the production kernel receives lsb as an f32 runtime
+    # scalar, so the oracle must quantize with the identical value.
+    lsb = jnp.float32(lsb)
+    qmax = jnp.float32(qmax)
+    return jnp.clip(round_away(s / lsb), -(qmax + 1.0), qmax) * lsb
+
+
+def imc_mvm(queries, refs, lsb: float, qmax: float):
+    """Tiled-ADC analog MVM, written directly from the math.
+
+    The ADC applies per 128-column tile (per physical array), so the oracle
+    must also quantize per tile before accumulating.
+    """
+    b, c = queries.shape
+    r, _ = refs.shape
+    assert c % ARRAY_DIM == 0 and r % ARRAY_DIM == 0
+    q = dac(queries)
+    out = jnp.zeros((b, r), jnp.float32)
+    for j in range(c // ARRAY_DIM):
+        sl = slice(j * ARRAY_DIM, (j + 1) * ARRAY_DIM)
+        part = q[:, sl] @ refs[:, sl].T
+        out = out + adc(part, lsb, qmax)
+    return out
+
+
+def pack_dims(hv, n: int):
+    """Adjacent-sum packing with zero padding to a 128-multiple output."""
+    b, d = hv.shape
+    p = -(-d // n)
+    cp = -(-p // ARRAY_DIM) * ARRAY_DIM
+    hv = jnp.pad(hv, ((0, 0), (0, cp * n - d)))
+    return hv.reshape(b, cp, n).sum(axis=-1)
+
+
+def sign_pm1(x):
+    """sign with the tie rule sign(0) = +1 (shared with rust/src/hd)."""
+    return jnp.where(x >= 0, 1.0, -1.0)
+
+
+def encode(levels, id_hvs, level_hvs):
+    """ID-level HD encoding (paper Eq. 1): HV = sign(sum over present peaks
+    of LV[lvl_f] * ID_f).
+
+    Level 0 means "no peak in this m/z bin" and contributes nothing: MS
+    spectra are sparse, and summing empty bins would give all spectra a
+    large shared baseline similarity (matches rust/src/hd/encoder.rs).
+
+    levels:    (B, F) int32 quantized intensity level per feature position.
+    id_hvs:    (F, D) +/-1 — one random ID hypervector per m/z position.
+    level_hvs: (m, D) +/-1 — intensity-level hypervectors.
+    """
+    gathered = level_hvs[levels]  # (B, F, D)
+    mask = (levels > 0).astype(jnp.float32)[:, :, None]
+    acc = (gathered * id_hvs[None, :, :] * mask).sum(axis=1)
+    return sign_pm1(acc)
+
+
+def encode_pack(levels, id_hvs, level_hvs, n: int):
+    return pack_dims(encode(levels, id_hvs, level_hvs), n)

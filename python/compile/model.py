@@ -1,0 +1,61 @@
+"""Layer-2 jax graphs for SpecPCM.
+
+Two compute graphs cover the whole paper pipeline; both are AOT-lowered to
+HLO text by ``aot.py`` and executed from rust via PJRT:
+
+* ``encode_pack`` — ID-level HD encoding (Eq. 1) followed by dimension
+  packing (§III-B). Maps to the paper's near-memory ASIC encoder + packer.
+* ``mvm_scores``  — the analog IMC MVM (Pallas kernel ``imc_mvm``), the
+  paper's PCM-array hot path used by both clustering distance calculation
+  and DB-search Hamming similarity.
+
+The encoder deliberately scans over feature positions: a direct gather of
+(B, F, D) level HVs would materialize O(64 * 512 * 8192) floats; the scan
+keeps the working set at (B, D) per step and lowers to a compact HLO while
+loop that XLA:CPU pipelines well.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import imc_mvm, pack_dims
+from .kernels.ref import sign_pm1
+
+
+def encode(levels, id_hvs, level_hvs):
+    """ID-level HD encoding: HV[b] = sign(sum over present peaks of
+    LV[levels[b, f]] * ID[f]).
+
+    Level 0 marks an empty m/z bin and contributes nothing (see
+    kernels/ref.py::encode and rust/src/hd/encoder.rs for the rationale).
+
+    Args:
+      levels:    (B, F) int32 — quantized intensity level per m/z position.
+      id_hvs:    (F, D) f32 +/-1 — position (ID) hypervectors.
+      level_hvs: (m, D) f32 +/-1 — intensity-level hypervectors.
+    Returns:
+      (B, D) f32 +/-1 binary hypervectors.
+    """
+    b, f = levels.shape
+    d = id_hvs.shape[1]
+
+    def step(acc, inputs):
+        lv_idx, id_hv = inputs  # (B,), (D,)
+        mask = (lv_idx > 0).astype(jnp.float32)[:, None]
+        acc = acc + jnp.take(level_hvs, lv_idx, axis=0) * id_hv[None, :] * mask
+        return acc, None
+
+    acc0 = jnp.zeros((b, d), jnp.float32)
+    acc, _ = jax.lax.scan(step, acc0, (levels.T, id_hvs))
+    return sign_pm1(acc)
+
+
+def encode_pack(levels, id_hvs, level_hvs, n: int):
+    """Encoder + dimension packing, fused into one artifact (one PJRT call
+    per spectra batch from the rust hot path)."""
+    return pack_dims(encode(levels, id_hvs, level_hvs), n)
+
+
+def mvm_scores(queries, refs, adc_lsb, adc_qmax):
+    """Analog IMC similarity scores; see kernels/imc_mvm.py for the contract."""
+    return imc_mvm(queries, refs, adc_lsb, adc_qmax)

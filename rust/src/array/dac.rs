@@ -1,0 +1,48 @@
+//! 3-bit source-line DAC (Table 1) — input quantization.
+//!
+//! Mirrors `python/compile/kernels/imc_mvm.py::_imc_mvm_kernel`'s DAC step:
+//! `clip(round_away(x), -2^(b-1), 2^(b-1)-1)`.
+
+use super::DAC_BITS;
+use crate::util::round_away;
+
+/// Quantize one source-line drive value.
+#[inline]
+pub fn dac_quantize(x: f32) -> f32 {
+    dac_quantize_bits(x, DAC_BITS)
+}
+
+/// Quantize with an explicit bit width (tests sweep this).
+#[inline]
+pub fn dac_quantize_bits(x: f32, bits: u32) -> f32 {
+    let lo = -((1i64 << (bits - 1)) as f32);
+    let hi = ((1i64 << (bits - 1)) - 1) as f32;
+    round_away(x).clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_on_packed_alphabet() {
+        // Packed values for n <= 3 fit the 3-bit range exactly.
+        for v in -3..=3 {
+            assert_eq!(dac_quantize(v as f32), v as f32);
+        }
+    }
+
+    #[test]
+    fn clips_out_of_range() {
+        assert_eq!(dac_quantize(100.0), 3.0);
+        assert_eq!(dac_quantize(-100.0), -4.0);
+        assert_eq!(dac_quantize(4.0), 3.0);
+    }
+
+    #[test]
+    fn rounds_half_away_from_zero() {
+        assert_eq!(dac_quantize(0.5), 1.0);
+        assert_eq!(dac_quantize(-0.5), -1.0);
+        assert_eq!(dac_quantize(1.4), 1.0);
+    }
+}

@@ -1,0 +1,29 @@
+//! Analog IMC array simulator (paper §III-C, Table 1).
+//!
+//! One bank is a 128x128 array of 2T2R PCM cell pairs with per-column
+//! 3-bit DACs on the source lines, 16 shared 6-bit flash ADCs on the bit
+//! lines, and SL/WL driver peripherals. The numeric transfer function here
+//! is the *same math* as the L1 Pallas kernel (bit-exact for power-of-two
+//! ADC full-scales); this module additionally owns the cycle-accurate
+//! timing model used by the energy/latency accounting.
+
+pub mod adc;
+pub mod bank;
+pub mod dac;
+pub mod timing;
+pub mod transfer;
+
+pub use adc::AdcConfig;
+pub use bank::ArrayBank;
+pub use dac::dac_quantize;
+pub use timing::TimingModel;
+pub use transfer::imc_mvm_ref;
+
+/// Array geometry (Table 1): 128x128 2T2R cells per bank.
+pub const ARRAY_DIM: usize = 128;
+/// Source-line DAC resolution (Table 1).
+pub const DAC_BITS: u32 = 3;
+/// Flash-ADC maximum resolution (Table 1); reconfigurable 1..=6 (§III-D).
+pub const ADC_MAX_BITS: u32 = 6;
+/// ADC units per bank; each shared across eight rows (Table 1).
+pub const ADC_UNITS: usize = 16;

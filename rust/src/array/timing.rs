@@ -1,0 +1,92 @@
+//! Cycle-accurate timing model (paper §III-C, §IV-A, supplementary S.B).
+//!
+//! The system clocks at 500 MHz (40 nm CMOS). Headline facts from the
+//! paper: a full in-array MVM — DAC input generation, analog MAC on all
+//! activated rows, and the shared-ADC conversion sweep — takes **10
+//! cycles**; programming a PCM array (one pulse round) takes **20 ns (10
+//! cycles)**; most peripheral component operations complete in one cycle.
+
+
+
+#[derive(Clone, Copy, Debug)]
+pub struct TimingModel {
+    /// Core clock (Hz). Paper: 500 MHz.
+    pub clock_hz: f64,
+    /// Cycles for one whole-array IMC MVM including DAC setup (paper: 10).
+    pub mvm_cycles: u64,
+    /// Cycles per programming pulse round (paper: 20 ns = 10 cycles).
+    pub program_cycles: u64,
+    /// Cycles for a normal row read through the sense amps.
+    pub read_cycles: u64,
+    /// Cycles for one verify read + compare during write-verify.
+    pub verify_cycles: u64,
+    /// ASIC encoder cycles per spectrum (pipelined HLS block: one feature
+    /// position per cycle).
+    pub encode_cycles_per_feature: u64,
+    /// ASIC packing cycles per packed output element.
+    pub pack_cycles_per_element: u64,
+    /// ASIC cycles per distance-matrix merge update element (complete
+    /// linkage max + compare).
+    pub merge_cycles_per_element: u64,
+}
+
+impl Default for TimingModel {
+    fn default() -> Self {
+        TimingModel {
+            clock_hz: 500e6,
+            mvm_cycles: 10,
+            program_cycles: 10,
+            read_cycles: 1,
+            verify_cycles: 2,
+            encode_cycles_per_feature: 1,
+            pack_cycles_per_element: 1,
+            merge_cycles_per_element: 1,
+        }
+    }
+}
+
+impl TimingModel {
+    #[inline]
+    pub fn cycle_s(&self) -> f64 {
+        1.0 / self.clock_hz
+    }
+
+    #[inline]
+    pub fn cycles_to_s(&self, cycles: u64) -> f64 {
+        cycles as f64 * self.cycle_s()
+    }
+
+    /// Latency of one whole-array MVM.
+    pub fn mvm_s(&self) -> f64 {
+        self.cycles_to_s(self.mvm_cycles)
+    }
+
+    /// Latency of one programming pulse round.
+    pub fn program_pulse_s(&self) -> f64 {
+        self.cycles_to_s(self.program_cycles)
+    }
+
+    /// Latency to encode one spectrum of `features` positions in the ASIC.
+    pub fn encode_s(&self, features: usize) -> f64 {
+        self.cycles_to_s(self.encode_cycles_per_feature * features as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_headline_numbers() {
+        let t = TimingModel::default();
+        assert_eq!(t.cycle_s(), 2e-9);
+        assert_eq!(t.mvm_s(), 20e-9); // 10 cycles @ 500 MHz = 20 ns
+        assert_eq!(t.program_pulse_s(), 20e-9); // paper: 20 ns
+    }
+
+    #[test]
+    fn encode_latency_scales_with_features() {
+        let t = TimingModel::default();
+        assert_eq!(t.encode_s(512), 512.0 * 2e-9);
+    }
+}

@@ -1,0 +1,130 @@
+//! Reference analog-IMC MVM transfer function — the rust mirror of the L1
+//! Pallas kernel (`python/compile/kernels/imc_mvm.py`) and the jnp oracle
+//! (`kernels/ref.py`).
+//!
+//! Used (a) by integration tests to check the PJRT-executed artifact
+//! bit-exactly, and (b) as a no-artifacts fallback execution path so the
+//! simulator is usable without a built `artifacts/` tree.
+
+use super::adc::AdcConfig;
+use super::dac::dac_quantize;
+use super::ARRAY_DIM;
+
+/// scores[b][r] = sum over 128-col tiles of ADC( DAC(q_tile) . g_tile ).
+///
+/// * `queries`: B x C row-major, packed query HVs.
+/// * `refs`:    R x C row-major, stored (noisy) conductance differences.
+/// * C must be a multiple of [`ARRAY_DIM`]; R and B are unconstrained here
+///   (the physical row-block granularity is enforced by the coordinator).
+pub fn imc_mvm_ref(
+    queries: &[f32],
+    refs: &[f32],
+    b: usize,
+    r: usize,
+    c: usize,
+    adc: AdcConfig,
+) -> Vec<f32> {
+    assert_eq!(queries.len(), b * c, "queries shape");
+    assert_eq!(refs.len(), r * c, "refs shape");
+    assert_eq!(c % ARRAY_DIM, 0, "C must be a multiple of {ARRAY_DIM}");
+
+    // DAC once per query element (the SL drivers hold the driven levels).
+    let dacq: Vec<f32> = queries.iter().map(|&x| dac_quantize(x)).collect();
+
+    let tiles = c / ARRAY_DIM;
+    let mut out = vec![0f32; b * r];
+    for bi in 0..b {
+        let qrow = &dacq[bi * c..(bi + 1) * c];
+        for ri in 0..r {
+            let grow = &refs[ri * c..(ri + 1) * c];
+            let mut acc = 0f32;
+            for t in 0..tiles {
+                let lo = t * ARRAY_DIM;
+                let hi = lo + ARRAY_DIM;
+                let mut part = 0f32;
+                for k in lo..hi {
+                    part += qrow[k] * grow[k];
+                }
+                acc += adc.quantize(part);
+            }
+            out[bi * r + ri] = acc;
+        }
+    }
+    out
+}
+
+/// Exact (no DAC/ADC) dot-product scores — the "digital" upper bound used
+/// by the HyperSpec/HyperOMS-style software baselines.
+pub fn exact_mvm(queries: &[f32], refs: &[f32], b: usize, r: usize, c: usize) -> Vec<f32> {
+    assert_eq!(queries.len(), b * c);
+    assert_eq!(refs.len(), r * c);
+    let mut out = vec![0f32; b * r];
+    for bi in 0..b {
+        let qrow = &queries[bi * c..(bi + 1) * c];
+        for ri in 0..r {
+            let grow = &refs[ri * c..(ri + 1) * c];
+            out[bi * r + ri] = qrow.iter().zip(grow).map(|(a, g)| a * g).sum();
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_packed(rng: &mut Rng, len: usize, n: i64) -> Vec<f32> {
+        (0..len).map(|_| rng.range_i64(-n, n) as f32).collect()
+    }
+
+    #[test]
+    fn ideal_adc_equals_exact() {
+        let mut rng = Rng::new(1);
+        let (b, r, c) = (4, 8, 256);
+        let q = rand_packed(&mut rng, b * c, 3);
+        let g = rand_packed(&mut rng, r * c, 3);
+        let got = imc_mvm_ref(&q, &g, b, r, c, AdcConfig::ideal());
+        let want = exact_mvm(&q, &g, b, r, c);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn quantized_adc_changes_scores_but_preserves_order_of_extremes() {
+        let mut rng = Rng::new(2);
+        let (b, r, c) = (1, 3, 128);
+        // Row 0 identical to the query (max similarity), row 1 its negation,
+        // row 2 random.
+        let q = rand_packed(&mut rng, c, 1);
+        let mut g = q.clone();
+        g.extend(q.iter().map(|x| -x));
+        g.extend(rand_packed(&mut rng, c, 1));
+        let adc = AdcConfig::new(6, 64.0);
+        let s = imc_mvm_ref(&q, &g, b, r, c, adc);
+        assert!(s[0] > s[2] && s[2] > s[1], "{s:?}");
+    }
+
+    #[test]
+    fn tilewise_adc_matters() {
+        // A sum that cancels *across* tiles but saturates within each tile
+        // must differ from the exact dot product: +big in tile 0, -big in
+        // tile 1, with a tiny clip.
+        let (b, r, c) = (1, 1, 256);
+        let mut q = vec![1f32; c];
+        let g = vec![3f32; c];
+        for x in q.iter_mut().skip(128) {
+            *x = -1.0;
+        }
+        let exact = exact_mvm(&q, &g, b, r, c)[0];
+        assert_eq!(exact, 0.0);
+        let adc = AdcConfig::new(2, 64.0); // qmax=1, lsb=32: +384 clips to 32, -384 to -64
+        let s = imc_mvm_ref(&q, &g, b, r, c, adc)[0];
+        assert_eq!(s, 32.0 - 64.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn rejects_untiled_c() {
+        imc_mvm_ref(&[0.0; 100], &[0.0; 100], 1, 1, 100, AdcConfig::ideal());
+    }
+}

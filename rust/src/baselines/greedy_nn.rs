@@ -1,0 +1,92 @@
+//! Falcon-style baseline: greedy nearest-neighbor clustering on float
+//! vectors [18]. Spectra stream in; each joins the first existing cluster
+//! whose representative is within the cosine threshold, else founds a new
+//! cluster. Fast and simple, but order-dependent and purity-limited — the
+//! behaviour Fig. 9 shows for falcon relative to HyperSpec/SpecPCM.
+
+use super::cosine;
+
+/// Cluster binned spectra greedily. Returns one label per input vector.
+/// `threshold` is the minimum cosine similarity to join a cluster.
+pub fn cluster(vectors: &[Vec<f32>], threshold: f32) -> Vec<usize> {
+    let mut reps: Vec<Vec<f32>> = Vec::new();
+    let mut counts: Vec<usize> = Vec::new();
+    let mut labels = Vec::with_capacity(vectors.len());
+
+    for v in vectors {
+        let mut best = (usize::MAX, threshold);
+        for (c, rep) in reps.iter().enumerate() {
+            let s = cosine(v, rep);
+            if s >= best.1 {
+                best = (c, s);
+            }
+        }
+        match best.0 {
+            usize::MAX => {
+                reps.push(v.clone());
+                counts.push(1);
+                labels.push(reps.len() - 1);
+            }
+            c => {
+                // Running-mean representative update.
+                let k = counts[c] as f32;
+                for (r, &x) in reps[c].iter_mut().zip(v) {
+                    *r = (*r * k + x) / (k + 1.0);
+                }
+                counts[c] += 1;
+                labels.push(c);
+            }
+        }
+    }
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn noisy_copy(base: &[f32], rng: &mut Rng, noise: f32) -> Vec<f32> {
+        base.iter()
+            .map(|&x| (x + noise * rng.gaussian() as f32).max(0.0))
+            .collect()
+    }
+
+    #[test]
+    fn groups_recovered() {
+        let mut rng = Rng::new(1);
+        let base_a: Vec<f32> = (0..64).map(|_| rng.range_f64(0.0, 10.0) as f32).collect();
+        let base_b: Vec<f32> = (0..64).map(|_| rng.range_f64(0.0, 10.0) as f32).collect();
+        let mut vectors = Vec::new();
+        for _ in 0..5 {
+            vectors.push(noisy_copy(&base_a, &mut rng, 0.5));
+        }
+        for _ in 0..5 {
+            vectors.push(noisy_copy(&base_b, &mut rng, 0.5));
+        }
+        let labels = cluster(&vectors, 0.8);
+        for i in 1..5 {
+            assert_eq!(labels[0], labels[i]);
+        }
+        for i in 6..10 {
+            assert_eq!(labels[5], labels[i]);
+        }
+        assert_ne!(labels[0], labels[5]);
+    }
+
+    #[test]
+    fn high_threshold_all_singletons() {
+        let mut rng = Rng::new(2);
+        let vectors: Vec<Vec<f32>> = (0..6)
+            .map(|_| (0..32).map(|_| rng.range_f64(0.0, 1.0) as f32).collect())
+            .collect();
+        let labels = cluster(&vectors, 0.9999);
+        let uniq: std::collections::HashSet<_> = labels.iter().collect();
+        assert_eq!(uniq.len(), 6);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(cluster(&[], 0.5).is_empty());
+    }
+}

@@ -1,0 +1,105 @@
+//! HyperSpec/HyperOMS-style software HD baseline [6][7]: exact binary HD
+//! encoding + exact integer dot products — the paper's GPU tools, minus the
+//! GPU. No dimension packing, no DAC/ADC quantization, no PCM noise; this
+//! is the quality reference SpecPCM's SLC/MLC curves are compared against
+//! in Figs. 9/10.
+
+use crate::cluster::linkage::{complete_linkage, Dendrogram};
+use crate::hd::{dot, Hv};
+
+/// Exact HD pairwise-distance matrix (normalized to [0, 2]).
+pub fn distance_matrix(hvs: &[Hv]) -> Vec<f32> {
+    let n = hvs.len();
+    let d = if n > 0 { hvs[0].len() as f32 } else { 1.0 };
+    let mut m = vec![0f32; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dist = 1.0 - dot(&hvs[i], &hvs[j]) as f32 / d;
+            m[i * n + j] = dist;
+            m[j * n + i] = dist;
+        }
+    }
+    m
+}
+
+/// HyperSpec-style clustering: exact HD distances + complete linkage.
+pub fn cluster(hvs: &[Hv], max_distance: f32) -> Dendrogram {
+    let m = distance_matrix(hvs);
+    complete_linkage(&m, hvs.len(), max_distance)
+}
+
+/// HyperOMS-style search scores: exact dot products of one query against
+/// references; returns the score row.
+pub fn search_scores(query: &Hv, refs: &[Hv]) -> Vec<f32> {
+    refs.iter().map(|r| dot(query, r) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_hv(rng: &mut Rng, d: usize) -> Hv {
+        (0..d).map(|_| rng.pm1()).collect()
+    }
+
+    fn flip_some(hv: &Hv, k: usize, rng: &mut Rng) -> Hv {
+        let mut out = hv.clone();
+        for i in rng.sample_indices(hv.len(), k) {
+            out[i] = -out[i];
+        }
+        out
+    }
+
+    #[test]
+    fn distance_matrix_symmetric_zero_diag() {
+        let mut rng = Rng::new(1);
+        let hvs: Vec<Hv> = (0..5).map(|_| rand_hv(&mut rng, 512)).collect();
+        let m = distance_matrix(&hvs);
+        for i in 0..5 {
+            assert_eq!(m[i * 5 + i], 0.0);
+            for j in 0..5 {
+                assert_eq!(m[i * 5 + j], m[j * 5 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn clustering_recovers_structure() {
+        let mut rng = Rng::new(2);
+        let a = rand_hv(&mut rng, 2048);
+        let b = rand_hv(&mut rng, 2048);
+        let hvs = vec![
+            a.clone(),
+            flip_some(&a, 100, &mut rng),
+            flip_some(&a, 120, &mut rng),
+            b.clone(),
+            flip_some(&b, 100, &mut rng),
+        ];
+        let dend = cluster(&hvs, 0.5);
+        let labels = dend.cut(0.5);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[1], labels[2]);
+        assert_eq!(labels[3], labels[4]);
+        assert_ne!(labels[0], labels[3]);
+    }
+
+    #[test]
+    fn search_ranks_true_match_first() {
+        let mut rng = Rng::new(3);
+        let q = rand_hv(&mut rng, 2048);
+        let refs = vec![
+            rand_hv(&mut rng, 2048),
+            flip_some(&q, 150, &mut rng), // near-duplicate
+            rand_hv(&mut rng, 2048),
+        ];
+        let scores = search_scores(&q, &refs);
+        let best = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        assert_eq!(best, 1);
+    }
+}

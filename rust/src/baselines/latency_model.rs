@@ -1,0 +1,130 @@
+//! Paper-anchored baseline latencies (Tables 2 and 3).
+//!
+//! These are the latencies the paper *measured* on its own testbeds (Intel
+//! i7-11700K, RTX 4090, the SpecHD FPGA, and the RRAM/3D-NAND IMC designs);
+//! we cannot re-measure them here, so the speedup benches anchor the
+//! baseline columns to these published numbers and compare them against our
+//! *simulated* SpecPCM latency, extrapolated to the paper's dataset sizes
+//! (DESIGN.md §5). Latency scaling across dataset sizes is modeled linear
+//! in the number of pairwise comparisons.
+
+/// One baseline tool's published latency on one dataset.
+#[derive(Clone, Copy, Debug)]
+pub struct BaselineEntry {
+    pub tool: &'static str,
+    pub hardware: &'static str,
+    pub dataset: &'static str,
+    pub latency_s: f64,
+}
+
+/// Table 2 — clustering baselines.
+pub const CLUSTERING_BASELINES: [BaselineEntry; 10] = [
+    BaselineEntry { tool: "Falcon", hardware: "CPU", dataset: "PXD001468", latency_s: 573.0 },
+    BaselineEntry { tool: "msCRUSH", hardware: "CPU", dataset: "PXD001468", latency_s: 358.0 },
+    BaselineEntry { tool: "HyperSpec", hardware: "GPU", dataset: "PXD001468", latency_s: 38.0 },
+    BaselineEntry { tool: "SpecHD", hardware: "FPGA", dataset: "PXD001468", latency_s: 13.17 },
+    BaselineEntry { tool: "SpecPCM(paper)", hardware: "TSMC 40nm", dataset: "PXD001468", latency_s: 5.46 },
+    BaselineEntry { tool: "Falcon", hardware: "CPU", dataset: "PXD000561", latency_s: 134.0 * 60.0 },
+    BaselineEntry { tool: "msCRUSH", hardware: "CPU", dataset: "PXD000561", latency_s: 42.0 * 60.0 },
+    BaselineEntry { tool: "HyperSpec", hardware: "GPU", dataset: "PXD000561", latency_s: 17.0 * 60.0 },
+    BaselineEntry { tool: "SpecHD", hardware: "FPGA", dataset: "PXD000561", latency_s: 179.0 },
+    BaselineEntry { tool: "SpecPCM(paper)", hardware: "TSMC 40nm", dataset: "PXD000561", latency_s: 98.4 },
+];
+
+/// Table 3 — DB-search baselines.
+pub const SEARCH_BASELINES: [BaselineEntry; 9] = [
+    BaselineEntry { tool: "ANN-SoLo", hardware: "CPU-GPU", dataset: "iPRG2012", latency_s: 6.45 },
+    BaselineEntry { tool: "HyperOMS", hardware: "GPU", dataset: "iPRG2012", latency_s: 2.08 },
+    BaselineEntry { tool: "RRAM", hardware: "130nm IMC", dataset: "iPRG2012", latency_s: 1.22 },
+    BaselineEntry { tool: "3D NAND", hardware: "ASAP 7nm", dataset: "iPRG2012", latency_s: 0.145 },
+    BaselineEntry { tool: "SpecPCM(paper)", hardware: "TSMC 40nm", dataset: "iPRG2012", latency_s: 0.049 },
+    BaselineEntry { tool: "ANN-SoLo", hardware: "CPU-GPU", dataset: "HEK293", latency_s: 45.14 },
+    BaselineEntry { tool: "HyperOMS", hardware: "GPU", dataset: "HEK293", latency_s: 10.4 },
+    BaselineEntry { tool: "ANN-SoLo(ref)", hardware: "CPU-GPU", dataset: "HEK293", latency_s: 45.14 },
+    BaselineEntry { tool: "SpecPCM(paper)", hardware: "TSMC 40nm", dataset: "HEK293", latency_s: 0.316 },
+];
+
+/// Baselines for a dataset, slowest first (the speedup denominator is the
+/// first entry, matching the paper's "1x" convention).
+pub fn clustering_for(dataset: &str) -> Vec<BaselineEntry> {
+    let mut v: Vec<BaselineEntry> = CLUSTERING_BASELINES
+        .iter()
+        .filter(|b| b.dataset == dataset)
+        .copied()
+        .collect();
+    v.sort_by(|a, b| b.latency_s.total_cmp(&a.latency_s));
+    v
+}
+
+pub fn search_for(dataset: &str) -> Vec<BaselineEntry> {
+    let mut v: Vec<BaselineEntry> = SEARCH_BASELINES
+        .iter()
+        .filter(|b| b.dataset == dataset && b.tool != "ANN-SoLo(ref)")
+        .copied()
+        .collect();
+    v.sort_by(|a, b| b.latency_s.total_cmp(&a.latency_s));
+    v
+}
+
+/// Paper speedups for cross-checking our reproduction of the table math.
+pub fn paper_speedup(dataset: &str, tool: &str) -> Option<f64> {
+    match (dataset, tool) {
+        ("PXD001468", "SpecPCM(paper)") => Some(104.94),
+        ("PXD000561", "SpecPCM(paper)") => Some(81.7),
+        ("iPRG2012", "SpecPCM(paper)") => Some(131.63),
+        ("HEK293", "SpecPCM(paper)") => Some(142.84),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_speedups_reproduce() {
+        // Paper Table 2: speedup = slowest baseline / tool latency.
+        for ds in ["PXD001468", "PXD000561"] {
+            let rows = clustering_for(ds);
+            let base = rows[0].latency_s;
+            let spec = rows.iter().find(|r| r.tool == "SpecPCM(paper)").unwrap();
+            let speedup = base / spec.latency_s;
+            let expected = paper_speedup(ds, "SpecPCM(paper)").unwrap();
+            assert!(
+                (speedup - expected).abs() / expected < 0.01,
+                "{ds}: {speedup} vs {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn table3_speedups_reproduce() {
+        for ds in ["iPRG2012", "HEK293"] {
+            let rows = search_for(ds);
+            let base = rows[0].latency_s;
+            let spec = rows.iter().find(|r| r.tool == "SpecPCM(paper)").unwrap();
+            let speedup = base / spec.latency_s;
+            let expected = paper_speedup(ds, "SpecPCM(paper)").unwrap();
+            assert!(
+                (speedup - expected).abs() / expected < 0.01,
+                "{ds}: {speedup} vs {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn slowest_first_ordering() {
+        let rows = clustering_for("PXD001468");
+        assert_eq!(rows[0].tool, "Falcon");
+        assert_eq!(rows.last().unwrap().tool, "SpecPCM(paper)");
+    }
+
+    #[test]
+    fn nand_faster_than_rram() {
+        // Table 3 ordering among prior IMC designs.
+        let rows = search_for("iPRG2012");
+        let rram = rows.iter().find(|r| r.tool == "RRAM").unwrap();
+        let nand = rows.iter().find(|r| r.tool == "3D NAND").unwrap();
+        assert!(nand.latency_s < rram.latency_s);
+    }
+}

@@ -1,0 +1,143 @@
+//! msCRUSH-style baseline: locality-sensitive-hashing clustering [19].
+//!
+//! Random-hyperplane signatures split spectra into LSH buckets (bands of
+//! hash bits); spectra colliding in any band are union-found into one
+//! cluster, then each cluster is refined greedily by cosine. Coarser than
+//! exact pairwise methods — matching its Fig. 9 position below falcon/
+//! HyperSpec.
+
+use crate::util::Rng;
+
+use super::cosine;
+
+struct Dsu(Vec<usize>);
+
+impl Dsu {
+    fn new(n: usize) -> Self {
+        Dsu((0..n).collect())
+    }
+    fn find(&mut self, x: usize) -> usize {
+        if self.0[x] != x {
+            let r = self.find(self.0[x]);
+            self.0[x] = r;
+        }
+        self.0[x]
+    }
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.0[ra] = rb;
+        }
+    }
+}
+
+/// LSH clustering parameters: `bands` signature bands of `bits` hyperplane
+/// bits each; candidates colliding in a band must still pass `threshold`
+/// cosine against the bucket seed to merge.
+pub fn cluster(
+    vectors: &[Vec<f32>],
+    bands: usize,
+    bits: usize,
+    threshold: f32,
+    seed: u64,
+) -> Vec<usize> {
+    let n = vectors.len();
+    if n == 0 {
+        return vec![];
+    }
+    let dim = vectors[0].len();
+    let mut rng = Rng::new(seed);
+
+    // Random hyperplanes per band.
+    let planes: Vec<Vec<Vec<f32>>> = (0..bands)
+        .map(|_| {
+            (0..bits)
+                .map(|_| (0..dim).map(|_| rng.gaussian() as f32).collect())
+                .collect()
+        })
+        .collect();
+
+    let mut dsu = Dsu::new(n);
+    for band in &planes {
+        let mut buckets: std::collections::HashMap<u64, Vec<usize>> =
+            std::collections::HashMap::new();
+        for (i, v) in vectors.iter().enumerate() {
+            let mut sig = 0u64;
+            for (b, plane) in band.iter().enumerate() {
+                let dot: f32 = v.iter().zip(plane).map(|(x, p)| x * p).sum();
+                if dot >= 0.0 {
+                    sig |= 1 << b;
+                }
+            }
+            buckets.entry(sig).or_default().push(i);
+        }
+        for members in buckets.values() {
+            // Union members that pass the cosine check against the first.
+            let seed_idx = members[0];
+            for &m in &members[1..] {
+                if cosine(&vectors[seed_idx], &vectors[m]) >= threshold {
+                    dsu.union(seed_idx, m);
+                }
+            }
+        }
+    }
+
+    // Densify labels.
+    let mut labels = vec![0usize; n];
+    let mut next = 0;
+    let mut map = std::collections::HashMap::new();
+    for i in 0..n {
+        let r = dsu.find(i);
+        let l = *map.entry(r).or_insert_with(|| {
+            let v = next;
+            next += 1;
+            v
+        });
+        labels[i] = l;
+    }
+    labels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn near_duplicates_collide() {
+        let mut rng = Rng::new(3);
+        let base: Vec<f32> = (0..128).map(|_| rng.gaussian() as f32).collect();
+        let mut vectors = Vec::new();
+        for _ in 0..4 {
+            vectors.push(
+                base.iter()
+                    .map(|&x| x + 0.05 * rng.gaussian() as f32)
+                    .collect(),
+            );
+        }
+        // A far-away vector.
+        vectors.push((0..128).map(|_| rng.gaussian() as f32).collect());
+        let labels = cluster(&vectors, 8, 10, 0.7, 42);
+        for i in 1..4 {
+            assert_eq!(labels[0], labels[i], "replicas collide");
+        }
+        assert_ne!(labels[0], labels[4], "outlier separate");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(4);
+        let vectors: Vec<Vec<f32>> = (0..10)
+            .map(|_| (0..64).map(|_| rng.gaussian() as f32).collect())
+            .collect();
+        assert_eq!(
+            cluster(&vectors, 4, 8, 0.5, 7),
+            cluster(&vectors, 4, 8, 0.5, 7)
+        );
+    }
+
+    #[test]
+    fn empty() {
+        assert!(cluster(&[], 4, 8, 0.5, 1).is_empty());
+    }
+}

@@ -1,0 +1,55 @@
+//! Baseline comparators (paper §IV-A).
+//!
+//! Two kinds:
+//!
+//! 1. **Algorithmic baselines** actually run here for *quality* curves:
+//!    - [`greedy_nn`] — falcon-style greedy nearest-neighbor clustering on
+//!      float-binned spectra,
+//!    - [`lsh`] — msCRUSH-style locality-sensitive-hashing clustering,
+//!    - [`hd_soft`] — HyperSpec/HyperOMS-style exact binary HD (no device
+//!      non-idealities) for clustering and search,
+//!    - [`exact`] — ANN-SoLo-style exact cosine DB search (quality ceiling).
+//! 2. **Latency anchors** ([`latency_model`]): the paper's *measured*
+//!    baseline latencies (Tables 2/3) on their CPU/GPU/FPGA/IMC testbeds,
+//!    used to compute the speedup columns — we cannot re-measure an RTX
+//!    4090 here (DESIGN.md §5).
+
+pub mod exact;
+pub mod greedy_nn;
+pub mod hd_soft;
+pub mod latency_model;
+pub mod lsh;
+
+/// Binned float vector (sqrt-scaled levels) shared by the float baselines.
+pub fn levels_to_f32(levels: &[u16]) -> Vec<f32> {
+    levels.iter().map(|&v| v as f32).collect()
+}
+
+/// Cosine similarity of two float vectors (0 when either is all-zero).
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += (x * y) as f64;
+        na += (x * x) as f64;
+        nb += (y * y) as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        (dot / (na.sqrt() * nb.sqrt())) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_basics() {
+        let a = vec![1.0, 0.0, 1.0];
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&a, &[0.0, 1.0, 0.0]), 0.0);
+        assert_eq!(cosine(&a, &[0.0, 0.0, 0.0]), 0.0);
+    }
+}

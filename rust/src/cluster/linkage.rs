@@ -1,0 +1,232 @@
+//! Complete-linkage hierarchical agglomerative clustering (§III-C: "The
+//! ASIC employs the complete linkage method, where the maximum distance
+//! between one element from each of two clusters determines the distance
+//! between the clusters").
+//!
+//! Implemented with the standard O(N^2) nearest-neighbor-chain-free update
+//! (Lance–Williams for complete linkage: `d(k, i∪j) = max(d(k,i), d(k,j))`)
+//! over a condensed distance matrix — the same matrix the PCM arrays
+//! produce and the near-memory ASIC updates in place.
+
+/// One merge step: clusters `a` and `b` (indices into the current forest)
+/// joined at `distance`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Merge {
+    pub a: usize,
+    pub b: usize,
+    pub distance: f32,
+}
+
+/// Full merge history; cutting it at a threshold yields flat clusters.
+#[derive(Clone, Debug)]
+pub struct Dendrogram {
+    pub n: usize,
+    pub merges: Vec<Merge>,
+    /// Total distance-matrix element updates performed (ASIC merge work —
+    /// feeds `OpCounts::merge_elements`).
+    pub update_elements: u64,
+}
+
+impl Dendrogram {
+    /// Flat clusters from cutting all merges with distance <= threshold.
+    /// Returns a label per item (labels are arbitrary but consistent).
+    pub fn cut(&self, threshold: f32) -> Vec<usize> {
+        let mut parent: Vec<usize> = (0..self.n).collect();
+        fn find(parent: &mut Vec<usize>, x: usize) -> usize {
+            let mut root = x;
+            while parent[root] != root {
+                root = parent[root];
+            }
+            let mut cur = x;
+            while parent[cur] != root {
+                let next = parent[cur];
+                parent[cur] = root;
+                cur = next;
+            }
+            root
+        }
+        for m in &self.merges {
+            if m.distance <= threshold {
+                let (ra, rb) = (find(&mut parent, m.a), find(&mut parent, m.b));
+                if ra != rb {
+                    parent[ra] = rb;
+                }
+            }
+        }
+        // Relabel roots densely.
+        let mut labels = vec![usize::MAX; self.n];
+        let mut next = 0;
+        for i in 0..self.n {
+            let r = find(&mut parent, i);
+            if labels[r] == usize::MAX {
+                labels[r] = next;
+                next += 1;
+            }
+            labels[i] = labels[r];
+        }
+        labels
+    }
+}
+
+/// Run complete-linkage HAC over a dense symmetric distance matrix
+/// (row-major `n x n`, only the upper triangle is read). Merging stops when
+/// the smallest remaining inter-cluster distance exceeds `max_distance`
+/// (pass `f32::INFINITY` for a full dendrogram).
+pub fn complete_linkage(dist: &[f32], n: usize, max_distance: f32) -> Dendrogram {
+    assert_eq!(dist.len(), n * n, "distance matrix shape");
+    if n == 0 {
+        return Dendrogram {
+            n,
+            merges: vec![],
+            update_elements: 0,
+        };
+    }
+
+    // Working copy: d[i][j] for active clusters; usize::MAX marks merged-
+    // away clusters. Item i starts as cluster i.
+    let mut d = dist.to_vec();
+    let mut active: Vec<bool> = vec![true; n];
+    let mut merges = Vec::with_capacity(n - 1);
+    let mut updates = 0u64;
+
+    loop {
+        // Find the closest active pair.
+        let mut best = (usize::MAX, usize::MAX, f32::INFINITY);
+        for i in 0..n {
+            if !active[i] {
+                continue;
+            }
+            for j in (i + 1)..n {
+                if !active[j] {
+                    continue;
+                }
+                let dij = d[i * n + j];
+                if dij < best.2 {
+                    best = (i, j, dij);
+                }
+            }
+        }
+        let (i, j, dij) = best;
+        if i == usize::MAX || dij > max_distance {
+            break;
+        }
+
+        // Merge j into i (complete linkage: max).
+        for k in 0..n {
+            if active[k] && k != i && k != j {
+                let dik = d[i * n + k];
+                let djk = d[j * n + k];
+                let m = dik.max(djk);
+                d[i * n + k] = m;
+                d[k * n + i] = m;
+                updates += 1;
+            }
+        }
+        active[j] = false;
+        merges.push(Merge {
+            a: i,
+            b: j,
+            distance: dij,
+        });
+
+        if merges.len() == n - 1 {
+            break;
+        }
+    }
+
+    Dendrogram {
+        n,
+        merges,
+        update_elements: updates,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Distance matrix from 1-D points (abs difference).
+    fn dist_1d(points: &[f32]) -> Vec<f32> {
+        let n = points.len();
+        let mut d = vec![0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                d[i * n + j] = (points[i] - points[j]).abs();
+            }
+        }
+        d
+    }
+
+    #[test]
+    fn two_obvious_groups() {
+        // {0.0, 0.1, 0.2} and {10.0, 10.1}
+        let pts = [0.0, 0.1, 0.2, 10.0, 10.1];
+        let d = dist_1d(&pts);
+        let dend = complete_linkage(&d, 5, f32::INFINITY);
+        let labels = dend.cut(1.0);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[1], labels[2]);
+        assert_eq!(labels[3], labels[4]);
+        assert_ne!(labels[0], labels[3]);
+    }
+
+    #[test]
+    fn complete_linkage_uses_max() {
+        // Points 0, 1, 2.1: single linkage would chain all three below
+        // threshold 1.2; complete linkage keeps {0,1} apart from 2.1
+        // because max(d(0,2.1)) = 2.1 > 1.2.
+        let pts = [0.0, 1.0, 2.1];
+        let d = dist_1d(&pts);
+        let dend = complete_linkage(&d, 3, f32::INFINITY);
+        let labels = dend.cut(1.2);
+        assert_eq!(labels[0], labels[1]);
+        assert_ne!(labels[0], labels[2]);
+    }
+
+    #[test]
+    fn max_distance_stops_merging() {
+        let pts = [0.0, 0.1, 5.0];
+        let d = dist_1d(&pts);
+        let dend = complete_linkage(&d, 3, 1.0);
+        assert_eq!(dend.merges.len(), 1); // only the close pair merges
+    }
+
+    #[test]
+    fn merge_distances_monotone_nondecreasing() {
+        let pts = [0.0, 0.3, 1.0, 1.1, 4.0, 4.05, 9.0];
+        let d = dist_1d(&pts);
+        let dend = complete_linkage(&d, 7, f32::INFINITY);
+        assert_eq!(dend.merges.len(), 6);
+        for w in dend.merges.windows(2) {
+            assert!(w[0].distance <= w[1].distance);
+        }
+    }
+
+    #[test]
+    fn singletons_stay_singletons() {
+        let pts = [0.0, 100.0, 200.0];
+        let d = dist_1d(&pts);
+        let dend = complete_linkage(&d, 3, 1.0);
+        let labels = dend.cut(1.0);
+        let set: std::collections::HashSet<_> = labels.iter().collect();
+        assert_eq!(set.len(), 3);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let dend = complete_linkage(&[], 0, 1.0);
+        assert!(dend.merges.is_empty());
+        let dend1 = complete_linkage(&[0.0], 1, 1.0);
+        assert!(dend1.merges.is_empty());
+        assert_eq!(dend1.cut(1.0), vec![0]);
+    }
+
+    #[test]
+    fn update_counts_accumulate() {
+        let pts = [0.0, 0.1, 0.2, 0.3];
+        let d = dist_1d(&pts);
+        let dend = complete_linkage(&d, 4, f32::INFINITY);
+        // 3 merges over 4 items: 2 + 1 + 0 updates minimum.
+        assert!(dend.update_elements >= 3);
+    }
+}

@@ -1,0 +1,32 @@
+//! Spectral clustering (paper Fig. 1, §III-C "IMC for clustering").
+//!
+//! Within each precursor bucket, pairwise HV distances come from the IMC
+//! MVM; the near-memory ASIC then runs complete-linkage agglomerative
+//! merging until a distance threshold, exactly the HyperSpec-style flow
+//! the paper accelerates.
+
+pub mod linkage;
+pub mod quality;
+
+pub use linkage::{complete_linkage, Dendrogram, Merge};
+pub use quality::{quality_curve, ClusterQuality};
+
+/// Convert an IMC similarity score into a normalized distance in [0, 2]:
+/// `d = 1 - score / d_max` where `d_max` is the self-similarity scale
+/// (binary dimension D for exact HD scores; the same packed self-score
+/// scale for packed scores).
+pub fn score_to_distance(score: f32, d_max: f32) -> f32 {
+    1.0 - score / d_max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn distance_range() {
+        assert_eq!(score_to_distance(2048.0, 2048.0), 0.0); // identical
+        assert_eq!(score_to_distance(0.0, 2048.0), 1.0); // orthogonal
+        assert_eq!(score_to_distance(-2048.0, 2048.0), 2.0); // opposite
+    }
+}

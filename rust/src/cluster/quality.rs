@@ -1,0 +1,138 @@
+//! Clustering quality metrics (paper §IV-A "Quality Metrics" and Fig. 9).
+//!
+//! * **clustered spectra ratio** — clustered spectra / total spectra, where
+//!   a spectrum counts as clustered when it lands in a cluster of size >= 2.
+//! * **incorrect clustering ratio** — among clustered spectra, the fraction
+//!   whose ground-truth peptide differs from their cluster's majority
+//!   peptide (the falcon/HyperSpec convention).
+//!
+//! Fig. 9 plots clustered ratio against incorrect ratio while sweeping the
+//! merge threshold; [`quality_curve`] reproduces that sweep.
+
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterQuality {
+    pub threshold: f32,
+    pub clustered_ratio: f64,
+    pub incorrect_ratio: f64,
+    pub n_clusters: usize,
+}
+
+/// Evaluate one flat clustering against ground-truth labels.
+/// `truth[i]` is the ground-truth peptide of spectrum i.
+pub fn evaluate(labels: &[usize], truth: &[u32], threshold: f32) -> ClusterQuality {
+    assert_eq!(labels.len(), truth.len());
+    let n = labels.len();
+    if n == 0 {
+        return ClusterQuality {
+            threshold,
+            clustered_ratio: 0.0,
+            incorrect_ratio: 0.0,
+            n_clusters: 0,
+        };
+    }
+
+    let mut members: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (i, &l) in labels.iter().enumerate() {
+        members.entry(l).or_default().push(i);
+    }
+
+    let mut clustered = 0usize;
+    let mut incorrect = 0usize;
+    let mut n_clusters = 0usize;
+    for mem in members.values() {
+        if mem.len() < 2 {
+            continue;
+        }
+        n_clusters += 1;
+        clustered += mem.len();
+        // Majority ground-truth peptide within the cluster.
+        let mut counts: HashMap<u32, usize> = HashMap::new();
+        for &i in mem {
+            *counts.entry(truth[i]).or_default() += 1;
+        }
+        let majority = counts.values().copied().max().unwrap();
+        incorrect += mem.len() - majority;
+    }
+
+    ClusterQuality {
+        threshold,
+        clustered_ratio: clustered as f64 / n as f64,
+        incorrect_ratio: if clustered > 0 {
+            incorrect as f64 / clustered as f64
+        } else {
+            0.0
+        },
+        n_clusters,
+    }
+}
+
+/// Sweep merge thresholds over a dendrogram, producing the Fig. 9 curve
+/// (clustered ratio as a function of incorrect ratio).
+pub fn quality_curve(
+    dendrogram: &super::linkage::Dendrogram,
+    truth: &[u32],
+    thresholds: &[f32],
+) -> Vec<ClusterQuality> {
+    thresholds
+        .iter()
+        .map(|&t| evaluate(&dendrogram.cut(t), truth, t))
+        .collect()
+}
+
+/// Interpolate the clustered ratio at a fixed incorrect ratio (the paper
+/// reports quality "at an incorrect clustering ratio of 1.5%").
+pub fn clustered_at_incorrect(curve: &[ClusterQuality], incorrect: f64) -> f64 {
+    let mut best = 0.0f64;
+    for q in curve {
+        if q.incorrect_ratio <= incorrect && q.clustered_ratio > best {
+            best = q.clustered_ratio;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_clustering() {
+        let labels = vec![0, 0, 1, 1, 2];
+        let truth = vec![10, 10, 20, 20, 30];
+        let q = evaluate(&labels, &truth, 0.5);
+        assert_eq!(q.clustered_ratio, 4.0 / 5.0); // singleton not clustered
+        assert_eq!(q.incorrect_ratio, 0.0);
+        assert_eq!(q.n_clusters, 2);
+    }
+
+    #[test]
+    fn impure_cluster_counted() {
+        let labels = vec![0, 0, 0, 0];
+        let truth = vec![1, 1, 1, 2];
+        let q = evaluate(&labels, &truth, 0.5);
+        assert_eq!(q.clustered_ratio, 1.0);
+        assert_eq!(q.incorrect_ratio, 0.25);
+    }
+
+    #[test]
+    fn all_singletons() {
+        let labels = vec![0, 1, 2];
+        let truth = vec![1, 1, 1];
+        let q = evaluate(&labels, &truth, 0.0);
+        assert_eq!(q.clustered_ratio, 0.0);
+        assert_eq!(q.incorrect_ratio, 0.0);
+    }
+
+    #[test]
+    fn clustered_at_incorrect_picks_best_valid() {
+        let curve = vec![
+            ClusterQuality { threshold: 0.1, clustered_ratio: 0.2, incorrect_ratio: 0.001, n_clusters: 5 },
+            ClusterQuality { threshold: 0.3, clustered_ratio: 0.5, incorrect_ratio: 0.01, n_clusters: 9 },
+            ClusterQuality { threshold: 0.5, clustered_ratio: 0.7, incorrect_ratio: 0.05, n_clusters: 12 },
+        ];
+        assert_eq!(clustered_at_incorrect(&curve, 0.015), 0.5);
+        assert_eq!(clustered_at_incorrect(&curve, 0.1), 0.7);
+    }
+}

@@ -1,0 +1,282 @@
+//! Configuration system: the ISA-exposed knobs (§III-D/F) plus system
+//! geometry, loadable from a flat `key = value` file (TOML subset — see
+//! `util::kv`; no toml crate in this offline environment) with the paper's
+//! §IV-A defaults as presets.
+
+use crate::device::Material;
+use crate::util::kv::{self, KvValue};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Clustering,
+    Search,
+}
+
+impl Task {
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::Clustering => "clustering",
+            Task::Search => "search",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self, String> {
+        match s {
+            "clustering" => Ok(Task::Clustering),
+            "search" => Ok(Task::Search),
+            other => Err(format!("unknown task '{other}'")),
+        }
+    }
+}
+
+fn material_name(m: Material) -> &'static str {
+    match m {
+        Material::Sb2Te3Gst467 => "sb2te3_gst467",
+        Material::TiTe2Gst467 => "tite2_gst467",
+    }
+}
+
+fn material_from_name(s: &str) -> Result<Material, String> {
+    match s {
+        "sb2te3_gst467" => Ok(Material::Sb2Te3Gst467),
+        "tite2_gst467" => Ok(Material::TiTe2Gst467),
+        other => Err(format!("unknown material '{other}'")),
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SpecPcmConfig {
+    pub task: Task,
+    /// HD dimension D (paper defaults: 2048 clustering / 8192 search).
+    pub hd_dim: usize,
+    /// Bits per cell == packing factor n (1..=3 in the paper's sweep).
+    pub mlc_bits: u8,
+    /// Effective flash-ADC precision (1..=6).
+    pub adc_bits: u32,
+    /// Write-verify cycles (paper defaults: 0 clustering / 3 search).
+    pub write_verify: u32,
+    /// PCM material stack (paper §III-E assigns one per task).
+    pub material: Material,
+    /// Parallel 128x128 banks in the system.
+    pub num_banks: usize,
+    /// Precursor bucket width (Da).
+    pub bucket_width: f64,
+    /// m/z feature positions F.
+    pub features: usize,
+    /// Intensity quantization levels m.
+    pub levels: usize,
+    /// RNG seed for the whole run.
+    pub seed: u64,
+    /// Merge threshold sweep for clustering quality curves.
+    pub threshold_sweep: Vec<f32>,
+    /// FDR for DB-search identification (paper: 1%).
+    pub fdr: f64,
+    /// Use the PJRT artifacts when available (fall back to the rust
+    /// reference path otherwise).
+    pub use_artifacts: bool,
+    /// Artifacts directory.
+    pub artifacts_dir: String,
+}
+
+impl Default for SpecPcmConfig {
+    fn default() -> Self {
+        SpecPcmConfig::paper_clustering()
+    }
+}
+
+impl SpecPcmConfig {
+    /// §IV-A clustering defaults: D=2048, 3-bit MLC, 6-bit ADC, **no**
+    /// write-verify (clustering tolerates programming error), Sb2Te3 stack.
+    /// The bucket width is wider than a real precursor tolerance so the
+    /// synthetic buckets mix several peptide groups (DESIGN.md §5).
+    pub fn paper_clustering() -> Self {
+        SpecPcmConfig {
+            task: Task::Clustering,
+            hd_dim: 2048,
+            mlc_bits: 3,
+            adc_bits: 6,
+            write_verify: 0,
+            material: Material::default_for_clustering(),
+            num_banks: 128,
+            bucket_width: 20.0,
+            features: 512,
+            levels: 64,
+            seed: 0x1234_5678,
+            threshold_sweep: (1..=40).map(|i| i as f32 * 0.02).collect(),
+            fdr: 0.01,
+            use_artifacts: true,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    /// §IV-A DB-search defaults: D=8192, 3-bit MLC, 6-bit ADC, 3
+    /// write-verify cycles, TiTe2 stack.
+    pub fn paper_search() -> Self {
+        SpecPcmConfig {
+            task: Task::Search,
+            hd_dim: 8192,
+            material: Material::default_for_search(),
+            write_verify: 3,
+            bucket_width: 5.0,
+            ..SpecPcmConfig::paper_clustering()
+        }
+    }
+
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let map = kv::parse(text)?;
+        let mut cfg = SpecPcmConfig::paper_clustering();
+        for (key, val) in &map {
+            match key.as_str() {
+                "task" => {
+                    cfg.task = Task::from_name(val.as_str().ok_or("task: want string")?)?;
+                    // Switch task-dependent defaults unless overridden below.
+                    if cfg.task == Task::Search && !map.contains_key("material") {
+                        cfg.material = Material::default_for_search();
+                    }
+                }
+                "hd_dim" => cfg.hd_dim = get_usize(val, key)?,
+                "mlc_bits" => cfg.mlc_bits = get_usize(val, key)? as u8,
+                "adc_bits" => cfg.adc_bits = get_usize(val, key)? as u32,
+                "write_verify" => cfg.write_verify = get_usize(val, key)? as u32,
+                "material" => {
+                    cfg.material = material_from_name(val.as_str().ok_or("material: want string")?)?
+                }
+                "num_banks" => cfg.num_banks = get_usize(val, key)?,
+                "bucket_width" => cfg.bucket_width = val.as_f64().ok_or("bucket_width")?,
+                "features" => cfg.features = get_usize(val, key)?,
+                "levels" => cfg.levels = get_usize(val, key)?,
+                "seed" => cfg.seed = get_usize(val, key)? as u64,
+                "fdr" => cfg.fdr = val.as_f64().ok_or("fdr")?,
+                "use_artifacts" => cfg.use_artifacts = val.as_bool().ok_or("use_artifacts")?,
+                "artifacts_dir" => {
+                    cfg.artifacts_dir = val.as_str().ok_or("artifacts_dir")?.to_string()
+                }
+                "threshold_sweep" => {
+                    cfg.threshold_sweep = val
+                        .as_num_array()
+                        .ok_or("threshold_sweep: want [..]")?
+                        .iter()
+                        .map(|&x| x as f32)
+                        .collect()
+                }
+                other => return Err(format!("unknown config key '{other}'")),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        s += &kv::fmt_str("task", self.task.name());
+        s += &kv::fmt_num("hd_dim", self.hd_dim);
+        s += &kv::fmt_num("mlc_bits", self.mlc_bits);
+        s += &kv::fmt_num("adc_bits", self.adc_bits);
+        s += &kv::fmt_num("write_verify", self.write_verify);
+        s += &kv::fmt_str("material", material_name(self.material));
+        s += &kv::fmt_num("num_banks", self.num_banks);
+        s += &kv::fmt_num("bucket_width", self.bucket_width);
+        s += &kv::fmt_num("features", self.features);
+        s += &kv::fmt_num("levels", self.levels);
+        s += &kv::fmt_num("seed", self.seed);
+        s += &kv::fmt_num("fdr", self.fdr);
+        s += &kv::fmt_num("use_artifacts", self.use_artifacts);
+        s += &kv::fmt_str("artifacts_dir", &self.artifacts_dir);
+        s += &kv::fmt_arr("threshold_sweep", &self.threshold_sweep);
+        s
+    }
+
+    pub fn load(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_toml(&text)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !(1..=4).contains(&self.mlc_bits) {
+            return Err(format!("mlc_bits {} not in 1..=4", self.mlc_bits));
+        }
+        if !(1..=6).contains(&self.adc_bits) {
+            return Err(format!("adc_bits {} not in 1..=6", self.adc_bits));
+        }
+        if self.hd_dim == 0 || self.hd_dim % 2 != 0 {
+            return Err(format!("hd_dim {} must be positive and even", self.hd_dim));
+        }
+        if self.num_banks == 0 {
+            return Err("num_banks must be > 0".into());
+        }
+        if !(0.0..0.5).contains(&self.fdr) {
+            return Err(format!("fdr {} out of range", self.fdr));
+        }
+        Ok(())
+    }
+
+    /// Packing factor n.
+    pub fn packing(&self) -> usize {
+        self.mlc_bits as usize
+    }
+}
+
+fn get_usize(v: &KvValue, key: &str) -> Result<usize, String> {
+    v.as_i64()
+        .filter(|&x| x >= 0)
+        .map(|x| x as usize)
+        .ok_or(format!("{key}: want non-negative integer"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_section_iva() {
+        let c = SpecPcmConfig::paper_clustering();
+        assert_eq!(c.hd_dim, 2048);
+        assert_eq!(c.mlc_bits, 3);
+        assert_eq!(c.adc_bits, 6);
+        assert_eq!(c.write_verify, 0);
+        assert_eq!(c.material, Material::Sb2Te3Gst467);
+
+        let s = SpecPcmConfig::paper_search();
+        assert_eq!(s.hd_dim, 8192);
+        assert_eq!(s.write_verify, 3);
+        assert_eq!(s.material, Material::TiTe2Gst467);
+        assert_eq!(s.fdr, 0.01);
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let c = SpecPcmConfig::paper_search();
+        let text = c.to_toml();
+        let back = SpecPcmConfig::from_toml(&text).unwrap();
+        assert_eq!(back.hd_dim, c.hd_dim);
+        assert_eq!(back.material, c.material);
+        assert_eq!(back.task, c.task);
+        assert_eq!(back.threshold_sweep.len(), c.threshold_sweep.len());
+    }
+
+    #[test]
+    fn partial_toml_uses_defaults() {
+        let c = SpecPcmConfig::from_toml("hd_dim = 4096\nmlc_bits = 2\n").unwrap();
+        assert_eq!(c.hd_dim, 4096);
+        assert_eq!(c.mlc_bits, 2);
+        assert_eq!(c.adc_bits, 6); // default
+    }
+
+    #[test]
+    fn task_switch_pulls_material_default() {
+        let c = SpecPcmConfig::from_toml("task = \"search\"\n").unwrap();
+        assert_eq!(c.material, Material::TiTe2Gst467);
+        let c2 = SpecPcmConfig::from_toml("task = \"search\"\nmaterial = \"sb2te3_gst467\"\n")
+            .unwrap();
+        assert_eq!(c2.material, Material::Sb2Te3Gst467);
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        assert!(SpecPcmConfig::from_toml("mlc_bits = 9").is_err());
+        assert!(SpecPcmConfig::from_toml("adc_bits = 0").is_err());
+        assert!(SpecPcmConfig::from_toml("hd_dim = 0").is_err());
+        assert!(SpecPcmConfig::from_toml("fdr = 0.9").is_err());
+        assert!(SpecPcmConfig::from_toml("mystery = 1").is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! Segment placement: maps reference HVs onto physical (bank, row) slots.
+//!
+//! An HV packed to `segments` 128-wide pieces occupies `segments`
+//! consecutive banks at the same row index (paper §III-C); a *bank group*
+//! of `segments` banks therefore holds up to 128 HVs. The allocator hands
+//! out (group, row) slots, tracks freedom, and never double-books — the
+//! invariant proptested in `rust/tests/proptest_coordinator.rs`.
+
+use crate::array::ARRAY_DIM;
+
+/// One allocated slot: bank group index and row within the group.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Slot {
+    pub group: usize,
+    pub row: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct SegmentAllocator {
+    /// Banks per group (= segments per HV).
+    segments: usize,
+    /// Total bank groups available.
+    groups: usize,
+    /// Free rows per group (LIFO).
+    free: Vec<Vec<usize>>,
+}
+
+impl SegmentAllocator {
+    /// `num_banks` physical banks serving HVs of `packed_width` (must be a
+    /// multiple of 128).
+    pub fn new(num_banks: usize, packed_width: usize) -> Self {
+        assert!(packed_width > 0 && packed_width % ARRAY_DIM == 0);
+        let segments = packed_width / ARRAY_DIM;
+        let groups = num_banks / segments;
+        assert!(
+            groups > 0,
+            "{num_banks} banks cannot hold a {packed_width}-wide HV ({segments} segments)"
+        );
+        SegmentAllocator {
+            segments,
+            groups,
+            free: (0..groups)
+                .map(|_| (0..ARRAY_DIM).rev().collect())
+                .collect(),
+        }
+    }
+
+    pub fn segments(&self) -> usize {
+        self.segments
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.groups * ARRAY_DIM
+    }
+
+    pub fn free_slots(&self) -> usize {
+        self.free.iter().map(|f| f.len()).sum()
+    }
+
+    /// Allocate one slot (fills group 0 first — keeps row blocks dense for
+    /// whole-array MVM activation).
+    pub fn alloc(&mut self) -> Option<Slot> {
+        for (g, rows) in self.free.iter_mut().enumerate() {
+            if let Some(row) = rows.pop() {
+                return Some(Slot { group: g, row });
+            }
+        }
+        None
+    }
+
+    /// Release a slot back to the pool.
+    pub fn release(&mut self, slot: Slot) {
+        assert!(slot.group < self.groups && slot.row < ARRAY_DIM);
+        debug_assert!(
+            !self.free[slot.group].contains(&slot.row),
+            "double release of {slot:?}"
+        );
+        self.free[slot.group].push(slot.row);
+    }
+
+    /// Physical bank indices a slot's segments live on.
+    pub fn banks_of(&self, slot: Slot) -> Vec<usize> {
+        (0..self.segments)
+            .map(|s| slot.group * self.segments + s)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_math() {
+        // 128 banks, 768-wide HVs (6 segments) -> 21 groups * 128 rows.
+        let a = SegmentAllocator::new(128, 768);
+        assert_eq!(a.segments(), 6);
+        assert_eq!(a.capacity(), 21 * 128);
+        assert_eq!(a.free_slots(), a.capacity());
+    }
+
+    #[test]
+    fn alloc_until_exhausted() {
+        let mut a = SegmentAllocator::new(4, 256); // 2 groups * 128 rows
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..256 {
+            let s = a.alloc().unwrap();
+            assert!(seen.insert(s), "double-booked {s:?}");
+        }
+        assert!(a.alloc().is_none());
+    }
+
+    #[test]
+    fn release_reuses() {
+        let mut a = SegmentAllocator::new(2, 256); // 1 group
+        let slots: Vec<Slot> = (0..128).map(|_| a.alloc().unwrap()).collect();
+        assert!(a.alloc().is_none());
+        a.release(slots[17]);
+        let s = a.alloc().unwrap();
+        assert_eq!(s, slots[17]);
+    }
+
+    #[test]
+    fn banks_of_contiguous() {
+        let a = SegmentAllocator::new(12, 384); // 3 segments, 4 groups
+        let banks = a.banks_of(Slot { group: 2, row: 5 });
+        assert_eq!(banks, vec![6, 7, 8]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_wide_for_banks() {
+        SegmentAllocator::new(2, 768); // needs 6 banks
+    }
+}

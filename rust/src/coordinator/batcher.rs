@@ -1,0 +1,99 @@
+//! Work batching into the fixed AOT artifact geometry.
+//!
+//! The artifacts are compiled for B=64 queries x R=1024 reference rows; the
+//! batcher chops arbitrary workloads into padded tiles and maps results
+//! back, preserving input order (proptested invariant).
+
+/// Pad a `rows x width` row-major matrix up to `target_rows` with zeros.
+pub fn pad_matrix(data: &[f32], rows: usize, width: usize, target_rows: usize) -> Vec<f32> {
+    assert_eq!(data.len(), rows * width);
+    assert!(target_rows >= rows);
+    let mut out = Vec::with_capacity(target_rows * width);
+    out.extend_from_slice(data);
+    out.resize(target_rows * width, 0.0);
+    out
+}
+
+/// Iterator over contiguous index chunks of at most `chunk` items.
+#[derive(Clone, Debug)]
+pub struct Batcher {
+    total: usize,
+    chunk: usize,
+}
+
+/// One batch: the half-open range of original indices it covers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Batch {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+}
+
+impl Batcher {
+    pub fn new(total: usize, chunk: usize) -> Self {
+        assert!(chunk > 0);
+        Batcher { total, chunk }
+    }
+
+    pub fn batches(&self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < self.total {
+            let end = (start + self.chunk).min(self.total);
+            out.push(Batch { start, end });
+            start = end;
+        }
+        out
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.total.div_ceil(self.chunk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_cover_in_order_without_overlap() {
+        let b = Batcher::new(150, 64);
+        let batches = b.batches();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0], Batch { start: 0, end: 64 });
+        assert_eq!(batches[1], Batch { start: 64, end: 128 });
+        assert_eq!(batches[2], Batch { start: 128, end: 150 });
+        let covered: usize = batches.iter().map(|b| b.len()).sum();
+        assert_eq!(covered, 150);
+    }
+
+    #[test]
+    fn exact_multiple() {
+        let b = Batcher::new(128, 64);
+        assert_eq!(b.num_batches(), 2);
+        assert!(b.batches().iter().all(|x| x.len() == 64));
+    }
+
+    #[test]
+    fn empty_total() {
+        assert!(Batcher::new(0, 64).batches().is_empty());
+    }
+
+    #[test]
+    fn pad_matrix_zero_fills() {
+        let m = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
+        let p = pad_matrix(&m, 2, 2, 4);
+        assert_eq!(p.len(), 8);
+        assert_eq!(&p[..4], &m[..]);
+        assert!(p[4..].iter().all(|&x| x == 0.0));
+    }
+}

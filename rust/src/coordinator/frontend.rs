@@ -1,0 +1,146 @@
+//! HD encode+pack frontend: one call per spectra batch, executed on the
+//! PJRT encoder artifact when the (D, n) variant exists, with the
+//! bit-identical rust path (`hd::encode` + `hd::pack`) as fallback for
+//! artifact-free runs and for sweep dimensions outside the variant set.
+
+use anyhow::Result;
+
+use crate::config::SpecPcmConfig;
+use crate::energy::OpCounts;
+use crate::hd::{self, ItemMemory};
+use crate::ms::{preprocess, PreprocessConfig, Spectrum};
+use crate::runtime::{Manifest, Runtime};
+
+pub struct HdFrontend {
+    pub im: ItemMemory,
+    pub d: usize,
+    pub n: usize,
+    pub packed_width: usize,
+    preprocess_cfg: PreprocessConfig,
+    /// Cached f32 codebooks for the artifact path.
+    id_hvs_f32: Vec<f32>,
+    level_hvs_f32: Vec<f32>,
+}
+
+impl HdFrontend {
+    pub fn new(cfg: &SpecPcmConfig) -> Self {
+        let preprocess_cfg = PreprocessConfig {
+            bins: cfg.features,
+            levels: cfg.levels,
+            ..PreprocessConfig::default()
+        };
+        let im = ItemMemory::generate(cfg.seed ^ 0x1d, cfg.features, cfg.levels, cfg.hd_dim);
+        let id_hvs_f32 = im.id_hvs_f32();
+        let level_hvs_f32 = im.level_hvs_f32();
+        HdFrontend {
+            packed_width: hd::padded_packed_len(cfg.hd_dim, cfg.packing()),
+            d: cfg.hd_dim,
+            n: cfg.packing(),
+            im,
+            preprocess_cfg,
+            id_hvs_f32,
+            level_hvs_f32,
+        }
+    }
+
+    /// Preprocess spectra into quantized level vectors (ASIC input stage).
+    pub fn levels_of(&self, spectra: &[&Spectrum]) -> Vec<Vec<u16>> {
+        spectra
+            .iter()
+            .map(|s| preprocess(s, &self.preprocess_cfg))
+            .collect()
+    }
+
+    /// Encode + pack a set of spectra into row-major packed HVs
+    /// (`spectra.len() x packed_width`). Uses the PJRT artifact when
+    /// `runtime` is provided and has the (D, n) variant; counts ASIC encode
+    /// and pack work either way.
+    pub fn encode_pack(
+        &self,
+        spectra: &[&Spectrum],
+        runtime: Option<&mut Runtime>,
+        ops: &mut OpCounts,
+    ) -> Result<Vec<f32>> {
+        let levels = self.levels_of(spectra);
+        ops.encode_spectra += spectra.len() as u64;
+        ops.features = self.preprocess_cfg.bins as u64;
+        ops.pack_elements += (spectra.len() * self.packed_width) as u64;
+
+        if let Some(rt) = runtime {
+            let name = Manifest::enc_pack_name(self.d, self.n);
+            if rt.manifest.get(&name).is_some() {
+                return self.encode_pack_artifact(&levels, rt);
+            }
+        }
+        Ok(self.encode_pack_rust(&levels))
+    }
+
+    /// Pure-rust reference path.
+    fn encode_pack_rust(&self, levels: &[Vec<u16>]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(levels.len() * self.packed_width);
+        for lv in levels {
+            let hv = hd::encode(lv, &self.im);
+            out.extend_from_slice(&hd::pack(&hv, self.n));
+        }
+        out
+    }
+
+    /// PJRT artifact path: batches of the manifest's B spectra.
+    fn encode_pack_artifact(&self, levels: &[Vec<u16>], rt: &mut Runtime) -> Result<Vec<f32>> {
+        let b = rt.manifest.batch;
+        let f = rt.manifest.features;
+        let mut out = Vec::with_capacity(levels.len() * self.packed_width);
+        for chunk in levels.chunks(b) {
+            let mut batch = vec![0i32; b * f];
+            for (i, lv) in chunk.iter().enumerate() {
+                for (j, &v) in lv.iter().enumerate() {
+                    batch[i * f + j] = v as i32;
+                }
+            }
+            let packed =
+                rt.encode_pack(self.d, self.n, &batch, &self.id_hvs_f32, &self.level_hvs_f32)?;
+            // Keep only the real rows of this batch.
+            out.extend_from_slice(&packed[..chunk.len() * self.packed_width]);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ms::dataset::ClusteringDataset;
+
+    fn small_cfg() -> SpecPcmConfig {
+        SpecPcmConfig {
+            hd_dim: 512,
+            mlc_bits: 3,
+            ..SpecPcmConfig::paper_clustering()
+        }
+    }
+
+    #[test]
+    fn rust_path_shapes_and_range() {
+        let cfg = small_cfg();
+        let fe = HdFrontend::new(&cfg);
+        let ds = ClusteringDataset::generate("t", 1, 5, 2, 3, 2, 0);
+        let refs: Vec<&Spectrum> = ds.spectra.iter().collect();
+        let mut ops = OpCounts::default();
+        let packed = fe.encode_pack(&refs, None, &mut ops).unwrap();
+        assert_eq!(packed.len(), refs.len() * fe.packed_width);
+        assert!(packed.iter().all(|&v| v.abs() <= 3.0));
+        assert_eq!(ops.encode_spectra, refs.len() as u64);
+    }
+
+    #[test]
+    fn identical_spectra_identical_hvs() {
+        let cfg = small_cfg();
+        let fe = HdFrontend::new(&cfg);
+        let ds = ClusteringDataset::generate("t", 2, 1, 2, 2, 0, 0);
+        let s = &ds.spectra[0];
+        let mut ops = OpCounts::default();
+        let p1 = fe.encode_pack(&[s], None, &mut ops).unwrap();
+        let p2 = fe.encode_pack(&[s], None, &mut ops).unwrap();
+        assert_eq!(p1, p2);
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 coordinator (DESIGN.md §2): the glue that turns spectra into ISA-level
+//! array work and PJRT artifact executions.
+//!
+//! * [`allocator`] — places HV segments onto (bank, row) slots; an HV wider
+//!   than 128 packed dims spans multiple banks at the same row (paper
+//!   §III-C).
+//! * [`batcher`] — groups work into the fixed B=64 / R=1024 artifact
+//!   geometry, padding with zeros and slicing results back.
+//! * [`frontend`] — HD encode+pack via the PJRT artifacts with a bit-exact
+//!   rust fallback.
+//! * [`pipeline`] — the end-to-end clustering and DB-search drivers that
+//!   the CLI, examples and benches call.
+
+pub mod allocator;
+pub mod batcher;
+pub mod frontend;
+pub mod pipeline;
+
+pub use allocator::SegmentAllocator;
+pub use batcher::{pad_matrix, Batcher};
+pub use frontend::HdFrontend;
+pub use pipeline::{
+    ClusteringOutcome, ClusteringPipeline, SearchOutcomeSummary, SearchPipeline,
+};

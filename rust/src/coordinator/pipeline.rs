@@ -1,0 +1,540 @@
+//! End-to-end pipeline drivers (paper Figs. 1 and 2).
+//!
+//! Both pipelines share one IMC execution helper that prefers the PJRT
+//! artifact (`mvm_c{width}`) and falls back to the bit-identical rust
+//! transfer function, counting physical array operations either way:
+//! one MVM op = one 128x128 bank processing one input vector.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::array::{imc_mvm_ref, AdcConfig, ARRAY_DIM};
+use crate::cluster::{complete_linkage, ClusterQuality};
+use crate::config::SpecPcmConfig;
+use crate::device::{MlcConfig, NoiseModel, Programmer};
+use crate::energy::{EnergyLatencyModel, EnergyReport, OpCounts};
+use crate::ms::bucket::{bucket_by_precursor, candidate_keys_open, BucketKey};
+use crate::ms::synth::PTM_SHIFTS;
+use crate::ms::{ClusteringDataset, SearchDataset, Spectrum};
+use crate::runtime::{Manifest, Runtime};
+use crate::search::{fdr_filter, FdrResult};
+use crate::telemetry::StageTimer;
+use crate::util::Rng;
+
+use super::batcher::{pad_matrix, Batcher};
+use super::frontend::HdFrontend;
+
+/// Shared IMC MVM execution: `nq x nr` scores over `cp`-wide packed HVs.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn mvm_scores(
+    queries: &[f32],
+    nq: usize,
+    refs: &[f32],
+    nr: usize,
+    cp: usize,
+    adc: AdcConfig,
+    mut runtime: Option<&mut Runtime>,
+    ops: &mut OpCounts,
+) -> Result<Vec<f32>> {
+    assert_eq!(queries.len(), nq * cp);
+    assert_eq!(refs.len(), nr * cp);
+    // Physical op count: every real query vector drives every 128-row x
+    // 128-col bank holding candidate rows.
+    let row_tiles = nr.div_ceil(ARRAY_DIM) as u64;
+    let col_tiles = (cp / ARRAY_DIM) as u64;
+    ops.mvm_ops += nq as u64 * row_tiles * col_tiles;
+
+    if let Some(rt) = runtime.as_deref_mut() {
+        if rt.manifest.get(&Manifest::mvm_name(cp)).is_some() {
+            // The artifact runs a fixed B x R geometry; small jobs (tiny
+            // candidate buckets) would mostly multiply padding zeros. The
+            // rust transfer function is bit-identical (integration-tested),
+            // so route by padded-utilization: below ~30% the scalar path
+            // wins (measured crossover, EXPERIMENTS.md §Perf L3).
+            let padded = nq.div_ceil(rt.manifest.batch)
+                * rt.manifest.batch
+                * nr.div_ceil(rt.manifest.rows)
+                * rt.manifest.rows;
+            let utilization = (nq * nr) as f64 / padded as f64;
+            if utilization >= 0.3 {
+                return mvm_scores_artifact(queries, nq, refs, nr, cp, adc, rt);
+            }
+        }
+    }
+    Ok(imc_mvm_ref(queries, refs, nq, nr, cp, adc))
+}
+
+fn mvm_scores_artifact(
+    queries: &[f32],
+    nq: usize,
+    refs: &[f32],
+    nr: usize,
+    cp: usize,
+    adc: AdcConfig,
+    rt: &mut Runtime,
+) -> Result<Vec<f32>> {
+    let b = rt.manifest.batch;
+    let r_block = rt.manifest.rows;
+    let mut out = vec![0f32; nq * nr];
+
+    for rb in Batcher::new(nr, r_block).batches() {
+        let refs_block = pad_matrix(
+            &refs[rb.start * cp..rb.end * cp],
+            rb.len(),
+            cp,
+            r_block,
+        );
+        // Marshal the (large) reference block into a PJRT literal once per
+        // row block; every query batch against it reuses the literal.
+        let refs_lit = rt.mvm_refs_literal(cp, &refs_block)?;
+        for qb in Batcher::new(nq, b).batches() {
+            let q_block = pad_matrix(
+                &queries[qb.start * cp..qb.end * cp],
+                qb.len(),
+                cp,
+                b,
+            );
+            let scores = rt.mvm_with_refs(cp, &q_block, &refs_lit, adc.lsb(), adc.qmax())?;
+            for qi in 0..qb.len() {
+                let src = &scores[qi * r_block..qi * r_block + rb.len()];
+                let dst_row = qb.start + qi;
+                out[dst_row * nr + rb.start..dst_row * nr + rb.end].copy_from_slice(src);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Program packed reference HVs into PCM: applies write-verify-calibrated
+/// noise and counts programming work. Returns the noisy conductances.
+pub(crate) fn program_refs(
+    packed: &[f32],
+    n_rows: usize,
+    cp: usize,
+    programmer: &Programmer,
+    rng: &mut Rng,
+    ops: &mut OpCounts,
+) -> Vec<f32> {
+    assert_eq!(packed.len(), n_rows * cp);
+    let segments = (cp / ARRAY_DIM) as u64;
+    let mut noisy = Vec::with_capacity(packed.len());
+    for row in 0..n_rows {
+        let (stored, pulses, _reads) =
+            programmer.program_slice(&packed[row * cp..(row + 1) * cp], rng);
+        noisy.extend_from_slice(&stored);
+        // A row round pulses all 128 cells of one segment in parallel.
+        ops.program_rounds += pulses.div_ceil(ARRAY_DIM as u64).max(segments);
+        ops.verify_rounds += programmer.write_verify as u64 * segments;
+    }
+    noisy
+}
+
+/// Normalized distance matrix from raw IMC scores: `d_ij = 1 - s_ij /
+/// sqrt(s_ii * s_jj)`, clamped to [0, 2] (near-memory ASIC post-processing).
+pub(crate) fn scores_to_distances(scores: &[f32], n: usize) -> Vec<f32> {
+    let mut d = vec![0f32; n * n];
+    let diag: Vec<f32> = (0..n).map(|i| scores[i * n + i].max(1.0)).collect();
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let scale = (diag[i] * diag[j]).sqrt();
+            d[i * n + j] = (1.0 - scores[i * n + j] / scale).clamp(0.0, 2.0);
+        }
+    }
+    d
+}
+
+// ---------------------------------------------------------------------------
+// Clustering
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct ClusteringOutcome {
+    /// Quality at each configured threshold, aggregated over all buckets.
+    pub curve: Vec<ClusterQuality>,
+    pub ops: OpCounts,
+    pub report: EnergyReport,
+    pub n_spectra: usize,
+    pub n_buckets: usize,
+    pub wall: StageTimer,
+}
+
+pub struct ClusteringPipeline {
+    pub cfg: SpecPcmConfig,
+    pub frontend: HdFrontend,
+}
+
+impl ClusteringPipeline {
+    pub fn new(cfg: SpecPcmConfig) -> Self {
+        let frontend = HdFrontend::new(&cfg);
+        ClusteringPipeline { cfg, frontend }
+    }
+
+    pub fn run(
+        &self,
+        dataset: &ClusteringDataset,
+        mut runtime: Option<&mut Runtime>,
+    ) -> Result<ClusteringOutcome> {
+        let cfg = &self.cfg;
+        let mut ops = OpCounts::default();
+        let mut wall = StageTimer::new();
+        let mut rng = Rng::new(cfg.seed ^ 0xc1);
+        let programmer = Programmer::new(
+            NoiseModel::new(cfg.material, MlcConfig::new(cfg.mlc_bits)),
+            cfg.write_verify,
+        );
+        let adc = AdcConfig::default_for_packing(cfg.adc_bits, cfg.packing());
+        let cp = self.frontend.packed_width;
+
+        let buckets = wall.time("bucketing", || {
+            bucket_by_precursor(&dataset.spectra, cfg.bucket_width)
+        });
+
+        // Per-spectrum global cluster labels per threshold; singleton
+        // buckets keep their own label.
+        let n = dataset.spectra.len();
+        let truth: Vec<u32> = dataset
+            .spectra
+            .iter()
+            .map(|s| s.peptide_id.unwrap_or(u32::MAX))
+            .collect();
+        let mut labels_per_t: Vec<Vec<usize>> =
+            vec![(0..n).collect(); cfg.threshold_sweep.len()];
+        let mut next_label = n; // fresh labels beyond the singleton ids
+
+        let mut n_buckets = 0usize;
+        for (_key, members) in &buckets {
+            if members.len() < 2 {
+                continue;
+            }
+            n_buckets += 1;
+            let specs: Vec<&Spectrum> = members.iter().map(|&i| &dataset.spectra[i]).collect();
+
+            let packed = wall.time("encode+pack", || {
+                self.frontend
+                    .encode_pack(&specs, runtime.as_deref_mut(), &mut ops)
+            })?;
+
+            let noisy = wall.time("program", || {
+                program_refs(&packed, specs.len(), cp, &programmer, &mut rng, &mut ops)
+            });
+
+            let scores = wall.time("distance (IMC)", || {
+                mvm_scores(
+                    &packed,
+                    specs.len(),
+                    &noisy,
+                    specs.len(),
+                    cp,
+                    adc,
+                    runtime.as_deref_mut(),
+                    &mut ops,
+                )
+            })?;
+
+            let (dend, dist_n) = wall.time("cluster (ASIC)", || {
+                let d = scores_to_distances(&scores, specs.len());
+                let max_t = cfg
+                    .threshold_sweep
+                    .iter()
+                    .copied()
+                    .fold(0.0f32, f32::max);
+                (complete_linkage(&d, specs.len(), max_t), specs.len())
+            });
+            ops.merge_elements += dend.update_elements;
+            debug_assert_eq!(dist_n, specs.len());
+
+            for (ti, &t) in cfg.threshold_sweep.iter().enumerate() {
+                let local = dend.cut(t);
+                let n_local = local.iter().max().map(|m| m + 1).unwrap_or(0);
+                for (li, &gi) in members.iter().enumerate() {
+                    labels_per_t[ti][gi] = next_label + local[li];
+                }
+                let _ = n_local;
+            }
+            next_label += specs.len(); // safe upper bound on local labels
+        }
+
+        let curve: Vec<ClusterQuality> = cfg
+            .threshold_sweep
+            .iter()
+            .enumerate()
+            .map(|(ti, &t)| crate::cluster::quality::evaluate(&labels_per_t[ti], &truth, t))
+            .collect();
+
+        let model = EnergyLatencyModel::new(cfg.material, cfg.adc_bits, cfg.num_banks);
+        let report = model.report(&ops);
+
+        Ok(ClusteringOutcome {
+            curve,
+            ops,
+            report,
+            n_spectra: n,
+            n_buckets,
+            wall,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DB search
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct SearchOutcomeSummary {
+    /// Queries identified at the configured FDR.
+    pub identified: usize,
+    /// Identified queries whose matched peptide equals the ground truth.
+    pub correct: usize,
+    pub total_queries: usize,
+    /// Ground-truth-correct identified peptide ids (for the Fig. S1 Venn).
+    pub identified_peptides: Vec<u32>,
+    /// Per-query (best target score, best decoy score) pairs — the raw
+    /// separation signal (mean margin is the fine-grained noise metric the
+    /// Fig. S3 sweeps report alongside identification counts).
+    pub pairs: Vec<(f32, f32)>,
+    pub fdr: FdrResult,
+    pub ops: OpCounts,
+    pub report: EnergyReport,
+    pub wall: StageTimer,
+}
+
+impl SearchOutcomeSummary {
+    /// Mean normalized separation between each query's best target and best
+    /// decoy score, over queries with finite scores. Monotone in device
+    /// noise: more write-verify (lower sigma) -> larger margin, even when
+    /// the identification count has saturated.
+    pub fn mean_margin(&self) -> f64 {
+        let (mut sum, mut n) = (0.0f64, 0u32);
+        for &(t, d) in &self.pairs {
+            if t.is_finite() && d.is_finite() && t.abs() > 0.0 {
+                sum += ((t - d) / t.abs().max(d.abs())) as f64;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+}
+
+pub struct SearchPipeline {
+    pub cfg: SpecPcmConfig,
+    pub frontend: HdFrontend,
+}
+
+impl SearchPipeline {
+    pub fn new(cfg: SpecPcmConfig) -> Self {
+        let frontend = HdFrontend::new(&cfg);
+        SearchPipeline { cfg, frontend }
+    }
+
+    pub fn run(
+        &self,
+        dataset: &SearchDataset,
+        mut runtime: Option<&mut Runtime>,
+    ) -> Result<SearchOutcomeSummary> {
+        let cfg = &self.cfg;
+        let mut ops = OpCounts::default();
+        let mut wall = StageTimer::new();
+        let mut rng = Rng::new(cfg.seed ^ 0x5e);
+        let programmer = Programmer::new(
+            NoiseModel::new(cfg.material, MlcConfig::new(cfg.mlc_bits)),
+            cfg.write_verify,
+        );
+        let adc = AdcConfig::default_for_packing(cfg.adc_bits, cfg.packing());
+        let cp = self.frontend.packed_width;
+
+        // Reference set = targets followed by decoys.
+        let all_refs: Vec<&Spectrum> = dataset
+            .library
+            .iter()
+            .chain(dataset.decoys.iter())
+            .collect();
+        let n_targets = dataset.library.len();
+
+        let packed_refs = wall.time("encode refs", || {
+            self.frontend
+                .encode_pack(&all_refs, runtime.as_deref_mut(), &mut ops)
+        })?;
+        let noisy_refs = wall.time("program refs", || {
+            program_refs(
+                &packed_refs,
+                all_refs.len(),
+                cp,
+                &programmer,
+                &mut rng,
+                &mut ops,
+            )
+        });
+
+        // Bucket references by precursor for candidate selection.
+        let ref_spectra: Vec<Spectrum> = all_refs.iter().map(|s| (*s).clone()).collect();
+        let ref_buckets = bucket_by_precursor(&ref_spectra, cfg.bucket_width);
+
+        let queries: Vec<&Spectrum> = dataset.queries.iter().collect();
+        let packed_queries = wall.time("encode queries", || {
+            self.frontend
+                .encode_pack(&queries, runtime.as_deref_mut(), &mut ops)
+        })?;
+
+        // Group queries by identical candidate-key sets so one IMC batch
+        // shares one reference row block.
+        let mut groups: BTreeMap<Vec<BucketKey>, Vec<usize>> = BTreeMap::new();
+        for (qi, q) in queries.iter().enumerate() {
+            let keys = candidate_keys_open(q.charge, q.precursor_mz, cfg.bucket_width, &PTM_SHIFTS);
+            groups.entry(keys).or_default().push(qi);
+        }
+
+        // Per-query best (target score, decoy score) + matched peptide.
+        let mut best: Vec<(f32, f32, Option<u32>)> =
+            vec![(f32::NEG_INFINITY, f32::NEG_INFINITY, None); queries.len()];
+
+        for (keys, q_idxs) in &groups {
+            let mut cand: Vec<usize> = keys
+                .iter()
+                .filter_map(|k| ref_buckets.get(k))
+                .flatten()
+                .copied()
+                .collect();
+            cand.sort_unstable();
+            cand.dedup();
+            if cand.is_empty() {
+                continue;
+            }
+
+            // Gather candidate rows (targets + decoys interleaved by index).
+            let mut cand_rows = Vec::with_capacity(cand.len() * cp);
+            for &ri in &cand {
+                cand_rows.extend_from_slice(&noisy_refs[ri * cp..(ri + 1) * cp]);
+            }
+            let mut q_rows = Vec::with_capacity(q_idxs.len() * cp);
+            for &qi in q_idxs {
+                q_rows.extend_from_slice(&packed_queries[qi * cp..(qi + 1) * cp]);
+            }
+
+            let scores = wall.time("similarity (IMC)", || {
+                mvm_scores(
+                    &q_rows,
+                    q_idxs.len(),
+                    &cand_rows,
+                    cand.len(),
+                    cp,
+                    adc,
+                    runtime.as_deref_mut(),
+                    &mut ops,
+                )
+            })?;
+
+            wall.time("top-1 + merge (ASIC)", || {
+                for (bi, &qi) in q_idxs.iter().enumerate() {
+                    let row = &scores[bi * cand.len()..(bi + 1) * cand.len()];
+                    for (ci, &ri) in cand.iter().enumerate() {
+                        let s = row[ci];
+                        if ri < n_targets {
+                            if s > best[qi].0 {
+                                best[qi].0 = s;
+                                best[qi].2 = ref_spectra[ri].peptide_id;
+                            }
+                        } else if s > best[qi].1 {
+                            best[qi].1 = s;
+                        }
+                    }
+                }
+            });
+            ops.merge_elements += (q_idxs.len() * cand.len()) as u64;
+        }
+
+        let pairs: Vec<(f32, f32)> = best.iter().map(|&(t, d, _)| (t, d)).collect();
+        let fdr = wall.time("FDR filter", || fdr_filter(&pairs, cfg.fdr));
+
+        let mut correct = 0usize;
+        let mut identified_peptides = Vec::new();
+        for &qi in &fdr.accepted {
+            if let (Some(matched), Some(truth)) = (best[qi].2, queries[qi].peptide_id) {
+                if matched == truth {
+                    correct += 1;
+                    identified_peptides.push(matched);
+                }
+            }
+        }
+        identified_peptides.sort_unstable();
+        identified_peptides.dedup();
+
+        let model = EnergyLatencyModel::new(cfg.material, cfg.adc_bits, cfg.num_banks);
+        let report = model.report(&ops);
+
+        Ok(SearchOutcomeSummary {
+            identified: fdr.accepted.len(),
+            pairs,
+            correct,
+            total_queries: queries.len(),
+            identified_peptides,
+            fdr,
+            ops,
+            report,
+            wall,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scores_to_distances_diag_zero_symmetric_range() {
+        // 2 vectors: identical (s=100) and anti-correlated.
+        let scores = vec![100.0, -80.0, -80.0, 100.0];
+        let d = scores_to_distances(&scores, 2);
+        assert_eq!(d[0], 0.0);
+        assert_eq!(d[3], 0.0);
+        assert!((d[1] - 1.8).abs() < 1e-5);
+        assert_eq!(d[1], d[2]);
+    }
+
+    #[test]
+    fn clustering_pipeline_end_to_end_quality() {
+        let cfg = SpecPcmConfig {
+            hd_dim: 1024,
+            bucket_width: 50.0,
+            num_banks: 64,
+            ..SpecPcmConfig::paper_clustering()
+        };
+        let ds = ClusteringDataset::generate("t", 7, 12, 4, 6, 10, 0);
+        let out = ClusteringPipeline::new(cfg).run(&ds, None).unwrap();
+        assert_eq!(out.n_spectra, ds.len());
+        assert!(out.ops.mvm_ops > 0);
+        assert!(out.report.total_j() > 0.0);
+        // At some threshold, a decent fraction clusters with low error.
+        let best = crate::cluster::quality::clustered_at_incorrect(&out.curve, 0.02);
+        assert!(best > 0.3, "clustered {best} at 2% incorrect");
+    }
+
+    #[test]
+    fn search_pipeline_end_to_end_identifies() {
+        let cfg = SpecPcmConfig {
+            hd_dim: 2048,
+            bucket_width: 5.0,
+            num_banks: 64,
+            ..SpecPcmConfig::paper_search()
+        };
+        let ds = SearchDataset::generate("t", 11, 60, 80, 0.8, 0.2, 0, 0);
+        let out = SearchPipeline::new(cfg).run(&ds, None).unwrap();
+        assert_eq!(out.total_queries, 80);
+        assert!(out.identified > 20, "identified {}", out.identified);
+        // Most identifications must be ground-truth correct.
+        assert!(
+            out.correct as f64 >= 0.8 * out.identified as f64,
+            "correct {} of {}",
+            out.correct,
+            out.identified
+        );
+        assert!(out.ops.mvm_ops > 0);
+    }
+}

@@ -1,0 +1,98 @@
+//! Multi-level-cell configuration and packed-value <-> level mapping.
+//!
+//! Dimension packing (§III-B) sums `n` adjacent +/-1 elements, so a packed
+//! value lies in `{-n, ..., +n}`. One 2T2R differential pair stores it as
+//! the conductance difference G+ - G-; with `n` bits per cell each leg
+//! resolves `2^n` levels, exactly covering the packed alphabet.
+
+
+
+/// Bits per PCM cell (1 = SLC, 2 = MLC2, 3 = MLC3 — the paper's sweep).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MlcConfig {
+    pub bits_per_cell: u8,
+}
+
+impl MlcConfig {
+    pub fn new(bits_per_cell: u8) -> Self {
+        assert!(
+            (1..=4).contains(&bits_per_cell),
+            "bits_per_cell must be 1..=4, got {bits_per_cell}"
+        );
+        MlcConfig { bits_per_cell }
+    }
+
+    /// The packing factor n equals bits per cell (§III-B).
+    #[inline]
+    pub fn packing(self) -> usize {
+        self.bits_per_cell as usize
+    }
+
+    /// Conductance levels resolvable per cell leg.
+    #[inline]
+    pub fn levels(self) -> usize {
+        1 << self.bits_per_cell
+    }
+
+    /// Largest |packed value| a differential pair must represent.
+    #[inline]
+    pub fn max_abs_value(self) -> i32 {
+        self.bits_per_cell as i32
+    }
+
+    /// All representable packed values. Full groups of n +/-1 elements have
+    /// parity n; zero-padded remainder groups can produce the in-between
+    /// parities too, so the full alphabet is every integer in [-n, n].
+    pub fn alphabet(self) -> Vec<i32> {
+        let n = self.max_abs_value();
+        (-n..=n).collect()
+    }
+
+    /// Validate that a packed value is representable.
+    #[inline]
+    pub fn contains(self, v: i32) -> bool {
+        v.abs() <= self.max_abs_value()
+    }
+
+    /// Normalized distance between adjacent *occupied* packed levels of
+    /// full groups ({-n, -n+2, ...}), used by the noise model to convert a
+    /// bit-error rate into a conductance sigma.
+    #[inline]
+    pub fn level_spacing(self) -> f64 {
+        2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slc_mlc_levels() {
+        assert_eq!(MlcConfig::new(1).levels(), 2);
+        assert_eq!(MlcConfig::new(2).levels(), 4);
+        assert_eq!(MlcConfig::new(3).levels(), 8);
+    }
+
+    #[test]
+    fn packing_equals_bits() {
+        for b in 1..=4u8 {
+            assert_eq!(MlcConfig::new(b).packing(), b as usize);
+        }
+    }
+
+    #[test]
+    fn alphabet_bounds() {
+        let a = MlcConfig::new(3).alphabet();
+        assert_eq!(*a.first().unwrap(), -3);
+        assert_eq!(*a.last().unwrap(), 3);
+        assert!(MlcConfig::new(3).contains(0));
+        assert!(!MlcConfig::new(3).contains(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "bits_per_cell")]
+    fn rejects_zero_bits() {
+        MlcConfig::new(0);
+    }
+}

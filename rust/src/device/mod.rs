@@ -1,0 +1,23 @@
+//! PCM device models (paper §III-E, Fig. 7, Table S1, supplementary S.B).
+//!
+//! Two superlattice material stacks are modeled with the paper's measured
+//! parameters: Sb2Te3/Ge4Sb6Te7 (low programming energy — used for the
+//! write-intensive clustering arrays) and TiTe2/Ge4Sb6Te7 (long retention,
+//! low error rate — used for the read-intensive DB-search arrays).
+//!
+//! Noise follows the supplementary protocol: a programmed weight W is read
+//! back as `W_hat = W * (1 + eta)` with `eta ~ N(0, sigma^2)`; sigma is
+//! derived from the bit-error-rate curve measured against write-verify
+//! cycles (Fig. 7) and the MLC level spacing.
+
+pub mod material;
+pub mod mlc;
+pub mod noise;
+pub mod drift;
+pub mod programming;
+
+pub use material::{Material, MaterialParams};
+pub use mlc::MlcConfig;
+pub use noise::NoiseModel;
+pub use drift::DriftModel;
+pub use programming::{ProgramOutcome, Programmer};

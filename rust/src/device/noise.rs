@@ -1,0 +1,185 @@
+//! PCM read/programming noise model (supplementary "Noise model" + Fig. 7).
+//!
+//! The supplementary fits measured resistance distributions to a normal:
+//! a stored weight W reads back as `W_hat = W * (1 + eta)`, `eta ~ N(0,
+//! sigma^2)`. We connect sigma to the *measured* Fig. 7 bit-error-rate
+//! curve: a level is misread when the multiplicative excursion crosses half
+//! the packed-level spacing, i.e. for the outermost level `|W| = n`:
+//! `BER(w) ~= 2 * Q( (spacing/2) / (n * sigma(w)) )`.
+//!
+//! Given the fitted `BER(write_verify_cycles)` per material we invert this
+//! to `sigma(write_verify_cycles)`, which the programmer applies when a
+//! cell is written.
+
+use super::material::Material;
+use super::mlc::MlcConfig;
+use crate::util::Rng;
+
+/// Standard normal tail function Q(x) = P(Z > x).
+pub fn qfunc(x: f64) -> f64 {
+    0.5 * erfc(x / std::f64::consts::SQRT_2)
+}
+
+/// Inverse of Q via bisection (monotone decreasing); |error| < 1e-10.
+pub fn inv_qfunc(p: f64) -> f64 {
+    assert!((0.0..0.5).contains(&p) || p == 0.5, "inv_qfunc domain: {p}");
+    if p == 0.5 {
+        return 0.0;
+    }
+    let (mut lo, mut hi) = (0.0, 40.0);
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if qfunc(mid) > p {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+/// erfc via the Numerical-Recipes rational Chebyshev approximation
+/// (|relative error| < 1.2e-7 — ample for a BER model).
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.26551223
+            + t * (1.00002368
+                + t * (0.37409196
+                    + t * (0.09678418
+                        + t * (-0.18628806
+                            + t * (0.27886807
+                                + t * (-1.13520398
+                                    + t * (1.48851587
+                                        + t * (-0.82215223 + t * 0.17087277)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Per-configuration noise model.
+#[derive(Clone, Debug)]
+pub struct NoiseModel {
+    pub material: Material,
+    pub mlc: MlcConfig,
+}
+
+impl NoiseModel {
+    pub fn new(material: Material, mlc: MlcConfig) -> Self {
+        NoiseModel { material, mlc }
+    }
+
+    /// Fig. 7 fit: bit error rate after `write_verify` cycles.
+    pub fn ber(&self, write_verify: u32) -> f64 {
+        let p = self.material.params();
+        p.ber_floor + (p.ber0 - p.ber_floor) * (-p.ber_decay_k * write_verify as f64).exp()
+    }
+
+    /// Multiplicative sigma achieving `ber(write_verify)` on the outermost
+    /// MLC level (the worst case that dominates the measured BER).
+    pub fn sigma(&self, write_verify: u32) -> f64 {
+        let ber = self.ber(write_verify);
+        let half_spacing = self.mlc.level_spacing() / 2.0;
+        let n = self.mlc.max_abs_value() as f64;
+        half_spacing / (n * inv_qfunc(ber / 2.0))
+    }
+
+    /// Apply programming noise to an ideal packed weight.
+    #[inline]
+    pub fn noisy_weight(&self, w: f32, sigma: f64, rng: &mut Rng) -> f32 {
+        if w == 0.0 {
+            // Both legs of the 2T2R pair at the same level: differential
+            // zero is preserved (common-mode noise cancels at the BL pair).
+            0.0
+        } else {
+            w * (1.0 + (sigma * rng.gaussian()) as f32)
+        }
+    }
+
+    /// Empirical BER of a (value, noisy read) ensemble — used by the Fig. 7
+    /// bench to confirm the round-trip sigma -> BER matches the fit.
+    pub fn empirical_ber(&self, write_verify: u32, trials: usize, rng: &mut Rng) -> f64 {
+        let sigma = self.sigma(write_verify);
+        let n = self.mlc.max_abs_value() as f32;
+        let half = (self.mlc.level_spacing() / 2.0) as f32;
+        let mut errors = 0usize;
+        for _ in 0..trials {
+            let w = n; // outermost level, as in the sigma derivation
+            let w_hat = self.noisy_weight(w, sigma, rng);
+            if (w_hat - w).abs() > half {
+                errors += 1;
+            }
+        }
+        errors as f64 / trials as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qfunc_known_points() {
+        // erfc approximation is good to ~1.2e-7 relative.
+        assert!((qfunc(0.0) - 0.5).abs() < 1e-6);
+        assert!((qfunc(1.0) - 0.158655).abs() < 1e-5);
+        assert!((qfunc(2.0) - 0.022750).abs() < 1e-5);
+        assert!((qfunc(3.0) - 0.001350).abs() < 1e-5);
+    }
+
+    #[test]
+    fn inv_qfunc_roundtrip() {
+        for &p in &[0.4, 0.1, 0.05, 0.01, 0.001] {
+            let x = inv_qfunc(p);
+            assert!((qfunc(x) - p).abs() < 1e-8, "p={p}");
+        }
+    }
+
+    #[test]
+    fn ber_decreases_with_write_verify() {
+        // Fig. 7: BER falls monotonically with write-verify cycles.
+        for m in Material::ALL {
+            let nm = NoiseModel::new(m, MlcConfig::new(3));
+            let mut last = f64::INFINITY;
+            for w in 0..8 {
+                let b = nm.ber(w);
+                assert!(b < last, "material {m:?} cycle {w}");
+                last = b;
+            }
+            assert!(nm.ber(0) > 0.1, "starts above 10% (paper §II-C)");
+            assert!(nm.ber(20) < 0.02, "approaches the floor");
+        }
+    }
+
+    #[test]
+    fn sigma_monotone_in_write_verify() {
+        let nm = NoiseModel::new(Material::TiTe2Gst467, MlcConfig::new(3));
+        assert!(nm.sigma(0) > nm.sigma(3));
+        assert!(nm.sigma(3) > nm.sigma(10));
+    }
+
+    #[test]
+    fn empirical_ber_matches_fit() {
+        let nm = NoiseModel::new(Material::TiTe2Gst467, MlcConfig::new(3));
+        let mut rng = Rng::new(1234);
+        for wv in [0, 3] {
+            let emp = nm.empirical_ber(wv, 200_000, &mut rng);
+            let fit = nm.ber(wv);
+            assert!(
+                (emp - fit).abs() / fit < 0.1,
+                "wv={wv}: empirical {emp} vs fit {fit}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_weight_stays_zero() {
+        let nm = NoiseModel::new(Material::TiTe2Gst467, MlcConfig::new(3));
+        let mut rng = Rng::new(1);
+        assert_eq!(nm.noisy_weight(0.0, 0.5, &mut rng), 0.0);
+    }
+}

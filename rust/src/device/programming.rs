@@ -1,0 +1,180 @@
+//! Cell programming with write-verify (paper §III-C "Programming" and
+//! §III-D "Write-verify cycles").
+//!
+//! Each write-verify cycle reads the cell back, compares against the
+//! target level and applies a corrective pulse when outside tolerance
+//! (higher-amplitude pulse if under-programmed, iterative pulse otherwise).
+//! Here the *outcome* distribution is taken from the calibrated
+//! [`NoiseModel`] (which inverts the measured Fig. 7 BER curve), while the
+//! pulse count — which determines energy and latency — follows the
+//! iterative procedure.
+
+use super::mlc::MlcConfig;
+use super::noise::NoiseModel;
+use crate::util::Rng;
+
+/// Result of programming one packed value into a 2T2R pair.
+#[derive(Clone, Copy, Debug)]
+pub struct ProgramOutcome {
+    /// Conductance difference actually stored (after residual error).
+    pub stored: f32,
+    /// Total programming pulses issued (1 initial + corrective pulses).
+    pub pulses: u32,
+    /// Verify reads performed (== write_verify cycles requested).
+    pub verify_reads: u32,
+}
+
+/// Programs packed values with a configured number of write-verify cycles.
+#[derive(Clone, Debug)]
+pub struct Programmer {
+    pub noise: NoiseModel,
+    pub write_verify: u32,
+    /// Precomputed sigma(k) for k = 0..=write_verify. `NoiseModel::sigma`
+    /// inverts the BER fit by bisection (hundreds of erfc evaluations);
+    /// caching it here took programming from ~87% of the clustering
+    /// pipeline's host time to noise level (EXPERIMENTS.md §Perf).
+    sigma_table: Vec<f64>,
+}
+
+impl Programmer {
+    pub fn new(noise: NoiseModel, write_verify: u32) -> Self {
+        let sigma_table = (0..=write_verify).map(|k| noise.sigma(k)).collect();
+        Programmer {
+            noise,
+            write_verify,
+            sigma_table,
+        }
+    }
+
+    /// Residual multiplicative sigma after the configured verify cycles.
+    #[inline]
+    pub fn residual_sigma(&self) -> f64 {
+        self.sigma_table[self.write_verify as usize]
+    }
+
+    /// Program a single packed value.
+    ///
+    /// The corrective-pulse count is sampled from the same convergence
+    /// process the BER fit models: after cycle k the residual sigma is
+    /// `sigma(k)`, and a corrective pulse fires whenever the current
+    /// readback misses the half-spacing tolerance.
+    pub fn program(&self, target: f32, rng: &mut Rng) -> ProgramOutcome {
+        let mlc: MlcConfig = self.noise.mlc;
+        debug_assert!(mlc.contains(target as i32), "target {target} out of MLC range");
+
+        // Fast path shared by the clustering default (no write-verify):
+        // exactly one pulse, one draw from sigma(0).
+        if self.write_verify == 0 {
+            return ProgramOutcome {
+                stored: self.noise.noisy_weight(target, self.sigma_table[0], rng),
+                pulses: 1,
+                verify_reads: 0,
+            };
+        }
+
+        let half = (mlc.level_spacing() / 2.0) as f32;
+        let mut pulses = 1u32; // initial SET/RESET pulse
+        let mut stored = self.noise.noisy_weight(target, self.sigma_table[0], rng);
+
+        for k in 1..=self.write_verify {
+            if (stored - target).abs() <= half * 0.5 {
+                // Within tight tolerance: verify passes, no more pulses.
+                break;
+            }
+            // Corrective pulse narrows the distribution to sigma(k).
+            stored = self.noise.noisy_weight(target, self.sigma_table[k as usize], rng);
+            pulses += 1;
+        }
+
+        // Whatever the pulse trajectory, the *ensemble* statistics of the
+        // final state follow the calibrated residual sigma; resample from
+        // it so downstream accuracy only depends on the Fig. 7 fit.
+        let stored = self
+            .noise
+            .noisy_weight(target, self.residual_sigma(), rng);
+
+        ProgramOutcome {
+            stored,
+            pulses,
+            verify_reads: self.write_verify,
+        }
+    }
+
+    /// Program a full row/segment; returns stored values plus total pulse
+    /// and verify-read counts for the energy model.
+    pub fn program_slice(&self, targets: &[f32], rng: &mut Rng) -> (Vec<f32>, u64, u64) {
+        let mut stored = Vec::with_capacity(targets.len());
+        let (mut pulses, mut reads) = (0u64, 0u64);
+        for &t in targets {
+            let o = self.program(t, rng);
+            stored.push(o.stored);
+            pulses += o.pulses as u64;
+            reads += o.verify_reads as u64;
+        }
+        (stored, pulses, reads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Material, MlcConfig};
+
+    fn programmer(wv: u32) -> Programmer {
+        Programmer::new(
+            NoiseModel::new(Material::TiTe2Gst467, MlcConfig::new(3)),
+            wv,
+        )
+    }
+
+    #[test]
+    fn zero_write_verify_single_pulse() {
+        let p = programmer(0);
+        let mut rng = Rng::new(1);
+        let o = p.program(3.0, &mut rng);
+        assert_eq!(o.pulses, 1);
+        assert_eq!(o.verify_reads, 0);
+    }
+
+    #[test]
+    fn more_verify_cycles_tighter_distribution() {
+        let mut rng = Rng::new(2);
+        let spread = |wv: u32, rng: &mut Rng| -> f64 {
+            let p = programmer(wv);
+            let n = 20_000;
+            let mut sq = 0.0;
+            for _ in 0..n {
+                let o = p.program(3.0, rng);
+                let e = (o.stored - 3.0) as f64;
+                sq += e * e;
+            }
+            (sq / n as f64).sqrt()
+        };
+        let s0 = spread(0, &mut rng);
+        let s3 = spread(3, &mut rng);
+        let s6 = spread(6, &mut rng);
+        assert!(s0 > s3 && s3 > s6, "{s0} {s3} {s6}");
+    }
+
+    #[test]
+    fn pulse_count_bounded_by_cycles() {
+        let p = programmer(5);
+        let mut rng = Rng::new(3);
+        for _ in 0..1000 {
+            let o = p.program(-3.0, &mut rng);
+            assert!(o.pulses >= 1 && o.pulses <= 6);
+        }
+    }
+
+    #[test]
+    fn program_slice_accounting() {
+        let p = programmer(2);
+        let mut rng = Rng::new(4);
+        let targets = vec![3.0, -1.0, 0.0, 1.0, -3.0];
+        let (stored, pulses, reads) = p.program_slice(&targets, &mut rng);
+        assert_eq!(stored.len(), 5);
+        assert!(pulses >= 5);
+        assert_eq!(reads, 10); // 2 verify reads per value
+        assert_eq!(stored[2], 0.0); // differential zero preserved
+    }
+}

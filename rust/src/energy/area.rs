@@ -1,0 +1,39 @@
+//! Area breakdown (Fig. 8) derived from the Table S3 constants.
+
+use super::components::{COMPONENTS, BANK_TOTAL_AREA_MM2};
+
+/// (name, area_mm2, fraction) per component, descending by area — the
+//  Fig. 8 pie chart as data.
+pub fn area_breakdown() -> Vec<(&'static str, f64, f64)> {
+    let mut rows: Vec<(&'static str, f64, f64)> = COMPONENTS
+        .iter()
+        .map(|c| {
+            (
+                c.name,
+                c.total_area_mm2,
+                c.total_area_mm2 / BANK_TOTAL_AREA_MM2,
+            )
+        })
+        .collect();
+    rows.sort_by(|a, b| b.1.total_cmp(&a.1));
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sum_to_one() {
+        let total: f64 = area_breakdown().iter().map(|r| r.2).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adc_is_largest_slice() {
+        // Fig. 8's headline: ADC ~37% of the bank.
+        let rows = area_breakdown();
+        assert_eq!(rows[0].0, "Flash ADC");
+        assert!(rows[0].2 > 0.30 && rows[0].2 < 0.45, "{}", rows[0].2);
+    }
+}

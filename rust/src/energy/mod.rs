@@ -1,0 +1,15 @@
+//! Energy, power and area accounting (paper §IV, Tables 1/S3, Fig. 8).
+//!
+//! The methodology mirrors the paper's in-house simulator (supplementary
+//! S.B): component-level unit power/area from post-layout measurement at
+//! 40 nm / 500 MHz (Table S3), combined with per-operation event counts
+//! from the array simulator, plus the Table S1 per-pulse PCM programming
+//! energies.
+
+pub mod area;
+pub mod components;
+pub mod model;
+
+pub use area::area_breakdown;
+pub use components::{Component, ComponentSpec, COMPONENTS};
+pub use model::{EnergyLatencyModel, EnergyReport, GpuEnvelope, OpCounts};

@@ -1,0 +1,135 @@
+//! ID-level HD encoding (paper Eq. 1) — rust reference implementation.
+//!
+//! `HV = sign( sum_{f: level_f > 0} LV[level_f] (*) ID_f )` with the tie
+//! rule `sign(0) = +1`, matching `python/compile/kernels/ref.py::encode`
+//! and the L2 scan encoder bit-for-bit.
+//!
+//! Level 0 means "no peak in this m/z bin" and contributes nothing: MS
+//! spectra are sparse (~100 peaks over 512 bins), and summing empty bins
+//! would give every pair of spectra a large shared baseline similarity,
+//! destroying the score separation both pipelines rank by (this is how the
+//! HyperSpec/HyperOMS encoders treat absent peaks as well).
+
+use super::itemmem::ItemMemory;
+use super::Hv;
+
+/// Encode one quantized-level feature vector into a binary hypervector.
+pub fn encode(levels: &[u16], im: &ItemMemory) -> Hv {
+    assert_eq!(levels.len(), im.features(), "feature count");
+    let d = im.dim;
+    let mut acc = vec![0i32; d];
+    for (f, &lvl) in levels.iter().enumerate() {
+        if lvl == 0 {
+            continue; // empty bin: no peak, no contribution
+        }
+        let lv = &im.level_hvs[lvl as usize];
+        let id = &im.id_hvs[f];
+        for j in 0..d {
+            acc[j] += (lv[j] as i32) * (id[j] as i32);
+        }
+    }
+    acc.iter().map(|&a| if a >= 0 { 1 } else { -1 }).collect()
+}
+
+/// Encode a batch (convenience over [`encode`]).
+pub fn encode_batch(levels: &[Vec<u16>], im: &ItemMemory) -> Vec<Hv> {
+    levels.iter().map(|l| encode(l, im)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hd::cosine_pm1;
+    use crate::util::Rng;
+
+    #[test]
+    fn deterministic() {
+        let im = ItemMemory::generate(1, 32, 8, 512);
+        let levels: Vec<u16> = (0..32).map(|i| (i % 8) as u16).collect();
+        assert_eq!(encode(&levels, &im), encode(&levels, &im));
+    }
+
+    #[test]
+    fn output_is_bipolar() {
+        let im = ItemMemory::generate(2, 16, 4, 256);
+        let hv = encode(&vec![1; 16], &im);
+        assert!(hv.iter().all(|&x| x == 1 || x == -1));
+        assert_eq!(hv.len(), 256);
+    }
+
+    #[test]
+    fn similar_inputs_similar_hvs() {
+        let im = ItemMemory::generate(3, 128, 32, 2048);
+        let mut rng = Rng::new(9);
+        // Sparse spectra: ~30 peaks over 128 bins (levels >= 1).
+        let sparse = |rng: &mut Rng| -> Vec<u16> {
+            let mut v = vec![0u16; 128];
+            for _ in 0..30 {
+                v[rng.below(128)] = 1 + rng.below(31) as u16;
+            }
+            v
+        };
+        let base = sparse(&mut rng);
+        let mut near = base.clone();
+        for i in 0..5 {
+            near[i * 20] = 1 + rng.below(31) as u16;
+        }
+        let far = sparse(&mut rng);
+        let (hb, hn, hf) = (encode(&base, &im), encode(&near, &im), encode(&far, &im));
+        let sim_near = cosine_pm1(&hb, &hn);
+        let sim_far = cosine_pm1(&hb, &hf);
+        assert!(sim_near > 0.5, "near: {sim_near}");
+        assert!(sim_far < 0.3, "far: {sim_far}");
+        assert!(sim_near > sim_far + 0.2);
+    }
+
+    #[test]
+    fn tie_rule_is_plus_one() {
+        // Two features with exactly cancelling contributions: LV row 1 all
+        // +1, row 2 all -1, IDs all +1 -> acc == 0 -> +1 everywhere.
+        let mut im = ItemMemory::generate(4, 2, 3, 64);
+        im.id_hvs = vec![vec![1; 64], vec![1; 64]];
+        im.level_hvs = vec![vec![1; 64], vec![1; 64], vec![-1; 64]];
+        let hv = encode(&[1, 2], &im);
+        assert!(hv.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn level_zero_is_inert() {
+        // A spectrum with every bin empty encodes to the all-ties vector,
+        // and adding empty bins to a spectrum never changes its HV.
+        let im = ItemMemory::generate(5, 8, 4, 256);
+        let empty = encode(&[0; 8], &im);
+        assert!(empty.iter().all(|&x| x == 1)); // sign(0) = +1 everywhere
+
+        let mut some = vec![0u16; 8];
+        some[2] = 3;
+        some[5] = 1;
+        let hv1 = encode(&some, &im);
+        // Same peaks, levels of other bins remain 0 -> identical HV.
+        let hv2 = encode(&some, &im);
+        assert_eq!(hv1, hv2);
+    }
+
+    #[test]
+    fn sparse_random_spectra_near_orthogonal() {
+        // The property the level-0 rule exists for: two random sparse
+        // spectra must not share a large baseline similarity.
+        let im = ItemMemory::generate(6, 512, 64, 2048);
+        let mut rng = Rng::new(3);
+        let sparse = |rng: &mut Rng| -> Vec<u16> {
+            let mut v = vec![0u16; 512];
+            for _ in 0..60 {
+                v[rng.below(512)] = 1 + rng.below(63) as u16;
+            }
+            v
+        };
+        let a = encode(&sparse(&mut rng), &im);
+        let b = encode(&sparse(&mut rng), &im);
+        assert!(
+            cosine_pm1(&a, &b).abs() < 0.25,
+            "baseline {}",
+            cosine_pm1(&a, &b)
+        );
+    }
+}

@@ -1,0 +1,132 @@
+//! Item memory: the ID and level hypervector codebooks (paper §II-A).
+//!
+//! ID HVs (one per m/z feature position) are i.i.d. random +/-1 — near
+//! orthogonal in high dimension. Level HVs represent quantized intensity
+//! values; following the ID-level scheme used by HyperSpec/HyperOMS they
+//! interpolate between two random endpoint HVs so that nearby intensity
+//! levels map to similar HVs (correlated codebook), while distant levels
+//! approach orthogonality.
+
+use crate::util::Rng;
+
+use super::Hv;
+
+#[derive(Clone, Debug)]
+pub struct ItemMemory {
+    /// (F, D) position/ID hypervectors.
+    pub id_hvs: Vec<Hv>,
+    /// (m, D) intensity-level hypervectors.
+    pub level_hvs: Vec<Hv>,
+    pub dim: usize,
+}
+
+impl ItemMemory {
+    /// Deterministically generate codebooks for `features` positions and
+    /// `levels` intensity levels in dimension `d`.
+    pub fn generate(seed: u64, features: usize, levels: usize, d: usize) -> Self {
+        assert!(levels >= 2, "need at least 2 levels");
+        let mut rng = Rng::new(seed);
+
+        let id_hvs: Vec<Hv> = (0..features)
+            .map(|_| (0..d).map(|_| rng.pm1()).collect())
+            .collect();
+
+        // Level codebook: start from LV_0 random; LV_m-1 flips a fresh
+        // random half... classic scheme: flip d/(2*(levels-1)) positions per
+        // step so LV_0 and LV_{m-1} differ in ~d/2 positions (orthogonal).
+        let base: Hv = (0..d).map(|_| rng.pm1()).collect();
+        let mut level_hvs = Vec::with_capacity(levels);
+        level_hvs.push(base.clone());
+        let flips_per_step = d / (2 * (levels - 1));
+        let mut order: Vec<usize> = (0..d).collect();
+        rng.shuffle(&mut order);
+        let mut cur = base;
+        for step in 0..levels - 1 {
+            for &idx in order
+                .iter()
+                .skip(step * flips_per_step)
+                .take(flips_per_step)
+            {
+                cur[idx] = -cur[idx];
+            }
+            level_hvs.push(cur.clone());
+        }
+
+        ItemMemory {
+            id_hvs,
+            level_hvs,
+            dim: d,
+        }
+    }
+
+    pub fn features(&self) -> usize {
+        self.id_hvs.len()
+    }
+
+    pub fn levels(&self) -> usize {
+        self.level_hvs.len()
+    }
+
+    /// Flatten to row-major f32 buffers for the PJRT encoder artifact.
+    pub fn id_hvs_f32(&self) -> Vec<f32> {
+        self.id_hvs
+            .iter()
+            .flat_map(|hv| hv.iter().map(|&x| x as f32))
+            .collect()
+    }
+
+    pub fn level_hvs_f32(&self) -> Vec<f32> {
+        self.level_hvs
+            .iter()
+            .flat_map(|hv| hv.iter().map(|&x| x as f32))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hd::cosine_pm1;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = ItemMemory::generate(7, 16, 8, 512);
+        let b = ItemMemory::generate(7, 16, 8, 512);
+        assert_eq!(a.id_hvs, b.id_hvs);
+        assert_eq!(a.level_hvs, b.level_hvs);
+    }
+
+    #[test]
+    fn id_hvs_near_orthogonal() {
+        let im = ItemMemory::generate(1, 32, 8, 4096);
+        for i in 0..8 {
+            for j in 0..i {
+                let c = cosine_pm1(&im.id_hvs[i], &im.id_hvs[j]);
+                assert!(c.abs() < 0.1, "ids {i},{j}: {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn level_hvs_monotone_similarity() {
+        let im = ItemMemory::generate(2, 4, 16, 4096);
+        // Similarity to level 0 decreases monotonically with level index.
+        let mut last = 1.1;
+        for k in 0..16 {
+            let c = cosine_pm1(&im.level_hvs[0], &im.level_hvs[k]);
+            assert!(c < last + 0.05, "level {k}: {c} vs {last}");
+            last = c;
+        }
+        // Extremes are near orthogonal.
+        let ends = cosine_pm1(&im.level_hvs[0], &im.level_hvs[15]);
+        assert!(ends.abs() < 0.15, "{ends}");
+    }
+
+    #[test]
+    fn f32_export_shapes() {
+        let im = ItemMemory::generate(3, 16, 8, 256);
+        assert_eq!(im.id_hvs_f32().len(), 16 * 256);
+        assert_eq!(im.level_hvs_f32().len(), 8 * 256);
+        assert!(im.id_hvs_f32().iter().all(|&x| x == 1.0 || x == -1.0));
+    }
+}

@@ -1,0 +1,75 @@
+//! Hyperdimensional computing (paper §II-A, §III-B) — rust reference path.
+//!
+//! The production pipeline encodes and packs on the AOT jax artifacts
+//! (`runtime`); this module provides the bit-identical rust implementation
+//! used for validation, for artifact-free runs, and for HD dimensions the
+//! artifact set does not cover.
+
+pub mod encoder;
+pub mod itemmem;
+pub mod pack;
+
+pub use encoder::encode;
+pub use itemmem::ItemMemory;
+pub use pack::{pack, packed_len, padded_packed_len};
+
+/// Binary hypervector: elements are +/-1 stored as i8.
+pub type Hv = Vec<i8>;
+
+/// Dot-product similarity of two +/-1 hypervectors. Equals
+/// `D - 2 * hamming_distance` — the similarity both pipelines rank by.
+pub fn dot(a: &[i8], b: &[i8]) -> i64 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x as i64) * (y as i64))
+        .sum()
+}
+
+/// Hamming distance between +/-1 hypervectors.
+pub fn hamming(a: &[i8], b: &[i8]) -> usize {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).filter(|(x, y)| x != y).count()
+}
+
+/// Normalized similarity in [-1, 1].
+pub fn cosine_pm1(a: &[i8], b: &[i8]) -> f64 {
+    dot(a, b) as f64 / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_hv(rng: &mut Rng, d: usize) -> Hv {
+        (0..d).map(|_| rng.pm1()).collect()
+    }
+
+    #[test]
+    fn dot_hamming_identity() {
+        let mut rng = Rng::new(1);
+        let a = rand_hv(&mut rng, 1024);
+        let b = rand_hv(&mut rng, 1024);
+        let d = dot(&a, &b);
+        let h = hamming(&a, &b) as i64;
+        assert_eq!(d, 1024 - 2 * h);
+    }
+
+    #[test]
+    fn self_dot_is_dimension() {
+        let mut rng = Rng::new(2);
+        let a = rand_hv(&mut rng, 2048);
+        assert_eq!(dot(&a, &a), 2048);
+        assert_eq!(hamming(&a, &a), 0);
+    }
+
+    #[test]
+    fn random_hvs_near_orthogonal() {
+        let mut rng = Rng::new(3);
+        let a = rand_hv(&mut rng, 8192);
+        let b = rand_hv(&mut rng, 8192);
+        // |cos| ~ O(1/sqrt(D)): 5 sigma bound.
+        assert!(cosine_pm1(&a, &b).abs() < 5.0 / (8192f64).sqrt());
+    }
+}

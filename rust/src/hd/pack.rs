@@ -1,0 +1,129 @@
+//! Dimension packing (paper §III-B) — rust mirror of
+//! `python/compile/kernels/pack.py`.
+//!
+//! A binary HV of length D becomes ceil(D/n) packed values (sums of n
+//! adjacent +/-1 elements), zero-padded up to a multiple of the 128-wide
+//! array so every packed HV maps onto whole array segments.
+
+use crate::array::ARRAY_DIM;
+use crate::util::ceil_to;
+
+use super::Hv;
+
+/// Packed length before array padding: ceil(D / n).
+#[inline]
+pub fn packed_len(d: usize, n: usize) -> usize {
+    d.div_ceil(n)
+}
+
+/// Packed length padded to a multiple of [`ARRAY_DIM`].
+#[inline]
+pub fn padded_packed_len(d: usize, n: usize) -> usize {
+    ceil_to(packed_len(d, n), ARRAY_DIM)
+}
+
+/// Pack one +/-1 hypervector; output has `padded_packed_len` f32 entries
+/// (integer-valued, in [-n, n]).
+pub fn pack(hv: &Hv, n: usize) -> Vec<f32> {
+    assert!(n >= 1);
+    let cp = padded_packed_len(hv.len(), n);
+    let mut out = vec![0f32; cp];
+    for (j, chunk) in hv.chunks(n).enumerate() {
+        out[j] = chunk.iter().map(|&x| x as i32).sum::<i32>() as f32;
+    }
+    out
+}
+
+/// Pack a batch into one row-major buffer (B x padded_packed_len).
+pub fn pack_batch(hvs: &[Hv], n: usize) -> (Vec<f32>, usize) {
+    assert!(!hvs.is_empty());
+    let cp = padded_packed_len(hvs[0].len(), n);
+    let mut out = Vec::with_capacity(hvs.len() * cp);
+    for hv in hvs {
+        assert_eq!(hv.len(), hvs[0].len(), "ragged HV batch");
+        out.extend_from_slice(&pack(hv, n));
+    }
+    (out, cp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_hv(rng: &mut Rng, d: usize) -> Hv {
+        (0..d).map(|_| rng.pm1()).collect()
+    }
+
+    #[test]
+    fn lengths_match_python() {
+        // Mirrors python/tests/test_pack.py::TestPackedLen.
+        assert_eq!(packed_len(2048, 3), 683);
+        assert_eq!(padded_packed_len(2048, 3), 768);
+        assert_eq!(packed_len(8192, 3), 2731);
+        assert_eq!(padded_packed_len(8192, 3), 2816);
+        assert_eq!(padded_packed_len(512, 3), 256);
+        assert_eq!(padded_packed_len(1024, 3), 384);
+        assert_eq!(padded_packed_len(4096, 3), 1408);
+        assert_eq!(padded_packed_len(2048, 1), 2048);
+        assert_eq!(padded_packed_len(2048, 2), 1024);
+    }
+
+    #[test]
+    fn values_bounded_and_adjacent_sums() {
+        let mut rng = Rng::new(1);
+        let hv = rand_hv(&mut rng, 2048);
+        let p = pack(&hv, 3);
+        assert_eq!(p.len(), 768);
+        assert!(p.iter().all(|&v| v.abs() <= 3.0));
+        // spot-check group 10: elements 30..33
+        let manual: i32 = hv[30..33].iter().map(|&x| x as i32).sum();
+        assert_eq!(p[10], manual as f32);
+        // padding region is zero
+        assert!(p[683..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn slc_is_identity_plus_padding() {
+        let mut rng = Rng::new(2);
+        let hv = rand_hv(&mut rng, 2048);
+        let p = pack(&hv, 1);
+        assert_eq!(p.len(), 2048);
+        for (a, b) in hv.iter().zip(&p) {
+            assert_eq!(*a as f32, *b);
+        }
+    }
+
+    #[test]
+    fn packed_dot_estimates_binary_dot() {
+        // <pack(a), pack(b)> is an unbiased estimator of <a, b> with
+        // variance from cross terms — the mechanism behind the small
+        // MLC2/MLC3 accuracy drop in Fig. 9.
+        let mut rng = Rng::new(3);
+        let trials = 200;
+        let d = 2048;
+        let mut err_sum = 0f64;
+        for _ in 0..trials {
+            let a = rand_hv(&mut rng, d);
+            let b = rand_hv(&mut rng, d);
+            let exact: i64 = crate::hd::dot(&a, &b);
+            let (pa, pb) = (pack(&a, 3), pack(&b, 3));
+            let packed: f64 = pa.iter().zip(&pb).map(|(x, y)| (x * y) as f64).sum();
+            err_sum += packed - exact as f64;
+        }
+        let mean_err = err_sum / trials as f64;
+        // Unbiased: mean error small relative to sqrt(D) noise scale.
+        assert!(mean_err.abs() < 3.0 * (2.0 * d as f64).sqrt() / (trials as f64).sqrt());
+    }
+
+    #[test]
+    fn pack_batch_layout() {
+        let mut rng = Rng::new(4);
+        let hvs: Vec<Hv> = (0..3).map(|_| rand_hv(&mut rng, 300)).collect();
+        let (buf, cp) = pack_batch(&hvs, 3);
+        assert_eq!(cp, 128);
+        assert_eq!(buf.len(), 3 * 128);
+        assert_eq!(&buf[0..128], &pack(&hvs[0], 3)[..]);
+        assert_eq!(&buf[128..256], &pack(&hvs[1], 3)[..]);
+    }
+}

@@ -1,0 +1,144 @@
+//! Binary instruction encoding: each instruction packs into one 64-bit
+//! word (opcode in the top nibble). Round-trip `decode(encode(i)) == i` is
+//! property-tested from `rust/tests/proptest_isa.rs`.
+
+use super::inst::Instruction;
+
+const OP_SHIFT: u32 = 60;
+
+pub fn encode(inst: &Instruction) -> u64 {
+    let op = (inst.opcode() as u64) << OP_SHIFT;
+    match *inst {
+        Instruction::StoreHv {
+            buf,
+            arr_idx,
+            col_addr,
+            row_addr,
+            mlc_bits,
+            write_cycles,
+        } => {
+            op | (buf as u64) << 52
+                | (arr_idx as u64) << 36
+                | (col_addr as u64) << 28
+                | (row_addr as u64) << 20
+                | (mlc_bits as u64) << 16
+                | (write_cycles as u64) << 12
+        }
+        Instruction::ReadHv {
+            buf,
+            data_size,
+            arr_idx,
+            col_addr,
+            row_addr,
+            mlc_bits,
+        } => {
+            op | (buf as u64) << 52
+                | (arr_idx as u64) << 36
+                | (col_addr as u64) << 28
+                | (row_addr as u64) << 20
+                | (mlc_bits as u64) << 16
+                | (data_size as u64)
+        }
+        Instruction::MvmCompute {
+            buf,
+            arr_idx,
+            row_addr,
+            num_activated_row,
+            adc_bits,
+            mlc_bits,
+        } => {
+            op | (buf as u64) << 52
+                | (arr_idx as u64) << 36
+                | (row_addr as u64) << 20
+                | (mlc_bits as u64) << 16
+                | (num_activated_row as u64) << 8
+                | (adc_bits as u64)
+        }
+    }
+}
+
+pub fn decode(word: u64) -> Result<Instruction, String> {
+    let op = (word >> OP_SHIFT) & 0xF;
+    let buf = ((word >> 52) & 0xFF) as u8;
+    let arr_idx = ((word >> 36) & 0xFFFF) as u16;
+    let col_addr = ((word >> 28) & 0xFF) as u8;
+    let row_addr = ((word >> 20) & 0xFF) as u8;
+    let mlc_bits = ((word >> 16) & 0xF) as u8;
+    match op {
+        0x1 => Ok(Instruction::StoreHv {
+            buf,
+            arr_idx,
+            col_addr,
+            row_addr,
+            mlc_bits,
+            write_cycles: ((word >> 12) & 0xF) as u8,
+        }),
+        0x2 => Ok(Instruction::ReadHv {
+            buf,
+            data_size: (word & 0xFFFF) as u16,
+            arr_idx,
+            col_addr,
+            row_addr,
+            mlc_bits,
+        }),
+        0x3 => Ok(Instruction::MvmCompute {
+            buf,
+            arr_idx,
+            row_addr,
+            num_activated_row: ((word >> 8) & 0xFF) as u8,
+            adc_bits: (word & 0xFF) as u8,
+            mlc_bits,
+        }),
+        _ => Err(format!("unknown opcode {op:#x}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_store() {
+        let i = Instruction::StoreHv {
+            buf: 7,
+            arr_idx: 1234,
+            col_addr: 0,
+            row_addr: 99,
+            mlc_bits: 3,
+            write_cycles: 5,
+        };
+        assert_eq!(decode(encode(&i)).unwrap(), i);
+    }
+
+    #[test]
+    fn roundtrip_read() {
+        let i = Instruction::ReadHv {
+            buf: 1,
+            data_size: 65535,
+            arr_idx: 0xFFFF,
+            col_addr: 255,
+            row_addr: 255,
+            mlc_bits: 4,
+        };
+        assert_eq!(decode(encode(&i)).unwrap(), i);
+    }
+
+    #[test]
+    fn roundtrip_mvm() {
+        let i = Instruction::MvmCompute {
+            buf: 255,
+            arr_idx: 42,
+            row_addr: 0,
+            num_activated_row: 128,
+            adc_bits: 6,
+            mlc_bits: 2,
+        };
+        assert_eq!(decode(encode(&i)).unwrap(), i);
+    }
+
+    #[test]
+    fn rejects_unknown_opcode() {
+        assert!(decode(0xF << OP_SHIFT).is_err());
+        assert!(decode(0).is_err());
+    }
+}

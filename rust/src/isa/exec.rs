@@ -1,0 +1,212 @@
+//! ISA executor: binds instruction programs to simulated array banks.
+//!
+//! Data movement uses numbered staging buffers (`set_buffer` /
+//! `take_result`), mirroring the paper's near-memory data path between the
+//! ASIC encoder/packer and the PCM arrays. Every executed instruction
+//! updates an [`OpCounts`] so ISA-level runs feed the same energy model as
+//! the high-level pipelines.
+
+use std::collections::HashMap;
+
+use crate::array::{AdcConfig, ArrayBank, ARRAY_DIM};
+use crate::device::{Material, MlcConfig, NoiseModel, Programmer};
+use crate::energy::OpCounts;
+use crate::util::Rng;
+
+use super::inst::Instruction;
+use super::program::Program;
+
+/// Output of one executed program.
+#[derive(Clone, Debug, Default)]
+pub struct ExecResult {
+    /// MVM score vectors in instruction order (one per MVM_COMPUTE).
+    pub mvm_scores: Vec<Vec<f32>>,
+    /// Row reads in instruction order (one per READ_HV).
+    pub row_reads: Vec<Vec<f32>>,
+    pub ops: OpCounts,
+}
+
+pub struct Executor {
+    pub banks: Vec<ArrayBank>,
+    pub material: Material,
+    buffers: HashMap<u8, Vec<f32>>,
+    rng: Rng,
+}
+
+impl Executor {
+    pub fn new(num_banks: usize, material: Material, seed: u64) -> Self {
+        Executor {
+            banks: (0..num_banks).map(|_| ArrayBank::new(material)).collect(),
+            material,
+            buffers: HashMap::new(),
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Stage a 128-wide data segment into a numbered buffer.
+    pub fn set_buffer(&mut self, buf: u8, data: Vec<f32>) {
+        assert_eq!(data.len(), ARRAY_DIM, "buffers hold one array segment");
+        self.buffers.insert(buf, data);
+    }
+
+    pub fn run(&mut self, program: &Program) -> Result<ExecResult, String> {
+        program.validate()?;
+        let mut result = ExecResult::default();
+
+        for (pc, inst) in program.instructions.iter().enumerate() {
+            match *inst {
+                Instruction::StoreHv {
+                    buf,
+                    arr_idx,
+                    row_addr,
+                    mlc_bits,
+                    write_cycles,
+                    ..
+                } => {
+                    let segment = self
+                        .buffers
+                        .get(&buf)
+                        .ok_or(format!("pc {pc}: buffer {buf} not staged"))?
+                        .clone();
+                    let bank = self
+                        .banks
+                        .get_mut(arr_idx as usize)
+                        .ok_or(format!("pc {pc}: arr_idx {arr_idx} out of range"))?;
+                    let prog = Programmer::new(
+                        NoiseModel::new(self.material, MlcConfig::new(mlc_bits)),
+                        write_cycles as u32,
+                    );
+                    let pulses = bank.program_row(row_addr as usize, &segment, &prog, &mut self.rng);
+                    // Cells in a row are pulsed in parallel: the number of
+                    // 20 ns rounds is the worst-case per-cell pulse depth,
+                    // approximated by the average (total / row width).
+                    result.ops.program_rounds += pulses.div_ceil(ARRAY_DIM as u64).max(1);
+                    result.ops.verify_rounds += write_cycles as u64;
+                }
+                Instruction::ReadHv {
+                    arr_idx, row_addr, ..
+                } => {
+                    let bank = self
+                        .banks
+                        .get_mut(arr_idx as usize)
+                        .ok_or(format!("pc {pc}: arr_idx {arr_idx} out of range"))?;
+                    let row = bank.read_row(row_addr as usize).to_vec();
+                    result.ops.row_reads += 1;
+                    result.row_reads.push(row);
+                }
+                Instruction::MvmCompute {
+                    buf,
+                    arr_idx,
+                    num_activated_row,
+                    adc_bits,
+                    mlc_bits,
+                    ..
+                } => {
+                    let query = self
+                        .buffers
+                        .get(&buf)
+                        .ok_or(format!("pc {pc}: buffer {buf} not staged"))?
+                        .clone();
+                    let bank = self
+                        .banks
+                        .get_mut(arr_idx as usize)
+                        .ok_or(format!("pc {pc}: arr_idx {arr_idx} out of range"))?;
+                    let adc =
+                        AdcConfig::default_for_packing(adc_bits as u32, mlc_bits as usize);
+                    let mut scores = bank.mvm(&query, adc);
+                    scores.truncate(num_activated_row as usize);
+                    result.ops.mvm_ops += 1;
+                    result.mvm_scores.push(scores);
+                }
+            }
+        }
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store(buf: u8, arr: u16, row: u8, wv: u8) -> Instruction {
+        Instruction::StoreHv {
+            buf,
+            arr_idx: arr,
+            col_addr: 0,
+            row_addr: row,
+            mlc_bits: 3,
+            write_cycles: wv,
+        }
+    }
+
+    #[test]
+    fn store_then_mvm_finds_stored_row() {
+        let mut ex = Executor::new(2, Material::TiTe2Gst467, 1);
+        let seg: Vec<f32> = (0..ARRAY_DIM)
+            .map(|i| ((i % 7) as i64 - 3) as f32)
+            .collect();
+        ex.set_buffer(0, seg.clone());
+
+        let mut p = Program::new();
+        p.push(store(0, 1, 5, 6));
+        p.push(Instruction::MvmCompute {
+            buf: 0,
+            arr_idx: 1,
+            row_addr: 0,
+            num_activated_row: 128,
+            adc_bits: 6,
+            mlc_bits: 3,
+        });
+        let r = ex.run(&p).unwrap();
+        assert_eq!(r.mvm_scores.len(), 1);
+        let scores = &r.mvm_scores[0];
+        // Row 5 holds the (noisy) segment; its self-similarity dominates.
+        let (best, _) = scores
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap();
+        assert_eq!(best, 5);
+        assert_eq!(r.ops.mvm_ops, 1);
+        assert!(r.ops.program_rounds >= 1);
+    }
+
+    #[test]
+    fn read_hv_returns_programmed_row() {
+        let mut ex = Executor::new(1, Material::TiTe2Gst467, 2);
+        let seg = vec![3.0f32; ARRAY_DIM];
+        ex.set_buffer(0, seg);
+        let mut p = Program::new();
+        p.push(store(0, 0, 7, 8));
+        p.push(Instruction::ReadHv {
+            buf: 1,
+            data_size: 128,
+            arr_idx: 0,
+            col_addr: 0,
+            row_addr: 7,
+            mlc_bits: 3,
+        });
+        let r = ex.run(&p).unwrap();
+        assert_eq!(r.row_reads.len(), 1);
+        // With 8 write-verify cycles the stored values sit near 3.0.
+        let mean: f32 = r.row_reads[0].iter().sum::<f32>() / ARRAY_DIM as f32;
+        assert!((mean - 3.0).abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn missing_buffer_errors() {
+        let mut ex = Executor::new(1, Material::TiTe2Gst467, 3);
+        let mut p = Program::new();
+        p.push(store(9, 0, 0, 0));
+        assert!(ex.run(&p).unwrap_err().contains("buffer 9"));
+    }
+
+    #[test]
+    fn bad_arr_idx_errors() {
+        let mut ex = Executor::new(1, Material::TiTe2Gst467, 4);
+        ex.set_buffer(0, vec![0.0; ARRAY_DIM]);
+        let mut p = Program::new();
+        p.push(store(0, 5, 0, 0));
+        assert!(ex.run(&p).unwrap_err().contains("arr_idx"));
+    }
+}

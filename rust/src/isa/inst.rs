@@ -1,0 +1,158 @@
+//! Instruction definitions (Table S2).
+
+
+
+/// One SpecPCM instruction. Data payloads (the HV segments) travel through
+/// a data buffer identified by `buf`, mirroring the paper's
+/// "PCM[arr_idx, col_addr, row_addr] <- data" semantics without embedding
+/// bulk data in the instruction stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Instruction {
+    /// STORE_HV (data, arr_idx, col_addr, row_addr, MLC_bits, write_cycles)
+    StoreHv {
+        /// Data-buffer slot holding the packed segment to program.
+        buf: u8,
+        arr_idx: u16,
+        col_addr: u8,
+        row_addr: u8,
+        /// Bits per cell used by dimension packing (1..=4).
+        mlc_bits: u8,
+        /// Write-verify cycles (0..=15).
+        write_cycles: u8,
+    },
+    /// READ_HV (data_size, arr_idx, col_addr, row_addr, MLC_bits)
+    ReadHv {
+        buf: u8,
+        data_size: u16,
+        arr_idx: u16,
+        col_addr: u8,
+        row_addr: u8,
+        mlc_bits: u8,
+    },
+    /// MVM_COMPUTE (row_addr, num_activated_row, ADC_bits, MLC_bits)
+    MvmCompute {
+        /// Data-buffer slot holding the driven query segment.
+        buf: u8,
+        arr_idx: u16,
+        row_addr: u8,
+        num_activated_row: u8,
+        adc_bits: u8,
+        mlc_bits: u8,
+    },
+}
+
+impl Instruction {
+    pub fn opcode(&self) -> u8 {
+        match self {
+            Instruction::StoreHv { .. } => 0x1,
+            Instruction::ReadHv { .. } => 0x2,
+            Instruction::MvmCompute { .. } => 0x3,
+        }
+    }
+
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instruction::StoreHv { .. } => "STORE_HV",
+            Instruction::ReadHv { .. } => "READ_HV",
+            Instruction::MvmCompute { .. } => "MVM_COMPUTE",
+        }
+    }
+
+    /// Validate field ranges (the encoder also enforces these widths).
+    pub fn validate(&self) -> Result<(), String> {
+        match *self {
+            Instruction::StoreHv {
+                mlc_bits,
+                write_cycles,
+                ..
+            } => {
+                if !(1..=4).contains(&mlc_bits) {
+                    return Err(format!("STORE_HV: mlc_bits {mlc_bits} not in 1..=4"));
+                }
+                if write_cycles > 15 {
+                    return Err(format!("STORE_HV: write_cycles {write_cycles} > 15"));
+                }
+            }
+            Instruction::ReadHv { mlc_bits, .. } => {
+                if !(1..=4).contains(&mlc_bits) {
+                    return Err(format!("READ_HV: mlc_bits {mlc_bits} not in 1..=4"));
+                }
+            }
+            Instruction::MvmCompute {
+                adc_bits,
+                mlc_bits,
+                num_activated_row,
+                ..
+            } => {
+                if !(1..=6).contains(&adc_bits) {
+                    return Err(format!("MVM_COMPUTE: adc_bits {adc_bits} not in 1..=6"));
+                }
+                if !(1..=4).contains(&mlc_bits) {
+                    return Err(format!("MVM_COMPUTE: mlc_bits {mlc_bits} not in 1..=4"));
+                }
+                if num_activated_row == 0 {
+                    return Err("MVM_COMPUTE: num_activated_row must be > 0".into());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn opcodes_distinct() {
+        let s = Instruction::StoreHv {
+            buf: 0,
+            arr_idx: 0,
+            col_addr: 0,
+            row_addr: 0,
+            mlc_bits: 3,
+            write_cycles: 0,
+        };
+        let r = Instruction::ReadHv {
+            buf: 0,
+            data_size: 128,
+            arr_idx: 0,
+            col_addr: 0,
+            row_addr: 0,
+            mlc_bits: 3,
+        };
+        let m = Instruction::MvmCompute {
+            buf: 0,
+            arr_idx: 0,
+            row_addr: 0,
+            num_activated_row: 128,
+            adc_bits: 6,
+            mlc_bits: 3,
+        };
+        assert_ne!(s.opcode(), r.opcode());
+        assert_ne!(r.opcode(), m.opcode());
+        assert_eq!(s.mnemonic(), "STORE_HV");
+    }
+
+    #[test]
+    fn validation_catches_bad_fields() {
+        let bad = Instruction::StoreHv {
+            buf: 0,
+            arr_idx: 0,
+            col_addr: 0,
+            row_addr: 0,
+            mlc_bits: 5,
+            write_cycles: 0,
+        };
+        assert!(bad.validate().is_err());
+        let bad_adc = Instruction::MvmCompute {
+            buf: 0,
+            arr_idx: 0,
+            row_addr: 0,
+            num_activated_row: 128,
+            adc_bits: 7,
+            mlc_bits: 3,
+        };
+        assert!(bad_adc.validate().is_err());
+    }
+}

@@ -1,0 +1,18 @@
+//! Instruction Set Architecture (paper §III-F, Table S2).
+//!
+//! Three memory-operation instructions control the IMC system from
+//! software: `STORE_HV` (program, with write-verify and MLC-bits fields),
+//! `READ_HV` (normal row read) and `MVM_COMPUTE` (in-memory dot product
+//! with row-activation count and ADC precision fields). The executor binds
+//! a program to a set of array banks and accounts every op in the energy
+//! model's `OpCounts`.
+
+pub mod encode;
+pub mod exec;
+pub mod inst;
+pub mod program;
+
+pub use encode::{decode, encode};
+pub use exec::{ExecResult, Executor};
+pub use inst::Instruction;
+pub use program::Program;

@@ -1,0 +1,187 @@
+//! Instruction sequences with validation and a tiny assembler-style
+//! textual form (useful for the `specpcm isa` CLI and examples).
+
+use super::inst::Instruction;
+
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub instructions: Vec<Instruction>,
+}
+
+impl Program {
+    pub fn new() -> Self {
+        Program::default()
+    }
+
+    pub fn push(&mut self, inst: Instruction) -> &mut Self {
+        self.instructions.push(inst);
+        self
+    }
+
+    /// Validate every instruction's field ranges.
+    pub fn validate(&self) -> Result<(), String> {
+        for (pc, inst) in self.instructions.iter().enumerate() {
+            inst.validate().map_err(|e| format!("pc {pc}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.instructions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instructions.is_empty()
+    }
+
+    /// Render as assembler text (one instruction per line).
+    pub fn disassemble(&self) -> String {
+        self.instructions
+            .iter()
+            .map(|i| match *i {
+                Instruction::StoreHv {
+                    buf,
+                    arr_idx,
+                    col_addr,
+                    row_addr,
+                    mlc_bits,
+                    write_cycles,
+                } => format!(
+                    "STORE_HV buf={buf} arr={arr_idx} col={col_addr} row={row_addr} mlc={mlc_bits} wv={write_cycles}"
+                ),
+                Instruction::ReadHv {
+                    buf,
+                    data_size,
+                    arr_idx,
+                    col_addr,
+                    row_addr,
+                    mlc_bits,
+                } => format!(
+                    "READ_HV buf={buf} size={data_size} arr={arr_idx} col={col_addr} row={row_addr} mlc={mlc_bits}"
+                ),
+                Instruction::MvmCompute {
+                    buf,
+                    arr_idx,
+                    row_addr,
+                    num_activated_row,
+                    adc_bits,
+                    mlc_bits,
+                } => format!(
+                    "MVM_COMPUTE buf={buf} arr={arr_idx} row={row_addr} nrows={num_activated_row} adc={adc_bits} mlc={mlc_bits}"
+                ),
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Parse the `disassemble` format back into a program.
+    pub fn assemble(text: &str) -> Result<Program, String> {
+        let mut prog = Program::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let mnemonic = parts.next().ok_or(format!("line {lineno}: empty"))?;
+            let mut fields = std::collections::HashMap::new();
+            for p in parts {
+                let (k, v) = p
+                    .split_once('=')
+                    .ok_or(format!("line {lineno}: bad field '{p}'"))?;
+                let v: u64 = v
+                    .parse()
+                    .map_err(|_| format!("line {lineno}: bad value '{v}'"))?;
+                fields.insert(k.to_string(), v);
+            }
+            let get = |k: &str| -> Result<u64, String> {
+                fields
+                    .get(k)
+                    .copied()
+                    .ok_or(format!("line {lineno}: missing field '{k}'"))
+            };
+            let inst = match mnemonic {
+                "STORE_HV" => Instruction::StoreHv {
+                    buf: get("buf")? as u8,
+                    arr_idx: get("arr")? as u16,
+                    col_addr: get("col")? as u8,
+                    row_addr: get("row")? as u8,
+                    mlc_bits: get("mlc")? as u8,
+                    write_cycles: get("wv")? as u8,
+                },
+                "READ_HV" => Instruction::ReadHv {
+                    buf: get("buf")? as u8,
+                    data_size: get("size")? as u16,
+                    arr_idx: get("arr")? as u16,
+                    col_addr: get("col")? as u8,
+                    row_addr: get("row")? as u8,
+                    mlc_bits: get("mlc")? as u8,
+                },
+                "MVM_COMPUTE" => Instruction::MvmCompute {
+                    buf: get("buf")? as u8,
+                    arr_idx: get("arr")? as u16,
+                    row_addr: get("row")? as u8,
+                    num_activated_row: get("nrows")? as u8,
+                    adc_bits: get("adc")? as u8,
+                    mlc_bits: get("mlc")? as u8,
+                },
+                other => return Err(format!("line {lineno}: unknown mnemonic '{other}'")),
+            };
+            prog.push(inst);
+        }
+        Ok(prog)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Program {
+        let mut p = Program::new();
+        p.push(Instruction::StoreHv {
+            buf: 0,
+            arr_idx: 3,
+            col_addr: 0,
+            row_addr: 17,
+            mlc_bits: 3,
+            write_cycles: 3,
+        });
+        p.push(Instruction::MvmCompute {
+            buf: 1,
+            arr_idx: 3,
+            row_addr: 0,
+            num_activated_row: 128,
+            adc_bits: 6,
+            mlc_bits: 3,
+        });
+        p
+    }
+
+    #[test]
+    fn validate_ok() {
+        assert!(sample().validate().is_ok());
+    }
+
+    #[test]
+    fn asm_roundtrip() {
+        let p = sample();
+        let text = p.disassemble();
+        let q = Program::assemble(&text).unwrap();
+        assert_eq!(p.instructions, q.instructions);
+    }
+
+    #[test]
+    fn assemble_skips_comments_and_blanks() {
+        let text = "# a comment\n\nSTORE_HV buf=0 arr=1 col=0 row=2 mlc=3 wv=1\n";
+        let p = Program::assemble(text).unwrap();
+        assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn assemble_rejects_garbage() {
+        assert!(Program::assemble("FROB x=1").is_err());
+        assert!(Program::assemble("STORE_HV buf=0").is_err());
+        assert!(Program::assemble("STORE_HV buf=zz arr=1 col=0 row=2 mlc=3 wv=1").is_err());
+    }
+}

@@ -1,0 +1,49 @@
+//! # SpecPCM — PCM-based analog in-memory computing for mass spectrometry
+//!
+//! Reproduction of *SpecPCM: A Low-power PCM-based In-Memory Computing
+//! Accelerator for Full-stack Mass Spectrometry Analysis* (Fan et al., 2024)
+//! as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build time, python)** — the analog-IMC MVM Pallas kernel
+//!   and the ID-level HD encoder jax graph, AOT-lowered to HLO text in
+//!   `artifacts/` by `make artifacts`.
+//! * **Layer 3 (this crate)** — the coordinator: PCM device + array
+//!   simulator, ISA, energy/latency accounting, clustering and DB-search
+//!   pipelines, baselines and the CLI. The hot-path numeric work executes
+//!   the AOT artifacts through PJRT (`runtime`); python never runs at
+//!   request time.
+//!
+//! Module map (see DESIGN.md §4 for the substrate inventory):
+//!
+//! | module | paper section | role |
+//! |---|---|---|
+//! | [`device`] | §III-E, Fig. 7, Table S1 | superlattice PCM material models, MLC noise, write-verify, drift |
+//! | [`array`] | §III-C, Table 1 | 128x128 2T2R array: DAC/ADC transfer, cycle model, banks |
+//! | [`hd`] | §II-A, §III-B | hypervectors, ID-level encoding, dimension packing (rust reference) |
+//! | [`ms`] | §II-B | spectra, synthetic workloads, preprocessing, bucketing |
+//! | [`energy`] | §IV, Tables S3/1, Fig. 8 | power/area/latency accounting |
+//! | [`isa`] | §III-F, Table S2 | STORE_HV / READ_HV / MVM_COMPUTE instruction set |
+//! | [`cluster`] | Fig. 1, §III-C | complete-linkage HAC over IMC distances |
+//! | [`search`] | Fig. 2, §III-C | Hamming similarity search + target-decoy FDR |
+//! | [`baselines`] | §IV-A | Falcon/msCRUSH/HyperSpec/HyperOMS/ANN-SoLo-like comparators |
+//! | [`runtime`] | DESIGN.md §2 | PJRT client, artifact registry, executor cache |
+//! | [`coordinator`] | DESIGN.md §2 | array allocator, batcher, pipeline drivers |
+//! | [`config`] | §IV-A | TOML config system + paper presets |
+//! | [`telemetry`] | — | counters and report tables |
+
+pub mod array;
+pub mod baselines;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod energy;
+pub mod hd;
+pub mod isa;
+pub mod ms;
+pub mod runtime;
+pub mod search;
+pub mod telemetry;
+pub mod util;
+
+pub use config::SpecPcmConfig;

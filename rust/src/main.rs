@@ -1,0 +1,246 @@
+//! SpecPCM command-line launcher.
+//!
+//! Subcommands drive the two end-to-end pipelines on synthetic datasets,
+//! inspect the hardware model, and exercise the ISA. The PJRT artifacts in
+//! `artifacts/` are used automatically when present (build with
+//! `make artifacts`); otherwise the bit-identical rust reference path runs.
+//! (Offline environment: argument parsing is hand-rolled, no clap.)
+
+use anyhow::Result;
+
+use specpcm::baselines::latency_model;
+use specpcm::cluster::quality::clustered_at_incorrect;
+use specpcm::config::{SpecPcmConfig, Task};
+use specpcm::coordinator::{ClusteringPipeline, SearchPipeline};
+use specpcm::energy::area_breakdown;
+use specpcm::ms::{ClusteringDataset, SearchDataset};
+use specpcm::runtime::Runtime;
+use specpcm::telemetry::render_table;
+
+const USAGE: &str = "\
+specpcm — PCM-based analog IMC accelerator for MS analysis
+
+USAGE:
+  specpcm cluster [--dataset pxd001468|pxd000561] [--scale F] [--config FILE] [--no-artifacts]
+  specpcm search  [--dataset iprg2012|hek293]     [--scale F] [--config FILE] [--no-artifacts]
+  specpcm info                  print the hardware model (Tables 1/S3, Fig. 8)
+  specpcm config [clustering|search]   print a config preset
+  specpcm isa <file>            assemble + run an ISA program
+";
+
+/// Tiny flag parser: `--key value` and `--flag` forms.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let value = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(), // bare flag
+                };
+                flags.insert(name.to_string(), value);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or(default.to_string())
+    }
+
+    fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn load_cfg(args: &Args, default: SpecPcmConfig) -> Result<SpecPcmConfig> {
+    let mut cfg = match args.flags.get("config") {
+        Some(p) => SpecPcmConfig::load(p).map_err(|e| anyhow::anyhow!(e))?,
+        None => default,
+    };
+    if args.has("no-artifacts") {
+        cfg.use_artifacts = false;
+    }
+    Ok(cfg)
+}
+
+fn open_runtime(cfg: &SpecPcmConfig) -> Option<Runtime> {
+    if !cfg.use_artifacts {
+        return None;
+    }
+    match Runtime::load(&cfg.artifacts_dir) {
+        Ok(rt) => {
+            eprintln!("runtime: PJRT platform = {}", rt.platform());
+            Some(rt)
+        }
+        Err(e) => {
+            eprintln!("runtime: artifacts unavailable ({e}); using rust reference path");
+            None
+        }
+    }
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args, SpecPcmConfig::paper_clustering())?;
+    anyhow::ensure!(cfg.task == Task::Clustering, "config task must be clustering");
+    let scale = args.get_f64("scale", 0.5)?;
+    let ds = match args.get("dataset", "pxd001468").as_str() {
+        "pxd001468" => ClusteringDataset::pxd001468_like(cfg.seed, scale),
+        "pxd000561" => ClusteringDataset::pxd000561_like(cfg.seed, scale),
+        other => anyhow::bail!("unknown dataset '{other}'"),
+    };
+    let mut rt = open_runtime(&cfg);
+    let out = ClusteringPipeline::new(cfg).run(&ds, rt.as_mut())?;
+    println!("{}: {} spectra, {} buckets", ds.name, out.n_spectra, out.n_buckets);
+    println!(
+        "clustered ratio @1.5% incorrect: {:.4}",
+        clustered_at_incorrect(&out.curve, 0.015)
+    );
+    println!(
+        "IMC ops: {} MVMs, {} program rounds",
+        out.ops.mvm_ops, out.ops.program_rounds
+    );
+    println!(
+        "simulated: {:.3} mJ, {:.3} ms (overlapped {:.3} ms)",
+        out.report.total_j() * 1e3,
+        out.report.total_latency_s() * 1e3,
+        out.report.overlapped_latency_s() * 1e3
+    );
+    let rows: Vec<Vec<String>> = out
+        .wall
+        .breakdown()
+        .into_iter()
+        .map(|(s, t, f)| vec![s, format!("{t:.3}s"), format!("{:.1}%", f * 100.0)])
+        .collect();
+    println!("{}", render_table("host wall time", &["stage", "time", "%"], &rows));
+    Ok(())
+}
+
+fn cmd_search(args: &Args) -> Result<()> {
+    let cfg = load_cfg(args, SpecPcmConfig::paper_search())?;
+    anyhow::ensure!(cfg.task == Task::Search, "config task must be search");
+    let scale = args.get_f64("scale", 0.25)?;
+    let ds = match args.get("dataset", "iprg2012").as_str() {
+        "iprg2012" => SearchDataset::iprg2012_like(cfg.seed, scale),
+        "hek293" => SearchDataset::hek293_like(cfg.seed, scale),
+        other => anyhow::bail!("unknown dataset '{other}'"),
+    };
+    let mut rt = open_runtime(&cfg);
+    let fdr = cfg.fdr;
+    let out = SearchPipeline::new(cfg).run(&ds, rt.as_mut())?;
+    println!(
+        "{}: identified {}/{} queries at {:.0}% FDR ({} correct)",
+        ds.name,
+        out.identified,
+        out.total_queries,
+        fdr * 100.0,
+        out.correct
+    );
+    println!(
+        "simulated: {:.3} mJ, {:.3} ms (overlapped {:.3} ms)",
+        out.report.total_j() * 1e3,
+        out.report.total_latency_s() * 1e3,
+        out.report.overlapped_latency_s() * 1e3
+    );
+    let rows: Vec<Vec<String>> = out
+        .wall
+        .breakdown()
+        .into_iter()
+        .map(|(s, t, f)| vec![s, format!("{t:.3}s"), format!("{:.1}%", f * 100.0)])
+        .collect();
+    println!("{}", render_table("host wall time", &["stage", "time", "%"], &rows));
+    Ok(())
+}
+
+fn cmd_info() {
+    println!("SpecPCM hardware model (Table 1 / S3):");
+    let rows: Vec<Vec<String>> = area_breakdown()
+        .into_iter()
+        .map(|(n, a, f)| vec![n.to_string(), format!("{a:.4} mm2"), format!("{:.1}%", f * 100.0)])
+        .collect();
+    println!(
+        "{}",
+        render_table("area breakdown (Fig. 8)", &["component", "area", "%"], &rows)
+    );
+    println!("paper baselines (Tables 2/3):");
+    for b in latency_model::CLUSTERING_BASELINES {
+        println!(
+            "  [cluster] {:<16} {:<10} {:<10} {:>10.2}s",
+            b.tool, b.hardware, b.dataset, b.latency_s
+        );
+    }
+    for b in latency_model::SEARCH_BASELINES {
+        println!(
+            "  [search]  {:<16} {:<10} {:<10} {:>10.3}s",
+            b.tool, b.hardware, b.dataset, b.latency_s
+        );
+    }
+}
+
+fn cmd_isa(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let prog = specpcm::isa::Program::assemble(&text).map_err(|e| anyhow::anyhow!(e))?;
+    println!("assembled {} instructions:", prog.len());
+    println!("{}", prog.disassemble());
+    let mut ex = specpcm::isa::Executor::new(16, specpcm::device::Material::TiTe2Gst467, 1);
+    for i in 0..4u8 {
+        ex.set_buffer(i, (0..128).map(|k| ((k % 7) as i64 - 3) as f32).collect());
+    }
+    let res = ex.run(&prog).map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "executed: {} MVMs, {} row reads, {} program rounds",
+        res.ops.mvm_ops, res.ops.row_reads, res.ops.program_rounds
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "cluster" => cmd_cluster(&args)?,
+        "search" => cmd_search(&args)?,
+        "info" => cmd_info(),
+        "config" => {
+            let cfg = match args.positional.first().map(String::as_str).unwrap_or("clustering") {
+                "clustering" => SpecPcmConfig::paper_clustering(),
+                "search" => SpecPcmConfig::paper_search(),
+                other => anyhow::bail!("unknown task '{other}'"),
+            };
+            println!("{}", cfg.to_toml());
+        }
+        "isa" => {
+            let path = args
+                .positional
+                .first()
+                .ok_or(anyhow::anyhow!("isa: missing <file>"))?;
+            cmd_isa(path)?;
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprint!("unknown command '{other}'\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Precursor-mass bucketing (Fig. 1 first stage).
+//!
+//! Spectra are partitioned by (charge, precursor-m/z window) before any
+//! pairwise work: only spectra that could plausibly be the same analyte are
+//! compared, which bounds the per-bucket distance-matrix size. DB search
+//! uses the same windows to select candidate references (plus widened
+//! windows for open-modification search).
+
+use std::collections::BTreeMap;
+
+use super::spectrum::Spectrum;
+
+/// Bucket key: (charge, floor(precursor_mz / width)).
+pub type BucketKey = (u8, i64);
+
+pub fn bucket_key(charge: u8, precursor_mz: f64, width: f64) -> BucketKey {
+    (charge, (precursor_mz / width).floor() as i64)
+}
+
+/// Partition spectrum indices into precursor buckets.
+pub fn bucket_by_precursor(spectra: &[Spectrum], width: f64) -> BTreeMap<BucketKey, Vec<usize>> {
+    let mut buckets: BTreeMap<BucketKey, Vec<usize>> = BTreeMap::new();
+    for (i, s) in spectra.iter().enumerate() {
+        buckets
+            .entry(bucket_key(s.charge, s.precursor_mz, width))
+            .or_default()
+            .push(i);
+    }
+    buckets
+}
+
+/// Candidate buckets for a query in *standard* search: its own bucket plus
+/// both neighbors (tolerance straddles a boundary).
+pub fn candidate_keys_standard(charge: u8, precursor_mz: f64, width: f64) -> Vec<BucketKey> {
+    let (c, b) = bucket_key(charge, precursor_mz, width);
+    vec![(c, b - 1), (c, b), (c, b + 1)]
+}
+
+/// Candidate buckets for *open-modification* search: the standard window
+/// plus windows shifted by each PTM delta (the query precursor carries the
+/// modification mass; candidate references sit `delta/charge` below).
+pub fn candidate_keys_open(
+    charge: u8,
+    precursor_mz: f64,
+    width: f64,
+    ptm_shifts: &[f64],
+) -> Vec<BucketKey> {
+    let mut keys = candidate_keys_standard(charge, precursor_mz, width);
+    for &delta in ptm_shifts {
+        let shifted = precursor_mz - delta / charge as f64;
+        keys.extend(candidate_keys_standard(charge, shifted, width));
+    }
+    keys.sort_unstable();
+    keys.dedup();
+    keys
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ms::spectrum::Spectrum;
+
+    fn spec(charge: u8, mz: f64) -> Spectrum {
+        Spectrum::new(0, mz, charge, vec![])
+    }
+
+    #[test]
+    fn same_precursor_same_bucket() {
+        let spectra = vec![spec(2, 500.3), spec(2, 500.4), spec(2, 700.0), spec(3, 500.3)];
+        let buckets = bucket_by_precursor(&spectra, 1.0);
+        assert_eq!(buckets.len(), 3);
+        let k = bucket_key(2, 500.3, 1.0);
+        assert_eq!(buckets[&k], vec![0, 1]);
+    }
+
+    #[test]
+    fn charge_separates_buckets() {
+        let a = bucket_key(2, 500.0, 1.0);
+        let b = bucket_key(3, 500.0, 1.0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn standard_candidates_cover_neighbors() {
+        let keys = candidate_keys_standard(2, 500.0, 1.0);
+        assert_eq!(keys.len(), 3);
+        assert!(keys.contains(&(2, 499)));
+        assert!(keys.contains(&(2, 500)));
+        assert!(keys.contains(&(2, 501)));
+    }
+
+    #[test]
+    fn open_candidates_include_ptm_windows() {
+        let keys = candidate_keys_open(2, 540.0, 1.0, &[79.96633]);
+        // 540 window + (540 - 79.97/2) ~= 500 window
+        assert!(keys.contains(&(2, 540)));
+        assert!(keys.contains(&(2, 500)));
+        // dedup: no repeated keys
+        let mut sorted = keys.clone();
+        sorted.dedup();
+        assert_eq!(sorted.len(), keys.len());
+    }
+}

@@ -1,0 +1,256 @@
+//! Dataset presets mirroring the paper's four evaluation datasets at
+//! configurable scale (DESIGN.md §5): synthetic stand-ins preserve the
+//! group-replicate structure (clustering) and target/decoy/modified query
+//! mix (DB search); `paper_spectra` records the real dataset size used for
+//! latency extrapolation in the Table 2/3 benches.
+
+use crate::util::Rng;
+
+use super::spectrum::Spectrum;
+use super::synth::{
+    library_spectrum, observe, observe_modified, ObservationNoise, Peptide, PTM_SHIFTS,
+};
+
+/// A clustering workload: spectra with ground-truth peptide groups.
+#[derive(Clone, Debug)]
+pub struct ClusteringDataset {
+    pub name: &'static str,
+    pub spectra: Vec<Spectrum>,
+    /// Number of distinct ground-truth peptides (incl. singletons).
+    pub n_peptides: usize,
+    /// Size of the real dataset this preset stands in for.
+    pub paper_spectra: u64,
+}
+
+impl ClusteringDataset {
+    /// Core generator: `groups` multi-spectrum peptides with replicate
+    /// counts in [min_rep, max_rep], plus `singletons` one-off peptides.
+    pub fn generate(
+        name: &'static str,
+        seed: u64,
+        groups: usize,
+        min_rep: usize,
+        max_rep: usize,
+        singletons: usize,
+        paper_spectra: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let noise = ObservationNoise::default();
+        let mut spectra = Vec::new();
+        let mut scan = 0u64;
+        let mut pid = 0u32;
+
+        for _ in 0..groups {
+            let pep = Peptide::random(pid, &mut rng);
+            pid += 1;
+            let reps = rng.range_i64(min_rep as i64, max_rep as i64) as usize;
+            let charge = 2 + (rng.next_u64() % 2) as u8;
+            for _ in 0..reps {
+                spectra.push(observe(&pep, scan, charge, &noise, &mut rng));
+                scan += 1;
+            }
+        }
+        for _ in 0..singletons {
+            let pep = Peptide::random(pid, &mut rng);
+            pid += 1;
+            let charge = 2 + (rng.next_u64() % 2) as u8;
+            spectra.push(observe(&pep, scan, charge, &noise, &mut rng));
+            scan += 1;
+        }
+        rng.shuffle(&mut spectra);
+
+        ClusteringDataset {
+            name,
+            spectra,
+            n_peptides: pid as usize,
+            paper_spectra,
+        }
+    }
+
+    /// PXD001468-like (paper's small clustering set: 1.1 M kidney-cell
+    /// spectra). `scale` multiplies the synthetic size.
+    pub fn pxd001468_like(seed: u64, scale: f64) -> Self {
+        let s = |x: f64| (x * scale).max(1.0) as usize;
+        Self::generate("PXD001468-like", seed, s(120.0), 3, 12, s(300.0), 1_100_000)
+    }
+
+    /// PXD000561-like (paper's large set: 21.1 M draft-human-proteome
+    /// spectra) — higher replicate multiplicity than the small set.
+    pub fn pxd000561_like(seed: u64, scale: f64) -> Self {
+        let s = |x: f64| (x * scale).max(1.0) as usize;
+        Self::generate("PXD000561-like", seed, s(250.0), 4, 20, s(400.0), 21_100_000)
+    }
+
+    pub fn len(&self) -> usize {
+        self.spectra.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spectra.is_empty()
+    }
+}
+
+/// A DB-search workload: reference library (targets + shuffled decoys) and
+/// queries with ground truth.
+#[derive(Clone, Debug)]
+pub struct SearchDataset {
+    pub name: &'static str,
+    /// Target reference spectra (one library spectrum per peptide).
+    pub library: Vec<Spectrum>,
+    /// Decoy reference spectra (shuffled sequences, same mass).
+    pub decoys: Vec<Spectrum>,
+    pub queries: Vec<Spectrum>,
+    /// Fraction of queries whose peptide exists in the library.
+    pub identifiable_fraction: f64,
+    pub paper_queries: u64,
+    pub paper_library: u64,
+}
+
+impl SearchDataset {
+    /// `lib_size` target peptides; `n_queries` queries of which
+    /// `identifiable_fraction` are true library peptides (and of those,
+    /// `modified_fraction` carry an open modification).
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate(
+        name: &'static str,
+        seed: u64,
+        lib_size: usize,
+        n_queries: usize,
+        identifiable_fraction: f64,
+        modified_fraction: f64,
+        paper_queries: u64,
+        paper_library: u64,
+    ) -> Self {
+        let mut rng = Rng::new(seed);
+        let noise = ObservationNoise::default();
+
+        let peptides: Vec<Peptide> = (0..lib_size as u32)
+            .map(|i| Peptide::random(i, &mut rng))
+            .collect();
+
+        let mut library = Vec::with_capacity(lib_size);
+        let mut decoys = Vec::with_capacity(lib_size);
+        let mut scan = 0u64;
+        for pep in &peptides {
+            library.push(library_spectrum(pep, scan, 2, &mut rng));
+            scan += 1;
+            let d = pep.decoy(&mut rng);
+            decoys.push(library_spectrum(&d, scan, 2, &mut rng).as_decoy());
+            scan += 1;
+        }
+
+        let mut queries = Vec::with_capacity(n_queries);
+        // Fresh peptides disjoint from the library for unidentifiable queries.
+        let mut fresh_id = lib_size as u32 + 1_000_000;
+        for _ in 0..n_queries {
+            if rng.uniform() < identifiable_fraction {
+                let pep = &peptides[rng.below(lib_size)];
+                let q = if rng.uniform() < modified_fraction {
+                    let delta = PTM_SHIFTS[rng.below(PTM_SHIFTS.len())];
+                    observe_modified(pep, scan, 2, delta, &noise, &mut rng)
+                } else {
+                    observe(pep, scan, 2, &noise, &mut rng)
+                };
+                queries.push(q);
+            } else {
+                let pep = Peptide::random(fresh_id, &mut rng);
+                fresh_id += 1;
+                let mut q = observe(&pep, scan, 2, &noise, &mut rng);
+                q.peptide_id = None; // not in library: unidentifiable
+                queries.push(q);
+            }
+            scan += 1;
+        }
+
+        SearchDataset {
+            name,
+            library,
+            decoys,
+            queries,
+            identifiable_fraction,
+            paper_queries,
+            paper_library,
+        }
+    }
+
+    /// iPRG2012-like (small): 15,867 queries vs 1.16 M-spectrum yeast library.
+    pub fn iprg2012_like(seed: u64, scale: f64) -> Self {
+        let s = |x: f64| (x * scale).max(4.0) as usize;
+        Self::generate(
+            "iPRG2012-like",
+            seed,
+            s(800.0),
+            s(400.0),
+            0.75,
+            0.3,
+            15_867,
+            1_162_392,
+        )
+    }
+
+    /// HEK293-like (large): 46,665 queries/subset vs 3 M-spectrum human library.
+    pub fn hek293_like(seed: u64, scale: f64) -> Self {
+        let s = |x: f64| (x * scale).max(4.0) as usize;
+        Self::generate(
+            "HEK293-like",
+            seed,
+            s(1600.0),
+            s(800.0),
+            0.7,
+            0.4,
+            46_665,
+            2_992_672,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn clustering_dataset_group_structure() {
+        let ds = ClusteringDataset::generate("t", 1, 50, 3, 8, 100, 0);
+        let mut by_pep: HashMap<u32, usize> = HashMap::new();
+        for s in &ds.spectra {
+            *by_pep.entry(s.peptide_id.unwrap()).or_default() += 1;
+        }
+        let multi = by_pep.values().filter(|&&c| c >= 3).count();
+        let single = by_pep.values().filter(|&&c| c == 1).count();
+        assert!(multi >= 45, "multi-spectrum groups present: {multi}");
+        assert!(single >= 90, "singletons present: {single}");
+        assert_eq!(ds.n_peptides, 150);
+    }
+
+    #[test]
+    fn clustering_presets_deterministic() {
+        let a = ClusteringDataset::pxd001468_like(9, 0.1);
+        let b = ClusteringDataset::pxd001468_like(9, 0.1);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.spectra[0].scan_id, b.spectra[0].scan_id);
+        assert_eq!(a.paper_spectra, 1_100_000);
+    }
+
+    #[test]
+    fn search_dataset_composition() {
+        let ds = SearchDataset::generate("t", 2, 100, 200, 0.8, 0.25, 0, 0);
+        assert_eq!(ds.library.len(), 100);
+        assert_eq!(ds.decoys.len(), 100);
+        assert_eq!(ds.queries.len(), 200);
+        assert!(ds.decoys.iter().all(|d| d.is_decoy));
+        let identifiable = ds.queries.iter().filter(|q| q.peptide_id.is_some()).count();
+        assert!((130..=190).contains(&identifiable), "{identifiable}");
+        let modified = ds.queries.iter().filter(|q| q.mod_shift != 0.0).count();
+        assert!(modified > 10, "{modified}");
+    }
+
+    #[test]
+    fn library_ids_match_targets() {
+        let ds = SearchDataset::generate("t", 3, 50, 50, 1.0, 0.0, 0, 0);
+        for q in &ds.queries {
+            let pid = q.peptide_id.unwrap();
+            assert!(ds.library.iter().any(|l| l.peptide_id == Some(pid)));
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Mass-spectrometry domain substrate (paper §II-B, Figs. 1–2).
+//!
+//! The paper evaluates on MassIVE datasets (PXD001468, PXD000561, iPRG2012,
+//! HEK293) that are not available here; per DESIGN.md §5 this module
+//! provides a *synthetic proteomics workload generator* that preserves the
+//! statistical structure the pipelines are sensitive to: groups of replicate
+//! spectra of the same peptide (clustering), libraries of reference spectra
+//! with true/false/modified query matches and shuffled decoys (DB search).
+
+pub mod bucket;
+pub mod dataset;
+pub mod preprocess;
+pub mod spectrum;
+pub mod synth;
+
+pub use bucket::bucket_by_precursor;
+pub use dataset::{ClusteringDataset, SearchDataset};
+pub use preprocess::{PreprocessConfig, preprocess};
+pub use spectrum::{Peak, Spectrum};

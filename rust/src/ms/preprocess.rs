@@ -1,0 +1,150 @@
+//! Spectrum preprocessing: the [6]/[7] methodology — peak filtering, square
+//! -root intensity scaling, m/z binning into a fixed-length vector, and
+//! intensity quantization into the `m` levels consumed by ID-level encoding.
+
+
+
+use super::spectrum::Spectrum;
+
+#[derive(Clone, Copy, Debug)]
+pub struct PreprocessConfig {
+    /// Fragment m/z window retained.
+    pub mz_min: f64,
+    pub mz_max: f64,
+    /// Number of m/z bins == HD feature positions F.
+    pub bins: usize,
+    /// Intensity quantization levels m.
+    pub levels: usize,
+    /// Keep only the top-N most intense peaks (0 = keep all).
+    pub top_peaks: usize,
+    /// Drop peaks below this fraction of the base peak.
+    pub min_intensity_ratio: f32,
+}
+
+impl Default for PreprocessConfig {
+    fn default() -> Self {
+        PreprocessConfig {
+            mz_min: 100.0,
+            mz_max: 1900.0,
+            bins: 512,
+            levels: 64,
+            top_peaks: 150,
+            min_intensity_ratio: 0.01,
+        }
+    }
+}
+
+impl PreprocessConfig {
+    pub fn bin_width(&self) -> f64 {
+        (self.mz_max - self.mz_min) / self.bins as f64
+    }
+}
+
+/// Preprocess a spectrum into quantized intensity levels per m/z bin —
+/// the `levels` input of the encoder artifact (and of `hd::encode`).
+pub fn preprocess(s: &Spectrum, cfg: &PreprocessConfig) -> Vec<u16> {
+    // 1. Intensity filtering.
+    let base = s.base_peak_intensity();
+    let floor = base * cfg.min_intensity_ratio;
+    let mut kept: Vec<(f64, f32)> = s
+        .peaks
+        .iter()
+        .filter(|p| p.intensity >= floor && p.mz >= cfg.mz_min && p.mz < cfg.mz_max)
+        .map(|p| (p.mz, p.intensity))
+        .collect();
+
+    // 2. Top-N by intensity.
+    if cfg.top_peaks > 0 && kept.len() > cfg.top_peaks {
+        kept.sort_by(|a, b| b.1.total_cmp(&a.1));
+        kept.truncate(cfg.top_peaks);
+    }
+
+    // 3. Bin with sqrt scaling (max-pool within a bin).
+    let mut binned = vec![0f32; cfg.bins];
+    let w = cfg.bin_width();
+    for (mz, inten) in kept {
+        let b = ((mz - cfg.mz_min) / w) as usize;
+        let b = b.min(cfg.bins - 1);
+        binned[b] = binned[b].max(inten.sqrt());
+    }
+
+    // 4. Normalize to the max bin and quantize into levels 0..m-1.
+    let maxv = binned.iter().fold(0f32, |a, &b| a.max(b));
+    let scale = if maxv > 0.0 {
+        (cfg.levels - 1) as f32 / maxv
+    } else {
+        0.0
+    };
+    binned
+        .iter()
+        .map(|&v| ((v * scale).round() as u16).min((cfg.levels - 1) as u16))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ms::spectrum::Peak;
+    use crate::ms::synth::{observe, ObservationNoise, Peptide};
+    use crate::util::Rng;
+
+    #[test]
+    fn output_shape_and_range() {
+        let mut rng = Rng::new(1);
+        let p = Peptide::random(0, &mut rng);
+        let s = observe(&p, 1, 2, &ObservationNoise::default(), &mut rng);
+        let cfg = PreprocessConfig::default();
+        let v = preprocess(&s, &cfg);
+        assert_eq!(v.len(), 512);
+        assert!(v.iter().all(|&x| x < 64));
+        assert!(v.iter().any(|&x| x > 0), "some bins populated");
+        assert_eq!(*v.iter().max().unwrap(), 63, "max bin hits top level");
+    }
+
+    #[test]
+    fn empty_spectrum_all_zero() {
+        let s = Spectrum::new(1, 500.0, 2, vec![]);
+        let v = preprocess(&s, &PreprocessConfig::default());
+        assert!(v.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn replicates_similar_random_different() {
+        let mut rng = Rng::new(2);
+        let cfg = PreprocessConfig::default();
+        let noise = ObservationNoise::default();
+        let pa = Peptide::random(1, &mut rng);
+        let pb = Peptide::random(2, &mut rng);
+        let a1 = preprocess(&observe(&pa, 1, 2, &noise, &mut rng), &cfg);
+        let a2 = preprocess(&observe(&pa, 2, 2, &noise, &mut rng), &cfg);
+        let b1 = preprocess(&observe(&pb, 3, 2, &noise, &mut rng), &cfg);
+        let overlap = |x: &[u16], y: &[u16]| -> usize {
+            x.iter()
+                .zip(y)
+                .filter(|(a, b)| **a > 0 && **b > 0)
+                .count()
+        };
+        assert!(
+            overlap(&a1, &a2) > 2 * overlap(&a1, &b1),
+            "replicates share bins: {} vs {}",
+            overlap(&a1, &a2),
+            overlap(&a1, &b1)
+        );
+    }
+
+    #[test]
+    fn out_of_window_peaks_dropped() {
+        let s = Spectrum::new(
+            1,
+            500.0,
+            2,
+            vec![
+                Peak { mz: 50.0, intensity: 10.0 },
+                Peak { mz: 5000.0, intensity: 10.0 },
+                Peak { mz: 500.0, intensity: 1.0 },
+            ],
+        );
+        let v = preprocess(&s, &PreprocessConfig::default());
+        assert_eq!(v.iter().filter(|&&x| x > 0).count(), 1);
+    }
+}

@@ -1,0 +1,118 @@
+//! Spectrum and peak types.
+
+
+
+/// One fragment-ion peak: mass-to-charge ratio and relative intensity.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Peak {
+    pub mz: f64,
+    pub intensity: f32,
+}
+
+/// A (tandem) mass spectrum with simulation ground truth attached.
+#[derive(Clone, Debug)]
+pub struct Spectrum {
+    /// Unique scan identifier within a dataset.
+    pub scan_id: u64,
+    /// Precursor mass-to-charge ratio.
+    pub precursor_mz: f64,
+    /// Precursor charge state.
+    pub charge: u8,
+    /// Fragment peaks, sorted by m/z.
+    pub peaks: Vec<Peak>,
+    /// Ground-truth peptide id (None for noise/unidentifiable spectra).
+    pub peptide_id: Option<u32>,
+    /// True for decoy-library entries (target-decoy FDR, ref [17]).
+    pub is_decoy: bool,
+    /// Open-modification ground truth: mass shift applied (0.0 = unmodified).
+    pub mod_shift: f64,
+}
+
+impl Spectrum {
+    pub fn new(scan_id: u64, precursor_mz: f64, charge: u8, mut peaks: Vec<Peak>) -> Self {
+        peaks.sort_by(|a, b| a.mz.total_cmp(&b.mz));
+        Spectrum {
+            scan_id,
+            precursor_mz,
+            charge,
+            peaks,
+            peptide_id: None,
+            is_decoy: false,
+            mod_shift: 0.0,
+        }
+    }
+
+    pub fn with_peptide(mut self, id: u32) -> Self {
+        self.peptide_id = Some(id);
+        self
+    }
+
+    pub fn as_decoy(mut self) -> Self {
+        self.is_decoy = true;
+        self
+    }
+
+    pub fn with_mod_shift(mut self, shift: f64) -> Self {
+        self.mod_shift = shift;
+        self
+    }
+
+    /// Total ion current (sum of intensities).
+    pub fn tic(&self) -> f64 {
+        self.peaks.iter().map(|p| p.intensity as f64).sum()
+    }
+
+    pub fn base_peak_intensity(&self) -> f32 {
+        self.peaks
+            .iter()
+            .map(|p| p.intensity)
+            .fold(0.0f32, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peaks_sorted_on_construction() {
+        let s = Spectrum::new(
+            1,
+            500.0,
+            2,
+            vec![
+                Peak { mz: 300.0, intensity: 1.0 },
+                Peak { mz: 100.0, intensity: 2.0 },
+                Peak { mz: 200.0, intensity: 3.0 },
+            ],
+        );
+        let mzs: Vec<f64> = s.peaks.iter().map(|p| p.mz).collect();
+        assert_eq!(mzs, vec![100.0, 200.0, 300.0]);
+    }
+
+    #[test]
+    fn tic_and_base_peak() {
+        let s = Spectrum::new(
+            1,
+            500.0,
+            2,
+            vec![
+                Peak { mz: 100.0, intensity: 2.0 },
+                Peak { mz: 200.0, intensity: 5.0 },
+            ],
+        );
+        assert_eq!(s.tic(), 7.0);
+        assert_eq!(s.base_peak_intensity(), 5.0);
+    }
+
+    #[test]
+    fn builder_flags() {
+        let s = Spectrum::new(1, 500.0, 2, vec![])
+            .with_peptide(42)
+            .as_decoy()
+            .with_mod_shift(79.97);
+        assert_eq!(s.peptide_id, Some(42));
+        assert!(s.is_decoy);
+        assert_eq!(s.mod_shift, 79.97);
+    }
+}

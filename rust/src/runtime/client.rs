@@ -1,0 +1,179 @@
+//! PJRT client wrapper: compile-once executable cache + typed execute
+//! helpers for the two artifact kinds.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::manifest::Manifest;
+
+/// Owns the PJRT CPU client, the artifact manifest and the executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed per artifact (telemetry).
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the CPU PJRT client.
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact name.
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let path = self.manifest.artifact_path(entry);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Pre-compile a set of artifacts (warm-up before the hot path).
+    pub fn warm(&mut self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    fn run(&mut self, name: &str, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let refs: Vec<&xla::Literal> = args.iter().collect();
+        self.run_borrowed(name, &refs)
+    }
+
+    fn run_borrowed(&mut self, name: &str, args: &[&xla::Literal]) -> Result<xla::Literal> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        *self.exec_counts.entry(name.to_string()).or_default() += 1;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        Ok(result.to_tuple1().context("unwrapping result tuple")?)
+    }
+
+    /// Execute the encode+pack artifact for HD dimension `d`, packing `n`.
+    ///
+    /// * `levels`: B x F int32 quantized intensity levels (row-major).
+    /// * `id_hvs`: F x D f32 +/-1; `level_hvs`: m x D f32 +/-1.
+    ///
+    /// Returns B x packed row-major packed HVs.
+    pub fn encode_pack(
+        &mut self,
+        d: usize,
+        n: usize,
+        levels: &[i32],
+        id_hvs: &[f32],
+        level_hvs: &[f32],
+    ) -> Result<Vec<f32>> {
+        let name = Manifest::enc_pack_name(d, n);
+        let (b, f, m) = (
+            self.manifest.batch,
+            self.manifest.features,
+            self.manifest.levels,
+        );
+        anyhow::ensure!(
+            levels.len() == b * f,
+            "levels len {} != {}x{}",
+            levels.len(),
+            b,
+            f
+        );
+        anyhow::ensure!(id_hvs.len() == f * d, "id_hvs len");
+        anyhow::ensure!(level_hvs.len() == m * d, "level_hvs len");
+
+        let args = [
+            xla::Literal::vec1(levels).reshape(&[b as i64, f as i64])?,
+            xla::Literal::vec1(id_hvs).reshape(&[f as i64, d as i64])?,
+            xla::Literal::vec1(level_hvs).reshape(&[m as i64, d as i64])?,
+        ];
+        let out = self.run(&name, &args)?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Build the R x C reference literal once; the hot path reuses it
+    /// across every query batch scored against the same row block
+    /// (marshalling an 11 MB refs buffer per call dominated the PJRT MVM
+    /// cost before this — EXPERIMENTS.md §Perf L3).
+    pub fn mvm_refs_literal(&self, c: usize, refs: &[f32]) -> Result<xla::Literal> {
+        let r = self.manifest.rows;
+        anyhow::ensure!(refs.len() == r * c, "refs len {} != {}x{}", refs.len(), r, c);
+        Ok(xla::Literal::vec1(refs).reshape(&[r as i64, c as i64])?)
+    }
+
+    /// Execute the IMC MVM artifact for packed width `c` against a
+    /// pre-marshalled reference literal.
+    pub fn mvm_with_refs(
+        &mut self,
+        c: usize,
+        queries: &[f32],
+        refs_lit: &xla::Literal,
+        adc_lsb: f32,
+        adc_qmax: f32,
+    ) -> Result<Vec<f32>> {
+        let name = Manifest::mvm_name(c);
+        let b = self.manifest.batch;
+        anyhow::ensure!(
+            queries.len() == b * c,
+            "queries len {} != {}x{}",
+            queries.len(),
+            b,
+            c
+        );
+        let q_lit = xla::Literal::vec1(queries).reshape(&[b as i64, c as i64])?;
+        let lsb_lit = xla::Literal::vec1(&[adc_lsb]).reshape(&[1, 1])?;
+        let qmax_lit = xla::Literal::vec1(&[adc_qmax]).reshape(&[1, 1])?;
+        let args = [&q_lit, refs_lit, &lsb_lit, &qmax_lit];
+        let out = self.run_borrowed(&name, &args)?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Execute the IMC MVM artifact for packed width `c`.
+    ///
+    /// * `queries`: B x C packed query HVs; `refs`: R x C stored (noisy)
+    ///   conductances; `adc_lsb`/`adc_qmax` per `array::AdcConfig`.
+    ///
+    /// Returns B x R scores.
+    pub fn mvm(
+        &mut self,
+        c: usize,
+        queries: &[f32],
+        refs: &[f32],
+        adc_lsb: f32,
+        adc_qmax: f32,
+    ) -> Result<Vec<f32>> {
+        let refs_lit = self.mvm_refs_literal(c, refs)?;
+        self.mvm_with_refs(c, queries, &refs_lit, adc_lsb, adc_qmax)
+    }
+
+    /// Total artifact executions (all names).
+    pub fn total_execs(&self) -> u64 {
+        self.exec_counts.values().sum()
+    }
+}

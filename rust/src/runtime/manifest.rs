@@ -1,0 +1,199 @@
+//! `artifacts/manifest.json` parsing — the contract `python/compile/aot.py`
+//! writes and the runtime consumes. Parsed with the in-tree JSON parser
+//! (`util::json`; no serde in this offline environment).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub sha256: String,
+    pub params: HashMap<String, usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub schema: u32,
+    /// Encoder/MVM batch size B.
+    pub batch: usize,
+    /// MVM reference rows per call R.
+    pub rows: usize,
+    /// Encoder feature positions F.
+    pub features: usize,
+    /// Encoder intensity levels m.
+    pub levels: usize,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize, String> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or(format!("manifest: missing numeric field '{key}'"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String, String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or(format!("manifest: missing string field '{key}'"))
+}
+
+fn parse_tensor(j: &Json) -> Result<TensorSpec, String> {
+    Ok(TensorSpec {
+        name: req_str(j, "name")?,
+        shape: j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or("tensor: missing shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or("tensor: bad shape element"))
+            .collect::<Result<_, _>>()?,
+        dtype: req_str(j, "dtype")?,
+    })
+}
+
+fn parse_entry(j: &Json) -> Result<ArtifactEntry, String> {
+    let params = j
+        .get("params")
+        .and_then(Json::as_obj)
+        .ok_or("artifact: missing params")?
+        .iter()
+        .filter_map(|(k, v)| v.as_usize().map(|u| (k.clone(), u)))
+        .collect();
+    let tensors = |key: &str| -> Result<Vec<TensorSpec>, String> {
+        j.get(key)
+            .and_then(Json::as_arr)
+            .ok_or(format!("artifact: missing {key}"))?
+            .iter()
+            .map(parse_tensor)
+            .collect()
+    };
+    Ok(ArtifactEntry {
+        name: req_str(j, "name")?,
+        file: req_str(j, "file")?,
+        kind: req_str(j, "kind")?,
+        sha256: req_str(j, "sha256").unwrap_or_default(),
+        params,
+        inputs: tensors("inputs")?,
+        outputs: tensors("outputs")?,
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self, String> {
+        let j = Json::parse(text)?;
+        let schema = req_usize(&j, "schema")? as u32;
+        if schema != 1 {
+            return Err(format!("unsupported manifest schema {schema}"));
+        }
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or("manifest: missing artifacts")?
+            .iter()
+            .map(parse_entry)
+            .collect::<Result<_, _>>()?;
+        Ok(Manifest {
+            schema,
+            batch: req_usize(&j, "batch")?,
+            rows: req_usize(&j, "rows")?,
+            features: req_usize(&j, "features")?,
+            levels: req_usize(&j, "levels")?,
+            artifacts,
+            dir,
+        })
+    }
+
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self, String> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("{}: {e} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text, dir.to_path_buf())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn artifact_path(&self, entry: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// Encoder artifact name for (d, n); exists iff aot.py emitted it.
+    pub fn enc_pack_name(d: usize, n: usize) -> String {
+        format!("enc_pack_d{d}_n{n}")
+    }
+
+    /// MVM artifact name for packed width c.
+    pub fn mvm_name(c: usize) -> String {
+        format!("mvm_c{c}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "schema": 1, "batch": 64, "rows": 1024, "features": 512, "levels": 64,
+      "artifacts": [
+        {"name": "mvm_c768", "file": "mvm_c768.hlo.txt", "kind": "mvm",
+         "sha256": "", "params": {"c": 768, "batch": 64, "rows": 1024},
+         "inputs": [{"name": "queries", "shape": [64, 768], "dtype": "f32"}],
+         "outputs": [{"name": "scores", "shape": [64, 1024], "dtype": "f32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("x")).unwrap();
+        assert_eq!(m.batch, 64);
+        let a = m.get("mvm_c768").unwrap();
+        assert_eq!(a.params["c"], 768);
+        assert_eq!(a.outputs[0].shape, vec![64, 1024]);
+        assert!(m.get("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_schema() {
+        let bad = SAMPLE.replace("\"schema\": 1", "\"schema\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(Manifest::enc_pack_name(2048, 3), "enc_pack_d2048_n3");
+        assert_eq!(Manifest::mvm_name(768), "mvm_c768");
+    }
+
+    #[test]
+    fn loads_built_artifacts_if_present() {
+        // Integration-ish: if `make artifacts` has run, the real manifest
+        // must parse and every referenced file must exist.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !std::path::Path::new(dir).join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        for a in &m.artifacts {
+            assert!(m.artifact_path(a).exists(), "{}", a.name);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client — the only place the L3 coordinator touches XLA.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`, with HLO **text** as the interchange
+//! format (see DESIGN.md §2). Executables are compiled once per artifact
+//! and cached for the life of the runtime.
+
+pub mod client;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use manifest::{ArtifactEntry, Manifest};

@@ -1,0 +1,95 @@
+//! Best-match selection over similarity scores.
+
+/// One query's best target and decoy matches.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Match {
+    /// Index of the best-scoring target reference (into the candidate set).
+    pub target_idx: usize,
+    pub target_score: f32,
+    /// Best decoy score for the same query (drives the FDR estimate).
+    pub decoy_score: f32,
+}
+
+/// Outcome of searching one query batch.
+#[derive(Clone, Debug, Default)]
+pub struct SearchOutcome {
+    pub matches: Vec<Option<Match>>,
+}
+
+/// Select the best target and decoy per query from a row-major score
+/// matrix (`n_queries x (n_targets + n_decoys)`); the first `n_targets`
+/// columns are targets, the rest decoys. Queries with no candidates yield
+/// `None`.
+pub fn best_matches(
+    scores: &[f32],
+    n_queries: usize,
+    n_targets: usize,
+    n_decoys: usize,
+) -> SearchOutcome {
+    let cols = n_targets + n_decoys;
+    assert_eq!(scores.len(), n_queries * cols, "score matrix shape");
+    let mut matches = Vec::with_capacity(n_queries);
+    for q in 0..n_queries {
+        let row = &scores[q * cols..(q + 1) * cols];
+        if n_targets == 0 {
+            matches.push(None);
+            continue;
+        }
+        let (ti, ts) = row[..n_targets]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap();
+        let ds = row[n_targets..]
+            .iter()
+            .copied()
+            .fold(f32::NEG_INFINITY, f32::max);
+        matches.push(Some(Match {
+            target_idx: ti,
+            target_score: *ts,
+            decoy_score: if n_decoys > 0 { ds } else { f32::NEG_INFINITY },
+        }));
+    }
+    SearchOutcome { matches }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn picks_best_target_and_decoy() {
+        // 1 query, 3 targets, 2 decoys.
+        let scores = vec![1.0, 5.0, 3.0, 2.0, 4.0];
+        let out = best_matches(&scores, 1, 3, 2);
+        let m = out.matches[0].unwrap();
+        assert_eq!(m.target_idx, 1);
+        assert_eq!(m.target_score, 5.0);
+        assert_eq!(m.decoy_score, 4.0);
+    }
+
+    #[test]
+    fn no_targets_yields_none() {
+        let out = best_matches(&[], 1, 0, 0);
+        assert!(out.matches[0].is_none());
+    }
+
+    #[test]
+    fn no_decoys_neg_infinity() {
+        let scores = vec![1.0, 2.0];
+        let out = best_matches(&scores, 1, 2, 0);
+        assert_eq!(out.matches[0].unwrap().decoy_score, f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn multiple_queries_rows_independent() {
+        let scores = vec![
+            9.0, 1.0, 0.5, // q0
+            1.0, 8.0, 7.5, // q1
+        ];
+        let out = best_matches(&scores, 2, 2, 1);
+        assert_eq!(out.matches[0].unwrap().target_idx, 0);
+        assert_eq!(out.matches[1].unwrap().target_idx, 1);
+        assert_eq!(out.matches[1].unwrap().decoy_score, 7.5);
+    }
+}

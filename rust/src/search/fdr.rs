@@ -1,0 +1,142 @@
+//! Target-decoy false-discovery-rate filtering (Elias & Gygi [17]).
+//!
+//! Every query contributes its best target-vs-decoy match; sorting all
+//! matches by score and walking down, the FDR at a score threshold is
+//! (#decoy hits above) / (#target hits above). The paper fixes FDR = 1%
+//! and reports the number of identified peptides (Fig. 10, Table 3).
+
+/// Result of FDR filtering at a fixed rate.
+#[derive(Clone, Debug, Default)]
+pub struct FdrResult {
+    /// Score threshold achieving the requested FDR.
+    pub threshold: f32,
+    /// Indices of accepted (identified) queries.
+    pub accepted: Vec<usize>,
+    /// Estimated FDR actually achieved at the threshold.
+    pub achieved_fdr: f64,
+}
+
+/// Filter per-query (target_score, decoy_score) pairs at `fdr` (e.g. 0.01).
+///
+/// Implementation: pool target and decoy scores, sort descending, find the
+/// lowest threshold where decoys/targets <= fdr, then accept target matches
+/// whose score >= threshold *and* beats their own decoy.
+pub fn fdr_filter(pairs: &[(f32, f32)], fdr: f64) -> FdrResult {
+    if pairs.is_empty() {
+        return FdrResult::default();
+    }
+
+    // (score, is_decoy) pooled competition.
+    let mut pool: Vec<(f32, bool)> = Vec::with_capacity(pairs.len() * 2);
+    for &(t, d) in pairs {
+        if t.is_finite() {
+            pool.push((t, false));
+        }
+        if d.is_finite() {
+            pool.push((d, true));
+        }
+    }
+    pool.sort_by(|a, b| b.0.total_cmp(&a.0));
+
+    let mut best_threshold = f32::INFINITY;
+    let mut achieved = 0.0f64;
+    let (mut targets, mut decoys) = (0u64, 0u64);
+    for &(score, is_decoy) in &pool {
+        if is_decoy {
+            decoys += 1;
+        } else {
+            targets += 1;
+        }
+        if targets > 0 {
+            let cur_fdr = decoys as f64 / targets as f64;
+            if cur_fdr <= fdr {
+                best_threshold = score;
+                achieved = cur_fdr;
+            }
+        }
+    }
+
+    if best_threshold == f32::INFINITY {
+        return FdrResult {
+            threshold: f32::INFINITY,
+            accepted: vec![],
+            achieved_fdr: 0.0,
+        };
+    }
+
+    let accepted = pairs
+        .iter()
+        .enumerate()
+        .filter(|(_, &(t, d))| t >= best_threshold && t > d)
+        .map(|(i, _)| i)
+        .collect();
+
+    FdrResult {
+        threshold: best_threshold,
+        accepted,
+        achieved_fdr: achieved,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_separation_accepts_all_targets() {
+        // Targets score ~10, decoys ~1: everything identifiable at 1%.
+        let pairs: Vec<(f32, f32)> = (0..100)
+            .map(|i| (10.0 + (i % 7) as f32 * 0.1, 1.0 + (i % 5) as f32 * 0.1))
+            .collect();
+        let r = fdr_filter(&pairs, 0.01);
+        assert_eq!(r.accepted.len(), 100);
+        assert!(r.achieved_fdr <= 0.01);
+    }
+
+    #[test]
+    fn no_separation_rejects_most() {
+        // Target and decoy scores identically distributed: at 1% FDR almost
+        // nothing should pass.
+        let pairs: Vec<(f32, f32)> = (0..200)
+            .map(|i| {
+                let x = (i * 2654435761u64 as usize % 1000) as f32 / 100.0;
+                let y = ((i + 7) * 2654435761u64 as usize % 1000) as f32 / 100.0;
+                (x, y)
+            })
+            .collect();
+        let r = fdr_filter(&pairs, 0.01);
+        assert!(
+            r.accepted.len() < 20,
+            "accepted {} of 200 with no separation",
+            r.accepted.len()
+        );
+    }
+
+    #[test]
+    fn stricter_fdr_accepts_fewer() {
+        let pairs: Vec<(f32, f32)> = (0..300)
+            .map(|i| {
+                let t = if i < 200 { 10.0 + (i % 10) as f32 } else { 3.0 + (i % 10) as f32 };
+                let d = 2.5 + (i % 12) as f32;
+                (t, d)
+            })
+            .collect();
+        let strict = fdr_filter(&pairs, 0.001);
+        let loose = fdr_filter(&pairs, 0.05);
+        assert!(strict.accepted.len() <= loose.accepted.len());
+    }
+
+    #[test]
+    fn empty_input() {
+        let r = fdr_filter(&[], 0.01);
+        assert!(r.accepted.is_empty());
+    }
+
+    #[test]
+    fn accepted_beat_their_own_decoy() {
+        let pairs = vec![(10.0, 12.0), (10.0, 1.0)];
+        let r = fdr_filter(&pairs, 0.5);
+        // Query 0's decoy outranks its target: never accepted.
+        assert!(!r.accepted.contains(&0));
+    }
+}

@@ -1,0 +1,12 @@
+//! Database search (paper Fig. 2, §III-C "IMC for DB search").
+//!
+//! Query HVs are compared against all reference HVs via Hamming/dot
+//! similarity; the near-memory ASIC picks the best-scoring candidate and
+//! the result list is filtered at a fixed false-discovery rate using the
+//! target-decoy method [17].
+
+pub mod engine;
+pub mod fdr;
+
+pub use engine::{Match, SearchOutcome};
+pub use fdr::{fdr_filter, FdrResult};

@@ -1,0 +1,126 @@
+//! Lightweight counters, stage timers and report-table formatting used by
+//! the pipelines, benches and the CLI.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// Named wall-clock stage timings (the Fig. 3-style latency breakdown).
+#[derive(Debug, Default, Clone)]
+pub struct StageTimer {
+    stages: BTreeMap<String, f64>,
+    order: Vec<String>,
+}
+
+impl StageTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under a stage name (accumulates across calls).
+    pub fn time<T>(&mut self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(stage, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn add(&mut self, stage: &str, seconds: f64) {
+        if !self.stages.contains_key(stage) {
+            self.order.push(stage.to_string());
+        }
+        *self.stages.entry(stage.to_string()).or_insert(0.0) += seconds;
+    }
+
+    pub fn get(&self, stage: &str) -> f64 {
+        self.stages.get(stage).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.stages.values().sum()
+    }
+
+    /// (stage, seconds, fraction) rows in insertion order.
+    pub fn breakdown(&self) -> Vec<(String, f64, f64)> {
+        let total = self.total().max(f64::MIN_POSITIVE);
+        self.order
+            .iter()
+            .map(|s| (s.clone(), self.stages[s], self.stages[s] / total))
+            .collect()
+    }
+}
+
+/// Render rows as a fixed-width text table (benches print these).
+pub fn render_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let sep: String = widths
+        .iter()
+        .map(|w| "-".repeat(w + 2))
+        .collect::<Vec<_>>()
+        .join("+");
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!(" {:<w$} ", c, w = widths[i]))
+            .collect::<Vec<_>>()
+            .join("|")
+    };
+    let mut out = format!("== {title} ==\n");
+    out += &fmt_row(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    out += "\n";
+    out += &sep;
+    out += "\n";
+    for row in rows {
+        out += &fmt_row(row);
+        out += "\n";
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_accumulates() {
+        let mut t = StageTimer::new();
+        t.add("encode", 1.0);
+        t.add("encode", 0.5);
+        t.add("search", 2.5);
+        assert_eq!(t.get("encode"), 1.5);
+        assert_eq!(t.total(), 4.0);
+        let b = t.breakdown();
+        assert_eq!(b[0].0, "encode");
+        assert!((b[0].2 - 0.375).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut t = StageTimer::new();
+        let v = t.time("work", || 42);
+        assert_eq!(v, 42);
+        assert!(t.get("work") >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_all_rows() {
+        let s = render_table(
+            "T",
+            &["tool", "latency"],
+            &[
+                vec!["falcon".into(), "573s".into()],
+                vec!["specpcm".into(), "5.46s".into()],
+            ],
+        );
+        assert!(s.contains("falcon"));
+        assert!(s.contains("specpcm"));
+        assert!(s.contains("== T =="));
+    }
+}

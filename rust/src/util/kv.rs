@@ -1,0 +1,167 @@
+//! Minimal `key = value` config format (TOML subset; offline environment —
+//! no toml crate). Supports comments (#), strings ("..."), integers,
+//! floats, booleans and flat arrays of numbers `[a, b, c]`. Exactly the
+//! shapes `SpecPcmConfig` needs.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum KvValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    NumArray(Vec<f64>),
+}
+
+impl KvValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            KvValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            KvValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            KvValue::Float(f) => Some(*f),
+            KvValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            KvValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_num_array(&self) -> Option<&[f64]> {
+        match self {
+            KvValue::NumArray(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+pub fn parse(text: &str) -> Result<BTreeMap<String, KvValue>, String> {
+    let mut out = BTreeMap::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or(format!("line {}: expected 'key = value'", ln + 1))?;
+        let key = key.trim().to_string();
+        let val = val.trim();
+        // Strip trailing comments outside strings.
+        let val = if val.starts_with('"') {
+            val
+        } else {
+            val.split('#').next().unwrap().trim()
+        };
+        let parsed = parse_value(val).map_err(|e| format!("line {}: {e}", ln + 1))?;
+        out.insert(key, parsed);
+    }
+    Ok(out)
+}
+
+fn parse_value(val: &str) -> Result<KvValue, String> {
+    if let Some(stripped) = val.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or("unterminated string")?;
+        return Ok(KvValue::Str(inner.to_string()));
+    }
+    if val == "true" {
+        return Ok(KvValue::Bool(true));
+    }
+    if val == "false" {
+        return Ok(KvValue::Bool(false));
+    }
+    if let Some(inner) = val.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut nums = Vec::new();
+        for part in inner.split(',') {
+            let p = part.trim();
+            if p.is_empty() {
+                continue;
+            }
+            nums.push(p.parse::<f64>().map_err(|_| format!("bad number '{p}'"))?);
+        }
+        return Ok(KvValue::NumArray(nums));
+    }
+    if let Ok(i) = val.parse::<i64>() {
+        return Ok(KvValue::Int(i));
+    }
+    if let Ok(f) = val.parse::<f64>() {
+        return Ok(KvValue::Float(f));
+    }
+    Err(format!("cannot parse value '{val}'"))
+}
+
+/// Format helpers for the writer side.
+pub fn fmt_str(k: &str, v: &str) -> String {
+    format!("{k} = \"{v}\"\n")
+}
+
+pub fn fmt_num(k: &str, v: impl std::fmt::Display) -> String {
+    format!("{k} = {v}\n")
+}
+
+pub fn fmt_arr(k: &str, v: &[f32]) -> String {
+    let items: Vec<String> = v.iter().map(|x| format!("{x}")).collect();
+    format!("{k} = [{}]\n", items.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed_config() {
+        let m = parse(
+            "# comment\n\
+             task = \"search\"\n\
+             hd_dim = 8192\n\
+             fdr = 0.01 # inline comment\n\
+             use_artifacts = true\n\
+             sweep = [0.1, 0.2, 0.3]\n",
+        )
+        .unwrap();
+        assert_eq!(m["task"].as_str(), Some("search"));
+        assert_eq!(m["hd_dim"].as_i64(), Some(8192));
+        assert_eq!(m["fdr"].as_f64(), Some(0.01));
+        assert_eq!(m["use_artifacts"].as_bool(), Some(true));
+        assert_eq!(m["sweep"].as_num_array().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn roundtrip_via_writers() {
+        let mut text = String::new();
+        text += &fmt_str("name", "x");
+        text += &fmt_num("n", 42);
+        text += &fmt_arr("a", &[1.0, 2.5]);
+        let m = parse(&text).unwrap();
+        assert_eq!(m["name"].as_str(), Some("x"));
+        assert_eq!(m["n"].as_i64(), Some(42));
+        assert_eq!(m["a"].as_num_array(), Some(&[1.0, 2.5][..]));
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(parse("just words").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+        assert!(parse("k = [1, z]").is_err());
+    }
+}

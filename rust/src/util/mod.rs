@@ -1,0 +1,59 @@
+//! Small shared utilities: deterministic RNG, rounding, padding helpers.
+
+pub mod json;
+pub mod kv;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;
+
+/// Round half away from zero — matches `jnp.sign(x)*jnp.floor(|x|+0.5)` used
+/// by the Pallas kernel and the python oracle. (This is also what
+/// `f32::round` does; the alias exists to make the shared contract visible.)
+#[inline]
+pub fn round_away(x: f32) -> f32 {
+    x.round()
+}
+
+/// Smallest multiple of `m` that is >= `x`.
+#[inline]
+pub fn ceil_to(x: usize, m: usize) -> usize {
+    x.div_ceil(m) * m
+}
+
+/// Smallest power of two >= `x` (x > 0).
+#[inline]
+pub fn pow2_at_least(x: f64) -> f64 {
+    assert!(x > 0.0, "pow2_at_least requires x > 0");
+    2f64.powi(x.log2().ceil() as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_away_halves() {
+        assert_eq!(round_away(0.5), 1.0);
+        assert_eq!(round_away(-0.5), -1.0);
+        assert_eq!(round_away(2.5), 3.0);
+        assert_eq!(round_away(-2.5), -3.0);
+        assert_eq!(round_away(2.4), 2.0);
+    }
+
+    #[test]
+    fn ceil_to_multiples() {
+        assert_eq!(ceil_to(683, 128), 768);
+        assert_eq!(ceil_to(2731, 128), 2816);
+        assert_eq!(ceil_to(128, 128), 128);
+        assert_eq!(ceil_to(1, 128), 128);
+    }
+
+    #[test]
+    fn pow2_bounds() {
+        assert_eq!(pow2_at_least(407.3), 512.0);
+        assert_eq!(pow2_at_least(512.0), 512.0);
+        assert_eq!(pow2_at_least(45.25), 64.0);
+        assert_eq!(pow2_at_least(1.0), 1.0);
+    }
+}

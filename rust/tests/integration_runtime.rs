@@ -1,0 +1,122 @@
+//! Integration: AOT artifacts loaded through PJRT agree **bit-exactly**
+//! with the rust reference implementations (DESIGN.md §8).
+//!
+//! These tests skip gracefully when `artifacts/` has not been built; run
+//! `make artifacts` first for full coverage. The exactness argument (pow-2
+//! ADC full-scale keeps the whole pipeline in exactly-representable f32)
+//! is laid out in python/tests/test_imc_mvm.py.
+
+use specpcm::array::{imc_mvm_ref, AdcConfig};
+use specpcm::hd::{self, ItemMemory};
+use specpcm::runtime::{Manifest, Runtime};
+use specpcm::util::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    if !std::path::Path::new(dir).join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("runtime loads"))
+}
+
+fn rand_packed(rng: &mut Rng, len: usize, n: i64) -> Vec<f32> {
+    (0..len).map(|_| rng.range_i64(-n, n) as f32).collect()
+}
+
+#[test]
+fn pjrt_platform_is_cpu() {
+    let Some(rt) = runtime_or_skip() else { return };
+    assert!(rt.platform().to_lowercase().contains("cpu"), "{}", rt.platform());
+}
+
+#[test]
+fn mvm_artifact_matches_rust_reference_bit_exactly() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (b, r) = (rt.manifest.batch, rt.manifest.rows);
+    let mut rng = Rng::new(0xA11CE);
+
+    for &c in &[768usize, 2816] {
+        let q = rand_packed(&mut rng, b * c, 3);
+        let g = rand_packed(&mut rng, r * c, 3);
+        let adc = AdcConfig::new(6, 512.0);
+        let got = rt.mvm(c, &q, &g, adc.lsb(), adc.qmax()).expect("mvm runs");
+        let want = imc_mvm_ref(&q, &g, b, r, c, adc);
+        assert_eq!(got.len(), want.len());
+        let diff = got.iter().zip(&want).filter(|(a, b)| a != b).count();
+        assert_eq!(diff, 0, "c={c}: {diff} mismatching scores");
+    }
+}
+
+#[test]
+fn mvm_artifact_adc_scalars_are_runtime_knobs() {
+    // One artifact serves every ADC_bits setting via the scalar inputs —
+    // the ISA's ADC_bits field with no recompilation (§III-D).
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (b, r, c) = (rt.manifest.batch, rt.manifest.rows, 768usize);
+    let mut rng = Rng::new(7);
+    let q = rand_packed(&mut rng, b * c, 3);
+    let g = rand_packed(&mut rng, r * c, 3);
+
+    for bits in 1..=6u32 {
+        let adc = AdcConfig::default_for_packing(bits, 3);
+        let got = rt.mvm(c, &q, &g, adc.lsb(), adc.qmax()).unwrap();
+        let want = imc_mvm_ref(&q, &g, b, r, c, adc);
+        assert_eq!(got, want, "adc_bits={bits}");
+    }
+}
+
+#[test]
+fn encoder_artifact_matches_rust_hd_bit_exactly() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (b, f, m) = (rt.manifest.batch, rt.manifest.features, rt.manifest.levels);
+    let (d, n) = (2048usize, 3usize);
+    assert!(rt.manifest.get(&Manifest::enc_pack_name(d, n)).is_some());
+
+    let im = ItemMemory::generate(42, f, m, d);
+    let mut rng = Rng::new(43);
+    // Sparse levels like real preprocessed spectra.
+    let mut levels = vec![0i32; b * f];
+    let mut levels_u16 = vec![vec![0u16; f]; b];
+    for bi in 0..b {
+        for _ in 0..100 {
+            let pos = rng.below(f);
+            let lvl = 1 + rng.below(m - 1);
+            levels[bi * f + pos] = lvl as i32;
+            levels_u16[bi][pos] = lvl as u16;
+        }
+    }
+
+    let got = rt
+        .encode_pack(d, n, &levels, &im.id_hvs_f32(), &im.level_hvs_f32())
+        .expect("encoder runs");
+
+    let cp = hd::padded_packed_len(d, n);
+    assert_eq!(got.len(), b * cp);
+    for bi in 0..b {
+        let hv = hd::encode(&levels_u16[bi], &im);
+        let want = hd::pack(&hv, n);
+        assert_eq!(&got[bi * cp..(bi + 1) * cp], &want[..], "spectrum {bi}");
+    }
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let (b, r, c) = (rt.manifest.batch, rt.manifest.rows, 768usize);
+    let q = vec![0f32; b * c];
+    let g = vec![0f32; r * c];
+    rt.mvm(c, &q, &g, 16.0, 31.0).unwrap();
+    rt.mvm(c, &q, &g, 16.0, 31.0).unwrap();
+    assert_eq!(rt.exec_counts[&Manifest::mvm_name(c)], 2);
+    assert_eq!(rt.total_execs(), 2);
+}
+
+#[test]
+fn unknown_artifact_is_a_clean_error() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let err = rt.mvm(999, &[0.0; 64 * 999], &[0.0; 1024 * 999], 1.0, 1.0);
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("mvm_c999"), "{msg}");
+}

@@ -1,0 +1,205 @@
+//! Property-based tests (hand-rolled generator loops over `util::Rng`; the
+//! proptest crate is unavailable offline). Each property runs a few hundred
+//! randomized cases with printable counterexamples on failure.
+//!
+//! Invariants covered (DESIGN.md §8):
+//! * ISA encode/decode round-trips for every valid field combination.
+//! * Dimension packing: length law, bound law, adjacent-sum law, and
+//!   unbiasedness of the packed dot product.
+//! * Allocator never double-books and frees restore capacity.
+//! * Batcher covers every index exactly once, in order.
+//! * Complete-linkage merge distances are monotone non-decreasing and the
+//!   cut at +inf yields one cluster per connected component.
+//! * ADC transfer: idempotent on its own output codes, odd symmetry.
+//! * FDR: achieved FDR never exceeds the requested rate.
+
+use specpcm::array::AdcConfig;
+use specpcm::cluster::complete_linkage;
+use specpcm::coordinator::{Batcher, SegmentAllocator};
+use specpcm::hd;
+use specpcm::isa::{decode, encode, Instruction};
+use specpcm::search::fdr_filter;
+use specpcm::util::Rng;
+
+const CASES: usize = 300;
+
+#[test]
+fn prop_isa_roundtrip() {
+    let mut rng = Rng::new(0x15a);
+    for case in 0..CASES {
+        let inst = match rng.below(3) {
+            0 => Instruction::StoreHv {
+                buf: rng.below(256) as u8,
+                arr_idx: rng.below(65536) as u16,
+                col_addr: rng.below(256) as u8,
+                row_addr: rng.below(256) as u8,
+                mlc_bits: 1 + rng.below(4) as u8,
+                write_cycles: rng.below(16) as u8,
+            },
+            1 => Instruction::ReadHv {
+                buf: rng.below(256) as u8,
+                data_size: rng.below(65536) as u16,
+                arr_idx: rng.below(65536) as u16,
+                col_addr: rng.below(256) as u8,
+                row_addr: rng.below(256) as u8,
+                mlc_bits: 1 + rng.below(4) as u8,
+            },
+            _ => Instruction::MvmCompute {
+                buf: rng.below(256) as u8,
+                arr_idx: rng.below(65536) as u16,
+                row_addr: rng.below(256) as u8,
+                num_activated_row: 1 + rng.below(128) as u8,
+                adc_bits: 1 + rng.below(6) as u8,
+                mlc_bits: 1 + rng.below(4) as u8,
+            },
+        };
+        let back = decode(encode(&inst)).unwrap();
+        assert_eq!(back, inst, "case {case}");
+    }
+}
+
+#[test]
+fn prop_packing_laws() {
+    let mut rng = Rng::new(0x9ac);
+    for case in 0..CASES {
+        let d = 1 + rng.below(4096);
+        let n = 1 + rng.below(4);
+        let hv: hd::Hv = (0..d).map(|_| rng.pm1()).collect();
+        let p = hd::pack(&hv, n);
+
+        // Length law: padded to a 128 multiple of ceil(d/n).
+        assert_eq!(p.len(), hd::padded_packed_len(d, n), "case {case} d={d} n={n}");
+        assert_eq!(p.len() % 128, 0);
+        // Bound law.
+        assert!(p.iter().all(|v| v.abs() <= n as f32));
+        // Adjacent-sum law on a random group.
+        let groups = d.div_ceil(n);
+        let g = rng.below(groups);
+        let lo = g * n;
+        let hi = (lo + n).min(d);
+        let manual: i32 = hv[lo..hi].iter().map(|&x| x as i32).sum();
+        assert_eq!(p[g], manual as f32, "case {case} group {g}");
+        // Padding is zero.
+        assert!(p[groups..].iter().all(|&v| v == 0.0));
+    }
+}
+
+#[test]
+fn prop_allocator_never_double_books() {
+    let mut rng = Rng::new(0xa110c);
+    for case in 0..60 {
+        let segments = 1 + rng.below(6);
+        let groups = 1 + rng.below(4);
+        let mut alloc = SegmentAllocator::new(segments * groups, segments * 128);
+        let mut live = std::collections::HashSet::new();
+
+        for _ in 0..2000 {
+            if rng.uniform() < 0.6 {
+                if let Some(slot) = alloc.alloc() {
+                    assert!(live.insert(slot), "case {case}: double-booked {slot:?}");
+                }
+            } else if !live.is_empty() {
+                let slot = *live.iter().next().unwrap();
+                live.remove(&slot);
+                alloc.release(slot);
+            }
+        }
+        assert_eq!(alloc.free_slots() + live.len(), alloc.capacity(), "case {case}");
+    }
+}
+
+#[test]
+fn prop_batcher_covers_exactly_once_in_order() {
+    let mut rng = Rng::new(0xba7c);
+    for case in 0..CASES {
+        let total = rng.below(5000);
+        let chunk = 1 + rng.below(1500);
+        let batches = Batcher::new(total, chunk).batches();
+        let mut next = 0usize;
+        for b in &batches {
+            assert_eq!(b.start, next, "case {case}: gap or overlap");
+            assert!(b.len() <= chunk && !b.is_empty());
+            next = b.end;
+        }
+        assert_eq!(next, total, "case {case}: tail not covered");
+    }
+}
+
+#[test]
+fn prop_linkage_monotone_and_connected_components() {
+    let mut rng = Rng::new(0x111c);
+    for case in 0..80 {
+        let n = 2 + rng.below(40);
+        // Random symmetric distance matrix.
+        let mut d = vec![0f32; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = rng.uniform() as f32;
+                d[i * n + j] = v;
+                d[j * n + i] = v;
+            }
+        }
+        let dend = complete_linkage(&d, n, f32::INFINITY);
+        assert_eq!(dend.merges.len(), n - 1, "case {case}: full dendrogram");
+        for w in dend.merges.windows(2) {
+            assert!(
+                w[0].distance <= w[1].distance,
+                "case {case}: merge distances decreased"
+            );
+        }
+        // Cutting at +inf gives a single cluster.
+        let labels = dend.cut(f32::INFINITY);
+        assert!(labels.iter().all(|&l| l == labels[0]), "case {case}");
+        // Cutting below the smallest distance gives all singletons.
+        let min_d = dend.merges[0].distance;
+        let labels = dend.cut(min_d * 0.5);
+        let uniq: std::collections::HashSet<_> = labels.iter().collect();
+        assert_eq!(uniq.len(), n, "case {case}");
+    }
+}
+
+#[test]
+fn prop_adc_idempotent_and_odd() {
+    let mut rng = Rng::new(0xadc);
+    for case in 0..CASES {
+        let bits = 1 + rng.below(6) as u32;
+        let clip = 2f32.powi(5 + rng.below(6) as i32);
+        let adc = AdcConfig::new(bits, clip);
+        let x = (rng.uniform() as f32 - 0.5) * 4.0 * clip;
+        let y = adc.quantize(x);
+        // Idempotence: quantizing an output code is a fixed point.
+        assert_eq!(adc.quantize(y), y, "case {case} bits={bits} x={x}");
+        // Odd symmetry away from the asymmetric min code.
+        if y.abs() < adc.qmax() * adc.lsb() {
+            assert_eq!(adc.quantize(-x), -y, "case {case} x={x}");
+        }
+    }
+}
+
+#[test]
+fn prop_fdr_never_exceeds_requested() {
+    let mut rng = Rng::new(0xfd);
+    for case in 0..100 {
+        let n = 50 + rng.below(500);
+        // Mixed-quality pairs.
+        let pairs: Vec<(f32, f32)> = (0..n)
+            .map(|_| {
+                let good = rng.uniform() < 0.6;
+                let t = if good {
+                    5.0 + rng.gaussian() as f32
+                } else {
+                    rng.gaussian() as f32
+                };
+                let d = rng.gaussian() as f32;
+                (t, d)
+            })
+            .collect();
+        let fdr = [0.01, 0.05, 0.1][rng.below(3)];
+        let r = fdr_filter(&pairs, fdr);
+        assert!(r.achieved_fdr <= fdr + 1e-9, "case {case}: {}", r.achieved_fdr);
+        // All accepted beat the threshold and their own decoy.
+        for &i in &r.accepted {
+            assert!(pairs[i].0 >= r.threshold && pairs[i].0 > pairs[i].1);
+        }
+    }
+}
