@@ -10,16 +10,17 @@
 //!
 //! Run: `cargo run --release --example clustering_pipeline [scale]`
 
+use specpcm::backend::BackendDispatcher;
 use specpcm::baselines::{greedy_nn, hd_soft, levels_to_f32, lsh};
 use specpcm::cluster::quality::{clustered_at_incorrect, evaluate};
 use specpcm::config::SpecPcmConfig;
 use specpcm::coordinator::{ClusteringPipeline, HdFrontend};
 use specpcm::hd;
 use specpcm::ms::{bucket_by_precursor, ClusteringDataset, Spectrum};
-use specpcm::runtime::Runtime;
 use specpcm::telemetry::render_table;
+use specpcm::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let scale: f64 = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -38,15 +39,12 @@ fn main() -> anyhow::Result<()> {
         ds.paper_spectra
     );
 
-    let mut rt = Runtime::load(&cfg.artifacts_dir).ok();
-    println!(
-        "execution path: {}",
-        if rt.is_some() { "PJRT artifacts" } else { "rust reference" }
-    );
+    let backend = BackendDispatcher::from_config(&cfg);
+    println!("execution path: {} backend", backend.primary_name());
 
     // ---- SpecPCM -----------------------------------------------------------
     let t0 = std::time::Instant::now();
-    let out = ClusteringPipeline::new(cfg.clone()).run(&ds, rt.as_mut())?;
+    let out = ClusteringPipeline::new(cfg.clone()).run(&ds, &backend)?;
     let host_s = t0.elapsed().as_secs_f64();
 
     println!("\n== SpecPCM (simulated accelerator) ==");

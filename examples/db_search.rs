@@ -5,14 +5,15 @@
 //!
 //! Run: `cargo run --release --example db_search [scale]`
 
+use specpcm::backend::BackendDispatcher;
 use specpcm::baselines::{exact, hd_soft, levels_to_f32};
 use specpcm::config::SpecPcmConfig;
 use specpcm::coordinator::{HdFrontend, SearchPipeline};
 use specpcm::hd;
 use specpcm::ms::{SearchDataset, Spectrum};
-use specpcm::runtime::Runtime;
 use specpcm::search::fdr_filter;
 use specpcm::telemetry::render_table;
+use specpcm::util::error::Result;
 
 /// Run a software baseline: score all queries vs all refs (targets then
 /// decoys), pick best target/decoy per query, FDR-filter, count correct.
@@ -44,7 +45,7 @@ fn baseline_identify(
     (r.accepted.len(), correct)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let scale: f64 = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
@@ -62,16 +63,13 @@ fn main() -> anyhow::Result<()> {
         ds.paper_library
     );
 
-    let mut rt = Runtime::load(&cfg.artifacts_dir).ok();
-    println!(
-        "execution path: {}",
-        if rt.is_some() { "PJRT artifacts (D=8192, MLC3)" } else { "rust reference" }
-    );
+    let backend = BackendDispatcher::from_config(&cfg);
+    println!("execution path: {} backend (D=8192, MLC3)", backend.primary_name());
 
     // ---- SpecPCM ------------------------------------------------------------
     let fdr = cfg.fdr;
     let t0 = std::time::Instant::now();
-    let out = SearchPipeline::new(cfg.clone()).run(&ds, rt.as_mut())?;
+    let out = SearchPipeline::new(cfg.clone()).run(&ds, &backend)?;
     let host_s = t0.elapsed().as_secs_f64();
     println!("\n== SpecPCM (simulated accelerator) ==");
     println!(

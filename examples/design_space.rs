@@ -6,13 +6,14 @@
 //!
 //! Run: `cargo run --release --example design_space`
 
+use specpcm::backend::BackendDispatcher;
 use specpcm::config::SpecPcmConfig;
 use specpcm::coordinator::SearchPipeline;
 use specpcm::ms::SearchDataset;
-use specpcm::runtime::Runtime;
 use specpcm::telemetry::render_table;
+use specpcm::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let base = SpecPcmConfig {
         hd_dim: 2048, // keep the sweep fast; shapes match D=8192
         ..SpecPcmConfig::paper_search()
@@ -25,11 +26,11 @@ fn main() -> anyhow::Result<()> {
         base.hd_dim,
         base.fdr * 100.0
     );
-    let mut rt = Runtime::load(&base.artifacts_dir).ok();
+    let backend = BackendDispatcher::from_config(&base);
 
     let mut rows = Vec::new();
-    let mut run = |label: String, cfg: SpecPcmConfig| -> anyhow::Result<()> {
-        let out = SearchPipeline::new(cfg).run(&ds, rt.as_mut())?;
+    let mut run = |label: String, cfg: SpecPcmConfig| -> Result<()> {
+        let out = SearchPipeline::new(cfg).run(&ds, &backend)?;
         rows.push(vec![
             label,
             format!("{}", out.identified),

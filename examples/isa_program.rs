@@ -9,8 +9,9 @@
 use specpcm::array::ARRAY_DIM;
 use specpcm::device::Material;
 use specpcm::isa::{decode, encode, Executor, Instruction, Program};
+use specpcm::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // A packed HV segment (values in the MLC3 alphabet).
     let segment: Vec<f32> = (0..ARRAY_DIM)
         .map(|i| ((i % 7) as i64 - 3) as f32)
@@ -44,7 +45,7 @@ fn main() -> anyhow::Result<()> {
         adc_bits: 6,
         mlc_bits: 3,
     });
-    prog.validate().map_err(|e| anyhow::anyhow!(e))?;
+    prog.validate()?;
 
     println!("== assembler text ==\n{}\n", prog.disassemble());
     println!("== binary encoding ==");
@@ -56,7 +57,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut ex = Executor::new(4, Material::TiTe2Gst467, 7);
     ex.set_buffer(0, segment.clone());
-    let res = ex.run(&prog).map_err(|e| anyhow::anyhow!(e))?;
+    let res = ex.run(&prog)?;
 
     println!("\n== execution ==");
     println!(
@@ -85,7 +86,7 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(best.0, 9);
 
     // The same program round-trips through the assembler.
-    let reparsed = Program::assemble(&prog.disassemble()).map_err(|e| anyhow::anyhow!(e))?;
+    let reparsed = Program::assemble(&prog.disassemble())?;
     assert_eq!(reparsed.instructions, prog.instructions);
     println!("\nassembler round-trip OK");
     Ok(())

@@ -3,32 +3,32 @@
 //! Generates a small synthetic MS workload, runs both paper pipelines
 //! (spectral clustering + DB search) through the analog-IMC simulator, and
 //! prints quality plus the simulated energy/latency of the accelerator.
-//! Uses the AOT PJRT artifacts when `artifacts/` exists, else the
-//! bit-identical rust reference path.
+//! MVM work executes on the configured backend (bank-sharded parallel by
+//! default; `pjrt` when the feature + artifacts are available) — all
+//! bit-identical to the rust reference path.
 //!
 //! Run: `cargo run --release --example quickstart`
 
+use specpcm::backend::BackendDispatcher;
 use specpcm::cluster::quality::clustered_at_incorrect;
 use specpcm::config::SpecPcmConfig;
 use specpcm::coordinator::{ClusteringPipeline, SearchPipeline};
 use specpcm::ms::{ClusteringDataset, SearchDataset};
-use specpcm::runtime::Runtime;
+use specpcm::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
-    let mut rt = Runtime::load("artifacts").ok();
-    match &rt {
-        Some(r) => println!("PJRT runtime up (platform: {})", r.platform()),
-        None => println!("artifacts/ not built; using the rust reference path"),
-    }
+fn main() -> Result<()> {
 
     // --- Clustering (paper Fig. 1; defaults from §IV-A) -------------------
     let cfg = SpecPcmConfig {
         bucket_width: 50.0,
         ..SpecPcmConfig::paper_clustering()
     };
+    let backend = BackendDispatcher::from_config(&cfg);
+    println!("MVM backend: {}", backend.primary_name());
+
     let ds = ClusteringDataset::pxd001468_like(cfg.seed, 0.2);
     println!("\n[clustering] {} spectra ({})", ds.len(), ds.name);
-    let out = ClusteringPipeline::new(cfg).run(&ds, rt.as_mut())?;
+    let out = ClusteringPipeline::new(cfg).run(&ds, &backend)?;
     println!(
         "  clustered {:.1}% of spectra at <=1.5% incorrect ratio",
         100.0 * clustered_at_incorrect(&out.curve, 0.015)
@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         ds.decoys.len(),
         ds.name
     );
-    let out = SearchPipeline::new(cfg).run(&ds, rt.as_mut())?;
+    let out = SearchPipeline::new(cfg).run(&ds, &backend)?;
     println!(
         "  identified {}/{} queries at {:.0}% FDR ({} ground-truth correct)",
         out.identified,
@@ -68,8 +68,5 @@ fn main() -> anyhow::Result<()> {
         out.report.overlapped_latency_s() * 1e3
     );
 
-    if let Some(r) = &rt {
-        println!("\nartifact executions: {:?}", r.exec_counts);
-    }
     Ok(())
 }

@@ -6,14 +6,15 @@
 //! Expected shape: ANN-SoLo highest, SpecPCM comparable to HyperOMS,
 //! SpectraST lowest (no open-modification hits).
 
+use specpcm::backend::BackendDispatcher;
 use specpcm::baselines::{exact, hd_soft, levels_to_f32};
 use specpcm::config::SpecPcmConfig;
 use specpcm::coordinator::{HdFrontend, SearchPipeline};
 use specpcm::hd;
 use specpcm::ms::{SearchDataset, Spectrum};
-use specpcm::runtime::Runtime;
 use specpcm::search::fdr_filter;
 use specpcm::telemetry::render_table;
+use specpcm::util::error::Result;
 
 /// Baseline identification with optional open-modification candidate
 /// windows (SpectraST-like turns them off).
@@ -59,12 +60,12 @@ fn identify(
         .count()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let cfg = SpecPcmConfig {
         hd_dim: 2048, // bench-speed dimension; shape matches D=8192
         ..SpecPcmConfig::paper_search()
     };
-    let mut rt = Runtime::load(&cfg.artifacts_dir).ok();
+    let backend = BackendDispatcher::from_config(&cfg);
 
     // Four HEK293-like subsets (the paper uses b1906..b1931).
     let mut rows = Vec::new();
@@ -97,7 +98,7 @@ fn main() -> anyhow::Result<()> {
         let spectrast = identify(&cosine_scores, &ds, false, cfg.fdr);
         let annsolo = identify(&annsolo_scores, &ds, true, cfg.fdr);
         let hyperoms = identify(&hd_scores, &ds, true, cfg.fdr);
-        let spec = SearchPipeline::new(cfg.clone()).run(&ds, rt.as_mut())?;
+        let spec = SearchPipeline::new(cfg.clone()).run(&ds, &backend)?;
 
         sums[0] += spectrast;
         sums[1] += hyperoms;

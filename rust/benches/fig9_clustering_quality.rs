@@ -7,13 +7,14 @@
 //! small spread (dimension packing costs little), all well above msCRUSH;
 //! ~60%-scale clustered ratio in the <=2% incorrect region.
 
+use specpcm::backend::BackendDispatcher;
 use specpcm::baselines::{greedy_nn, levels_to_f32, lsh};
 use specpcm::cluster::quality::{clustered_at_incorrect, evaluate, ClusterQuality};
 use specpcm::config::SpecPcmConfig;
 use specpcm::coordinator::{ClusteringPipeline, HdFrontend};
 use specpcm::ms::{bucket_by_precursor, ClusteringDataset, Spectrum};
-use specpcm::runtime::Runtime;
 use specpcm::telemetry::render_table;
+use specpcm::util::error::Result;
 
 fn curve_to_rows(name: &str, curve: &[ClusterQuality], rows: &mut Vec<Vec<String>>) {
     // Downsample the sweep to readable rows in the region of interest.
@@ -27,7 +28,7 @@ fn curve_to_rows(name: &str, curve: &[ClusterQuality], rows: &mut Vec<Vec<String
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let base = SpecPcmConfig {
         bucket_width: 50.0,
         ..SpecPcmConfig::paper_clustering()
@@ -38,7 +39,7 @@ fn main() -> anyhow::Result<()> {
         ds.len(),
         ds.n_peptides
     );
-    let mut rt = Runtime::load(&base.artifacts_dir).ok();
+    let backend = BackendDispatcher::from_config(&base);
 
     let truth: Vec<u32> = ds
         .spectra
@@ -52,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     // --- SpecPCM at SLC / MLC2 / MLC3 -------------------------------------
     for mlc in [1u8, 2, 3] {
         let cfg = SpecPcmConfig { mlc_bits: mlc, ..base.clone() };
-        let out = ClusteringPipeline::new(cfg).run(&ds, rt.as_mut())?;
+        let out = ClusteringPipeline::new(cfg).run(&ds, &backend)?;
         let name = format!("SpecPCM MLC{mlc}");
         curve_to_rows(&name, &out.curve, &mut rows);
         summary.push((name, clustered_at_incorrect(&out.curve, 0.015)));

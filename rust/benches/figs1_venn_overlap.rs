@@ -5,14 +5,15 @@
 
 use std::collections::HashSet;
 
+use specpcm::backend::BackendDispatcher;
 use specpcm::baselines::{exact, hd_soft, levels_to_f32};
 use specpcm::config::SpecPcmConfig;
 use specpcm::coordinator::{HdFrontend, SearchPipeline};
 use specpcm::hd;
 use specpcm::ms::{SearchDataset, Spectrum};
-use specpcm::runtime::Runtime;
 use specpcm::search::fdr_filter;
 use specpcm::telemetry::render_table;
+use specpcm::util::error::Result;
 
 fn identified_set(scores: &dyn Fn(usize) -> Vec<f32>, ds: &SearchDataset, fdr: f64) -> HashSet<u32> {
     let nt = ds.library.len();
@@ -38,13 +39,13 @@ fn identified_set(scores: &dyn Fn(usize) -> Vec<f32>, ds: &SearchDataset, fdr: f
         .collect()
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let cfg = SpecPcmConfig {
         hd_dim: 2048,
         ..SpecPcmConfig::paper_search()
     };
     let ds = SearchDataset::hek293_like(1931, 0.25);
-    let mut rt = Runtime::load(&cfg.artifacts_dir).ok();
+    let backend = BackendDispatcher::from_config(&cfg);
 
     let fe = HdFrontend::new(&cfg);
     let all_refs: Vec<&Spectrum> = ds.library.iter().chain(ds.decoys.iter()).collect();
@@ -64,7 +65,7 @@ fn main() -> anyhow::Result<()> {
         &ds,
         cfg.fdr,
     );
-    let out = SearchPipeline::new(cfg).run(&ds, rt.as_mut())?;
+    let out = SearchPipeline::new(cfg).run(&ds, &backend)?;
     let spec: HashSet<u32> = out.identified_peptides.iter().copied().collect();
 
     let count = |s: &HashSet<u32>| s.len();

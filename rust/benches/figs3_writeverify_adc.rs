@@ -5,15 +5,16 @@
 //! default uses none); search quality improves then saturates; quality
 //! degrades gracefully as ADC precision drops, with 4-bit close to 6-bit.
 
+use specpcm::backend::BackendDispatcher;
 use specpcm::cluster::quality::clustered_at_incorrect;
 use specpcm::config::SpecPcmConfig;
 use specpcm::coordinator::{ClusteringPipeline, SearchPipeline};
 use specpcm::energy::EnergyLatencyModel;
 use specpcm::ms::{ClusteringDataset, SearchDataset};
-use specpcm::runtime::Runtime;
 use specpcm::telemetry::render_table;
+use specpcm::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let cbase = SpecPcmConfig {
         hd_dim: 1024, // bench-speed dimensions; shapes carry
         bucket_width: 50.0,
@@ -25,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     };
     let cds = ClusteringDataset::pxd001468_like(cbase.seed, 0.3);
     let sds = SearchDataset::iprg2012_like(sbase.seed, 0.3);
-    let mut rt = Runtime::load(&cbase.artifacts_dir).ok();
+    let backend = BackendDispatcher::from_config(&cbase);
 
     // ---- (a) write-verify sweep -------------------------------------------
     let mut rows = Vec::new();
@@ -34,9 +35,9 @@ fn main() -> anyhow::Result<()> {
     let mut margins = Vec::new();
     for wv in [0u32, 1, 2, 3, 4, 6] {
         let c = ClusteringPipeline::new(SpecPcmConfig { write_verify: wv, ..cbase.clone() })
-            .run(&cds, rt.as_mut())?;
+            .run(&cds, &backend)?;
         let s = SearchPipeline::new(SpecPcmConfig { write_verify: wv, ..sbase.clone() })
-            .run(&sds, rt.as_mut())?;
+            .run(&sds, &backend)?;
         let cq = clustered_at_incorrect(&c.curve, 0.015);
         cluster_q.push(cq);
         search_q.push(s.correct);
@@ -88,9 +89,9 @@ fn main() -> anyhow::Result<()> {
     let mut adc_q = Vec::new();
     for adc in [6u32, 5, 4, 3, 2, 1] {
         let c = ClusteringPipeline::new(SpecPcmConfig { adc_bits: adc, ..cbase.clone() })
-            .run(&cds, rt.as_mut())?;
+            .run(&cds, &backend)?;
         let s = SearchPipeline::new(SpecPcmConfig { adc_bits: adc, ..sbase.clone() })
-            .run(&sds, rt.as_mut())?;
+            .run(&sds, &backend)?;
         let cq = clustered_at_incorrect(&c.curve, 0.015);
         adc_q.push((adc, cq, s.correct));
         let m = EnergyLatencyModel::new(sbase.material, adc, sbase.num_banks);

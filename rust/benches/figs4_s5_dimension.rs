@@ -3,25 +3,25 @@
 //! D, saturating near the paper defaults (8192 search / 2048 clustering);
 //! storage, energy and latency grow ~linearly with D.
 
+use specpcm::backend::BackendDispatcher;
 use specpcm::cluster::quality::clustered_at_incorrect;
 use specpcm::config::SpecPcmConfig;
 use specpcm::coordinator::{ClusteringPipeline, SearchPipeline};
 use specpcm::ms::{ClusteringDataset, SearchDataset};
-use specpcm::runtime::Runtime;
 use specpcm::telemetry::render_table;
+use specpcm::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
-    let mut rt = Runtime::load("artifacts").ok();
-
+fn main() -> Result<()> {
     // ---- Fig. S4: search quality vs dimension ------------------------------
     let sbase = SpecPcmConfig::paper_search();
+    let backend = BackendDispatcher::from_config(&sbase);
     let sds = SearchDataset::iprg2012_like(sbase.seed, 0.3);
     let mut rows = Vec::new();
     let mut ids = Vec::new();
     let mut margins = Vec::new();
     for d in [512usize, 1024, 2048, 4096, 8192] {
         let cfg = SpecPcmConfig { hd_dim: d, ..sbase.clone() };
-        let out = SearchPipeline::new(cfg).run(&sds, rt.as_mut())?;
+        let out = SearchPipeline::new(cfg).run(&sds, &backend)?;
         ids.push(out.correct);
         margins.push(out.mean_margin());
         rows.push(vec![
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     let mut ratios = Vec::new();
     for d in [512usize, 1024, 2048, 4096] {
         let cfg = SpecPcmConfig { hd_dim: d, ..cbase.clone() };
-        let out = ClusteringPipeline::new(cfg).run(&cds, rt.as_mut())?;
+        let out = ClusteringPipeline::new(cfg).run(&cds, &backend)?;
         let q = clustered_at_incorrect(&out.curve, 0.015);
         ratios.push(q);
         rows.push(vec![

@@ -9,26 +9,27 @@
 //! CPU baseline in the ~1e2 range, and ~4 orders of magnitude energy
 //! advantage over a 450 W GPU envelope.
 
+use specpcm::backend::BackendDispatcher;
 use specpcm::baselines::latency_model::{clustering_for, paper_speedup};
 use specpcm::config::SpecPcmConfig;
 use specpcm::coordinator::ClusteringPipeline;
 use specpcm::energy::GpuEnvelope;
 use specpcm::ms::ClusteringDataset;
-use specpcm::runtime::Runtime;
 use specpcm::telemetry::render_table;
+use specpcm::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let cfg = SpecPcmConfig {
         bucket_width: 50.0,
         ..SpecPcmConfig::paper_clustering()
     };
-    let mut rt = Runtime::load(&cfg.artifacts_dir).ok();
+    let backend = BackendDispatcher::from_config(&cfg);
 
     for (preset, dataset) in [
         (ClusteringDataset::pxd001468_like(cfg.seed, 0.35), "PXD001468"),
         (ClusteringDataset::pxd000561_like(cfg.seed, 0.35), "PXD000561"),
     ] {
-        let out = ClusteringPipeline::new(cfg.clone()).run(&preset, rt.as_mut())?;
+        let out = ClusteringPipeline::new(cfg.clone()).run(&preset, &backend)?;
         // Extrapolate the simulated accelerator latency/energy linearly in
         // spectrum count to the real dataset size.
         let scale = preset.paper_spectra as f64 / preset.len() as f64;

@@ -7,23 +7,24 @@
 //! speedups in the ~1e2 range vs the CPU-GPU baseline, and the §IV-B
 //! energy claim (0.149 J per HEK293 subset scale, 4 orders vs GPU).
 
+use specpcm::backend::BackendDispatcher;
 use specpcm::baselines::latency_model::{paper_speedup, search_for};
 use specpcm::config::SpecPcmConfig;
 use specpcm::coordinator::SearchPipeline;
 use specpcm::energy::GpuEnvelope;
 use specpcm::ms::SearchDataset;
-use specpcm::runtime::Runtime;
 use specpcm::telemetry::render_table;
+use specpcm::util::error::Result;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let cfg = SpecPcmConfig::paper_search();
-    let mut rt = Runtime::load(&cfg.artifacts_dir).ok();
+    let backend = BackendDispatcher::from_config(&cfg);
 
     for (preset, dataset) in [
         (SearchDataset::iprg2012_like(cfg.seed, 0.3), "iPRG2012"),
         (SearchDataset::hek293_like(cfg.seed, 0.3), "HEK293"),
     ] {
-        let out = SearchPipeline::new(cfg.clone()).run(&preset, rt.as_mut())?;
+        let out = SearchPipeline::new(cfg.clone()).run(&preset, &backend)?;
         // Extrapolate to paper scale. Per-query IMC work is proportional to
         // the *candidate rows per query* (precursor bucketing, Fig. 2), not
         // the whole library: at paper scale a query touches its standard

@@ -76,6 +76,12 @@ impl ArrayBank {
         imc_mvm_ref(query_segment, &self.g, 1, ARRAY_DIM, ARRAY_DIM, adc)
     }
 
+    /// Raw stored conductance differences (row-major 128x128) — the
+    /// reference operand an MVM backend executes against.
+    pub fn conductances(&self) -> &[f32] {
+        &self.g
+    }
+
     /// Normal (digital) read of one row through the sense amps.
     pub fn read_row(&mut self, row: usize) -> &[f32] {
         assert!(row < ARRAY_DIM);

@@ -1,0 +1,229 @@
+//! Backend selection + the utilization routing heuristic.
+//!
+//! The heuristic formerly inlined in `coordinator::pipeline::mvm_scores`:
+//! a fixed-geometry backend (the PJRT artifact's `B x R` tile) mostly
+//! multiplies padding zeros on small jobs, so below a padded-utilization
+//! threshold the bit-identical scalar path wins (measured crossover ~30%,
+//! EXPERIMENTS.md §Perf L3). The dispatcher owns that decision for *any*
+//! primary backend via [`MvmBackend::utilization`], and is the single
+//! object the pipelines, ISA executor and benches execute MVM jobs
+//! through.
+
+#[cfg(feature = "pjrt")]
+use std::cell::RefCell;
+#[cfg(feature = "pjrt")]
+use std::rc::Rc;
+
+use crate::config::SpecPcmConfig;
+use crate::energy::OpCounts;
+#[cfg(feature = "pjrt")]
+use crate::runtime::Runtime;
+use crate::util::error::Result;
+
+use super::parallel::ParallelBackend;
+use super::reference::RefBackend;
+use super::{BackendKind, MvmBackend, MvmJob};
+
+#[cfg(feature = "pjrt")]
+use super::pjrt::PjrtBackend;
+
+/// Routes each [`MvmJob`] to the primary backend or the scalar fallback,
+/// charging the job's physical op count either way.
+pub struct BackendDispatcher {
+    primary: Box<dyn MvmBackend>,
+    fallback: RefBackend,
+    min_utilization: f64,
+    /// Shared PJRT runtime handle when the primary is the artifact
+    /// backend — the HD frontend uses it for the encoder artifact.
+    #[cfg(feature = "pjrt")]
+    runtime: Option<Rc<RefCell<Runtime>>>,
+}
+
+impl BackendDispatcher {
+    pub fn new(primary: Box<dyn MvmBackend>, min_utilization: f64) -> Self {
+        BackendDispatcher {
+            primary,
+            fallback: RefBackend,
+            min_utilization,
+            #[cfg(feature = "pjrt")]
+            runtime: None,
+        }
+    }
+
+    /// Pure scalar-reference dispatcher (tests, deterministic defaults).
+    pub fn reference() -> Self {
+        BackendDispatcher::new(Box::new(RefBackend), 0.0)
+    }
+
+    /// Bank-sharded parallel dispatcher (`threads = 0` auto-detects).
+    pub fn parallel(threads: usize) -> Self {
+        BackendDispatcher::new(Box::new(ParallelBackend::new(threads)), 0.0)
+    }
+
+    /// PJRT dispatcher sharing the runtime handle with the frontend.
+    #[cfg(feature = "pjrt")]
+    pub fn with_pjrt(backend: PjrtBackend, min_utilization: f64) -> Self {
+        let runtime = backend.shared_runtime();
+        let mut d = BackendDispatcher::new(Box::new(backend), min_utilization);
+        d.runtime = Some(runtime);
+        d
+    }
+
+    /// Build the dispatcher a config asks for. `kind = "pjrt"` degrades to
+    /// the reference backend (with a note on stderr) when the `pjrt`
+    /// feature is off, artifacts are absent, or `use_artifacts = false` —
+    /// results are bit-identical either way, only host speed differs.
+    pub fn from_config(cfg: &SpecPcmConfig) -> Self {
+        let min_u = cfg.backend.min_utilization;
+        match cfg.backend.kind {
+            BackendKind::Reference => BackendDispatcher::new(Box::new(RefBackend), min_u),
+            BackendKind::Parallel => BackendDispatcher::new(
+                Box::new(ParallelBackend::new(cfg.backend.threads)),
+                min_u,
+            ),
+            BackendKind::Pjrt => Self::pjrt_or_fallback(cfg, min_u),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn pjrt_or_fallback(cfg: &SpecPcmConfig, min_u: f64) -> Self {
+        if cfg.use_artifacts {
+            match PjrtBackend::load(&cfg.artifacts_dir) {
+                Ok(b) => return Self::with_pjrt(b, min_u),
+                Err(e) => eprintln!("backend: pjrt unavailable ({e}); using reference path"),
+            }
+        } else {
+            eprintln!("backend: use_artifacts = false; using reference path");
+        }
+        BackendDispatcher::new(Box::new(RefBackend), min_u)
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn pjrt_or_fallback(_cfg: &SpecPcmConfig, min_u: f64) -> Self {
+        eprintln!("backend: built without the `pjrt` feature; using reference path");
+        BackendDispatcher::new(Box::new(RefBackend), min_u)
+    }
+
+    /// Name of the configured primary backend.
+    pub fn primary_name(&self) -> &'static str {
+        self.primary.name()
+    }
+
+    /// Shared PJRT runtime handle, when the primary backend carries one.
+    #[cfg(feature = "pjrt")]
+    pub fn runtime(&self) -> Option<&Rc<RefCell<Runtime>>> {
+        self.runtime.as_ref()
+    }
+
+    /// Execute one job: charge its physical op count, then run it on the
+    /// primary backend when it supports the job and the job fills enough
+    /// of the backend's compute tile, else on the bit-identical scalar
+    /// fallback. The `supports` check is structural (e.g. no compiled
+    /// artifact for this packed width) and applies even at
+    /// `min_utilization = 0`.
+    pub fn execute(&self, job: &MvmJob, ops: &mut OpCounts) -> Result<Vec<f32>> {
+        job.count_ops(ops);
+        if self.primary.supports(job) && self.primary.utilization(job) >= self.min_utilization {
+            self.primary.mvm_scores(job)
+        } else {
+            self.fallback.mvm_scores(job)
+        }
+    }
+}
+
+impl Default for BackendDispatcher {
+    fn default() -> Self {
+        BackendDispatcher::reference()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::AdcConfig;
+    use crate::util::Rng;
+
+    /// A fake padded backend: reports fixed support/utilization, returns
+    /// a sentinel so tests can see which path ran.
+    struct Padded {
+        supported: bool,
+        util: f64,
+    }
+
+    impl MvmBackend for Padded {
+        fn name(&self) -> &'static str {
+            "padded"
+        }
+
+        fn supports(&self, _job: &MvmJob) -> bool {
+            self.supported
+        }
+
+        fn utilization(&self, _job: &MvmJob) -> f64 {
+            self.util
+        }
+
+        fn mvm_scores(&self, job: &MvmJob) -> Result<Vec<f32>> {
+            Ok(vec![42.0; job.nq * job.nr])
+        }
+    }
+
+    fn small_job(buf: &mut (Vec<f32>, Vec<f32>)) -> MvmJob<'_> {
+        let mut rng = Rng::new(3);
+        buf.0 = (0..2 * 128).map(|_| rng.range_i64(-3, 3) as f32).collect();
+        buf.1 = (0..5 * 128).map(|_| rng.range_i64(-3, 3) as f32).collect();
+        MvmJob::new(&buf.0, 2, &buf.1, 5, 128, AdcConfig::ideal())
+    }
+
+    #[test]
+    fn routes_by_utilization_threshold() {
+        let mut buf = (vec![], vec![]);
+        let job = small_job(&mut buf);
+        let mut ops = OpCounts::default();
+
+        let padded = |supported, util| {
+            Box::new(Padded { supported, util }) as Box<dyn MvmBackend>
+        };
+
+        let high = BackendDispatcher::new(padded(true, 0.9), 0.3);
+        assert_eq!(high.execute(&job, &mut ops).unwrap()[0], 42.0);
+
+        let low = BackendDispatcher::new(padded(true, 0.1), 0.3);
+        let scores = low.execute(&job, &mut ops).unwrap();
+        // Fallback ran: real scores, not the sentinel fill.
+        assert_eq!(scores, RefBackend.mvm_scores(&job).unwrap());
+
+        // Unsupported jobs route to the fallback even at threshold 0 —
+        // a zeroed min_utilization must not defeat the structural check.
+        let unsupported = BackendDispatcher::new(padded(false, 1.0), 0.0);
+        let scores = unsupported.execute(&job, &mut ops).unwrap();
+        assert_eq!(scores, RefBackend.mvm_scores(&job).unwrap());
+    }
+
+    #[test]
+    fn execute_counts_ops_regardless_of_route() {
+        let mut buf = (vec![], vec![]);
+        let job = small_job(&mut buf);
+        let mut ops = OpCounts::default();
+        BackendDispatcher::reference().execute(&job, &mut ops).unwrap();
+        assert_eq!(ops.mvm_ops, job.bank_ops());
+        BackendDispatcher::parallel(4).execute(&job, &mut ops).unwrap();
+        assert_eq!(ops.mvm_ops, 2 * job.bank_ops());
+    }
+
+    #[test]
+    fn from_config_honours_kind() {
+        let mut cfg = SpecPcmConfig::paper_clustering();
+        cfg.backend.kind = BackendKind::Reference;
+        assert_eq!(BackendDispatcher::from_config(&cfg).primary_name(), "ref");
+        cfg.backend.kind = BackendKind::Parallel;
+        assert_eq!(
+            BackendDispatcher::from_config(&cfg).primary_name(),
+            "parallel"
+        );
+        // pjrt degrades to ref when the feature is off / artifacts absent.
+        cfg.backend.kind = BackendKind::Pjrt;
+        cfg.artifacts_dir = "/nonexistent-artifacts-dir".into();
+        assert_eq!(BackendDispatcher::from_config(&cfg).primary_name(), "ref");
+    }
+}

@@ -1,0 +1,192 @@
+//! Pluggable MVM execution backends (the coordinator's hot path).
+//!
+//! SpecPCM's speedups come from tiling MVM work across many independent
+//! 128x128 PCM banks; on the simulator host the same tiling is a
+//! parallelization seam. This module turns the execution strategy into a
+//! first-class, swappable layer:
+//!
+//! * [`MvmJob`] — one `nq x nr` score-tile computation over `cp`-wide
+//!   packed HVs, plus its physical bank-op accounting.
+//! * [`MvmBackend`] — the execution contract: `mvm_scores(&MvmJob)`.
+//!   Every implementation must be **bit-identical** to the reference
+//!   transfer function (`array::imc_mvm_ref`) — backends change *where*
+//!   the arithmetic runs, never *what* it computes (integration-tested in
+//!   `rust/tests/backend_equivalence.rs`).
+//! * [`RefBackend`] — the scalar reference path.
+//! * [`ParallelBackend`] — shards the score tile's query rows across
+//!   `std::thread::scope` workers (host-side analogue of bank
+//!   parallelism; no external dependencies).
+//! * [`PjrtBackend`] (feature `pjrt`) — executes the AOT HLO artifact
+//!   through the PJRT runtime.
+//! * [`BackendDispatcher`] — owns the utilization-based routing heuristic
+//!   that used to live inline in `coordinator::pipeline::mvm_scores`, and
+//!   is what the pipelines, the ISA executor and the benches consume.
+//!
+//! Selection is configured through the `[backend]` config section
+//! (`kind = "ref" | "parallel" | "pjrt"`, `threads`, `min_utilization`)
+//! or the `--backend` / `--threads` CLI flags.
+
+pub mod dispatch;
+pub mod parallel;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
+
+pub use dispatch::BackendDispatcher;
+pub use parallel::ParallelBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+pub use reference::RefBackend;
+
+use crate::array::{AdcConfig, ARRAY_DIM};
+use crate::energy::OpCounts;
+use crate::util::error::Result;
+
+/// Which backend the dispatcher routes the hot path to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Scalar rust reference path (always available, bit-exact oracle).
+    Reference,
+    /// Bank-sharded host-parallel path (default).
+    Parallel,
+    /// PJRT artifact path (requires the `pjrt` feature + built artifacts).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Reference => "ref",
+            BackendKind::Parallel => "parallel",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self, String> {
+        match s {
+            "ref" | "reference" => Ok(BackendKind::Reference),
+            "parallel" => Ok(BackendKind::Parallel),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => Err(format!(
+                "unknown backend '{other}' (want ref|parallel|pjrt)"
+            )),
+        }
+    }
+}
+
+/// One IMC MVM score-tile job: `nq x nr` scores over `cp`-wide packed HVs.
+///
+/// `queries` is row-major `nq x cp` (packed query HVs after DAC driving),
+/// `refs` is row-major `nr x cp` (stored noisy conductance differences).
+/// `cp` must be a multiple of [`ARRAY_DIM`] — the coordinator always pads
+/// packed HVs to whole array segments.
+#[derive(Clone, Copy, Debug)]
+pub struct MvmJob<'a> {
+    pub queries: &'a [f32],
+    pub nq: usize,
+    pub refs: &'a [f32],
+    pub nr: usize,
+    pub cp: usize,
+    pub adc: AdcConfig,
+}
+
+impl<'a> MvmJob<'a> {
+    pub fn new(
+        queries: &'a [f32],
+        nq: usize,
+        refs: &'a [f32],
+        nr: usize,
+        cp: usize,
+        adc: AdcConfig,
+    ) -> Self {
+        assert_eq!(queries.len(), nq * cp, "queries shape");
+        assert_eq!(refs.len(), nr * cp, "refs shape");
+        assert!(cp > 0 && cp % ARRAY_DIM == 0, "cp must be a multiple of {ARRAY_DIM}");
+        MvmJob {
+            queries,
+            nq,
+            refs,
+            nr,
+            cp,
+            adc,
+        }
+    }
+
+    /// Physical array operations this job represents: every real query
+    /// vector drives every 128-row x 128-col bank holding candidate rows
+    /// (independent of which host backend executes the math).
+    pub fn bank_ops(&self) -> u64 {
+        let row_tiles = self.nr.div_ceil(ARRAY_DIM) as u64;
+        let col_tiles = (self.cp / ARRAY_DIM) as u64;
+        self.nq as u64 * row_tiles * col_tiles
+    }
+
+    /// Charge this job's physical op count to an accumulator.
+    pub fn count_ops(&self, ops: &mut OpCounts) {
+        ops.mvm_ops += self.bank_ops();
+    }
+}
+
+/// The execution contract every backend implements.
+///
+/// Implementations must produce scores **bit-identical** to
+/// [`crate::array::imc_mvm_ref`] on the same job (the PJRT artifact is
+/// bit-exact by the pow-2 ADC full-scale argument; the parallel backend by
+/// running the identical scalar kernel per shard).
+pub trait MvmBackend {
+    /// Short stable identifier (telemetry / CLI echo).
+    fn name(&self) -> &'static str;
+
+    /// Execute one score-tile job, returning `nq * nr` row-major scores.
+    fn mvm_scores(&self, job: &MvmJob) -> Result<Vec<f32>>;
+
+    /// Whether this backend can execute the job at all (e.g. the PJRT
+    /// backend needs a compiled artifact for the job's packed width). The
+    /// dispatcher routes unsupported jobs to the scalar fallback
+    /// regardless of the utilization threshold.
+    fn supports(&self, _job: &MvmJob) -> bool {
+        true
+    }
+
+    /// Fraction of the backend's padded compute tile holding real scores
+    /// for this job, in [0, 1]. The dispatcher falls back to the reference
+    /// path below its `min_utilization` threshold. Backends without
+    /// padding report 1.0.
+    fn utilization(&self, _job: &MvmJob) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [BackendKind::Reference, BackendKind::Parallel, BackendKind::Pjrt] {
+            assert_eq!(BackendKind::from_name(k.name()).unwrap(), k);
+        }
+        assert_eq!(BackendKind::from_name("reference").unwrap(), BackendKind::Reference);
+        assert!(BackendKind::from_name("gpu").is_err());
+    }
+
+    #[test]
+    fn job_bank_ops_formula() {
+        let q = vec![0f32; 3 * 256];
+        let g = vec![0f32; 300 * 256];
+        let job = MvmJob::new(&q, 3, &g, 300, 256, AdcConfig::ideal());
+        // 3 queries x ceil(300/128)=3 row tiles x 256/128=2 col tiles.
+        assert_eq!(job.bank_ops(), 3 * 3 * 2);
+        let mut ops = OpCounts::default();
+        job.count_ops(&mut ops);
+        assert_eq!(ops.mvm_ops, 18);
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn job_rejects_untiled_cp() {
+        let q = vec![0f32; 100];
+        let g = vec![0f32; 100];
+        MvmJob::new(&q, 1, &g, 1, 100, AdcConfig::ideal());
+    }
+}

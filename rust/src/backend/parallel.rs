@@ -1,0 +1,160 @@
+//! Bank-sharded parallel backend: the host-side analogue of the
+//! accelerator's bank parallelism (paper §III-C tiles one logical MVM
+//! across independent 128x128 banks; we tile the same score matrix across
+//! OS threads).
+//!
+//! Sharding is by **query rows of the output tile**: each worker computes
+//! a contiguous `qn x nr` stripe with the identical scalar kernel the
+//! reference backend runs, writing into a disjoint slice of the output
+//! buffer. Per-element arithmetic and ordering are unchanged, so results
+//! are bit-identical to [`RefBackend`] for every thread count — the
+//! invariant `rust/tests/backend_equivalence.rs` locks in. Each worker
+//! also accumulates its shard's physical [`OpCounts`], merged after the
+//! scope joins (the counts are deterministic, so the merge must agree
+//! with [`MvmJob::bank_ops`] — debug-asserted).
+//!
+//! `std::thread::scope` keeps the implementation dependency-free; workers
+//! borrow the job buffers directly, no cloning.
+
+use crate::array::imc_mvm_ref;
+use crate::energy::OpCounts;
+use crate::util::error::Result;
+
+use super::reference::RefBackend;
+use super::{MvmBackend, MvmJob};
+
+/// Minimum scalar multiply-accumulate count (`nq * nr * cp`) before
+/// spawning threads pays for itself; smaller jobs run on the caller's
+/// thread. Small candidate buckets dominate both pipelines, so this guard
+/// matters for end-to-end wall time.
+const MIN_PARALLEL_MACS: usize = 100_000;
+
+/// Shards `MvmJob`s across `threads` scoped workers.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelBackend {
+    threads: usize,
+}
+
+impl ParallelBackend {
+    /// `threads = 0` auto-detects (`std::thread::available_parallelism`).
+    pub fn new(threads: usize) -> Self {
+        ParallelBackend { threads }
+    }
+
+    /// The worker count jobs actually run with.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
+    }
+}
+
+impl Default for ParallelBackend {
+    fn default() -> Self {
+        ParallelBackend::new(0)
+    }
+}
+
+impl MvmBackend for ParallelBackend {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn mvm_scores(&self, job: &MvmJob) -> Result<Vec<f32>> {
+        let (nq, nr, cp) = (job.nq, job.nr, job.cp);
+        let threads = self.effective_threads().min(nq.max(1));
+        if threads <= 1 || nq * nr * cp < MIN_PARALLEL_MACS {
+            return RefBackend.mvm_scores(job);
+        }
+
+        let mut out = vec![0f32; nq * nr];
+        // Contiguous query-row chunks; the last chunk absorbs the ragged
+        // remainder. `chunks_mut` hands each worker a disjoint &mut stripe.
+        let chunk_rows = nq.div_ceil(threads);
+        let mut merged = OpCounts::default();
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(threads);
+            for (ci, out_chunk) in out.chunks_mut(chunk_rows * nr).enumerate() {
+                let q0 = ci * chunk_rows;
+                let qn = out_chunk.len() / nr;
+                let q_rows = &job.queries[q0 * cp..(q0 + qn) * cp];
+                let refs = job.refs;
+                let adc = job.adc;
+                handles.push(s.spawn(move || {
+                    let scores = imc_mvm_ref(q_rows, refs, qn, nr, cp, adc);
+                    out_chunk.copy_from_slice(&scores);
+                    // Shard-local physical op count, merged after join.
+                    let shard_job = MvmJob::new(q_rows, qn, refs, nr, cp, adc);
+                    let mut shard_ops = OpCounts::default();
+                    shard_job.count_ops(&mut shard_ops);
+                    shard_ops
+                }));
+            }
+            for h in handles {
+                merged += h.join().expect("MVM shard worker panicked");
+            }
+        });
+        debug_assert_eq!(
+            merged.mvm_ops,
+            job.bank_ops(),
+            "merged shard op counts must equal the whole-job count"
+        );
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::AdcConfig;
+    use crate::util::Rng;
+
+    fn job_buffers(seed: u64, nq: usize, nr: usize, cp: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let q = (0..nq * cp).map(|_| rng.range_i64(-3, 3) as f32).collect();
+        let g = (0..nr * cp).map(|_| rng.range_i64(-3, 3) as f32).collect();
+        (q, g)
+    }
+
+    #[test]
+    fn bit_identical_to_reference_across_thread_counts() {
+        // Above the MIN_PARALLEL_MACS cutoff so threads actually spawn.
+        let (nq, nr, cp) = (37, 211, 256);
+        let (q, g) = job_buffers(11, nq, nr, cp);
+        let adc = AdcConfig::new(6, 512.0);
+        let job = MvmJob::new(&q, nq, &g, nr, cp, adc);
+        let want = RefBackend.mvm_scores(&job).unwrap();
+        for threads in [1usize, 2, 3, 8, 64] {
+            let got = ParallelBackend::new(threads).mvm_scores(&job).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tiny_job_takes_scalar_path() {
+        let (nq, nr, cp) = (2, 3, 128);
+        let (q, g) = job_buffers(12, nq, nr, cp);
+        let job = MvmJob::new(&q, nq, &g, nr, cp, AdcConfig::ideal());
+        let got = ParallelBackend::new(8).mvm_scores(&job).unwrap();
+        assert_eq!(got, RefBackend.mvm_scores(&job).unwrap());
+    }
+
+    #[test]
+    fn more_threads_than_rows() {
+        let (nq, nr, cp) = (3, 400, 128);
+        let (q, g) = job_buffers(13, nq, nr, cp);
+        let job = MvmJob::new(&q, nq, &g, nr, cp, AdcConfig::new(4, 128.0));
+        let got = ParallelBackend::new(16).mvm_scores(&job).unwrap();
+        assert_eq!(got, RefBackend.mvm_scores(&job).unwrap());
+    }
+
+    #[test]
+    fn auto_threads_resolve() {
+        assert!(ParallelBackend::new(0).effective_threads() >= 1);
+        assert_eq!(ParallelBackend::new(5).effective_threads(), 5);
+    }
+}

@@ -1,0 +1,117 @@
+//! PJRT artifact backend (feature `pjrt`): executes the AOT-compiled
+//! `mvm_c{width}` HLO artifact through the PJRT CPU client.
+//!
+//! The artifact runs a fixed `B x R` geometry; this backend batches
+//! arbitrary jobs into padded tiles (reusing the reference-block literal
+//! across query batches — the marshalling optimisation from EXPERIMENTS.md
+//! §Perf L3) and reports padded-tile utilization so the dispatcher can
+//! route low-occupancy jobs to the scalar path instead.
+//!
+//! The runtime sits behind `Rc<RefCell<_>>` because executable compilation
+//! caches mutate it; the dispatcher shares the same handle with the HD
+//! frontend for the encoder artifact.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::coordinator::batcher::{pad_matrix, Batcher};
+use crate::runtime::{Manifest, Runtime};
+use crate::util::error::Result;
+
+use super::{MvmBackend, MvmJob};
+
+/// Executes jobs on the PJRT runtime's compiled MVM artifacts.
+pub struct PjrtBackend {
+    rt: Rc<RefCell<Runtime>>,
+}
+
+impl PjrtBackend {
+    /// Wrap an already-loaded runtime.
+    pub fn new(rt: Runtime) -> Self {
+        PjrtBackend {
+            rt: Rc::new(RefCell::new(rt)),
+        }
+    }
+
+    /// Load the manifest + PJRT client from an artifacts directory.
+    pub fn load(artifacts_dir: &str) -> Result<Self> {
+        Ok(PjrtBackend::new(Runtime::load(artifacts_dir)?))
+    }
+
+    /// Shared handle to the underlying runtime (encoder artifact path,
+    /// telemetry).
+    pub fn shared_runtime(&self) -> Rc<RefCell<Runtime>> {
+        self.rt.clone()
+    }
+}
+
+impl MvmBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    /// A compiled `mvm_c{cp}` artifact must exist for the job's packed
+    /// width (and the tile must be non-empty); otherwise the dispatcher's
+    /// fallback computes the job on the bit-identical rust path.
+    fn supports(&self, job: &MvmJob) -> bool {
+        job.nq > 0
+            && job.nr > 0
+            && self
+                .rt
+                .borrow()
+                .manifest
+                .get(&Manifest::mvm_name(job.cp))
+                .is_some()
+    }
+
+    /// Padded-tile occupancy: `(nq * nr) / (padded_nq * padded_nr)`, or
+    /// 0.0 when the job is unsupported (routes to the fallback).
+    fn utilization(&self, job: &MvmJob) -> f64 {
+        if !self.supports(job) {
+            return 0.0;
+        }
+        let rt = self.rt.borrow();
+        let padded = job.nq.div_ceil(rt.manifest.batch)
+            * rt.manifest.batch
+            * job.nr.div_ceil(rt.manifest.rows)
+            * rt.manifest.rows;
+        (job.nq * job.nr) as f64 / padded as f64
+    }
+
+    fn mvm_scores(&self, job: &MvmJob) -> Result<Vec<f32>> {
+        let mut rt = self.rt.borrow_mut();
+        let b = rt.manifest.batch;
+        let r_block = rt.manifest.rows;
+        let (nq, nr, cp) = (job.nq, job.nr, job.cp);
+        let mut out = vec![0f32; nq * nr];
+
+        for rb in Batcher::new(nr, r_block).batches() {
+            let refs_block = pad_matrix(
+                &job.refs[rb.start * cp..rb.end * cp],
+                rb.len(),
+                cp,
+                r_block,
+            );
+            // Marshal the (large) reference block into a PJRT literal once
+            // per row block; every query batch against it reuses the
+            // literal.
+            let refs_lit = rt.mvm_refs_literal(cp, &refs_block)?;
+            for qb in Batcher::new(nq, b).batches() {
+                let q_block = pad_matrix(
+                    &job.queries[qb.start * cp..qb.end * cp],
+                    qb.len(),
+                    cp,
+                    b,
+                );
+                let scores =
+                    rt.mvm_with_refs(cp, &q_block, &refs_lit, job.adc.lsb(), job.adc.qmax())?;
+                for qi in 0..qb.len() {
+                    let src = &scores[qi * r_block..qi * r_block + rb.len()];
+                    let dst_row = qb.start + qi;
+                    out[dst_row * nr + rb.start..dst_row * nr + rb.end].copy_from_slice(src);
+                }
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,51 @@
+//! Scalar reference backend — the bit-exact oracle every other backend is
+//! checked against, and the fallback target of the dispatcher's routing
+//! heuristic.
+
+use crate::array::imc_mvm_ref;
+use crate::util::error::Result;
+
+use super::{MvmBackend, MvmJob};
+
+/// Executes jobs with the single-threaded reference transfer function
+/// (`array::imc_mvm_ref` — the rust mirror of the L1 Pallas kernel).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RefBackend;
+
+impl MvmBackend for RefBackend {
+    fn name(&self) -> &'static str {
+        "ref"
+    }
+
+    fn mvm_scores(&self, job: &MvmJob) -> Result<Vec<f32>> {
+        Ok(imc_mvm_ref(
+            job.queries,
+            job.refs,
+            job.nq,
+            job.nr,
+            job.cp,
+            job.adc,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::AdcConfig;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_transfer_function() {
+        let mut rng = Rng::new(7);
+        let (nq, nr, cp) = (4, 9, 256);
+        let q: Vec<f32> = (0..nq * cp).map(|_| rng.range_i64(-3, 3) as f32).collect();
+        let g: Vec<f32> = (0..nr * cp).map(|_| rng.range_i64(-3, 3) as f32).collect();
+        let adc = AdcConfig::new(6, 512.0);
+        let job = MvmJob::new(&q, nq, &g, nr, cp, adc);
+        let got = RefBackend.mvm_scores(&job).unwrap();
+        let want = imc_mvm_ref(&q, &g, nq, nr, cp, adc);
+        assert_eq!(got, want);
+        assert_eq!(RefBackend.utilization(&job), 1.0);
+    }
+}

@@ -1,8 +1,9 @@
 //! Configuration system: the ISA-exposed knobs (§III-D/F) plus system
-//! geometry, loadable from a flat `key = value` file (TOML subset — see
-//! `util::kv`; no toml crate in this offline environment) with the paper's
-//! §IV-A defaults as presets.
+//! geometry and the `[backend]` execution section, loadable from a
+//! `key = value` file (TOML subset — see `util::kv`; no toml crate in
+//! this offline environment) with the paper's §IV-A defaults as presets.
 
+use crate::backend::BackendKind;
 use crate::device::Material;
 use crate::util::kv::{self, KvValue};
 
@@ -44,6 +45,31 @@ fn material_from_name(s: &str) -> Result<Material, String> {
     }
 }
 
+/// `[backend]` section: how the coordinator executes MVM score tiles
+/// (see `backend::BackendDispatcher`). Scores are bit-identical across
+/// kinds; only host wall-time differs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BackendConfig {
+    /// `"ref"` | `"parallel"` | `"pjrt"`.
+    pub kind: BackendKind,
+    /// Worker threads for the parallel backend (0 = auto-detect).
+    pub threads: usize,
+    /// Minimum padded-tile utilization before the dispatcher routes a job
+    /// to the primary backend instead of the scalar fallback (measured
+    /// crossover ~0.3 for the fixed-geometry PJRT artifact).
+    pub min_utilization: f64,
+}
+
+impl Default for BackendConfig {
+    fn default() -> Self {
+        BackendConfig {
+            kind: BackendKind::Parallel,
+            threads: 0,
+            min_utilization: 0.3,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct SpecPcmConfig {
     pub task: Task,
@@ -72,10 +98,13 @@ pub struct SpecPcmConfig {
     /// FDR for DB-search identification (paper: 1%).
     pub fdr: f64,
     /// Use the PJRT artifacts when available (fall back to the rust
-    /// reference path otherwise).
+    /// reference path otherwise). Only consulted when `backend.kind` is
+    /// `pjrt`.
     pub use_artifacts: bool,
     /// Artifacts directory.
     pub artifacts_dir: String,
+    /// MVM execution backend (`[backend]` section).
+    pub backend: BackendConfig,
 }
 
 impl Default for SpecPcmConfig {
@@ -106,6 +135,7 @@ impl SpecPcmConfig {
             fdr: 0.01,
             use_artifacts: true,
             artifacts_dir: "artifacts".into(),
+            backend: BackendConfig::default(),
         }
     }
 
@@ -159,6 +189,15 @@ impl SpecPcmConfig {
                         .map(|&x| x as f32)
                         .collect()
                 }
+                "backend.kind" => {
+                    cfg.backend.kind =
+                        BackendKind::from_name(val.as_str().ok_or("backend.kind: want string")?)?
+                }
+                "backend.threads" => cfg.backend.threads = get_usize(val, key)?,
+                "backend.min_utilization" => {
+                    cfg.backend.min_utilization =
+                        val.as_f64().ok_or("backend.min_utilization")?
+                }
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -183,6 +222,11 @@ impl SpecPcmConfig {
         s += &kv::fmt_num("use_artifacts", self.use_artifacts);
         s += &kv::fmt_str("artifacts_dir", &self.artifacts_dir);
         s += &kv::fmt_arr("threshold_sweep", &self.threshold_sweep);
+        // Section keys must follow every top-level key (TOML semantics).
+        s += &kv::fmt_section("backend");
+        s += &kv::fmt_str("kind", self.backend.kind.name());
+        s += &kv::fmt_num("threads", self.backend.threads);
+        s += &kv::fmt_num("min_utilization", self.backend.min_utilization);
         s
     }
 
@@ -206,6 +250,12 @@ impl SpecPcmConfig {
         }
         if !(0.0..0.5).contains(&self.fdr) {
             return Err(format!("fdr {} out of range", self.fdr));
+        }
+        if !(0.0..=1.0).contains(&self.backend.min_utilization) {
+            return Err(format!(
+                "backend.min_utilization {} not in [0, 1]",
+                self.backend.min_utilization
+            ));
         }
         Ok(())
     }
@@ -278,5 +328,27 @@ mod tests {
         assert!(SpecPcmConfig::from_toml("hd_dim = 0").is_err());
         assert!(SpecPcmConfig::from_toml("fdr = 0.9").is_err());
         assert!(SpecPcmConfig::from_toml("mystery = 1").is_err());
+        assert!(SpecPcmConfig::from_toml("[backend]\nkind = \"gpu\"").is_err());
+        assert!(SpecPcmConfig::from_toml("[backend]\nmin_utilization = 1.5").is_err());
+    }
+
+    #[test]
+    fn backend_section_roundtrip_and_defaults() {
+        let d = SpecPcmConfig::paper_clustering();
+        assert_eq!(d.backend.kind, BackendKind::Parallel);
+        assert_eq!(d.backend.threads, 0);
+        assert!((d.backend.min_utilization - 0.3).abs() < 1e-12);
+
+        let c = SpecPcmConfig::from_toml(
+            "hd_dim = 1024\n[backend]\nkind = \"ref\"\nthreads = 4\nmin_utilization = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(c.backend.kind, BackendKind::Reference);
+        assert_eq!(c.backend.threads, 4);
+        assert_eq!(c.backend.min_utilization, 0.5);
+
+        // to_toml emits the section and parses back identically.
+        let back = SpecPcmConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.backend, c.backend);
     }
 }

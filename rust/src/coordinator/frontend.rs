@@ -1,15 +1,17 @@
 //! HD encode+pack frontend: one call per spectra batch, executed on the
-//! PJRT encoder artifact when the (D, n) variant exists, with the
-//! bit-identical rust path (`hd::encode` + `hd::pack`) as fallback for
-//! artifact-free runs and for sweep dimensions outside the variant set.
+//! PJRT encoder artifact when the dispatcher carries a runtime and the
+//! (D, n) variant exists, with the bit-identical rust path (`hd::encode` +
+//! `hd::pack`) as fallback for artifact-free runs and for sweep dimensions
+//! outside the variant set.
 
-use anyhow::Result;
-
+use crate::backend::BackendDispatcher;
 use crate::config::SpecPcmConfig;
 use crate::energy::OpCounts;
 use crate::hd::{self, ItemMemory};
 use crate::ms::{preprocess, PreprocessConfig, Spectrum};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Manifest, Runtime};
+use crate::util::error::Result;
 
 pub struct HdFrontend {
     pub im: ItemMemory,
@@ -52,13 +54,13 @@ impl HdFrontend {
     }
 
     /// Encode + pack a set of spectra into row-major packed HVs
-    /// (`spectra.len() x packed_width`). Uses the PJRT artifact when
-    /// `runtime` is provided and has the (D, n) variant; counts ASIC encode
-    /// and pack work either way.
+    /// (`spectra.len() x packed_width`). Uses the PJRT encoder artifact
+    /// when the dispatcher carries a runtime with the (D, n) variant;
+    /// counts ASIC encode and pack work either way.
     pub fn encode_pack(
         &self,
         spectra: &[&Spectrum],
-        runtime: Option<&mut Runtime>,
+        backend: &BackendDispatcher,
         ops: &mut OpCounts,
     ) -> Result<Vec<f32>> {
         let levels = self.levels_of(spectra);
@@ -66,12 +68,16 @@ impl HdFrontend {
         ops.features = self.preprocess_cfg.bins as u64;
         ops.pack_elements += (spectra.len() * self.packed_width) as u64;
 
-        if let Some(rt) = runtime {
+        #[cfg(feature = "pjrt")]
+        if let Some(rt) = backend.runtime() {
             let name = Manifest::enc_pack_name(self.d, self.n);
+            let mut rt = rt.borrow_mut();
             if rt.manifest.get(&name).is_some() {
-                return self.encode_pack_artifact(&levels, rt);
+                return self.encode_pack_artifact(&levels, &mut rt);
             }
         }
+        #[cfg(not(feature = "pjrt"))]
+        let _ = backend;
         Ok(self.encode_pack_rust(&levels))
     }
 
@@ -86,6 +92,7 @@ impl HdFrontend {
     }
 
     /// PJRT artifact path: batches of the manifest's B spectra.
+    #[cfg(feature = "pjrt")]
     fn encode_pack_artifact(&self, levels: &[Vec<u16>], rt: &mut Runtime) -> Result<Vec<f32>> {
         let b = rt.manifest.batch;
         let f = rt.manifest.features;
@@ -126,7 +133,9 @@ mod tests {
         let ds = ClusteringDataset::generate("t", 1, 5, 2, 3, 2, 0);
         let refs: Vec<&Spectrum> = ds.spectra.iter().collect();
         let mut ops = OpCounts::default();
-        let packed = fe.encode_pack(&refs, None, &mut ops).unwrap();
+        let packed = fe
+            .encode_pack(&refs, &BackendDispatcher::reference(), &mut ops)
+            .unwrap();
         assert_eq!(packed.len(), refs.len() * fe.packed_width);
         assert!(packed.iter().all(|&v| v.abs() <= 3.0));
         assert_eq!(ops.encode_spectra, refs.len() as u64);
@@ -138,9 +147,10 @@ mod tests {
         let fe = HdFrontend::new(&cfg);
         let ds = ClusteringDataset::generate("t", 2, 1, 2, 2, 0, 0);
         let s = &ds.spectra[0];
+        let be = BackendDispatcher::reference();
         let mut ops = OpCounts::default();
-        let p1 = fe.encode_pack(&[s], None, &mut ops).unwrap();
-        let p2 = fe.encode_pack(&[s], None, &mut ops).unwrap();
+        let p1 = fe.encode_pack(&[s], &be, &mut ops).unwrap();
+        let p2 = fe.encode_pack(&[s], &be, &mut ops).unwrap();
         assert_eq!(p1, p2);
     }
 }

@@ -1,15 +1,16 @@
 //! L3 coordinator (DESIGN.md §2): the glue that turns spectra into ISA-level
-//! array work and PJRT artifact executions.
+//! array work and backend MVM executions.
 //!
 //! * [`allocator`] — places HV segments onto (bank, row) slots; an HV wider
 //!   than 128 packed dims spans multiple banks at the same row (paper
 //!   §III-C).
-//! * [`batcher`] — groups work into the fixed B=64 / R=1024 artifact
-//!   geometry, padding with zeros and slicing results back.
+//! * [`batcher`] — groups work into fixed-geometry tiles (e.g. the B=64 /
+//!   R=1024 PJRT artifact), padding with zeros and slicing results back.
 //! * [`frontend`] — HD encode+pack via the PJRT artifacts with a bit-exact
 //!   rust fallback.
 //! * [`pipeline`] — the end-to-end clustering and DB-search drivers that
-//!   the CLI, examples and benches call.
+//!   the CLI, examples and benches call; both execute score tiles through
+//!   the `backend::BackendDispatcher` they are handed.
 
 pub mod allocator;
 pub mod batcher;

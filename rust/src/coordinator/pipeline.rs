@@ -1,15 +1,16 @@
 //! End-to-end pipeline drivers (paper Figs. 1 and 2).
 //!
-//! Both pipelines share one IMC execution helper that prefers the PJRT
-//! artifact (`mvm_c{width}`) and falls back to the bit-identical rust
-//! transfer function, counting physical array operations either way:
-//! one MVM op = one 128x128 bank processing one input vector.
+//! Both pipelines execute their IMC score tiles through a pluggable
+//! [`BackendDispatcher`] (see `backend/`): the dispatcher charges the
+//! physical array-op count (one MVM op = one 128x128 bank processing one
+//! input vector) and routes the host arithmetic to the configured
+//! backend — scalar reference, bank-sharded parallel, or the PJRT
+//! artifact — all bit-identical by contract.
 
 use std::collections::BTreeMap;
 
-use anyhow::Result;
-
-use crate::array::{imc_mvm_ref, AdcConfig, ARRAY_DIM};
+use crate::array::{AdcConfig, ARRAY_DIM};
+use crate::backend::{BackendDispatcher, MvmJob};
 use crate::cluster::{complete_linkage, ClusterQuality};
 use crate::config::SpecPcmConfig;
 use crate::device::{MlcConfig, NoiseModel, Programmer};
@@ -17,94 +18,12 @@ use crate::energy::{EnergyLatencyModel, EnergyReport, OpCounts};
 use crate::ms::bucket::{bucket_by_precursor, candidate_keys_open, BucketKey};
 use crate::ms::synth::PTM_SHIFTS;
 use crate::ms::{ClusteringDataset, SearchDataset, Spectrum};
-use crate::runtime::{Manifest, Runtime};
 use crate::search::{fdr_filter, FdrResult};
 use crate::telemetry::StageTimer;
+use crate::util::error::Result;
 use crate::util::Rng;
 
-use super::batcher::{pad_matrix, Batcher};
 use super::frontend::HdFrontend;
-
-/// Shared IMC MVM execution: `nq x nr` scores over `cp`-wide packed HVs.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn mvm_scores(
-    queries: &[f32],
-    nq: usize,
-    refs: &[f32],
-    nr: usize,
-    cp: usize,
-    adc: AdcConfig,
-    mut runtime: Option<&mut Runtime>,
-    ops: &mut OpCounts,
-) -> Result<Vec<f32>> {
-    assert_eq!(queries.len(), nq * cp);
-    assert_eq!(refs.len(), nr * cp);
-    // Physical op count: every real query vector drives every 128-row x
-    // 128-col bank holding candidate rows.
-    let row_tiles = nr.div_ceil(ARRAY_DIM) as u64;
-    let col_tiles = (cp / ARRAY_DIM) as u64;
-    ops.mvm_ops += nq as u64 * row_tiles * col_tiles;
-
-    if let Some(rt) = runtime.as_deref_mut() {
-        if rt.manifest.get(&Manifest::mvm_name(cp)).is_some() {
-            // The artifact runs a fixed B x R geometry; small jobs (tiny
-            // candidate buckets) would mostly multiply padding zeros. The
-            // rust transfer function is bit-identical (integration-tested),
-            // so route by padded-utilization: below ~30% the scalar path
-            // wins (measured crossover, EXPERIMENTS.md §Perf L3).
-            let padded = nq.div_ceil(rt.manifest.batch)
-                * rt.manifest.batch
-                * nr.div_ceil(rt.manifest.rows)
-                * rt.manifest.rows;
-            let utilization = (nq * nr) as f64 / padded as f64;
-            if utilization >= 0.3 {
-                return mvm_scores_artifact(queries, nq, refs, nr, cp, adc, rt);
-            }
-        }
-    }
-    Ok(imc_mvm_ref(queries, refs, nq, nr, cp, adc))
-}
-
-fn mvm_scores_artifact(
-    queries: &[f32],
-    nq: usize,
-    refs: &[f32],
-    nr: usize,
-    cp: usize,
-    adc: AdcConfig,
-    rt: &mut Runtime,
-) -> Result<Vec<f32>> {
-    let b = rt.manifest.batch;
-    let r_block = rt.manifest.rows;
-    let mut out = vec![0f32; nq * nr];
-
-    for rb in Batcher::new(nr, r_block).batches() {
-        let refs_block = pad_matrix(
-            &refs[rb.start * cp..rb.end * cp],
-            rb.len(),
-            cp,
-            r_block,
-        );
-        // Marshal the (large) reference block into a PJRT literal once per
-        // row block; every query batch against it reuses the literal.
-        let refs_lit = rt.mvm_refs_literal(cp, &refs_block)?;
-        for qb in Batcher::new(nq, b).batches() {
-            let q_block = pad_matrix(
-                &queries[qb.start * cp..qb.end * cp],
-                qb.len(),
-                cp,
-                b,
-            );
-            let scores = rt.mvm_with_refs(cp, &q_block, &refs_lit, adc.lsb(), adc.qmax())?;
-            for qi in 0..qb.len() {
-                let src = &scores[qi * r_block..qi * r_block + rb.len()];
-                let dst_row = qb.start + qi;
-                out[dst_row * nr + rb.start..dst_row * nr + rb.end].copy_from_slice(src);
-            }
-        }
-    }
-    Ok(out)
-}
 
 /// Program packed reference HVs into PCM: applies write-verify-calibrated
 /// noise and counts programming work. Returns the noisy conductances.
@@ -176,7 +95,7 @@ impl ClusteringPipeline {
     pub fn run(
         &self,
         dataset: &ClusteringDataset,
-        mut runtime: Option<&mut Runtime>,
+        backend: &BackendDispatcher,
     ) -> Result<ClusteringOutcome> {
         let cfg = &self.cfg;
         let mut ops = OpCounts::default();
@@ -214,8 +133,7 @@ impl ClusteringPipeline {
             let specs: Vec<&Spectrum> = members.iter().map(|&i| &dataset.spectra[i]).collect();
 
             let packed = wall.time("encode+pack", || {
-                self.frontend
-                    .encode_pack(&specs, runtime.as_deref_mut(), &mut ops)
+                self.frontend.encode_pack(&specs, backend, &mut ops)
             })?;
 
             let noisy = wall.time("program", || {
@@ -223,14 +141,8 @@ impl ClusteringPipeline {
             });
 
             let scores = wall.time("distance (IMC)", || {
-                mvm_scores(
-                    &packed,
-                    specs.len(),
-                    &noisy,
-                    specs.len(),
-                    cp,
-                    adc,
-                    runtime.as_deref_mut(),
+                backend.execute(
+                    &MvmJob::new(&packed, specs.len(), &noisy, specs.len(), cp, adc),
                     &mut ops,
                 )
             })?;
@@ -337,7 +249,7 @@ impl SearchPipeline {
     pub fn run(
         &self,
         dataset: &SearchDataset,
-        mut runtime: Option<&mut Runtime>,
+        backend: &BackendDispatcher,
     ) -> Result<SearchOutcomeSummary> {
         let cfg = &self.cfg;
         let mut ops = OpCounts::default();
@@ -359,8 +271,7 @@ impl SearchPipeline {
         let n_targets = dataset.library.len();
 
         let packed_refs = wall.time("encode refs", || {
-            self.frontend
-                .encode_pack(&all_refs, runtime.as_deref_mut(), &mut ops)
+            self.frontend.encode_pack(&all_refs, backend, &mut ops)
         })?;
         let noisy_refs = wall.time("program refs", || {
             program_refs(
@@ -379,8 +290,7 @@ impl SearchPipeline {
 
         let queries: Vec<&Spectrum> = dataset.queries.iter().collect();
         let packed_queries = wall.time("encode queries", || {
-            self.frontend
-                .encode_pack(&queries, runtime.as_deref_mut(), &mut ops)
+            self.frontend.encode_pack(&queries, backend, &mut ops)
         })?;
 
         // Group queries by identical candidate-key sets so one IMC batch
@@ -419,14 +329,8 @@ impl SearchPipeline {
             }
 
             let scores = wall.time("similarity (IMC)", || {
-                mvm_scores(
-                    &q_rows,
-                    q_idxs.len(),
-                    &cand_rows,
-                    cand.len(),
-                    cp,
-                    adc,
-                    runtime.as_deref_mut(),
+                backend.execute(
+                    &MvmJob::new(&q_rows, q_idxs.len(), &cand_rows, cand.len(), cp, adc),
                     &mut ops,
                 )
             })?;
@@ -507,7 +411,9 @@ mod tests {
             ..SpecPcmConfig::paper_clustering()
         };
         let ds = ClusteringDataset::generate("t", 7, 12, 4, 6, 10, 0);
-        let out = ClusteringPipeline::new(cfg).run(&ds, None).unwrap();
+        let out = ClusteringPipeline::new(cfg)
+            .run(&ds, &BackendDispatcher::reference())
+            .unwrap();
         assert_eq!(out.n_spectra, ds.len());
         assert!(out.ops.mvm_ops > 0);
         assert!(out.report.total_j() > 0.0);
@@ -525,7 +431,9 @@ mod tests {
             ..SpecPcmConfig::paper_search()
         };
         let ds = SearchDataset::generate("t", 11, 60, 80, 0.8, 0.2, 0, 0);
-        let out = SearchPipeline::new(cfg).run(&ds, None).unwrap();
+        let out = SearchPipeline::new(cfg)
+            .run(&ds, &BackendDispatcher::reference())
+            .unwrap();
         assert_eq!(out.total_queries, 80);
         assert!(out.identified > 20, "identified {}", out.identified);
         // Most identifications must be ground-truth correct.

@@ -57,6 +57,31 @@ impl OpCounts {
     }
 }
 
+// Mergeable accounting: parallel backends accumulate per-shard counts and
+// fold them after join (`+=` / `Sum`). Event counts sum; `features` is a
+// workload property, not an event count, so merging takes the max.
+
+impl std::ops::AddAssign<&OpCounts> for OpCounts {
+    fn add_assign(&mut self, other: &OpCounts) {
+        self.add(other);
+    }
+}
+
+impl std::ops::AddAssign for OpCounts {
+    fn add_assign(&mut self, other: OpCounts) {
+        self.add(&other);
+    }
+}
+
+impl std::iter::Sum for OpCounts {
+    fn sum<I: Iterator<Item = OpCounts>>(iter: I) -> OpCounts {
+        iter.fold(OpCounts::default(), |mut acc, o| {
+            acc.add(&o);
+            acc
+        })
+    }
+}
+
 /// GPU/CPU reference envelope for the energy-efficiency comparison
 /// (§IV-B: "GPU-based tools typically operate at an average power of
 /// 450 W").
@@ -249,6 +274,31 @@ mod tests {
         assert!((r1.imc_latency_s / r64.imc_latency_s - 64.0).abs() < 1.0);
         // Energy does NOT scale with banks (same total work).
         assert_eq!(r1.mvm_j, r64.mvm_j);
+    }
+
+    #[test]
+    fn op_counts_merge_like_add() {
+        let a = OpCounts {
+            mvm_ops: 10,
+            features: 512,
+            program_rounds: 3,
+            ..Default::default()
+        };
+        let b = OpCounts {
+            mvm_ops: 5,
+            features: 256,
+            verify_rounds: 7,
+            ..Default::default()
+        };
+        let mut via_add_assign = a;
+        via_add_assign += &b;
+        let via_sum: OpCounts = [a, b].into_iter().sum();
+        assert_eq!(via_add_assign.mvm_ops, 15);
+        assert_eq!(via_add_assign.features, 512); // max, not sum
+        assert_eq!(via_add_assign.program_rounds, 3);
+        assert_eq!(via_add_assign.verify_rounds, 7);
+        assert_eq!(via_sum.mvm_ops, via_add_assign.mvm_ops);
+        assert_eq!(via_sum.features, via_add_assign.features);
     }
 
     #[test]

@@ -4,11 +4,14 @@
 //! `take_result`), mirroring the paper's near-memory data path between the
 //! ASIC encoder/packer and the PCM arrays. Every executed instruction
 //! updates an [`OpCounts`] so ISA-level runs feed the same energy model as
-//! the high-level pipelines.
+//! the high-level pipelines; `MVM_COMPUTE` executes through the same
+//! pluggable [`BackendDispatcher`] the pipelines use (reference by
+//! default — swap in a parallel dispatcher with [`Executor::with_backend`]).
 
 use std::collections::HashMap;
 
 use crate::array::{AdcConfig, ArrayBank, ARRAY_DIM};
+use crate::backend::{BackendDispatcher, MvmJob};
 use crate::device::{Material, MlcConfig, NoiseModel, Programmer};
 use crate::energy::OpCounts;
 use crate::util::Rng;
@@ -29,6 +32,7 @@ pub struct ExecResult {
 pub struct Executor {
     pub banks: Vec<ArrayBank>,
     pub material: Material,
+    backend: BackendDispatcher,
     buffers: HashMap<u8, Vec<f32>>,
     rng: Rng,
 }
@@ -38,9 +42,17 @@ impl Executor {
         Executor {
             banks: (0..num_banks).map(|_| ArrayBank::new(material)).collect(),
             material,
+            backend: BackendDispatcher::reference(),
             buffers: HashMap::new(),
             rng: Rng::new(seed),
         }
+    }
+
+    /// Route `MVM_COMPUTE` through a different backend dispatcher (scores
+    /// are bit-identical across backends by contract).
+    pub fn with_backend(mut self, backend: BackendDispatcher) -> Self {
+        self.backend = backend;
+        self
     }
 
     /// Stage a 128-wide data segment into a numbered buffer.
@@ -113,9 +125,17 @@ impl Executor {
                         .ok_or(format!("pc {pc}: arr_idx {arr_idx} out of range"))?;
                     let adc =
                         AdcConfig::default_for_packing(adc_bits as u32, mlc_bits as usize);
-                    let mut scores = bank.mvm(&query, adc);
+                    bank.counters.mvm_ops += 1;
+                    // One whole-array MVM = a 1 x 128 score tile over the
+                    // bank's stored conductances, executed (and op-counted)
+                    // by the same dispatcher the pipelines use.
+                    let job =
+                        MvmJob::new(&query, 1, bank.conductances(), ARRAY_DIM, ARRAY_DIM, adc);
+                    let mut scores = self
+                        .backend
+                        .execute(&job, &mut result.ops)
+                        .map_err(|e| format!("pc {pc}: MVM_COMPUTE failed: {e}"))?;
                     scores.truncate(num_activated_row as usize);
-                    result.ops.mvm_ops += 1;
                     result.mvm_scores.push(scores);
                 }
             }
@@ -191,6 +211,34 @@ mod tests {
         // With 8 write-verify cycles the stored values sit near 3.0.
         let mean: f32 = r.row_reads[0].iter().sum::<f32>() / ARRAY_DIM as f32;
         assert!((mean - 3.0).abs() < 0.2, "mean {mean}");
+    }
+
+    #[test]
+    fn backend_swap_is_bit_identical() {
+        // The same program on the same seed through the reference and the
+        // parallel dispatcher must produce identical scores.
+        let run_with = |backend: BackendDispatcher| {
+            let mut ex = Executor::new(2, Material::TiTe2Gst467, 1).with_backend(backend);
+            let seg: Vec<f32> = (0..ARRAY_DIM)
+                .map(|i| ((i % 7) as i64 - 3) as f32)
+                .collect();
+            ex.set_buffer(0, seg);
+            let mut p = Program::new();
+            p.push(store(0, 1, 5, 6));
+            p.push(Instruction::MvmCompute {
+                buf: 0,
+                arr_idx: 1,
+                row_addr: 0,
+                num_activated_row: 128,
+                adc_bits: 6,
+                mlc_bits: 3,
+            });
+            ex.run(&p).unwrap()
+        };
+        let a = run_with(BackendDispatcher::reference());
+        let b = run_with(BackendDispatcher::parallel(4));
+        assert_eq!(a.mvm_scores, b.mvm_scores);
+        assert_eq!(a.ops.mvm_ops, b.ops.mvm_ops);
     }
 
     #[test]

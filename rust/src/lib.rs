@@ -10,8 +10,11 @@
 //! * **Layer 3 (this crate)** — the coordinator: PCM device + array
 //!   simulator, ISA, energy/latency accounting, clustering and DB-search
 //!   pipelines, baselines and the CLI. The hot-path numeric work executes
-//!   the AOT artifacts through PJRT (`runtime`); python never runs at
-//!   request time.
+//!   through a pluggable [`backend`] layer: a scalar reference path, a
+//!   bank-sharded host-parallel path (default), and — behind the `pjrt`
+//!   cargo feature — the AOT artifacts through PJRT (`runtime`). The
+//!   default build pulls **zero external crates** and runs fully offline;
+//!   python never runs at request time.
 //!
 //! Module map (see DESIGN.md §4 for the substrate inventory):
 //!
@@ -21,17 +24,20 @@
 //! | [`array`] | §III-C, Table 1 | 128x128 2T2R array: DAC/ADC transfer, cycle model, banks |
 //! | [`hd`] | §II-A, §III-B | hypervectors, ID-level encoding, dimension packing (rust reference) |
 //! | [`ms`] | §II-B | spectra, synthetic workloads, preprocessing, bucketing |
-//! | [`energy`] | §IV, Tables S3/1, Fig. 8 | power/area/latency accounting |
+//! | [`energy`] | §IV, Tables S3/1, Fig. 8 | power/area/latency accounting (mergeable `OpCounts`) |
 //! | [`isa`] | §III-F, Table S2 | STORE_HV / READ_HV / MVM_COMPUTE instruction set |
 //! | [`cluster`] | Fig. 1, §III-C | complete-linkage HAC over IMC distances |
 //! | [`search`] | Fig. 2, §III-C | Hamming similarity search + target-decoy FDR |
 //! | [`baselines`] | §IV-A | Falcon/msCRUSH/HyperSpec/HyperOMS/ANN-SoLo-like comparators |
-//! | [`runtime`] | DESIGN.md §2 | PJRT client, artifact registry, executor cache |
+//! | [`backend`] | §III-C bank tiling | pluggable MVM execution: ref / bank-sharded parallel / PJRT, utilization-routing dispatcher |
+//! | [`runtime`] | DESIGN.md §2 | PJRT client, artifact registry, executor cache (feature `pjrt`) |
 //! | [`coordinator`] | DESIGN.md §2 | array allocator, batcher, pipeline drivers |
-//! | [`config`] | §IV-A | TOML config system + paper presets |
+//! | [`config`] | §IV-A | TOML config system + paper presets, `[backend]` section |
 //! | [`telemetry`] | — | counters and report tables |
+//! | [`util`] | — | RNG, JSON/kv parsers, crate-wide `error::{Error, Result}` |
 
 pub mod array;
+pub mod backend;
 pub mod baselines;
 pub mod cluster;
 pub mod config;
@@ -41,6 +47,7 @@ pub mod energy;
 pub mod hd;
 pub mod isa;
 pub mod ms;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod search;
 pub mod telemetry;

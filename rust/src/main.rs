@@ -1,34 +1,44 @@
 //! SpecPCM command-line launcher.
 //!
 //! Subcommands drive the two end-to-end pipelines on synthetic datasets,
-//! inspect the hardware model, and exercise the ISA. The PJRT artifacts in
-//! `artifacts/` are used automatically when present (build with
-//! `make artifacts`); otherwise the bit-identical rust reference path runs.
-//! (Offline environment: argument parsing is hand-rolled, no clap.)
+//! inspect the hardware model, and exercise the ISA. The MVM hot path runs
+//! on a pluggable backend (`--backend ref|parallel|pjrt`, default
+//! `parallel`); the PJRT artifact path additionally needs the `pjrt`
+//! cargo feature and a built `artifacts/` tree. All backends produce
+//! bit-identical scores. (Offline environment: argument parsing is
+//! hand-rolled, no clap.)
 
-use anyhow::Result;
-
+use specpcm::backend::{BackendDispatcher, BackendKind};
 use specpcm::baselines::latency_model;
 use specpcm::cluster::quality::clustered_at_incorrect;
 use specpcm::config::{SpecPcmConfig, Task};
 use specpcm::coordinator::{ClusteringPipeline, SearchPipeline};
 use specpcm::energy::area_breakdown;
 use specpcm::ms::{ClusteringDataset, SearchDataset};
-use specpcm::runtime::Runtime;
 use specpcm::telemetry::render_table;
+use specpcm::util::error::{Error, Result};
 
 const USAGE: &str = "\
 specpcm — PCM-based analog IMC accelerator for MS analysis
 
 USAGE:
-  specpcm cluster [--dataset pxd001468|pxd000561] [--scale F] [--config FILE] [--no-artifacts]
-  specpcm search  [--dataset iprg2012|hek293]     [--scale F] [--config FILE] [--no-artifacts]
+  specpcm cluster [--dataset pxd001468|pxd000561] [--scale F] [--config FILE]
+                  [--backend ref|parallel|pjrt] [--threads N] [--no-artifacts]
+  specpcm search  [--dataset iprg2012|hek293]     [--scale F] [--config FILE]
+                  [--backend ref|parallel|pjrt] [--threads N] [--no-artifacts]
   specpcm info                  print the hardware model (Tables 1/S3, Fig. 8)
   specpcm config [clustering|search]   print a config preset
   specpcm isa <file>            assemble + run an ISA program
+
+BACKENDS:
+  ref       single-threaded reference path (bit-exact oracle)
+  parallel  bank-sharded across host threads (default; --threads 0 = auto)
+  pjrt      AOT artifacts through PJRT (needs the `pjrt` cargo feature)
 ";
 
-/// Tiny flag parser: `--key value` and `--flag` forms.
+/// Tiny flag parser: `--key value`, `--key=value` and bare `--flag` forms.
+/// Negative numbers are valid values (`--scale -0.5`): only tokens that
+/// start with `--` are treated as flag names.
 struct Args {
     positional: Vec<String>,
     flags: std::collections::HashMap<String, String>,
@@ -41,7 +51,20 @@ impl Args {
         let mut it = argv.iter().peekable();
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` separator: everything after is positional.
+                    positional.extend(it.by_ref().cloned());
+                    break;
+                }
+                if let Some((key, value)) = name.split_once('=') {
+                    flags.insert(key.to_string(), value.to_string());
+                    continue;
+                }
                 let value = match it.peek() {
+                    // A following token is this flag's value unless it is
+                    // itself a flag. `-0.5` does not start with `--`, so
+                    // negative numeric values parse as values, never as a
+                    // bare flag plus a stray positional.
                     Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
                     _ => "true".to_string(), // bare flag
                 };
@@ -59,7 +82,18 @@ impl Args {
 
     fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.flags.get(key) {
-            Some(v) => Ok(v.parse()?),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::msg(format!("--{key}: '{v}' is not a number"))),
+            None => Ok(default),
+        }
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::msg(format!("--{key}: '{v}' is not a non-negative integer"))),
             None => Ok(default),
         }
     }
@@ -71,42 +105,36 @@ impl Args {
 
 fn load_cfg(args: &Args, default: SpecPcmConfig) -> Result<SpecPcmConfig> {
     let mut cfg = match args.flags.get("config") {
-        Some(p) => SpecPcmConfig::load(p).map_err(|e| anyhow::anyhow!(e))?,
+        Some(p) => SpecPcmConfig::load(p)?,
         None => default,
     };
     if args.has("no-artifacts") {
         cfg.use_artifacts = false;
     }
+    if let Some(b) = args.flags.get("backend") {
+        cfg.backend.kind = BackendKind::from_name(b)?;
+    }
+    cfg.backend.threads = args.get_usize("threads", cfg.backend.threads)?;
     Ok(cfg)
 }
 
-fn open_runtime(cfg: &SpecPcmConfig) -> Option<Runtime> {
-    if !cfg.use_artifacts {
-        return None;
-    }
-    match Runtime::load(&cfg.artifacts_dir) {
-        Ok(rt) => {
-            eprintln!("runtime: PJRT platform = {}", rt.platform());
-            Some(rt)
-        }
-        Err(e) => {
-            eprintln!("runtime: artifacts unavailable ({e}); using rust reference path");
-            None
-        }
-    }
+fn open_backend(cfg: &SpecPcmConfig) -> BackendDispatcher {
+    let backend = BackendDispatcher::from_config(cfg);
+    eprintln!("backend: {}", backend.primary_name());
+    backend
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {
     let cfg = load_cfg(args, SpecPcmConfig::paper_clustering())?;
-    anyhow::ensure!(cfg.task == Task::Clustering, "config task must be clustering");
+    specpcm::ensure!(cfg.task == Task::Clustering, "config task must be clustering");
     let scale = args.get_f64("scale", 0.5)?;
     let ds = match args.get("dataset", "pxd001468").as_str() {
         "pxd001468" => ClusteringDataset::pxd001468_like(cfg.seed, scale),
         "pxd000561" => ClusteringDataset::pxd000561_like(cfg.seed, scale),
-        other => anyhow::bail!("unknown dataset '{other}'"),
+        other => specpcm::bail!("unknown dataset '{other}'"),
     };
-    let mut rt = open_runtime(&cfg);
-    let out = ClusteringPipeline::new(cfg).run(&ds, rt.as_mut())?;
+    let backend = open_backend(&cfg);
+    let out = ClusteringPipeline::new(cfg).run(&ds, &backend)?;
     println!("{}: {} spectra, {} buckets", ds.name, out.n_spectra, out.n_buckets);
     println!(
         "clustered ratio @1.5% incorrect: {:.4}",
@@ -134,16 +162,16 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 
 fn cmd_search(args: &Args) -> Result<()> {
     let cfg = load_cfg(args, SpecPcmConfig::paper_search())?;
-    anyhow::ensure!(cfg.task == Task::Search, "config task must be search");
+    specpcm::ensure!(cfg.task == Task::Search, "config task must be search");
     let scale = args.get_f64("scale", 0.25)?;
     let ds = match args.get("dataset", "iprg2012").as_str() {
         "iprg2012" => SearchDataset::iprg2012_like(cfg.seed, scale),
         "hek293" => SearchDataset::hek293_like(cfg.seed, scale),
-        other => anyhow::bail!("unknown dataset '{other}'"),
+        other => specpcm::bail!("unknown dataset '{other}'"),
     };
-    let mut rt = open_runtime(&cfg);
+    let backend = open_backend(&cfg);
     let fdr = cfg.fdr;
-    let out = SearchPipeline::new(cfg).run(&ds, rt.as_mut())?;
+    let out = SearchPipeline::new(cfg).run(&ds, &backend)?;
     println!(
         "{}: identified {}/{} queries at {:.0}% FDR ({} correct)",
         ds.name,
@@ -195,14 +223,14 @@ fn cmd_info() {
 
 fn cmd_isa(path: &str) -> Result<()> {
     let text = std::fs::read_to_string(path)?;
-    let prog = specpcm::isa::Program::assemble(&text).map_err(|e| anyhow::anyhow!(e))?;
+    let prog = specpcm::isa::Program::assemble(&text)?;
     println!("assembled {} instructions:", prog.len());
     println!("{}", prog.disassemble());
     let mut ex = specpcm::isa::Executor::new(16, specpcm::device::Material::TiTe2Gst467, 1);
     for i in 0..4u8 {
         ex.set_buffer(i, (0..128).map(|k| ((k % 7) as i64 - 3) as f32).collect());
     }
-    let res = ex.run(&prog).map_err(|e| anyhow::anyhow!(e))?;
+    let res = ex.run(&prog)?;
     println!(
         "executed: {} MVMs, {} row reads, {} program rounds",
         res.ops.mvm_ops, res.ops.row_reads, res.ops.program_rounds
@@ -225,7 +253,7 @@ fn main() -> Result<()> {
             let cfg = match args.positional.first().map(String::as_str).unwrap_or("clustering") {
                 "clustering" => SpecPcmConfig::paper_clustering(),
                 "search" => SpecPcmConfig::paper_search(),
-                other => anyhow::bail!("unknown task '{other}'"),
+                other => specpcm::bail!("unknown task '{other}'"),
             };
             println!("{}", cfg.to_toml());
         }
@@ -233,7 +261,7 @@ fn main() -> Result<()> {
             let path = args
                 .positional
                 .first()
-                .ok_or(anyhow::anyhow!("isa: missing <file>"))?;
+                .ok_or(Error::msg("isa: missing <file>"))?;
             cmd_isa(path)?;
         }
         "help" | "--help" | "-h" => print!("{USAGE}"),
@@ -243,4 +271,55 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn negative_numeric_flag_values_parse() {
+        let a = Args::parse(&argv(&["--scale", "-0.5", "pos"])).unwrap();
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), -0.5);
+        assert_eq!(a.positional, vec!["pos".to_string()]);
+        // Equals form too.
+        let a = Args::parse(&argv(&["--scale=-0.5"])).unwrap();
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), -0.5);
+    }
+
+    #[test]
+    fn bare_flag_followed_by_flag() {
+        let a = Args::parse(&argv(&["--no-artifacts", "--scale", "0.3"])).unwrap();
+        assert!(a.has("no-artifacts"));
+        assert_eq!(a.get("no-artifacts", ""), "true");
+        assert_eq!(a.get_f64("scale", 0.0).unwrap(), 0.3);
+    }
+
+    #[test]
+    fn double_dash_separator() {
+        let a = Args::parse(&argv(&["--scale", "1.5", "--", "--not-a-flag"])).unwrap();
+        assert_eq!(a.positional, vec!["--not-a-flag".to_string()]);
+    }
+
+    #[test]
+    fn get_usize_rejects_garbage() {
+        let a = Args::parse(&argv(&["--threads", "8"])).unwrap();
+        assert_eq!(a.get_usize("threads", 0).unwrap(), 8);
+        let a = Args::parse(&argv(&["--threads", "-4"])).unwrap();
+        assert!(a.get_usize("threads", 0).is_err());
+    }
+
+    #[test]
+    fn backend_flags_apply_to_config() {
+        let a = Args::parse(&argv(&["--backend", "ref", "--threads", "2"])).unwrap();
+        let cfg = load_cfg(&a, SpecPcmConfig::paper_clustering()).unwrap();
+        assert_eq!(cfg.backend.kind, BackendKind::Reference);
+        assert_eq!(cfg.backend.threads, 2);
+        let bad = Args::parse(&argv(&["--backend", "gpu"])).unwrap();
+        assert!(load_cfg(&bad, SpecPcmConfig::paper_clustering()).is_err());
+    }
 }

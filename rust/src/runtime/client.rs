@@ -1,9 +1,10 @@
 //! PJRT client wrapper: compile-once executable cache + typed execute
-//! helpers for the two artifact kinds.
+//! helpers for the two artifact kinds. (Feature `pjrt` — needs the
+//! vendored `xla` crate; see rust/Cargo.toml.)
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, Context, Result};
+use crate::util::error::{Context, Error, Result};
 
 use super::manifest::Manifest;
 
@@ -19,7 +20,7 @@ pub struct Runtime {
 impl Runtime {
     /// Load the manifest and create the CPU PJRT client.
     pub fn load(artifacts_dir: &str) -> Result<Self> {
-        let manifest = Manifest::load(artifacts_dir).map_err(|e| anyhow!(e))?;
+        let manifest = Manifest::load(artifacts_dir).map_err(Error::msg)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Runtime {
             client,
@@ -39,7 +40,7 @@ impl Runtime {
             let entry = self
                 .manifest
                 .get(name)
-                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+                .ok_or_else(|| Error::msg(format!("artifact '{name}' not in manifest")))?;
             let path = self.manifest.artifact_path(entry);
             let proto = xla::HloModuleProto::from_text_file(&path)
                 .with_context(|| format!("parsing {}", path.display()))?;
@@ -75,7 +76,7 @@ impl Runtime {
             .context("fetching result")?;
         *self.exec_counts.entry(name.to_string()).or_default() += 1;
         // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        Ok(result.to_tuple1().context("unwrapping result tuple")?)
+        result.to_tuple1().context("unwrapping result tuple")
     }
 
     /// Execute the encode+pack artifact for HD dimension `d`, packing `n`.
@@ -98,23 +99,29 @@ impl Runtime {
             self.manifest.features,
             self.manifest.levels,
         );
-        anyhow::ensure!(
+        crate::ensure!(
             levels.len() == b * f,
             "levels len {} != {}x{}",
             levels.len(),
             b,
             f
         );
-        anyhow::ensure!(id_hvs.len() == f * d, "id_hvs len");
-        anyhow::ensure!(level_hvs.len() == m * d, "level_hvs len");
+        crate::ensure!(id_hvs.len() == f * d, "id_hvs len");
+        crate::ensure!(level_hvs.len() == m * d, "level_hvs len");
 
         let args = [
-            xla::Literal::vec1(levels).reshape(&[b as i64, f as i64])?,
-            xla::Literal::vec1(id_hvs).reshape(&[f as i64, d as i64])?,
-            xla::Literal::vec1(level_hvs).reshape(&[m as i64, d as i64])?,
+            xla::Literal::vec1(levels)
+                .reshape(&[b as i64, f as i64])
+                .context("levels literal")?,
+            xla::Literal::vec1(id_hvs)
+                .reshape(&[f as i64, d as i64])
+                .context("id_hvs literal")?,
+            xla::Literal::vec1(level_hvs)
+                .reshape(&[m as i64, d as i64])
+                .context("level_hvs literal")?,
         ];
         let out = self.run(&name, &args)?;
-        Ok(out.to_vec::<f32>()?)
+        out.to_vec::<f32>().context("encode_pack output")
     }
 
     /// Build the R x C reference literal once; the hot path reuses it
@@ -123,8 +130,10 @@ impl Runtime {
     /// cost before this — EXPERIMENTS.md §Perf L3).
     pub fn mvm_refs_literal(&self, c: usize, refs: &[f32]) -> Result<xla::Literal> {
         let r = self.manifest.rows;
-        anyhow::ensure!(refs.len() == r * c, "refs len {} != {}x{}", refs.len(), r, c);
-        Ok(xla::Literal::vec1(refs).reshape(&[r as i64, c as i64])?)
+        crate::ensure!(refs.len() == r * c, "refs len {} != {}x{}", refs.len(), r, c);
+        xla::Literal::vec1(refs)
+            .reshape(&[r as i64, c as i64])
+            .context("refs literal")
     }
 
     /// Execute the IMC MVM artifact for packed width `c` against a
@@ -139,19 +148,25 @@ impl Runtime {
     ) -> Result<Vec<f32>> {
         let name = Manifest::mvm_name(c);
         let b = self.manifest.batch;
-        anyhow::ensure!(
+        crate::ensure!(
             queries.len() == b * c,
             "queries len {} != {}x{}",
             queries.len(),
             b,
             c
         );
-        let q_lit = xla::Literal::vec1(queries).reshape(&[b as i64, c as i64])?;
-        let lsb_lit = xla::Literal::vec1(&[adc_lsb]).reshape(&[1, 1])?;
-        let qmax_lit = xla::Literal::vec1(&[adc_qmax]).reshape(&[1, 1])?;
+        let q_lit = xla::Literal::vec1(queries)
+            .reshape(&[b as i64, c as i64])
+            .context("queries literal")?;
+        let lsb_lit = xla::Literal::vec1(&[adc_lsb])
+            .reshape(&[1, 1])
+            .context("lsb literal")?;
+        let qmax_lit = xla::Literal::vec1(&[adc_qmax])
+            .reshape(&[1, 1])
+            .context("qmax literal")?;
         let args = [&q_lit, refs_lit, &lsb_lit, &qmax_lit];
         let out = self.run_borrowed(&name, &args)?;
-        Ok(out.to_vec::<f32>()?)
+        out.to_vec::<f32>().context("mvm output")
     }
 
     /// Execute the IMC MVM artifact for packed width `c`.

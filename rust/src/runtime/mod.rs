@@ -1,5 +1,7 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
-//! CPU PJRT client — the only place the L3 coordinator touches XLA.
+//! PJRT runtime (feature `pjrt`): loads the AOT HLO-text artifacts and
+//! executes them on the CPU PJRT client — the only place the L3
+//! coordinator touches XLA. The default build compiles without this
+//! module; `backend::PjrtBackend` is the consumer.
 //!
 //! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →

@@ -1,0 +1,159 @@
+//! Minimal error type for the coordinator stack (offline environment — no
+//! `anyhow`). One string-backed [`Error`] with a `context` combinator plus
+//! the [`bail!`]/[`ensure!`] macros covers every fallible path in the
+//! crate; the default build stays dependency-free.
+
+use std::fmt;
+
+/// A human-readable error with an optional chain of context prefixes.
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prefix the error with a context line (`"{ctx}: {self}"`).
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Error {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error { msg: s }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error { msg: s.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::msg(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias (defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a `Result` (the `anyhow::Context` shape, minus the
+/// dependency).
+pub trait Context<T> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, ctx: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(Error::msg("inner"))
+    }
+
+    #[test]
+    fn display_and_context() {
+        let e = fails().unwrap_err().context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn from_string_via_question_mark() {
+        fn f() -> Result<()> {
+            Err("plain".to_string())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "plain");
+    }
+
+    #[test]
+    fn result_context_trait() {
+        let r: std::result::Result<(), String> = Err("io".into());
+        let e = r.context("loading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "loading manifest: io");
+        let r: std::result::Result<(), String> = Err("x".into());
+        let e = r.with_context(|| format!("artifact {}", 7)).unwrap_err();
+        assert_eq!(e.to_string(), "artifact 7: x");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(n: usize) -> Result<usize> {
+            crate::ensure!(n < 10, "n {n} too large");
+            if n == 0 {
+                crate::bail!("zero not allowed");
+            }
+            Ok(n)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "n 12 too large");
+        assert_eq!(f(0).unwrap_err().to_string(), "zero not allowed");
+    }
+
+    #[test]
+    fn parse_errors_convert() {
+        fn f(s: &str) -> Result<f64> {
+            Ok(s.parse::<f64>()?)
+        }
+        assert_eq!(f("-0.5").unwrap(), -0.5);
+        assert!(f("zz").is_err());
+    }
+}

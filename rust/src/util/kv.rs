@@ -1,7 +1,8 @@
 //! Minimal `key = value` config format (TOML subset; offline environment —
 //! no toml crate). Supports comments (#), strings ("..."), integers,
-//! floats, booleans and flat arrays of numbers `[a, b, c]`. Exactly the
-//! shapes `SpecPcmConfig` needs.
+//! floats, booleans, flat arrays of numbers `[a, b, c]` and one level of
+//! `[section]` headers (keys inside a section parse as `section.key`).
+//! Exactly the shapes `SpecPcmConfig` needs.
 
 use std::collections::BTreeMap;
 
@@ -54,15 +55,33 @@ impl KvValue {
 
 pub fn parse(text: &str) -> Result<BTreeMap<String, KvValue>, String> {
     let mut out = BTreeMap::new();
+    let mut section = String::new();
     for (ln, raw) in text.lines().enumerate() {
         let line = raw.trim();
         if line.is_empty() || line.starts_with('#') {
             continue;
         }
+        if let Some(inner) = line.strip_prefix('[') {
+            // Section headers take trailing comments like every other line.
+            let inner = inner.split('#').next().unwrap().trim();
+            let name = inner
+                .strip_suffix(']')
+                .ok_or(format!("line {}: unterminated [section]", ln + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", ln + 1));
+            }
+            section = name.to_string();
+            continue;
+        }
         let (key, val) = line
             .split_once('=')
             .ok_or(format!("line {}: expected 'key = value'", ln + 1))?;
-        let key = key.trim().to_string();
+        let key = if section.is_empty() {
+            key.trim().to_string()
+        } else {
+            format!("{section}.{}", key.trim())
+        };
         let val = val.trim();
         // Strip trailing comments outside strings.
         let val = if val.starts_with('"') {
@@ -111,6 +130,10 @@ fn parse_value(val: &str) -> Result<KvValue, String> {
 }
 
 /// Format helpers for the writer side.
+pub fn fmt_section(name: &str) -> String {
+    format!("\n[{name}]\n")
+}
+
 pub fn fmt_str(k: &str, v: &str) -> String {
     format!("{k} = \"{v}\"\n")
 }
@@ -163,5 +186,35 @@ mod tests {
         assert!(parse("just words").is_err());
         assert!(parse("k = \"unterminated").is_err());
         assert!(parse("k = [1, z]").is_err());
+        assert!(parse("[backend\nkind = \"ref\"").is_err());
+        assert!(parse("[]\nk = 1").is_err());
+    }
+
+    #[test]
+    fn sections_prefix_keys() {
+        let m = parse(
+            "top = 1\n\
+             [backend]  # execution settings\n\
+             kind = \"parallel\"  # comment\n\
+             threads = 8\n",
+        )
+        .unwrap();
+        assert_eq!(m["top"].as_i64(), Some(1));
+        assert_eq!(m["backend.kind"].as_str(), Some("parallel"));
+        assert_eq!(m["backend.threads"].as_i64(), Some(8));
+        assert!(!m.contains_key("kind"));
+    }
+
+    #[test]
+    fn fmt_section_roundtrip() {
+        let text = format!(
+            "{}{}{}",
+            fmt_num("top", 3),
+            fmt_section("backend"),
+            fmt_str("kind", "ref")
+        );
+        let m = parse(&text).unwrap();
+        assert_eq!(m["backend.kind"].as_str(), Some("ref"));
+        assert_eq!(m["top"].as_i64(), Some(3));
     }
 }

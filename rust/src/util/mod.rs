@@ -1,9 +1,12 @@
-//! Small shared utilities: deterministic RNG, rounding, padding helpers.
+//! Small shared utilities: deterministic RNG, rounding, padding helpers,
+//! and the crate-wide [`error`] type (no `anyhow` — offline environment).
 
+pub mod error;
 pub mod json;
 pub mod kv;
 pub mod rng;
 
+pub use error::{Error, Result};
 pub use json::Json;
 pub use rng::Rng;
 

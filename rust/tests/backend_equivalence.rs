@@ -1,0 +1,157 @@
+//! Backend equivalence and determinism (the pluggable-backend contract,
+//! DESIGN.md §8): every MVM backend must produce **bit-identical** score
+//! matrices on the same job — the dispatcher may change *where* the
+//! arithmetic runs, never *what* it computes. Runs on the default feature
+//! set (no artifacts, no external crates).
+
+use specpcm::array::AdcConfig;
+use specpcm::backend::{BackendDispatcher, MvmBackend, MvmJob, ParallelBackend, RefBackend};
+use specpcm::cluster::quality::clustered_at_incorrect;
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::{ClusteringPipeline, SearchPipeline};
+use specpcm::energy::OpCounts;
+use specpcm::ms::{ClusteringDataset, SearchDataset};
+use specpcm::util::Rng;
+
+fn rand_packed(rng: &mut Rng, len: usize, n: i64) -> Vec<f32> {
+    (0..len).map(|_| rng.range_i64(-n, n) as f32).collect()
+}
+
+/// Seeded synthetic workloads, deliberately including ragged tiles (`nq`,
+/// `nr` not multiples of 128) and a tile big enough to engage threading.
+const SHAPES: [(usize, usize, usize); 6] = [
+    (1, 1, 128),     // minimal
+    (3, 5, 128),     // tiny bucket
+    (37, 211, 256),  // ragged both ways
+    (64, 128, 384),  // aligned rows, odd width
+    (128, 100, 256), // ragged refs only
+    (50, 1024, 768), // wide tile (well above the threading cutoff)
+];
+
+#[test]
+fn ref_and_parallel_bit_identical_across_thread_counts() {
+    for (si, &(nq, nr, cp)) in SHAPES.iter().enumerate() {
+        let mut rng = Rng::new(0xe9_u64 ^ si as u64);
+        let q = rand_packed(&mut rng, nq * cp, 3);
+        let g = rand_packed(&mut rng, nr * cp, 3);
+        for adc in [AdcConfig::new(6, 512.0), AdcConfig::new(3, 128.0)] {
+            let job = MvmJob::new(&q, nq, &g, nr, cp, adc);
+            let want = RefBackend.mvm_scores(&job).unwrap();
+            assert_eq!(want.len(), nq * nr);
+            for threads in [1usize, 2, 8] {
+                let got = ParallelBackend::new(threads).mvm_scores(&job).unwrap();
+                assert_eq!(
+                    got, want,
+                    "shape ({nq},{nr},{cp}) adc {adc:?} threads {threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn backends_are_deterministic_across_repeated_runs() {
+    let (nq, nr, cp) = (37, 211, 256);
+    let mut rng = Rng::new(0xdead);
+    let q = rand_packed(&mut rng, nq * cp, 3);
+    let g = rand_packed(&mut rng, nr * cp, 3);
+    let job = MvmJob::new(&q, nq, &g, nr, cp, AdcConfig::new(6, 512.0));
+    let be = ParallelBackend::new(8);
+    let first = be.mvm_scores(&job).unwrap();
+    for _ in 0..3 {
+        assert_eq!(be.mvm_scores(&job).unwrap(), first);
+    }
+}
+
+#[test]
+fn dispatcher_matches_backends_and_counts_ops() {
+    let (nq, nr, cp) = (64, 300, 256);
+    let mut rng = Rng::new(0xd15);
+    let q = rand_packed(&mut rng, nq * cp, 3);
+    let g = rand_packed(&mut rng, nr * cp, 3);
+    let job = MvmJob::new(&q, nq, &g, nr, cp, AdcConfig::new(6, 512.0));
+    let want = RefBackend.mvm_scores(&job).unwrap();
+
+    for disp in [
+        BackendDispatcher::reference(),
+        BackendDispatcher::parallel(2),
+        BackendDispatcher::parallel(8),
+        BackendDispatcher::from_config(&SpecPcmConfig::paper_clustering()),
+    ] {
+        let mut ops = OpCounts::default();
+        let got = disp.execute(&job, &mut ops).unwrap();
+        assert_eq!(got, want, "dispatcher {}", disp.primary_name());
+        // 64 queries x ceil(300/128)=3 row tiles x 2 col tiles.
+        assert_eq!(ops.mvm_ops, 64 * 3 * 2);
+    }
+}
+
+#[test]
+fn clustering_pipeline_identical_across_backends() {
+    let cfg = SpecPcmConfig {
+        hd_dim: 1024,
+        bucket_width: 50.0,
+        num_banks: 64,
+        ..SpecPcmConfig::paper_clustering()
+    };
+    let ds = ClusteringDataset::generate("t", 31, 10, 4, 6, 8, 0);
+
+    let via_ref = ClusteringPipeline::new(cfg.clone())
+        .run(&ds, &BackendDispatcher::reference())
+        .unwrap();
+    for threads in [1usize, 2, 8] {
+        let via_par = ClusteringPipeline::new(cfg.clone())
+            .run(&ds, &BackendDispatcher::parallel(threads))
+            .unwrap();
+        assert_eq!(via_par.ops.mvm_ops, via_ref.ops.mvm_ops);
+        assert_eq!(via_par.n_buckets, via_ref.n_buckets);
+        for (a, b) in via_par.curve.iter().zip(&via_ref.curve) {
+            assert_eq!(a.clustered_ratio, b.clustered_ratio, "t={}", a.threshold);
+            assert_eq!(a.incorrect_ratio, b.incorrect_ratio, "t={}", a.threshold);
+        }
+    }
+    // And the outcome is actually useful, not just consistent.
+    assert!(clustered_at_incorrect(&via_ref.curve, 0.02) > 0.3);
+}
+
+#[test]
+fn search_pipeline_identical_across_backends() {
+    let cfg = SpecPcmConfig {
+        hd_dim: 2048,
+        num_banks: 64,
+        ..SpecPcmConfig::paper_search()
+    };
+    let ds = SearchDataset::generate("t", 32, 60, 80, 0.8, 0.2, 0, 0);
+
+    let via_ref = SearchPipeline::new(cfg.clone())
+        .run(&ds, &BackendDispatcher::reference())
+        .unwrap();
+    for threads in [2usize, 8] {
+        let via_par = SearchPipeline::new(cfg.clone())
+            .run(&ds, &BackendDispatcher::parallel(threads))
+            .unwrap();
+        assert_eq!(via_par.identified, via_ref.identified);
+        assert_eq!(via_par.correct, via_ref.correct);
+        assert_eq!(via_par.identified_peptides, via_ref.identified_peptides);
+        assert_eq!(via_par.ops.mvm_ops, via_ref.ops.mvm_ops);
+        // Raw score pairs, not just the FDR aggregate, must match exactly.
+        assert_eq!(via_par.pairs, via_ref.pairs);
+    }
+    assert!(via_ref.identified > 20, "identified {}", via_ref.identified);
+}
+
+#[test]
+fn empty_and_degenerate_jobs() {
+    let adc = AdcConfig::ideal();
+    // No queries.
+    let g = vec![1.0f32; 4 * 128];
+    let job = MvmJob::new(&[], 0, &g, 4, 128, adc);
+    assert_eq!(RefBackend.mvm_scores(&job).unwrap().len(), 0);
+    assert_eq!(ParallelBackend::new(8).mvm_scores(&job).unwrap().len(), 0);
+    // No refs.
+    let q = vec![1.0f32; 2 * 128];
+    let job = MvmJob::new(&q, 2, &[], 0, 128, adc);
+    assert_eq!(RefBackend.mvm_scores(&job).unwrap().len(), 0);
+    assert_eq!(ParallelBackend::new(8).mvm_scores(&job).unwrap().len(), 0);
+    assert_eq!(job.bank_ops(), 0);
+}

@@ -1,14 +1,26 @@
-//! Integration: end-to-end pipelines through the PJRT artifact path agree
-//! with the rust reference path and hit quality floors on synthetic
-//! workloads (DESIGN.md §8).
+//! Integration: end-to-end pipelines through the PJRT artifact backend
+//! agree with the rust reference backend and hit quality floors on
+//! synthetic workloads (DESIGN.md §8).
+//!
+//! Feature-gated: the whole file needs `--features pjrt` (plus a vendored
+//! `xla` crate and a built `artifacts/` tree). The artifact-free
+//! backend-equivalence coverage lives in `backend_equivalence.rs` and runs
+//! on the default feature set.
+#![cfg(feature = "pjrt")]
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use specpcm::backend::{BackendDispatcher, PjrtBackend};
 use specpcm::cluster::quality::clustered_at_incorrect;
 use specpcm::config::SpecPcmConfig;
 use specpcm::coordinator::{ClusteringPipeline, SearchPipeline};
 use specpcm::ms::{ClusteringDataset, SearchDataset};
 use specpcm::runtime::Runtime;
 
-fn runtime_or_skip() -> Option<Runtime> {
+/// PJRT dispatcher + a telemetry handle on its runtime, or skip when the
+/// artifacts tree has not been built.
+fn pjrt_or_skip() -> Option<(BackendDispatcher, Rc<RefCell<Runtime>>)> {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     if !std::path::Path::new(dir).join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
@@ -16,7 +28,9 @@ fn runtime_or_skip() -> Option<Runtime> {
     }
     let mut rt = Runtime::load(dir).expect("runtime loads");
     rt.manifest.dir = std::path::PathBuf::from(dir);
-    Some(rt)
+    let backend = PjrtBackend::new(rt);
+    let handle = backend.shared_runtime();
+    Some((BackendDispatcher::with_pjrt(backend, 0.3), handle))
 }
 
 fn clustering_cfg() -> SpecPcmConfig {
@@ -29,16 +43,18 @@ fn clustering_cfg() -> SpecPcmConfig {
 
 #[test]
 fn clustering_artifact_path_matches_reference_path() {
-    let Some(mut rt) = runtime_or_skip() else { return };
+    let Some((backend, rt)) = pjrt_or_skip() else { return };
     let cfg = clustering_cfg();
     let ds = ClusteringDataset::generate("t", 21, 10, 4, 6, 8, 0);
 
     let via_artifacts = ClusteringPipeline::new(cfg.clone())
-        .run(&ds, Some(&mut rt))
+        .run(&ds, &backend)
         .unwrap();
-    let via_rust = ClusteringPipeline::new(cfg).run(&ds, None).unwrap();
+    let via_rust = ClusteringPipeline::new(cfg)
+        .run(&ds, &BackendDispatcher::reference())
+        .unwrap();
 
-    assert!(rt.total_execs() > 0, "artifact path actually executed");
+    assert!(rt.borrow().total_execs() > 0, "artifact path actually executed");
     // Same seeds, bit-exact MVM -> identical quality curves & op counts.
     assert_eq!(via_artifacts.ops.mvm_ops, via_rust.ops.mvm_ops);
     for (a, b) in via_artifacts.curve.iter().zip(&via_rust.curve) {
@@ -49,7 +65,7 @@ fn clustering_artifact_path_matches_reference_path() {
 
 #[test]
 fn search_artifact_path_matches_reference_path() {
-    let Some(mut rt) = runtime_or_skip() else { return };
+    let Some((backend, rt)) = pjrt_or_skip() else { return };
     let cfg = SpecPcmConfig {
         hd_dim: 2048,
         num_banks: 64,
@@ -57,12 +73,12 @@ fn search_artifact_path_matches_reference_path() {
     };
     let ds = SearchDataset::generate("t", 22, 50, 60, 0.8, 0.2, 0, 0);
 
-    let via_artifacts = SearchPipeline::new(cfg.clone())
-        .run(&ds, Some(&mut rt))
+    let via_artifacts = SearchPipeline::new(cfg.clone()).run(&ds, &backend).unwrap();
+    let via_rust = SearchPipeline::new(cfg)
+        .run(&ds, &BackendDispatcher::reference())
         .unwrap();
-    let via_rust = SearchPipeline::new(cfg).run(&ds, None).unwrap();
 
-    assert!(rt.total_execs() > 0);
+    assert!(rt.borrow().total_execs() > 0);
     assert_eq!(via_artifacts.identified, via_rust.identified);
     assert_eq!(via_artifacts.correct, via_rust.correct);
     assert_eq!(
@@ -73,10 +89,10 @@ fn search_artifact_path_matches_reference_path() {
 
 #[test]
 fn clustering_quality_floor_through_artifacts() {
-    let Some(mut rt) = runtime_or_skip() else { return };
+    let Some((backend, _rt)) = pjrt_or_skip() else { return };
     let ds = ClusteringDataset::generate("t", 23, 15, 4, 8, 10, 0);
     let out = ClusteringPipeline::new(clustering_cfg())
-        .run(&ds, Some(&mut rt))
+        .run(&ds, &backend)
         .unwrap();
     let q = clustered_at_incorrect(&out.curve, 0.02);
     assert!(q > 0.3, "clustered ratio {q} at 2% incorrect");
@@ -85,22 +101,22 @@ fn clustering_quality_floor_through_artifacts() {
 #[test]
 fn search_default_d8192_uses_encoder_artifact_and_size_router() {
     // The paper-default search dimension (D=8192, n=3) must run its
-    // encoding through the compiled enc_pack_d8192_n3 artifact. The MVM
-    // router sends the *small* candidate buckets of this synthetic set to
-    // the bit-identical rust path (utilization < 30% of the fixed B x R
+    // encoding through the compiled enc_pack_d8192_n3 artifact. The
+    // dispatcher sends the *small* candidate buckets of this synthetic set
+    // to the bit-identical rust path (utilization < 30% of the fixed B x R
     // artifact geometry) — that routing is part of the contract.
-    let Some(mut rt) = runtime_or_skip() else { return };
+    let Some((backend, rt)) = pjrt_or_skip() else { return };
     let cfg = SpecPcmConfig {
         num_banks: 64,
         ..SpecPcmConfig::paper_search()
     };
     assert_eq!(cfg.hd_dim, 8192);
     let ds = SearchDataset::generate("t", 24, 30, 40, 0.8, 0.2, 0, 0);
-    let out = SearchPipeline::new(cfg).run(&ds, Some(&mut rt)).unwrap();
+    let out = SearchPipeline::new(cfg).run(&ds, &backend).unwrap();
     assert!(
-        rt.exec_counts.contains_key("enc_pack_d8192_n3"),
+        rt.borrow().exec_counts.contains_key("enc_pack_d8192_n3"),
         "encoder artifact executed, got {:?}",
-        rt.exec_counts.keys().collect::<Vec<_>>()
+        rt.borrow().exec_counts.keys().collect::<Vec<_>>()
     );
     assert!(out.identified > 10, "identified {}", out.identified);
     assert!(out.correct as f64 >= 0.8 * out.identified as f64);
@@ -108,9 +124,9 @@ fn search_default_d8192_uses_encoder_artifact_and_size_router() {
 
 #[test]
 fn dense_workload_routes_mvm_to_artifact() {
-    // A candidate-dense workload must cross the utilization threshold and
-    // execute the compiled MVM variant.
-    let Some(mut rt) = runtime_or_skip() else { return };
+    // A candidate-dense workload must cross the dispatcher's utilization
+    // threshold and execute the compiled MVM variant.
+    let Some((backend, rt)) = pjrt_or_skip() else { return };
     let cfg = SpecPcmConfig {
         hd_dim: 2048, // c = 768 variant
         num_banks: 64,
@@ -118,11 +134,11 @@ fn dense_workload_routes_mvm_to_artifact() {
         ..SpecPcmConfig::paper_search()
     };
     let ds = SearchDataset::generate("t", 25, 400, 80, 0.8, 0.2, 0, 0);
-    let out = SearchPipeline::new(cfg).run(&ds, Some(&mut rt)).unwrap();
+    let out = SearchPipeline::new(cfg).run(&ds, &backend).unwrap();
     assert!(
-        rt.exec_counts.contains_key("mvm_c768"),
+        rt.borrow().exec_counts.contains_key("mvm_c768"),
         "expected mvm_c768 executions, got {:?}",
-        rt.exec_counts.keys().collect::<Vec<_>>()
+        rt.borrow().exec_counts.keys().collect::<Vec<_>>()
     );
     assert!(out.identified > 10, "identified {}", out.identified);
 }

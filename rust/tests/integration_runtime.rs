@@ -1,10 +1,12 @@
 //! Integration: AOT artifacts loaded through PJRT agree **bit-exactly**
 //! with the rust reference implementations (DESIGN.md §8).
 //!
-//! These tests skip gracefully when `artifacts/` has not been built; run
-//! `make artifacts` first for full coverage. The exactness argument (pow-2
-//! ADC full-scale keeps the whole pipeline in exactly-representable f32)
-//! is laid out in python/tests/test_imc_mvm.py.
+//! Feature-gated: the whole file needs `--features pjrt` (plus a vendored
+//! `xla` crate). The tests additionally skip gracefully when `artifacts/`
+//! has not been built; run `make artifacts` first for full coverage. The
+//! exactness argument (pow-2 ADC full-scale keeps the whole pipeline in
+//! exactly-representable f32) is laid out in python/tests/test_imc_mvm.py.
+#![cfg(feature = "pjrt")]
 
 use specpcm::array::{imc_mvm_ref, AdcConfig};
 use specpcm::hd::{self, ItemMemory};
