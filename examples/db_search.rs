@@ -46,10 +46,15 @@ fn baseline_identify(
 }
 
 fn main() -> Result<()> {
+    // Default scale 0.18 keeps the library inside the paper config's bank
+    // capacity (D=8192 n=3 -> 22 segments -> 5 groups x 128 = 640 slots;
+    // 0.18 -> 288 targets + 288 decoys = 576 rows). The engine enforces
+    // this: a larger scale fails with a CapacityError telling you to raise
+    // num_banks.
     let scale: f64 = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
-        .unwrap_or(0.25);
+        .unwrap_or(0.18);
 
     let cfg = SpecPcmConfig::paper_search();
     let ds = SearchDataset::hek293_like(cfg.seed, scale);

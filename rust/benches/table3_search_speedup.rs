@@ -10,19 +10,25 @@
 use specpcm::backend::BackendDispatcher;
 use specpcm::baselines::latency_model::{paper_speedup, search_for};
 use specpcm::config::SpecPcmConfig;
-use specpcm::coordinator::SearchPipeline;
+use specpcm::coordinator::{SearchEngine, SearchPipeline};
 use specpcm::energy::GpuEnvelope;
-use specpcm::ms::SearchDataset;
+use specpcm::ms::{SearchDataset, Spectrum};
 use specpcm::telemetry::render_table;
 use specpcm::util::error::Result;
 
 fn main() -> Result<()> {
+    // Paper hardware config (128 banks). The engine enforces bank capacity:
+    // D=8192 n=3 packs to 22 segments -> 5 groups x 128 = 640 reference
+    // slots, so the HEK293-like synthetic subset runs at scale 0.2
+    // (320 targets + 320 decoys = 640 rows) instead of 0.3 — the latency
+    // extrapolation normalizes per query, so the reproduced Table 3 numbers
+    // keep modeling the paper's 128-bank accelerator.
     let cfg = SpecPcmConfig::paper_search();
     let backend = BackendDispatcher::from_config(&cfg);
 
     for (preset, dataset) in [
         (SearchDataset::iprg2012_like(cfg.seed, 0.3), "iPRG2012"),
-        (SearchDataset::hek293_like(cfg.seed, 0.3), "HEK293"),
+        (SearchDataset::hek293_like(cfg.seed, 0.2), "HEK293"),
     ] {
         let out = SearchPipeline::new(cfg.clone()).run(&preset, &backend)?;
         // Extrapolate to paper scale. Per-query IMC work is proportional to
@@ -112,5 +118,36 @@ fn main() -> Result<()> {
              absolute differs — simulator + synthetic data)\n"
         );
     }
+
+    // ---- program-once serving (the Table 3 deployment shape) ---------------
+    // The persistent engine charges library encode+program exactly once;
+    // only the marginal per-batch query cost repeats. A pipeline re-run
+    // would pay the one-time column again on every sweep iteration.
+    let ds = SearchDataset::iprg2012_like(cfg.seed, 0.3);
+    let engine = SearchEngine::program(cfg.clone(), &ds, &backend)?;
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let outcomes = engine.serve_chunked(&queries, 4, &backend)?;
+    let cost = engine.serving_cost(&outcomes);
+    let one_shot = SearchPipeline::new(cfg).run(&ds, &backend)?;
+    let served = engine.finalize(&queries, &outcomes)?;
+    assert_eq!(served.pairs, one_shot.pairs, "serving is bit-identical");
+    assert!(
+        outcomes.iter().all(|b| b.ops.program_rounds == 0),
+        "marginal batches must not re-pay programming"
+    );
+    assert_eq!(
+        engine.program_ops().program_rounds,
+        one_shot.ops.program_rounds,
+        "programming charged exactly once"
+    );
+    println!(
+        "serving check OK (iPRG2012, {} batches): one-time program {:.4} mJ, \
+         marginal queries {:.4} mJ ({:.4} mJ amortized/batch) — pipeline \
+         re-runs would pay the one-time column again every sweep",
+        cost.n_batches,
+        cost.one_time_j * 1e3,
+        cost.marginal_j * 1e3,
+        cost.amortized_j_per_batch() * 1e3
+    );
     Ok(())
 }

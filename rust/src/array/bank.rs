@@ -67,6 +67,17 @@ impl ArrayBank {
         pulses
     }
 
+    /// Mirror an externally programmed (already noisy) conductance segment
+    /// into a row — used to load coordinator-programmed state (e.g. a
+    /// `SearchEngine` library) into ISA banks without double-charging the
+    /// programming work or re-drawing write noise.
+    pub fn load_programmed_row(&mut self, row: usize, segment: &[f32]) {
+        assert!(row < ARRAY_DIM, "row {row} out of range");
+        assert_eq!(segment.len(), ARRAY_DIM, "segment width");
+        self.g[row * ARRAY_DIM..(row + 1) * ARRAY_DIM].copy_from_slice(segment);
+        self.row_valid[row] = true;
+    }
+
     /// Whole-array IMC MVM: drive a 128-wide query segment on the SLs with
     /// all WLs active; returns 128 ADC-quantized per-row partial sums.
     /// Invalid rows return 0 (their cells stay at differential zero).

@@ -4,7 +4,10 @@
 //! consecutive banks at the same row index (paper §III-C); a *bank group*
 //! of `segments` banks therefore holds up to 128 HVs. The allocator hands
 //! out (group, row) slots, tracks freedom, and never double-books — the
-//! invariant proptested in `rust/tests/proptest_coordinator.rs`.
+//! invariant proptested in `rust/tests/property_tests.rs`. The engine
+//! (`coordinator::engine`) allocates through it for every programmed row,
+//! so placement respects bank capacity and over-full libraries fail with a
+//! typed `CapacityError`.
 
 use crate::array::ARRAY_DIM;
 
@@ -21,32 +24,50 @@ pub struct SegmentAllocator {
     segments: usize,
     /// Total bank groups available.
     groups: usize,
+    /// Physical banks the allocator was built for.
+    num_banks: usize,
     /// Free rows per group (LIFO).
     free: Vec<Vec<usize>>,
 }
 
 impl SegmentAllocator {
     /// `num_banks` physical banks serving HVs of `packed_width` (must be a
-    /// multiple of 128).
+    /// multiple of 128). Panicking form of [`SegmentAllocator::try_new`].
     pub fn new(num_banks: usize, packed_width: usize) -> Self {
-        assert!(packed_width > 0 && packed_width % ARRAY_DIM == 0);
+        Self::try_new(num_banks, packed_width).unwrap()
+    }
+
+    /// Fallible constructor: errors when the packed width is not
+    /// segment-aligned or a single HV is wider than all banks together.
+    pub fn try_new(num_banks: usize, packed_width: usize) -> Result<Self, String> {
+        if packed_width == 0 || packed_width % ARRAY_DIM != 0 {
+            return Err(format!(
+                "packed width {packed_width} is not a multiple of {ARRAY_DIM}"
+            ));
+        }
         let segments = packed_width / ARRAY_DIM;
         let groups = num_banks / segments;
-        assert!(
-            groups > 0,
-            "{num_banks} banks cannot hold a {packed_width}-wide HV ({segments} segments)"
-        );
-        SegmentAllocator {
+        if groups == 0 {
+            return Err(format!(
+                "{num_banks} banks cannot hold a {packed_width}-wide HV ({segments} segments)"
+            ));
+        }
+        Ok(SegmentAllocator {
             segments,
             groups,
+            num_banks,
             free: (0..groups)
                 .map(|_| (0..ARRAY_DIM).rev().collect())
                 .collect(),
-        }
+        })
     }
 
     pub fn segments(&self) -> usize {
         self.segments
+    }
+
+    pub fn num_banks(&self) -> usize {
+        self.num_banks
     }
 
     pub fn capacity(&self) -> usize {

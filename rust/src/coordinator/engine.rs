@@ -1,0 +1,643 @@
+//! Persistent program-once / query-many DB-search engine (paper Table 3,
+//! §III: the reference library is programmed into the PCM banks **once**
+//! and query batches stream against it).
+//!
+//! # One-time vs. per-batch energy accounting
+//!
+//! [`SearchEngine::program`] encodes the target+decoy library, places every
+//! reference HV on a physical (bank-group, row) slot through the
+//! [`SegmentAllocator`], and programs the packed rows through the
+//! write-verify [`ProgramContext`]. All of that work — ASIC encode+pack of
+//! the library, programming pulse rounds, verify reads — is charged to the
+//! engine's **one-time** [`OpCounts`]/[`EnergyReport`]
+//! ([`SearchEngine::program_ops`] / [`SearchEngine::program_report`]) and is
+//! *never* charged again, no matter how many batches are served.
+//!
+//! Each [`SearchEngine::search_batch`] call reuses the programmed noisy
+//! conductances and returns a [`BatchOutcome`] whose ops/report cover only
+//! the **marginal** per-batch work: query encode+pack, IMC score tiles, and
+//! the ASIC top-1 merge. Amortized cost over a serving run is therefore
+//! `program_report + sum(batch reports)`, which is exactly what
+//! [`SearchEngine::finalize`] folds into the one-shot
+//! [`SearchOutcomeSummary`] shape — bit-identical to a monolithic
+//! [`super::SearchPipeline::run`] on the same dataset, regardless of how
+//! the queries were split into batches.
+//!
+//! A library that does not fit the configured banks fails construction
+//! with a typed [`CapacityError`] instead of silently ignoring `num_banks`.
+
+use std::collections::BTreeMap;
+
+use crate::array::AdcConfig;
+use crate::backend::{BackendDispatcher, MvmJob};
+use crate::config::SpecPcmConfig;
+use crate::device::{MlcConfig, NoiseModel, Programmer};
+use crate::energy::{EnergyLatencyModel, EnergyReport, OpCounts};
+use crate::ms::bucket::{bucket_by_precursor, candidate_keys_open, BucketKey};
+use crate::ms::synth::PTM_SHIFTS;
+use crate::ms::{SearchDataset, Spectrum};
+use crate::search::fdr_filter;
+use crate::telemetry::StageTimer;
+use crate::util::error::{Error, Result};
+use crate::util::Rng;
+
+use super::allocator::{SegmentAllocator, Slot};
+use super::frontend::HdFrontend;
+use super::pipeline::{program_refs, SearchOutcomeSummary};
+
+/// Typed error: a reference set that does not fit the configured banks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CapacityError {
+    /// Reference rows the library needs (targets + decoys).
+    pub rows_needed: usize,
+    /// Row slots the configured banks provide.
+    pub capacity: usize,
+    pub num_banks: usize,
+    /// 128-wide segments per packed HV.
+    pub segments: usize,
+}
+
+impl std::fmt::Display for CapacityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "library needs {} reference rows, which exceeds the {} row slots \
+             {} banks provide for {}-segment HVs; raise num_banks or shrink \
+             the library",
+            self.rows_needed, self.capacity, self.num_banks, self.segments
+        )
+    }
+}
+
+impl std::error::Error for CapacityError {}
+
+impl From<CapacityError> for Error {
+    fn from(e: CapacityError) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Shared PCM-programming state: the write-verify programmer, the
+/// deterministic programming-noise RNG stream, and the bank-capacity
+/// allocator. Both pipelines drive all array programming through one
+/// context, so noise streams and physical placement are identical whether
+/// rows are programmed in one shot (DB-search library) or transiently per
+/// bucket (clustering).
+pub struct ProgramContext {
+    pub programmer: Programmer,
+    pub allocator: SegmentAllocator,
+    rng: Rng,
+}
+
+impl ProgramContext {
+    /// `seed_tag` keeps the clustering and search noise streams distinct
+    /// (`seed ^ 0xc1` / `seed ^ 0x5e`, matching the pre-engine pipelines).
+    pub fn new(cfg: &SpecPcmConfig, packed_width: usize, seed_tag: u64) -> Result<Self> {
+        let programmer = Programmer::new(
+            NoiseModel::new(cfg.material, MlcConfig::new(cfg.mlc_bits)),
+            cfg.write_verify,
+        );
+        let allocator = SegmentAllocator::try_new(cfg.num_banks, packed_width)?;
+        Ok(ProgramContext {
+            programmer,
+            allocator,
+            rng: Rng::new(cfg.seed ^ seed_tag),
+        })
+    }
+
+    /// Typed pre-flight check: do `n_rows` more HVs fit the free slots?
+    pub fn check_fit(&self, n_rows: usize) -> Result<(), CapacityError> {
+        if n_rows > self.allocator.free_slots() {
+            return Err(CapacityError {
+                rows_needed: n_rows,
+                capacity: self.allocator.capacity(),
+                num_banks: self.allocator.num_banks(),
+                segments: self.allocator.segments(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Allocate slots for and program `n_rows` packed rows (row-major
+    /// `n_rows x cp`). Returns the noisy stored conductances plus the
+    /// physical slots, or a [`CapacityError`] when the rows don't fit.
+    pub fn program_rows(
+        &mut self,
+        packed: &[f32],
+        n_rows: usize,
+        cp: usize,
+        ops: &mut OpCounts,
+    ) -> Result<(Vec<f32>, Vec<Slot>)> {
+        self.check_fit(n_rows)?;
+        let mut slots = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            slots.push(self.allocator.alloc().expect("free slots were checked"));
+        }
+        let noisy = program_refs(packed, n_rows, cp, &self.programmer, &mut self.rng, ops);
+        Ok((noisy, slots))
+    }
+
+    /// Release transient rows (clustering reprograms the banks per bucket).
+    pub fn release_rows(&mut self, slots: Vec<Slot>) {
+        for s in slots {
+            self.allocator.release(s);
+        }
+    }
+}
+
+/// Marginal result of serving one query batch against the programmed
+/// library. Ops/report cover *only* this batch's work (query encode, IMC
+/// scoring, top-1 merge) — the one-time library programming lives on the
+/// engine.
+#[derive(Clone, Debug, Default)]
+pub struct BatchOutcome {
+    /// Per-query best (target score, decoy score) pairs, in batch order.
+    pub pairs: Vec<(f32, f32)>,
+    /// Best-matching target peptide id per query, in batch order.
+    pub matched: Vec<Option<u32>>,
+    /// Marginal op counts for this batch only.
+    pub ops: OpCounts,
+    /// Energy/latency of the marginal ops alone.
+    pub report: EnergyReport,
+    pub wall: StageTimer,
+}
+
+/// One-time vs. marginal vs. amortized energy/latency split over a serving
+/// run — the single place the accounting formulas live; the CLI, the
+/// streaming example and the Table 3 bench only format it.
+#[derive(Clone, Copy, Debug)]
+pub struct ServingCost {
+    /// Library encode+program energy, paid once at engine construction.
+    pub one_time_j: f64,
+    /// Sum of the served batches' marginal energies.
+    pub marginal_j: f64,
+    /// One-time programming latency (sequential).
+    pub one_time_s: f64,
+    /// Sum of the served batches' overlapped latencies.
+    pub marginal_s: f64,
+    pub n_batches: usize,
+}
+
+impl ServingCost {
+    pub fn amortized_j_per_batch(&self) -> f64 {
+        (self.one_time_j + self.marginal_j) / self.n_batches.max(1) as f64
+    }
+
+    pub fn amortized_s_per_batch(&self) -> f64 {
+        (self.one_time_s + self.marginal_s) / self.n_batches.max(1) as f64
+    }
+}
+
+/// Program-once / query-many DB-search engine. See the module docs for the
+/// one-time vs. per-batch energy-accounting split.
+pub struct SearchEngine {
+    pub cfg: SpecPcmConfig,
+    pub frontend: HdFrontend,
+    ctx: ProgramContext,
+    adc: AdcConfig,
+    cp: usize,
+    n_targets: usize,
+    /// Peptide id per reference row (targets then decoys) — the only
+    /// per-spectrum metadata serving needs, so the engine does not retain
+    /// the peak data of a library it already programmed.
+    ref_peptides: Vec<Option<u32>>,
+    /// Programmed noisy conductances, row-major `n_refs x cp`.
+    noisy_refs: Vec<f32>,
+    /// Physical (bank group, row) slot of each reference row.
+    ref_slots: Vec<Slot>,
+    ref_buckets: BTreeMap<BucketKey, Vec<usize>>,
+    program_ops: OpCounts,
+    program_report: EnergyReport,
+    program_wall: StageTimer,
+}
+
+impl SearchEngine {
+    /// Typed pre-flight: would an `n_rows`-row reference library fit
+    /// `cfg`'s banks? [`SearchEngine::program`] returns the crate-wide
+    /// string-backed error, so callers that want to react programmatically
+    /// (auto-raise `num_banks`, shard the library) should gate on this
+    /// first and match the [`CapacityError`] fields directly.
+    pub fn check_capacity(cfg: &SpecPcmConfig, n_rows: usize) -> Result<(), CapacityError> {
+        let packed = crate::hd::padded_packed_len(cfg.hd_dim, cfg.packing());
+        match SegmentAllocator::try_new(cfg.num_banks, packed) {
+            Ok(a) if n_rows <= a.capacity() => Ok(()),
+            Ok(a) => Err(CapacityError {
+                rows_needed: n_rows,
+                capacity: a.capacity(),
+                num_banks: cfg.num_banks,
+                segments: a.segments(),
+            }),
+            // A single HV wider than all banks together: zero capacity.
+            Err(_) => Err(CapacityError {
+                rows_needed: n_rows,
+                capacity: 0,
+                num_banks: cfg.num_banks,
+                segments: packed / crate::array::ARRAY_DIM,
+            }),
+        }
+    }
+
+    /// Encode + program the dataset's reference library (targets followed
+    /// by decoys) exactly once. Fails with a [`CapacityError`] — before any
+    /// encode work is spent — when the library exceeds the banks' capacity
+    /// (use [`SearchEngine::check_capacity`] for the typed pre-flight).
+    pub fn program(
+        cfg: SpecPcmConfig,
+        dataset: &SearchDataset,
+        backend: &BackendDispatcher,
+    ) -> Result<Self> {
+        let frontend = HdFrontend::new(&cfg);
+        let cp = frontend.packed_width;
+        let adc = AdcConfig::default_for_packing(cfg.adc_bits, cfg.packing());
+        let mut ctx = ProgramContext::new(&cfg, cp, 0x5e)?;
+        let mut ops = OpCounts::default();
+        let mut wall = StageTimer::new();
+
+        let all_refs: Vec<&Spectrum> = dataset
+            .library
+            .iter()
+            .chain(dataset.decoys.iter())
+            .collect();
+        let n_targets = dataset.library.len();
+        ctx.check_fit(all_refs.len())?;
+
+        let packed_refs = wall.time("encode refs", || {
+            frontend.encode_pack(&all_refs, backend, &mut ops)
+        })?;
+        let (noisy_refs, ref_slots) = wall.time("program refs", || {
+            ctx.program_rows(&packed_refs, all_refs.len(), cp, &mut ops)
+        })?;
+
+        // Bucket the references for candidate selection, then keep only the
+        // peptide ids — the peak data is already encoded into `noisy_refs`.
+        let ref_spectra: Vec<Spectrum> = all_refs.iter().map(|s| (*s).clone()).collect();
+        let ref_buckets = bucket_by_precursor(&ref_spectra, cfg.bucket_width);
+        let ref_peptides: Vec<Option<u32>> = ref_spectra.iter().map(|s| s.peptide_id).collect();
+
+        let model = EnergyLatencyModel::new(cfg.material, cfg.adc_bits, cfg.num_banks);
+        let program_report = model.report(&ops);
+
+        Ok(SearchEngine {
+            cfg,
+            frontend,
+            ctx,
+            adc,
+            cp,
+            n_targets,
+            ref_peptides,
+            noisy_refs,
+            ref_slots,
+            ref_buckets,
+            program_ops: ops,
+            program_report,
+            program_wall: wall,
+        })
+    }
+
+    /// One-time library ops (encode + pack + program + verify), charged at
+    /// construction and never again.
+    pub fn program_ops(&self) -> &OpCounts {
+        &self.program_ops
+    }
+
+    /// Energy/latency of the one-time library programming alone.
+    pub fn program_report(&self) -> &EnergyReport {
+        &self.program_report
+    }
+
+    /// Reference rows programmed (targets + decoys).
+    pub fn n_refs(&self) -> usize {
+        self.ref_peptides.len()
+    }
+
+    pub fn n_targets(&self) -> usize {
+        self.n_targets
+    }
+
+    /// Packed width (`cp`) of every programmed row.
+    pub fn packed_width(&self) -> usize {
+        self.cp
+    }
+
+    /// Physical slot of each reference row, in row order.
+    pub fn slots(&self) -> &[Slot] {
+        &self.ref_slots
+    }
+
+    /// Physical bank indices a reference row's segments occupy.
+    pub fn banks_of(&self, slot: Slot) -> Vec<usize> {
+        self.ctx.allocator.banks_of(slot)
+    }
+
+    /// Stored noisy conductances of reference row `ri` (`cp` wide).
+    pub fn noisy_row(&self, ri: usize) -> &[f32] {
+        &self.noisy_refs[ri * self.cp..(ri + 1) * self.cp]
+    }
+
+    /// Serve one query batch against the programmed library. Scores are
+    /// bit-identical regardless of how queries are split into batches: the
+    /// per-(query, candidate) IMC score depends only on the query HV, the
+    /// stored conductances and the ADC, never on batch composition.
+    pub fn search_batch(
+        &self,
+        queries: &[&Spectrum],
+        backend: &BackendDispatcher,
+    ) -> Result<BatchOutcome> {
+        let cfg = &self.cfg;
+        let cp = self.cp;
+        let mut ops = OpCounts::default();
+        let mut wall = StageTimer::new();
+
+        let packed_queries = wall.time("encode queries", || {
+            self.frontend.encode_pack(queries, backend, &mut ops)
+        })?;
+
+        // Group queries by identical candidate-key sets so one IMC batch
+        // shares one reference row block.
+        let mut groups: BTreeMap<Vec<BucketKey>, Vec<usize>> = BTreeMap::new();
+        for (qi, q) in queries.iter().enumerate() {
+            let keys = candidate_keys_open(q.charge, q.precursor_mz, cfg.bucket_width, &PTM_SHIFTS);
+            groups.entry(keys).or_default().push(qi);
+        }
+
+        // Per-query best (target score, decoy score) + matched peptide.
+        let mut best: Vec<(f32, f32, Option<u32>)> =
+            vec![(f32::NEG_INFINITY, f32::NEG_INFINITY, None); queries.len()];
+
+        for (keys, q_idxs) in &groups {
+            let mut cand: Vec<usize> = keys
+                .iter()
+                .filter_map(|k| self.ref_buckets.get(k))
+                .flatten()
+                .copied()
+                .collect();
+            cand.sort_unstable();
+            cand.dedup();
+            if cand.is_empty() {
+                continue;
+            }
+
+            // Gather candidate rows (targets + decoys interleaved by index).
+            let mut cand_rows = Vec::with_capacity(cand.len() * cp);
+            for &ri in &cand {
+                cand_rows.extend_from_slice(&self.noisy_refs[ri * cp..(ri + 1) * cp]);
+            }
+            let mut q_rows = Vec::with_capacity(q_idxs.len() * cp);
+            for &qi in q_idxs {
+                q_rows.extend_from_slice(&packed_queries[qi * cp..(qi + 1) * cp]);
+            }
+
+            let scores = wall.time("similarity (IMC)", || {
+                backend.execute(
+                    &MvmJob::new(&q_rows, q_idxs.len(), &cand_rows, cand.len(), cp, self.adc),
+                    &mut ops,
+                )
+            })?;
+
+            wall.time("top-1 + merge (ASIC)", || {
+                for (bi, &qi) in q_idxs.iter().enumerate() {
+                    let row = &scores[bi * cand.len()..(bi + 1) * cand.len()];
+                    for (ci, &ri) in cand.iter().enumerate() {
+                        let s = row[ci];
+                        if ri < self.n_targets {
+                            if s > best[qi].0 {
+                                best[qi].0 = s;
+                                best[qi].2 = self.ref_peptides[ri];
+                            }
+                        } else if s > best[qi].1 {
+                            best[qi].1 = s;
+                        }
+                    }
+                }
+            });
+            ops.merge_elements += (q_idxs.len() * cand.len()) as u64;
+        }
+
+        let pairs: Vec<(f32, f32)> = best.iter().map(|&(t, d, _)| (t, d)).collect();
+        let matched: Vec<Option<u32>> = best.iter().map(|&(_, _, m)| m).collect();
+        let model = EnergyLatencyModel::new(cfg.material, cfg.adc_bits, cfg.num_banks);
+        let report = model.report(&ops);
+
+        Ok(BatchOutcome {
+            pairs,
+            matched,
+            ops,
+            report,
+            wall,
+        })
+    }
+
+    /// Split `queries` into contiguous batches and serve each in order —
+    /// the shared serving loop behind the CLI's `--serve-batches`, the
+    /// streaming example and the Table 3 bench. Returns exactly
+    /// `min(n_batches, queries.len())` batches (always at least one, so
+    /// per-batch averages never divide by zero), with sizes differing by
+    /// at most one.
+    pub fn serve_chunked(
+        &self,
+        queries: &[&Spectrum],
+        n_batches: usize,
+        backend: &BackendDispatcher,
+    ) -> Result<Vec<BatchOutcome>> {
+        let n = n_batches.max(1).min(queries.len().max(1));
+        let base = queries.len() / n;
+        let rem = queries.len() % n;
+        let mut outcomes = Vec::with_capacity(n);
+        let mut start = 0;
+        for i in 0..n {
+            let len = base + usize::from(i < rem);
+            outcomes.push(self.search_batch(&queries[start..start + len], backend)?);
+            start += len;
+        }
+        Ok(outcomes)
+    }
+
+    /// Fold served batches into the one-time/marginal/amortized cost split.
+    pub fn serving_cost(&self, batches: &[BatchOutcome]) -> ServingCost {
+        ServingCost {
+            one_time_j: self.program_report.total_j(),
+            marginal_j: batches.iter().map(|b| b.report.total_j()).sum(),
+            one_time_s: self.program_report.total_latency_s(),
+            marginal_s: batches.iter().map(|b| b.report.overlapped_latency_s()).sum(),
+            n_batches: batches.len(),
+        }
+    }
+
+    /// Pool accumulated batch outcomes into the one-shot summary shape:
+    /// target-decoy FDR over *all* pairs, correctness against ground truth,
+    /// and total ops = one-time programming + every marginal batch.
+    /// `queries` must be the concatenation of the served batches, in order.
+    pub fn finalize(
+        &self,
+        queries: &[&Spectrum],
+        batches: &[BatchOutcome],
+    ) -> Result<SearchOutcomeSummary> {
+        let total: usize = batches.iter().map(|b| b.pairs.len()).sum();
+        crate::ensure!(
+            total == queries.len(),
+            "finalize: {total} batch results for {} queries",
+            queries.len()
+        );
+
+        let mut pairs = Vec::with_capacity(total);
+        let mut matched = Vec::with_capacity(total);
+        let mut ops = self.program_ops;
+        let mut wall = self.program_wall.clone();
+        for b in batches {
+            pairs.extend_from_slice(&b.pairs);
+            matched.extend_from_slice(&b.matched);
+            ops += &b.ops;
+            for (stage, t, _) in b.wall.breakdown() {
+                wall.add(&stage, t);
+            }
+        }
+
+        let fdr = wall.time("FDR filter", || fdr_filter(&pairs, self.cfg.fdr));
+
+        let mut correct = 0usize;
+        let mut identified_peptides = Vec::new();
+        for &qi in &fdr.accepted {
+            if let (Some(m), Some(truth)) = (matched[qi], queries[qi].peptide_id) {
+                if m == truth {
+                    correct += 1;
+                    identified_peptides.push(m);
+                }
+            }
+        }
+        identified_peptides.sort_unstable();
+        identified_peptides.dedup();
+
+        let model = EnergyLatencyModel::new(self.cfg.material, self.cfg.adc_bits, self.cfg.num_banks);
+        let report = model.report(&ops);
+
+        Ok(SearchOutcomeSummary {
+            identified: fdr.accepted.len(),
+            pairs,
+            correct,
+            total_queries: queries.len(),
+            identified_peptides,
+            fdr,
+            ops,
+            report,
+            wall,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SpecPcmConfig {
+        SpecPcmConfig {
+            hd_dim: 2048,
+            bucket_width: 5.0,
+            num_banks: 64,
+            ..SpecPcmConfig::paper_search()
+        }
+    }
+
+    #[test]
+    fn engine_programs_once_and_serves() {
+        let ds = SearchDataset::generate("t", 41, 30, 20, 0.8, 0.2, 0, 0);
+        let be = BackendDispatcher::reference();
+        let engine = SearchEngine::program(small_cfg(), &ds, &be).unwrap();
+        assert_eq!(engine.n_refs(), 60);
+        assert_eq!(engine.n_targets(), 30);
+        assert_eq!(engine.slots().len(), 60);
+        assert!(engine.program_ops().program_rounds > 0);
+        assert!(engine.program_report().program_j > 0.0);
+
+        let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+        let batch = engine.search_batch(&queries, &be).unwrap();
+        assert_eq!(batch.pairs.len(), queries.len());
+        // Marginal batches never pay programming again.
+        assert_eq!(batch.ops.program_rounds, 0);
+        assert_eq!(batch.ops.verify_rounds, 0);
+        assert!(batch.ops.mvm_ops > 0);
+
+        let out = engine.finalize(&queries, &[batch]).unwrap();
+        assert_eq!(out.total_queries, queries.len());
+        assert_eq!(out.ops.program_rounds, engine.program_ops().program_rounds);
+    }
+
+    #[test]
+    fn serve_chunked_exact_batch_count_and_coverage() {
+        let ds = SearchDataset::generate("t", 43, 20, 8, 0.8, 0.2, 0, 0);
+        let be = BackendDispatcher::reference();
+        let engine = SearchEngine::program(small_cfg(), &ds, &be).unwrap();
+        let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+        // 8 queries into 6 batches: exactly 6, sizes differing by <= 1.
+        let outcomes = engine.serve_chunked(&queries, 6, &be).unwrap();
+        assert_eq!(outcomes.len(), 6);
+        let sizes: Vec<usize> = outcomes.iter().map(|b| b.pairs.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 8);
+        assert!(sizes.iter().all(|&s| s == 1 || s == 2), "{sizes:?}");
+
+        // More batches than queries degrades to one query per batch.
+        let outcomes = engine.serve_chunked(&queries, 100, &be).unwrap();
+        assert_eq!(outcomes.len(), 8);
+
+        // Zero queries still yields one (empty) outcome — per-batch
+        // averages downstream never divide by zero.
+        let outcomes = engine.serve_chunked(&[], 3, &be).unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert!(outcomes[0].pairs.is_empty());
+    }
+
+    #[test]
+    fn check_capacity_typed_preflight() {
+        // hd 2048 / n=3 -> 6 segments; 64 banks -> 10 groups x 128 = 1280.
+        assert!(SearchEngine::check_capacity(&small_cfg(), 1280).is_ok());
+        let e = SearchEngine::check_capacity(&small_cfg(), 1281).unwrap_err();
+        assert_eq!(e.capacity, 1280);
+        assert_eq!(e.num_banks, 64);
+        // A single HV wider than all banks together: zero capacity.
+        let cfg = SpecPcmConfig {
+            num_banks: 2,
+            ..small_cfg()
+        };
+        let e = SearchEngine::check_capacity(&cfg, 1).unwrap_err();
+        assert_eq!(e.capacity, 0);
+        assert_eq!(e.segments, 6);
+    }
+
+    // The over-capacity `SearchEngine::program` error path is covered at
+    // integration level in `rust/tests/engine_equivalence.rs`; the unit
+    // tests below pin the typed field values of the pre-flight checks.
+
+    #[test]
+    fn check_fit_reports_capacity_fields() {
+        let cfg = SpecPcmConfig {
+            num_banks: 6,
+            ..small_cfg()
+        };
+        let ctx = ProgramContext::new(&cfg, 768, 0x5e).unwrap();
+        let e = ctx.check_fit(200).unwrap_err();
+        assert_eq!(e.rows_needed, 200);
+        assert_eq!(e.capacity, 128);
+        assert_eq!(e.num_banks, 6);
+        assert_eq!(e.segments, 6);
+        assert!(ctx.check_fit(128).is_ok());
+    }
+
+    #[test]
+    fn transient_rows_release_and_reuse() {
+        let cfg = SpecPcmConfig {
+            num_banks: 6,
+            ..small_cfg()
+        };
+        let mut ctx = ProgramContext::new(&cfg, 768, 0xc1).unwrap();
+        let packed = vec![1.0f32; 100 * 768];
+        let mut ops = OpCounts::default();
+        let (noisy, slots) = ctx.program_rows(&packed, 100, 768, &mut ops).unwrap();
+        assert_eq!(noisy.len(), packed.len());
+        assert_eq!(slots.len(), 100);
+        assert_eq!(ctx.allocator.free_slots(), 28);
+        // A second 100-row bucket does not fit until the first is released.
+        assert!(ctx.check_fit(100).is_err());
+        ctx.release_rows(slots);
+        assert!(ctx.check_fit(100).is_ok());
+    }
+}

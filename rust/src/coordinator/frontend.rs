@@ -65,7 +65,10 @@ impl HdFrontend {
     ) -> Result<Vec<f32>> {
         let levels = self.levels_of(spectra);
         ops.encode_spectra += spectra.len() as u64;
-        ops.features = self.preprocess_cfg.bins as u64;
+        // `features` is a workload property, not an event count: merge via
+        // max so accumulating across calls (or parallel shards, see
+        // `OpCounts::add`) never sums it into nonsense.
+        ops.features = ops.features.max(self.preprocess_cfg.bins as u64);
         ops.pack_elements += (spectra.len() * self.packed_width) as u64;
 
         #[cfg(feature = "pjrt")]
@@ -152,5 +155,9 @@ mod tests {
         let p1 = fe.encode_pack(&[s], &be, &mut ops).unwrap();
         let p2 = fe.encode_pack(&[s], &be, &mut ops).unwrap();
         assert_eq!(p1, p2);
+        // Accumulating calls max-merge the workload-property counter
+        // instead of overwriting or summing it.
+        assert_eq!(ops.features, cfg.features as u64);
+        assert_eq!(ops.encode_spectra, 2);
     }
 }

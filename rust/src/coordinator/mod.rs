@@ -8,17 +8,25 @@
 //!   R=1024 PJRT artifact), padding with zeros and slicing results back.
 //! * [`frontend`] — HD encode+pack via the PJRT artifacts with a bit-exact
 //!   rust fallback.
+//! * [`engine`] — the persistent program-once/query-many [`SearchEngine`]
+//!   (library encoded + programmed exactly once, query batches served
+//!   against the stored conductances) and the shared [`ProgramContext`]
+//!   (programmer + noise stream + capacity allocator) both pipelines
+//!   program through.
 //! * [`pipeline`] — the end-to-end clustering and DB-search drivers that
 //!   the CLI, examples and benches call; both execute score tiles through
-//!   the `backend::BackendDispatcher` they are handed.
+//!   the `backend::BackendDispatcher` they are handed. `SearchPipeline` is
+//!   a thin one-shot wrapper over the engine.
 
 pub mod allocator;
 pub mod batcher;
+pub mod engine;
 pub mod frontend;
 pub mod pipeline;
 
-pub use allocator::SegmentAllocator;
+pub use allocator::{SegmentAllocator, Slot};
 pub use batcher::{pad_matrix, Batcher};
+pub use engine::{BatchOutcome, CapacityError, ProgramContext, SearchEngine, ServingCost};
 pub use frontend::HdFrontend;
 pub use pipeline::{
     ClusteringOutcome, ClusteringPipeline, SearchOutcomeSummary, SearchPipeline,

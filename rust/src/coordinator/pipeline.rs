@@ -6,23 +6,29 @@
 //! input vector) and routes the host arithmetic to the configured
 //! backend — scalar reference, bank-sharded parallel, or the PJRT
 //! artifact — all bit-identical by contract.
-
-use std::collections::BTreeMap;
+//!
+//! All PCM programming flows through an engine-style
+//! [`super::ProgramContext`] (write-verify programmer + noise RNG stream +
+//! bank-capacity [`super::SegmentAllocator`]): [`SearchPipeline::run`] is a
+//! thin one-shot wrapper over the persistent [`super::SearchEngine`], and
+//! [`ClusteringPipeline::run`] programs each precursor bucket transiently
+//! through one shared context, releasing the bank rows after the bucket's
+//! distance tile is computed.
 
 use crate::array::{AdcConfig, ARRAY_DIM};
 use crate::backend::{BackendDispatcher, MvmJob};
 use crate::cluster::{complete_linkage, ClusterQuality};
 use crate::config::SpecPcmConfig;
-use crate::device::{MlcConfig, NoiseModel, Programmer};
+use crate::device::Programmer;
 use crate::energy::{EnergyLatencyModel, EnergyReport, OpCounts};
-use crate::ms::bucket::{bucket_by_precursor, candidate_keys_open, BucketKey};
-use crate::ms::synth::PTM_SHIFTS;
+use crate::ms::bucket::bucket_by_precursor;
 use crate::ms::{ClusteringDataset, SearchDataset, Spectrum};
-use crate::search::{fdr_filter, FdrResult};
+use crate::search::FdrResult;
 use crate::telemetry::StageTimer;
 use crate::util::error::Result;
 use crate::util::Rng;
 
+use super::engine::{ProgramContext, SearchEngine};
 use super::frontend::HdFrontend;
 
 /// Program packed reference HVs into PCM: applies write-verify-calibrated
@@ -51,16 +57,22 @@ pub(crate) fn program_refs(
 
 /// Normalized distance matrix from raw IMC scores: `d_ij = 1 - s_ij /
 /// sqrt(s_ii * s_jj)`, clamped to [0, 2] (near-memory ASIC post-processing).
+///
+/// The raw score matrix is clean-query x noisy-reference, so `s_ij != s_ji`
+/// in general; `complete_linkage` requires a symmetric input (it reads the
+/// original lower triangle during merges), so the two directions are
+/// averaged before normalizing — the resulting matrix is exactly symmetric
+/// and the cut labels are independent of input row order.
 pub(crate) fn scores_to_distances(scores: &[f32], n: usize) -> Vec<f32> {
     let mut d = vec![0f32; n * n];
     let diag: Vec<f32> = (0..n).map(|i| scores[i * n + i].max(1.0)).collect();
     for i in 0..n {
-        for j in 0..n {
-            if i == j {
-                continue;
-            }
+        for j in (i + 1)..n {
             let scale = (diag[i] * diag[j]).sqrt();
-            d[i * n + j] = (1.0 - scores[i * n + j] / scale).clamp(0.0, 2.0);
+            let s = 0.5 * (scores[i * n + j] + scores[j * n + i]);
+            let v = (1.0 - s / scale).clamp(0.0, 2.0);
+            d[i * n + j] = v;
+            d[j * n + i] = v;
         }
     }
     d
@@ -100,11 +112,7 @@ impl ClusteringPipeline {
         let cfg = &self.cfg;
         let mut ops = OpCounts::default();
         let mut wall = StageTimer::new();
-        let mut rng = Rng::new(cfg.seed ^ 0xc1);
-        let programmer = Programmer::new(
-            NoiseModel::new(cfg.material, MlcConfig::new(cfg.mlc_bits)),
-            cfg.write_verify,
-        );
+        let mut ctx = ProgramContext::new(cfg, self.frontend.packed_width, 0xc1)?;
         let adc = AdcConfig::default_for_packing(cfg.adc_bits, cfg.packing());
         let cp = self.frontend.packed_width;
 
@@ -136,9 +144,9 @@ impl ClusteringPipeline {
                 self.frontend.encode_pack(&specs, backend, &mut ops)
             })?;
 
-            let noisy = wall.time("program", || {
-                program_refs(&packed, specs.len(), cp, &programmer, &mut rng, &mut ops)
-            });
+            let (noisy, slots) = wall.time("program", || {
+                ctx.program_rows(&packed, specs.len(), cp, &mut ops)
+            })?;
 
             let scores = wall.time("distance (IMC)", || {
                 backend.execute(
@@ -168,6 +176,10 @@ impl ClusteringPipeline {
                 let _ = n_local;
             }
             next_label += specs.len(); // safe upper bound on local labels
+
+            // Clustering rows are transient: free the bank rows for the
+            // next bucket once its distance tile has been consumed.
+            ctx.release_rows(slots);
         }
 
         let curve: Vec<ClusterQuality> = cfg
@@ -235,15 +247,18 @@ impl SearchOutcomeSummary {
     }
 }
 
+/// One-shot DB-search driver: a thin wrapper over the persistent
+/// [`SearchEngine`] that programs the library, serves every query in one
+/// batch, and folds the result back into the classic summary shape. The
+/// output is bit-identical to serving the same queries in any number of
+/// `search_batch` calls (asserted in `rust/tests/engine_equivalence.rs`).
 pub struct SearchPipeline {
     pub cfg: SpecPcmConfig,
-    pub frontend: HdFrontend,
 }
 
 impl SearchPipeline {
     pub fn new(cfg: SpecPcmConfig) -> Self {
-        let frontend = HdFrontend::new(&cfg);
-        SearchPipeline { cfg, frontend }
+        SearchPipeline { cfg }
     }
 
     pub fn run(
@@ -251,139 +266,10 @@ impl SearchPipeline {
         dataset: &SearchDataset,
         backend: &BackendDispatcher,
     ) -> Result<SearchOutcomeSummary> {
-        let cfg = &self.cfg;
-        let mut ops = OpCounts::default();
-        let mut wall = StageTimer::new();
-        let mut rng = Rng::new(cfg.seed ^ 0x5e);
-        let programmer = Programmer::new(
-            NoiseModel::new(cfg.material, MlcConfig::new(cfg.mlc_bits)),
-            cfg.write_verify,
-        );
-        let adc = AdcConfig::default_for_packing(cfg.adc_bits, cfg.packing());
-        let cp = self.frontend.packed_width;
-
-        // Reference set = targets followed by decoys.
-        let all_refs: Vec<&Spectrum> = dataset
-            .library
-            .iter()
-            .chain(dataset.decoys.iter())
-            .collect();
-        let n_targets = dataset.library.len();
-
-        let packed_refs = wall.time("encode refs", || {
-            self.frontend.encode_pack(&all_refs, backend, &mut ops)
-        })?;
-        let noisy_refs = wall.time("program refs", || {
-            program_refs(
-                &packed_refs,
-                all_refs.len(),
-                cp,
-                &programmer,
-                &mut rng,
-                &mut ops,
-            )
-        });
-
-        // Bucket references by precursor for candidate selection.
-        let ref_spectra: Vec<Spectrum> = all_refs.iter().map(|s| (*s).clone()).collect();
-        let ref_buckets = bucket_by_precursor(&ref_spectra, cfg.bucket_width);
-
+        let engine = SearchEngine::program(self.cfg.clone(), dataset, backend)?;
         let queries: Vec<&Spectrum> = dataset.queries.iter().collect();
-        let packed_queries = wall.time("encode queries", || {
-            self.frontend.encode_pack(&queries, backend, &mut ops)
-        })?;
-
-        // Group queries by identical candidate-key sets so one IMC batch
-        // shares one reference row block.
-        let mut groups: BTreeMap<Vec<BucketKey>, Vec<usize>> = BTreeMap::new();
-        for (qi, q) in queries.iter().enumerate() {
-            let keys = candidate_keys_open(q.charge, q.precursor_mz, cfg.bucket_width, &PTM_SHIFTS);
-            groups.entry(keys).or_default().push(qi);
-        }
-
-        // Per-query best (target score, decoy score) + matched peptide.
-        let mut best: Vec<(f32, f32, Option<u32>)> =
-            vec![(f32::NEG_INFINITY, f32::NEG_INFINITY, None); queries.len()];
-
-        for (keys, q_idxs) in &groups {
-            let mut cand: Vec<usize> = keys
-                .iter()
-                .filter_map(|k| ref_buckets.get(k))
-                .flatten()
-                .copied()
-                .collect();
-            cand.sort_unstable();
-            cand.dedup();
-            if cand.is_empty() {
-                continue;
-            }
-
-            // Gather candidate rows (targets + decoys interleaved by index).
-            let mut cand_rows = Vec::with_capacity(cand.len() * cp);
-            for &ri in &cand {
-                cand_rows.extend_from_slice(&noisy_refs[ri * cp..(ri + 1) * cp]);
-            }
-            let mut q_rows = Vec::with_capacity(q_idxs.len() * cp);
-            for &qi in q_idxs {
-                q_rows.extend_from_slice(&packed_queries[qi * cp..(qi + 1) * cp]);
-            }
-
-            let scores = wall.time("similarity (IMC)", || {
-                backend.execute(
-                    &MvmJob::new(&q_rows, q_idxs.len(), &cand_rows, cand.len(), cp, adc),
-                    &mut ops,
-                )
-            })?;
-
-            wall.time("top-1 + merge (ASIC)", || {
-                for (bi, &qi) in q_idxs.iter().enumerate() {
-                    let row = &scores[bi * cand.len()..(bi + 1) * cand.len()];
-                    for (ci, &ri) in cand.iter().enumerate() {
-                        let s = row[ci];
-                        if ri < n_targets {
-                            if s > best[qi].0 {
-                                best[qi].0 = s;
-                                best[qi].2 = ref_spectra[ri].peptide_id;
-                            }
-                        } else if s > best[qi].1 {
-                            best[qi].1 = s;
-                        }
-                    }
-                }
-            });
-            ops.merge_elements += (q_idxs.len() * cand.len()) as u64;
-        }
-
-        let pairs: Vec<(f32, f32)> = best.iter().map(|&(t, d, _)| (t, d)).collect();
-        let fdr = wall.time("FDR filter", || fdr_filter(&pairs, cfg.fdr));
-
-        let mut correct = 0usize;
-        let mut identified_peptides = Vec::new();
-        for &qi in &fdr.accepted {
-            if let (Some(matched), Some(truth)) = (best[qi].2, queries[qi].peptide_id) {
-                if matched == truth {
-                    correct += 1;
-                    identified_peptides.push(matched);
-                }
-            }
-        }
-        identified_peptides.sort_unstable();
-        identified_peptides.dedup();
-
-        let model = EnergyLatencyModel::new(cfg.material, cfg.adc_bits, cfg.num_banks);
-        let report = model.report(&ops);
-
-        Ok(SearchOutcomeSummary {
-            identified: fdr.accepted.len(),
-            pairs,
-            correct,
-            total_queries: queries.len(),
-            identified_peptides,
-            fdr,
-            ops,
-            report,
-            wall,
-        })
+        let batch = engine.search_batch(&queries, backend)?;
+        engine.finalize(&queries, std::slice::from_ref(&batch))
     }
 }
 
@@ -400,6 +286,67 @@ mod tests {
         assert_eq!(d[3], 0.0);
         assert!((d[1] - 1.8).abs() < 1e-5);
         assert_eq!(d[1], d[2]);
+    }
+
+    #[test]
+    fn cut_labels_independent_of_row_order() {
+        // High-noise config (no write-verify): clean-query x noisy-reference
+        // scores are visibly asymmetric, which before the symmetrization fix
+        // leaked into `complete_linkage`'s lower-triangle reads and made the
+        // flat clusters depend on input row order.
+        let cfg = SpecPcmConfig {
+            hd_dim: 1024,
+            write_verify: 0,
+            ..SpecPcmConfig::paper_clustering()
+        };
+        let fe = HdFrontend::new(&cfg);
+        let cp = fe.packed_width;
+        let ds = ClusteringDataset::generate("t", 5, 2, 3, 3, 0, 0);
+        let specs: Vec<&Spectrum> = ds.spectra.iter().collect();
+        let n = specs.len();
+        let be = BackendDispatcher::reference();
+        let adc = AdcConfig::default_for_packing(cfg.adc_bits, cfg.packing());
+
+        let mut ops = OpCounts::default();
+        let packed = fe.encode_pack(&specs, &be, &mut ops).unwrap();
+        let mut ctx = ProgramContext::new(&cfg, cp, 0xc1).unwrap();
+        let (noisy, _slots) = ctx.program_rows(&packed, n, cp, &mut ops).unwrap();
+
+        let labels_for = |order: &[usize]| -> Vec<usize> {
+            let mut p = Vec::with_capacity(n * cp);
+            let mut g = Vec::with_capacity(n * cp);
+            for &i in order {
+                p.extend_from_slice(&packed[i * cp..(i + 1) * cp]);
+                g.extend_from_slice(&noisy[i * cp..(i + 1) * cp]);
+            }
+            let mut o = OpCounts::default();
+            let scores = be
+                .execute(&MvmJob::new(&p, n, &g, n, cp, adc), &mut o)
+                .unwrap();
+            let d = scores_to_distances(&scores, n);
+            for i in 0..n {
+                for j in 0..n {
+                    assert_eq!(d[i * n + j], d[j * n + i], "distance symmetry ({i},{j})");
+                }
+            }
+            complete_linkage(&d, n, f32::INFINITY).cut(0.6)
+        };
+
+        let base_order: Vec<usize> = (0..n).collect();
+        let base = labels_for(&base_order);
+        let rev: Vec<usize> = (0..n).rev().collect();
+        let permuted = labels_for(&rev);
+        // Same partition up to relabeling: pairwise co-membership agrees
+        // (original index i sits at position n-1-i in the reversed order).
+        for a in 0..n {
+            for b in 0..n {
+                assert_eq!(
+                    base[a] == base[b],
+                    permuted[n - 1 - a] == permuted[n - 1 - b],
+                    "co-membership of pair ({a},{b}) changed with row order"
+                );
+            }
+        }
     }
 
     #[test]

@@ -299,6 +299,15 @@ mod tests {
         assert_eq!(via_add_assign.verify_rounds, 7);
         assert_eq!(via_sum.mvm_ops, via_add_assign.mvm_ops);
         assert_eq!(via_sum.features, via_add_assign.features);
+
+        // Parallel-shard shape: folding any number of shards (including
+        // empty ones) keeps `features` at the workload's single value
+        // instead of multiplying it by the shard count.
+        let shards = [a, b, OpCounts::default(), a];
+        let folded: OpCounts = shards.into_iter().sum();
+        assert_eq!(folded.features, 512);
+        assert_eq!(folded.mvm_ops, 25);
+        assert_eq!(folded.program_rounds, 6);
     }
 
     #[test]

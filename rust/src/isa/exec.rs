@@ -12,6 +12,7 @@ use std::collections::HashMap;
 
 use crate::array::{AdcConfig, ArrayBank, ARRAY_DIM};
 use crate::backend::{BackendDispatcher, MvmJob};
+use crate::coordinator::SearchEngine;
 use crate::device::{Material, MlcConfig, NoiseModel, Programmer};
 use crate::energy::OpCounts;
 use crate::util::Rng;
@@ -53,6 +54,28 @@ impl Executor {
     pub fn with_backend(mut self, backend: BackendDispatcher) -> Self {
         self.backend = backend;
         self
+    }
+
+    /// Build an executor whose banks mirror a [`SearchEngine`]'s programmed
+    /// library: each reference row's 128-wide segments are loaded onto the
+    /// physical banks of its allocator slot, so hand-written ISA programs
+    /// (`MVM_COMPUTE` / `READ_HV`) execute against the very conductances
+    /// the engine serves query batches from. The engine already paid the
+    /// programming energy — loading mirrors state without re-charging it.
+    pub fn from_engine(engine: &SearchEngine) -> Self {
+        let mut ex = Executor::new(
+            engine.cfg.num_banks,
+            engine.cfg.material,
+            engine.cfg.seed,
+        );
+        for (ri, &slot) in engine.slots().iter().enumerate() {
+            let row = engine.noisy_row(ri);
+            for (si, bank) in engine.banks_of(slot).into_iter().enumerate() {
+                let seg = &row[si * ARRAY_DIM..(si + 1) * ARRAY_DIM];
+                ex.banks[bank].load_programmed_row(slot.row, seg);
+            }
+        }
+        ex
     }
 
     /// Stage a 128-wide data segment into a numbered buffer.
@@ -239,6 +262,46 @@ mod tests {
         let b = run_with(BackendDispatcher::parallel(4));
         assert_eq!(a.mvm_scores, b.mvm_scores);
         assert_eq!(a.ops.mvm_ops, b.ops.mvm_ops);
+    }
+
+    #[test]
+    fn from_engine_mirrors_programmed_library() {
+        use crate::config::SpecPcmConfig;
+        use crate::ms::SearchDataset;
+
+        let cfg = SpecPcmConfig {
+            hd_dim: 512, // packed width 256 -> 2 segments per HV
+            num_banks: 8,
+            bucket_width: 5.0,
+            ..SpecPcmConfig::paper_search()
+        };
+        let ds = SearchDataset::generate("t", 51, 10, 4, 0.8, 0.2, 0, 0);
+        let engine =
+            crate::coordinator::SearchEngine::program(cfg, &ds, &BackendDispatcher::reference())
+                .unwrap();
+        let mut ex = Executor::from_engine(&engine);
+
+        // Every reference row occupies one valid ISA-bank row per segment.
+        let valid: usize = ex.banks.iter().map(|b| b.valid_rows()).sum();
+        assert_eq!(valid, engine.n_refs() * 2);
+
+        // READ_HV on row 0's first segment returns exactly the engine's
+        // stored noisy conductances — the same bits search_batch scores
+        // against.
+        let slot = engine.slots()[0];
+        let bank = engine.banks_of(slot)[0];
+        let mut p = Program::new();
+        p.push(Instruction::ReadHv {
+            buf: 0,
+            data_size: 128,
+            arr_idx: bank as u16,
+            col_addr: 0,
+            row_addr: slot.row as u8,
+            mlc_bits: 3,
+        });
+        let r = ex.run(&p).unwrap();
+        assert_eq!(&r.row_reads[0][..], &engine.noisy_row(0)[..ARRAY_DIM]);
+        assert_eq!(r.ops.row_reads, 1);
     }
 
     #[test]

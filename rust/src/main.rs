@@ -12,9 +12,9 @@ use specpcm::backend::{BackendDispatcher, BackendKind};
 use specpcm::baselines::latency_model;
 use specpcm::cluster::quality::clustered_at_incorrect;
 use specpcm::config::{SpecPcmConfig, Task};
-use specpcm::coordinator::{ClusteringPipeline, SearchPipeline};
+use specpcm::coordinator::{ClusteringPipeline, SearchEngine, SearchPipeline};
 use specpcm::energy::area_breakdown;
-use specpcm::ms::{ClusteringDataset, SearchDataset};
+use specpcm::ms::{ClusteringDataset, SearchDataset, Spectrum};
 use specpcm::telemetry::render_table;
 use specpcm::util::error::{Error, Result};
 
@@ -23,12 +23,29 @@ specpcm — PCM-based analog IMC accelerator for MS analysis
 
 USAGE:
   specpcm cluster [--dataset pxd001468|pxd000561] [--scale F] [--config FILE]
-                  [--backend ref|parallel|pjrt] [--threads N] [--no-artifacts]
+                  [--backend ref|parallel|pjrt] [--threads N] [--num-banks N]
+                  [--no-artifacts]
   specpcm search  [--dataset iprg2012|hek293]     [--scale F] [--config FILE]
-                  [--backend ref|parallel|pjrt] [--threads N] [--no-artifacts]
+                  [--backend ref|parallel|pjrt] [--threads N] [--num-banks N]
+                  [--serve-batches N] [--no-artifacts]
   specpcm info                  print the hardware model (Tables 1/S3, Fig. 8)
   specpcm config [clustering|search]   print a config preset
   specpcm isa <file>            assemble + run an ISA program
+
+SERVING:
+  --serve-batches N   program the reference library into the banks once,
+                      then stream the queries in N batches through the
+                      persistent SearchEngine; reports the one-time
+                      programming cost vs the marginal per-batch cost and
+                      the amortized total.
+
+CAPACITY:
+  The engine places every reference HV on a physical bank row and fails
+  with a CapacityError when the library does not fit (it no longer
+  silently ignores num_banks). At the paper-default D=8192 / 128 banks
+  there are 640 reference slots; the default --scale per dataset is
+  chosen to fit (iprg2012 0.25, hek293 0.18). A larger --scale needs
+  more banks, e.g. `--num-banks 256`.
 
 BACKENDS:
   ref       single-threaded reference path (bit-exact oracle)
@@ -115,6 +132,8 @@ fn load_cfg(args: &Args, default: SpecPcmConfig) -> Result<SpecPcmConfig> {
         cfg.backend.kind = BackendKind::from_name(b)?;
     }
     cfg.backend.threads = args.get_usize("threads", cfg.backend.threads)?;
+    cfg.num_banks = args.get_usize("num-banks", cfg.num_banks)?;
+    cfg.validate()?;
     Ok(cfg)
 }
 
@@ -163,13 +182,22 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 fn cmd_search(args: &Args) -> Result<()> {
     let cfg = load_cfg(args, SpecPcmConfig::paper_search())?;
     specpcm::ensure!(cfg.task == Task::Search, "config task must be search");
-    let scale = args.get_f64("scale", 0.25)?;
-    let ds = match args.get("dataset", "iprg2012").as_str() {
+    let dataset = args.get("dataset", "iprg2012");
+    // Default scales keep each preset library inside the paper config's
+    // 640 reference slots (D=8192 n=3 on 128 banks); an explicit --scale
+    // that overflows them fails with the engine's CapacityError.
+    let default_scale = if dataset == "hek293" { 0.18 } else { 0.25 };
+    let scale = args.get_f64("scale", default_scale)?;
+    let ds = match dataset.as_str() {
         "iprg2012" => SearchDataset::iprg2012_like(cfg.seed, scale),
         "hek293" => SearchDataset::hek293_like(cfg.seed, scale),
         other => specpcm::bail!("unknown dataset '{other}'"),
     };
     let backend = open_backend(&cfg);
+    let n_batches = args.get_usize("serve-batches", 0)?;
+    if n_batches > 0 {
+        return cmd_serve(cfg, &ds, &backend, n_batches);
+    }
     let fdr = cfg.fdr;
     let out = SearchPipeline::new(cfg).run(&ds, &backend)?;
     println!(
@@ -193,6 +221,74 @@ fn cmd_search(args: &Args) -> Result<()> {
         .map(|(s, t, f)| vec![s, format!("{t:.3}s"), format!("{:.1}%", f * 100.0)])
         .collect();
     println!("{}", render_table("host wall time", &["stage", "time", "%"], &rows));
+    Ok(())
+}
+
+/// `--serve-batches N`: the Table 3 serving shape — program the library
+/// once, stream the queries in N batches through the persistent engine,
+/// and split the report into one-time vs marginal vs amortized cost.
+fn cmd_serve(
+    cfg: SpecPcmConfig,
+    ds: &SearchDataset,
+    backend: &BackendDispatcher,
+    n_batches: usize,
+) -> Result<()> {
+    let fdr = cfg.fdr;
+    let engine = SearchEngine::program(cfg, ds, backend)?;
+    let prog = *engine.program_report();
+    println!(
+        "programmed {} reference rows once: {:.4} mJ, {:.4} ms ({} program rounds)",
+        engine.n_refs(),
+        prog.total_j() * 1e3,
+        prog.total_latency_s() * 1e3,
+        engine.program_ops().program_rounds
+    );
+
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let outcomes = engine.serve_chunked(&queries, n_batches, backend)?;
+    let rows: Vec<Vec<String>> = outcomes
+        .iter()
+        .enumerate()
+        .map(|(bi, out)| {
+            vec![
+                format!("{bi}"),
+                format!("{}", out.pairs.len()),
+                format!("{:.4}", out.report.total_j() * 1e3),
+                format!("{:.4}", out.report.overlapped_latency_s() * 1e3),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            "marginal per-batch cost (library programming excluded)",
+            &["batch", "queries", "energy mJ", "latency ms"],
+            &rows
+        )
+    );
+
+    let cost = engine.serving_cost(&outcomes);
+    println!(
+        "energy:  one-time {:.4} mJ | marginal total {:.4} mJ | amortized/batch {:.4} mJ",
+        cost.one_time_j * 1e3,
+        cost.marginal_j * 1e3,
+        cost.amortized_j_per_batch() * 1e3
+    );
+    println!(
+        "latency: one-time {:.4} ms | marginal total {:.4} ms | amortized/batch {:.4} ms",
+        cost.one_time_s * 1e3,
+        cost.marginal_s * 1e3,
+        cost.amortized_s_per_batch() * 1e3
+    );
+
+    let out = engine.finalize(&queries, &outcomes)?;
+    println!(
+        "identified {}/{} queries at {:.0}% FDR ({} correct) — bit-identical to one-shot",
+        out.identified,
+        out.total_queries,
+        fdr * 100.0,
+        out.correct
+    );
     Ok(())
 }
 
@@ -321,5 +417,15 @@ mod tests {
         assert_eq!(cfg.backend.threads, 2);
         let bad = Args::parse(&argv(&["--backend", "gpu"])).unwrap();
         assert!(load_cfg(&bad, SpecPcmConfig::paper_clustering()).is_err());
+    }
+
+    #[test]
+    fn num_banks_flag_applies_and_validates() {
+        let a = Args::parse(&argv(&["--num-banks", "256"])).unwrap();
+        let cfg = load_cfg(&a, SpecPcmConfig::paper_search()).unwrap();
+        assert_eq!(cfg.num_banks, 256);
+        // num_banks = 0 is rejected by config validation.
+        let bad = Args::parse(&argv(&["--num-banks", "0"])).unwrap();
+        assert!(load_cfg(&bad, SpecPcmConfig::paper_search()).is_err());
     }
 }

@@ -36,7 +36,11 @@ pub fn fdr_filter(pairs: &[(f32, f32)], fdr: f64) -> FdrResult {
             pool.push((d, true));
         }
     }
-    pool.sort_by(|a, b| b.0.total_cmp(&a.0));
+    // Descending by score; at tied scores decoys sort *first* so the
+    // running decoy count is included before any tied target can set the
+    // threshold — the conservative convention of standard target-decoy
+    // practice (counting tied targets first understates the FDR).
+    pool.sort_by(|a, b| b.0.total_cmp(&a.0).then(b.1.cmp(&a.1)));
 
     let mut best_threshold = f32::INFINITY;
     let mut achieved = 0.0f64;
@@ -130,6 +134,33 @@ mod tests {
     fn empty_input() {
         let r = fdr_filter(&[], 0.01);
         assert!(r.accepted.is_empty());
+    }
+
+    #[test]
+    fn tied_scores_count_decoys_first() {
+        // 10 targets at score 5.0 and one decoy also at exactly 5.0 (its
+        // own target is far below threshold). Counting the tied decoy
+        // *before* the tied targets, the FDR at 5.0 is 1/10 = 10%.
+        let mut pairs: Vec<(f32, f32)> = (0..10).map(|_| (5.0, 1.0)).collect();
+        pairs.push((0.5, 5.0));
+
+        // At 5% FDR the tied block is not acceptable: nothing passes. (The
+        // pre-fix score-only sort counted the 10 targets first, set the
+        // threshold at 5.0 with an "achieved" FDR of 0, and accepted all
+        // ten.)
+        let strict = fdr_filter(&pairs, 0.05);
+        assert!(
+            strict.accepted.is_empty(),
+            "tied decoy ignored: accepted {:?}",
+            strict.accepted
+        );
+
+        // At 20% FDR the same block is acceptable (1/10 = 10%), so the
+        // conservative tie-break must not over-reject either.
+        let loose = fdr_filter(&pairs, 0.2);
+        assert_eq!(loose.accepted.len(), 10);
+        assert!((loose.achieved_fdr - 0.1).abs() < 1e-12);
+        assert!(!loose.accepted.contains(&10)); // the decoy-dominated query
     }
 
     #[test]

@@ -1,0 +1,147 @@
+//! SearchEngine-vs-SearchPipeline equivalence (the program-once/query-many
+//! serving contract): serving the query set in 1, 2, or 7 uneven batches
+//! through a persistent [`SearchEngine`] is bit-identical to the one-shot
+//! [`SearchPipeline::run`] — same per-query score pairs, same accepted
+//! queries, same total op counts — while the library's encode+program work
+//! is charged exactly once, on the engine, regardless of batch count.
+
+use specpcm::backend::BackendDispatcher;
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::{BatchOutcome, SearchEngine, SearchPipeline};
+use specpcm::ms::{SearchDataset, Spectrum};
+
+fn cfg() -> SpecPcmConfig {
+    SpecPcmConfig {
+        hd_dim: 2048,
+        bucket_width: 5.0,
+        num_banks: 64,
+        ..SpecPcmConfig::paper_search()
+    }
+}
+
+fn serve(
+    engine: &SearchEngine,
+    queries: &[&Spectrum],
+    sizes: &[usize],
+    backend: &BackendDispatcher,
+) -> Vec<BatchOutcome> {
+    assert_eq!(sizes.iter().sum::<usize>(), queries.len());
+    let mut outcomes = Vec::with_capacity(sizes.len());
+    let mut start = 0;
+    for &s in sizes {
+        outcomes.push(engine.search_batch(&queries[start..start + s], backend).unwrap());
+        start += s;
+    }
+    outcomes
+}
+
+#[test]
+fn batched_serving_matches_one_shot_bit_identically() {
+    let ds = SearchDataset::generate("t", 11, 60, 80, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::reference();
+
+    let one_shot = SearchPipeline::new(cfg()).run(&ds, &be).unwrap();
+    let engine = SearchEngine::program(cfg(), &ds, &be).unwrap();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+    let splits: [&[usize]; 3] = [&[80], &[40, 40], &[11, 7, 23, 5, 19, 9, 6]];
+    for sizes in splits {
+        let outcomes = serve(&engine, &queries, sizes, &be);
+        let out = engine.finalize(&queries, &outcomes).unwrap();
+
+        // Bit-identical serving results.
+        assert_eq!(out.pairs, one_shot.pairs, "split {sizes:?}");
+        assert_eq!(out.fdr.accepted, one_shot.fdr.accepted, "split {sizes:?}");
+        assert_eq!(out.fdr.threshold, one_shot.fdr.threshold);
+        assert_eq!(out.identified, one_shot.identified);
+        assert_eq!(out.correct, one_shot.correct);
+        assert_eq!(out.identified_peptides, one_shot.identified_peptides);
+
+        // Identical totals: bank MVM ops are linear in batched queries and
+        // programming is one-time, so any split sums to the one-shot count.
+        assert_eq!(out.ops.mvm_ops, one_shot.ops.mvm_ops, "split {sizes:?}");
+        assert_eq!(out.ops.program_rounds, one_shot.ops.program_rounds);
+        assert_eq!(out.ops.verify_rounds, one_shot.ops.verify_rounds);
+        assert_eq!(out.ops.encode_spectra, one_shot.ops.encode_spectra);
+        assert_eq!(out.ops.pack_elements, one_shot.ops.pack_elements);
+        assert_eq!(out.ops.merge_elements, one_shot.ops.merge_elements);
+        assert_eq!(out.report.total_j(), one_shot.report.total_j());
+
+        // The library's programming is charged exactly once, on the
+        // engine's one-time counters — never on a marginal batch.
+        for b in &outcomes {
+            assert_eq!(b.ops.program_rounds, 0);
+            assert_eq!(b.ops.verify_rounds, 0);
+        }
+        assert_eq!(
+            engine.program_ops().program_rounds,
+            one_shot.ops.program_rounds
+        );
+        assert_eq!(
+            engine.program_ops().encode_spectra,
+            (ds.library.len() + ds.decoys.len()) as u64
+        );
+    }
+
+    // Sanity: the workload actually identifies something.
+    assert!(one_shot.identified > 20, "identified {}", one_shot.identified);
+}
+
+#[test]
+fn marginal_batch_reports_exclude_programming_energy() {
+    let ds = SearchDataset::generate("t", 12, 40, 30, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::reference();
+    let engine = SearchEngine::program(cfg(), &ds, &be).unwrap();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+    let batch = engine.search_batch(&queries, &be).unwrap();
+    assert_eq!(batch.report.program_j, 0.0);
+    assert_eq!(batch.report.verify_j, 0.0);
+    assert!(batch.report.mvm_j > 0.0);
+    assert!(engine.program_report().program_j > 0.0);
+
+    // One-time + marginal folds to the one-shot total.
+    let out = engine.finalize(&queries, &[batch.clone()]).unwrap();
+    let folded = engine.program_report().total_j() + batch.report.total_j();
+    assert!(
+        (out.report.total_j() - folded).abs() < 1e-15,
+        "{} vs {}",
+        out.report.total_j(),
+        folded
+    );
+}
+
+#[test]
+fn over_capacity_library_is_a_typed_error() {
+    // 6 banks hold exactly one 6-segment (D=2048, n=3) bank group: 128 row
+    // slots. A 100-target library needs 200 rows (targets + decoys).
+    let cfg = SpecPcmConfig {
+        num_banks: 6,
+        ..cfg()
+    };
+    let ds = SearchDataset::generate("t", 13, 100, 4, 0.8, 0.2, 0, 0);
+    let err = match SearchEngine::program(cfg, &ds, &BackendDispatcher::reference()) {
+        Ok(_) => panic!("200-row library on 128 slots must not program"),
+        Err(e) => e,
+    };
+    let msg = err.to_string();
+    assert!(msg.contains("exceeds"), "unexpected error: {msg}");
+    assert!(msg.contains("128"), "capacity in message: {msg}");
+
+    // The same library fits once the banks are doubled.
+    let cfg_fits = SpecPcmConfig {
+        num_banks: 12,
+        ..self::cfg()
+    };
+    assert!(SearchEngine::program(cfg_fits, &ds, &BackendDispatcher::reference()).is_ok());
+}
+
+#[test]
+fn finalize_rejects_mismatched_query_count() {
+    let ds = SearchDataset::generate("t", 14, 20, 10, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::reference();
+    let engine = SearchEngine::program(cfg(), &ds, &be).unwrap();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let batch = engine.search_batch(&queries[..5], &be).unwrap();
+    assert!(engine.finalize(&queries, &[batch]).is_err());
+}
