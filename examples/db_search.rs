@@ -121,8 +121,9 @@ fn main() -> Result<()> {
     // HyperOMS-like exact binary HD.
     let t0 = std::time::Instant::now();
     let ref_hvs: Vec<hd::Hv> = ref_levels.iter().map(|l| hd::encode(l, &fe.im)).collect();
+    let ref_bits = hd_soft::pack_refs(&ref_hvs);
     let (oms_id, oms_ok) = baseline_identify(
-        |qi| hd_soft::search_scores(&hd::encode(&q_levels[qi], &fe.im), &ref_hvs),
+        |qi| hd_soft::search_scores(&hd::encode(&q_levels[qi], &fe.im), &ref_bits),
         &ds,
         fdr,
     );

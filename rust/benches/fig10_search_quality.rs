@@ -92,8 +92,9 @@ fn main() -> Result<()> {
             exact::search_scores_shifted(&levels_to_f32(&q_levels[qi]), &ref_floats, &shifts)
         };
         let ref_hvs: Vec<hd::Hv> = ref_levels.iter().map(|l| hd::encode(l, &fe.im)).collect();
+        let ref_bits = hd_soft::pack_refs(&ref_hvs);
         let hd_scores =
-            |qi: usize| hd_soft::search_scores(&hd::encode(&q_levels[qi], &fe.im), &ref_hvs);
+            |qi: usize| hd_soft::search_scores(&hd::encode(&q_levels[qi], &fe.im), &ref_bits);
 
         let spectrast = identify(&cosine_scores, &ds, false, cfg.fdr);
         let annsolo = identify(&annsolo_scores, &ds, true, cfg.fdr);

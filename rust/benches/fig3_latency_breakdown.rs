@@ -92,9 +92,10 @@ fn main() {
     let encode_s = t0.elapsed().as_secs_f64();
 
     let t0 = Instant::now();
+    let ref_bits = hd_soft::pack_refs(&ref_hvs);
     let mut best = Vec::with_capacity(q_hvs.len());
     for q in &q_hvs {
-        let scores = hd_soft::search_scores(q, &ref_hvs);
+        let scores = hd_soft::search_scores(q, &ref_bits);
         let m = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
         best.push(m);
     }

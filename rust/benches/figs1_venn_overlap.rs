@@ -60,8 +60,9 @@ fn main() -> Result<()> {
         cfg.fdr,
     );
     let ref_hvs: Vec<hd::Hv> = ref_levels.iter().map(|l| hd::encode(l, &fe.im)).collect();
+    let ref_bits = hd_soft::pack_refs(&ref_hvs);
     let oms: HashSet<u32> = identified_set(
-        &|qi| hd_soft::search_scores(&hd::encode(&q_levels[qi], &fe.im), &ref_hvs),
+        &|qi| hd_soft::search_scores(&hd::encode(&q_levels[qi], &fe.im), &ref_bits),
         &ds,
         cfg.fdr,
     );

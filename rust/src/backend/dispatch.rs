@@ -8,6 +8,10 @@
 //! primary backend via [`MvmBackend::utilization`], and is the single
 //! object the pipelines, ISA executor and benches execute MVM jobs
 //! through.
+//!
+//! The dispatcher also routes the **encode seam**: it carries the
+//! configured [`EncodeBackend`] (`encode/`) and is what the HD frontend
+//! executes [`EncodeJob`]s through — one object, both hot paths.
 
 #[cfg(feature = "pjrt")]
 use std::cell::RefCell;
@@ -15,6 +19,7 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::config::SpecPcmConfig;
+use crate::encode::{backend_of_kind, EncodeBackend, EncodeJob, EncodeKind};
 use crate::energy::OpCounts;
 #[cfg(feature = "pjrt")]
 use crate::runtime::Runtime;
@@ -28,11 +33,13 @@ use super::{BackendKind, MvmBackend, MvmJob};
 use super::pjrt::PjrtBackend;
 
 /// Routes each [`MvmJob`] to the primary backend or the scalar fallback,
-/// charging the job's physical op count either way.
+/// charging the job's physical op count either way, and each [`EncodeJob`]
+/// to the configured encode backend.
 pub struct BackendDispatcher {
     primary: Box<dyn MvmBackend>,
     fallback: RefBackend,
     min_utilization: f64,
+    encode: Box<dyn EncodeBackend>,
     /// Shared PJRT runtime handle when the primary is the artifact
     /// backend — the HD frontend uses it for the encoder artifact.
     #[cfg(feature = "pjrt")]
@@ -40,24 +47,37 @@ pub struct BackendDispatcher {
 }
 
 impl BackendDispatcher {
+    /// MVM backend + scalar encode; use [`Self::with_encode_kind`] or
+    /// [`Self::from_config`] to pick a faster encode path.
     pub fn new(primary: Box<dyn MvmBackend>, min_utilization: f64) -> Self {
         BackendDispatcher {
             primary,
             fallback: RefBackend,
             min_utilization,
+            encode: backend_of_kind(EncodeKind::Scalar, 0),
             #[cfg(feature = "pjrt")]
             runtime: None,
         }
     }
 
-    /// Pure scalar-reference dispatcher (tests, deterministic defaults).
+    /// Pure scalar-reference dispatcher (tests, deterministic defaults):
+    /// scalar MVM *and* scalar encode — the all-oracle configuration.
     pub fn reference() -> Self {
         BackendDispatcher::new(Box::new(RefBackend), 0.0)
     }
 
-    /// Bank-sharded parallel dispatcher (`threads = 0` auto-detects).
+    /// Bank-sharded parallel MVM + spectra-sharded parallel encode
+    /// (`threads = 0` auto-detects).
     pub fn parallel(threads: usize) -> Self {
         BackendDispatcher::new(Box::new(ParallelBackend::new(threads)), 0.0)
+            .with_encode_kind(EncodeKind::Parallel, threads)
+    }
+
+    /// Swap the encode backend (builder style); results are bit-identical
+    /// for every kind, only host wall time changes.
+    pub fn with_encode_kind(mut self, kind: EncodeKind, threads: usize) -> Self {
+        self.encode = backend_of_kind(kind, threads);
+        self
     }
 
     /// PJRT dispatcher sharing the runtime handle with the frontend.
@@ -75,14 +95,15 @@ impl BackendDispatcher {
     /// results are bit-identical either way, only host speed differs.
     pub fn from_config(cfg: &SpecPcmConfig) -> Self {
         let min_u = cfg.backend.min_utilization;
-        match cfg.backend.kind {
+        let d = match cfg.backend.kind {
             BackendKind::Reference => BackendDispatcher::new(Box::new(RefBackend), min_u),
             BackendKind::Parallel => BackendDispatcher::new(
                 Box::new(ParallelBackend::new(cfg.backend.threads)),
                 min_u,
             ),
             BackendKind::Pjrt => Self::pjrt_or_fallback(cfg, min_u),
-        }
+        };
+        d.with_encode_kind(cfg.backend.encode_kind, cfg.backend.threads)
     }
 
     #[cfg(feature = "pjrt")]
@@ -107,6 +128,19 @@ impl BackendDispatcher {
     /// Name of the configured primary backend.
     pub fn primary_name(&self) -> &'static str {
         self.primary.name()
+    }
+
+    /// Name of the configured encode backend.
+    pub fn encode_name(&self) -> &'static str {
+        self.encode.name()
+    }
+
+    /// Execute one encode+pack batch through the configured encode
+    /// backend, writing row-major packed f32 rows into `out`. No routing
+    /// heuristic: encode jobs have no padded-tile geometry, so the
+    /// configured backend always runs (all kinds are bit-identical).
+    pub fn encode_pack(&self, job: &EncodeJob, out: &mut [f32]) -> Result<()> {
+        self.encode.encode_pack(job, out)
     }
 
     /// Shared PJRT runtime handle, when the primary backend carries one.
@@ -212,6 +246,33 @@ mod tests {
     }
 
     #[test]
+    fn encode_routing_honours_kind_and_stays_bit_identical() {
+        use crate::hd::{BitItemMemory, ItemMemory};
+
+        assert_eq!(BackendDispatcher::reference().encode_name(), "scalar");
+        assert_eq!(BackendDispatcher::parallel(2).encode_name(), "parallel");
+        let d = BackendDispatcher::reference().with_encode_kind(EncodeKind::Bitpacked, 0);
+        assert_eq!(d.encode_name(), "bitpacked");
+
+        let im = ItemMemory::generate(77, 32, 8, 512);
+        let bits = BitItemMemory::from_item_memory(&im);
+        let levels: Vec<Vec<u16>> = (0..3)
+            .map(|i| (0..32).map(|j| ((i * j) % 8) as u16).collect())
+            .collect();
+        let job = EncodeJob::new(&levels, &im, &bits, 3);
+        let mut want = vec![0f32; job.out_len()];
+        BackendDispatcher::reference().encode_pack(&job, &mut want).unwrap();
+        for disp in [
+            BackendDispatcher::parallel(2),
+            BackendDispatcher::reference().with_encode_kind(EncodeKind::Bitpacked, 0),
+        ] {
+            let mut got = vec![f32::NAN; job.out_len()];
+            disp.encode_pack(&job, &mut got).unwrap();
+            assert_eq!(got, want, "encode backend {}", disp.encode_name());
+        }
+    }
+
+    #[test]
     fn from_config_honours_kind() {
         let mut cfg = SpecPcmConfig::paper_clustering();
         cfg.backend.kind = BackendKind::Reference;
@@ -225,5 +286,10 @@ mod tests {
         cfg.backend.kind = BackendKind::Pjrt;
         cfg.artifacts_dir = "/nonexistent-artifacts-dir".into();
         assert_eq!(BackendDispatcher::from_config(&cfg).primary_name(), "ref");
+
+        // The encode seam follows its own config key.
+        assert_eq!(BackendDispatcher::from_config(&cfg).encode_name(), "parallel");
+        cfg.backend.encode_kind = EncodeKind::Bitpacked;
+        assert_eq!(BackendDispatcher::from_config(&cfg).encode_name(), "bitpacked");
     }
 }

@@ -22,9 +22,23 @@
 //!   that used to live inline in `coordinator::pipeline::mvm_scores`, and
 //!   is what the pipelines, the ISA executor and the benches consume.
 //!
-//! Selection is configured through the `[backend]` config section
-//! (`kind = "ref" | "parallel" | "pjrt"`, `threads`, `min_utilization`)
-//! or the `--backend` / `--threads` CLI flags.
+//! # The two-backend-seam architecture
+//!
+//! The coordinator has exactly two host hot paths, and each is a
+//! first-class swappable seam behind the same dispatcher object:
+//!
+//! 1. **MVM seam** (this module): `nq x nr` score tiles, contract
+//!    [`MvmBackend`], kinds `ref | parallel | pjrt`.
+//! 2. **Encode seam** (`crate::encode`): HD encode+pack batches, contract
+//!    `encode::EncodeBackend`, kinds `scalar | bitpacked | parallel` —
+//!    the word-packed kernels live in `crate::hd::bitpacked`.
+//!
+//! Both seams share the invariant that every backend is **bit-identical**
+//! to its scalar oracle — selection changes host wall time, never results
+//! (`rust/tests/backend_equivalence.rs`, `rust/tests/encode_equivalence.rs`)
+//! — and both are selected through the `[backend]` config section
+//! (`kind`, `encode_kind`, `threads`, `min_utilization`) or the
+//! `--backend` / `--encode-backend` / `--threads` CLI flags.
 
 pub mod dispatch;
 pub mod parallel;

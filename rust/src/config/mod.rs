@@ -5,6 +5,7 @@
 
 use crate::backend::BackendKind;
 use crate::device::Material;
+use crate::encode::EncodeKind;
 use crate::util::kv::{self, KvValue};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -45,18 +46,22 @@ fn material_from_name(s: &str) -> Result<Material, String> {
     }
 }
 
-/// `[backend]` section: how the coordinator executes MVM score tiles
-/// (see `backend::BackendDispatcher`). Scores are bit-identical across
-/// kinds; only host wall-time differs.
+/// `[backend]` section: how the coordinator executes its two host hot
+/// paths — MVM score tiles (`kind`) and HD encode+pack batches
+/// (`encode_kind`); see `backend::BackendDispatcher`. Results are
+/// bit-identical across every kind; only host wall-time differs.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct BackendConfig {
-    /// `"ref"` | `"parallel"` | `"pjrt"`.
+    /// MVM backend: `"ref"` | `"parallel"` | `"pjrt"`.
     pub kind: BackendKind,
-    /// Worker threads for the parallel backend (0 = auto-detect).
+    /// Encode backend: `"scalar"` | `"bitpacked"` | `"parallel"`.
+    pub encode_kind: EncodeKind,
+    /// Worker threads for the parallel backends (0 = auto-detect; shared
+    /// by the MVM and encode seams).
     pub threads: usize,
-    /// Minimum padded-tile utilization before the dispatcher routes a job
-    /// to the primary backend instead of the scalar fallback (measured
-    /// crossover ~0.3 for the fixed-geometry PJRT artifact).
+    /// Minimum padded-tile utilization before the dispatcher routes an
+    /// MVM job to the primary backend instead of the scalar fallback
+    /// (measured crossover ~0.3 for the fixed-geometry PJRT artifact).
     pub min_utilization: f64,
 }
 
@@ -64,6 +69,7 @@ impl Default for BackendConfig {
     fn default() -> Self {
         BackendConfig {
             kind: BackendKind::Parallel,
+            encode_kind: EncodeKind::Parallel,
             threads: 0,
             min_utilization: 0.3,
         }
@@ -193,6 +199,11 @@ impl SpecPcmConfig {
                     cfg.backend.kind =
                         BackendKind::from_name(val.as_str().ok_or("backend.kind: want string")?)?
                 }
+                "backend.encode_kind" => {
+                    cfg.backend.encode_kind = EncodeKind::from_name(
+                        val.as_str().ok_or("backend.encode_kind: want string")?,
+                    )?
+                }
                 "backend.threads" => cfg.backend.threads = get_usize(val, key)?,
                 "backend.min_utilization" => {
                     cfg.backend.min_utilization =
@@ -225,6 +236,7 @@ impl SpecPcmConfig {
         // Section keys must follow every top-level key (TOML semantics).
         s += &kv::fmt_section("backend");
         s += &kv::fmt_str("kind", self.backend.kind.name());
+        s += &kv::fmt_str("encode_kind", self.backend.encode_kind.name());
         s += &kv::fmt_num("threads", self.backend.threads);
         s += &kv::fmt_num("min_utilization", self.backend.min_utilization);
         s
@@ -336,19 +348,25 @@ mod tests {
     fn backend_section_roundtrip_and_defaults() {
         let d = SpecPcmConfig::paper_clustering();
         assert_eq!(d.backend.kind, BackendKind::Parallel);
+        assert_eq!(d.backend.encode_kind, EncodeKind::Parallel);
         assert_eq!(d.backend.threads, 0);
         assert!((d.backend.min_utilization - 0.3).abs() < 1e-12);
 
         let c = SpecPcmConfig::from_toml(
-            "hd_dim = 1024\n[backend]\nkind = \"ref\"\nthreads = 4\nmin_utilization = 0.5\n",
+            "hd_dim = 1024\n[backend]\nkind = \"ref\"\nencode_kind = \"bitpacked\"\n\
+             threads = 4\nmin_utilization = 0.5\n",
         )
         .unwrap();
         assert_eq!(c.backend.kind, BackendKind::Reference);
+        assert_eq!(c.backend.encode_kind, EncodeKind::Bitpacked);
         assert_eq!(c.backend.threads, 4);
         assert_eq!(c.backend.min_utilization, 0.5);
 
         // to_toml emits the section and parses back identically.
         let back = SpecPcmConfig::from_toml(&c.to_toml()).unwrap();
         assert_eq!(back.backend, c.backend);
+
+        // Unknown encode kinds are rejected like unknown MVM kinds.
+        assert!(SpecPcmConfig::from_toml("[backend]\nencode_kind = \"gpu\"").is_err());
     }
 }

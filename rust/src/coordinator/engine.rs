@@ -25,8 +25,23 @@
 //!
 //! A library that does not fit the configured banks fails construction
 //! with a typed [`CapacityError`] instead of silently ignoring `num_banks`.
+//!
+//! # Query-HV cache
+//!
+//! Real serving traffic repeats spectra (re-queries, overlapping batches,
+//! replays), and before this cache every occurrence re-ran the HD encode
+//! kernel. The engine now memoizes packed query HVs **keyed by the
+//! quantized level vector** — the exact input of the encode kernel, so a
+//! cache hit is bit-identical to a fresh encode by construction. Hits and
+//! misses are surfaced on every [`BatchOutcome`] and cumulatively via
+//! [`SearchEngine::encode_cache_stats`]. Op and energy accounting are
+//! deliberately **unchanged**: the ASIC still performs the encode for
+//! every spectrum, the cache only removes redundant *host* arithmetic
+//! (exactly like backend selection, it can never change results or
+//! simulated cost — `rust/tests/encode_equivalence.rs` locks this in).
 
-use std::collections::BTreeMap;
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::array::AdcConfig;
 use crate::backend::{BackendDispatcher, MvmJob};
@@ -37,7 +52,7 @@ use crate::ms::bucket::{bucket_by_precursor, candidate_keys_open, BucketKey};
 use crate::ms::synth::PTM_SHIFTS;
 use crate::ms::{SearchDataset, Spectrum};
 use crate::search::fdr_filter;
-use crate::telemetry::StageTimer;
+use crate::telemetry::{EncodeCacheStats, StageTimer};
 use crate::util::error::{Error, Result};
 use crate::util::Rng;
 
@@ -159,6 +174,9 @@ pub struct BatchOutcome {
     pub ops: OpCounts,
     /// Energy/latency of the marginal ops alone.
     pub report: EnergyReport,
+    /// Query-HV cache hits/misses for this batch (host-time telemetry;
+    /// ops/report above are independent of the cache by design).
+    pub cache: EncodeCacheStats,
     pub wall: StageTimer,
 }
 
@@ -209,7 +227,19 @@ pub struct SearchEngine {
     program_ops: OpCounts,
     program_report: EnergyReport,
     program_wall: StageTimer,
+    /// Packed query HVs keyed by quantized level vector (see the module
+    /// docs' "Query-HV cache" section). Interior mutability keeps
+    /// `search_batch(&self)` signature-stable.
+    query_cache: RefCell<HashMap<Vec<u16>, Vec<f32>>>,
+    cache_stats: RefCell<EncodeCacheStats>,
 }
+
+/// Entry cap for the query-HV cache: past this many distinct spectra the
+/// engine stops inserting (existing entries keep hitting). Bounds memory
+/// — each entry holds a `cp`-long f32 row plus its `features`-long u16
+/// level-vector key (~4-5 KB at paper-scale configs) — without
+/// introducing eviction nondeterminism.
+const QUERY_CACHE_MAX_ENTRIES: usize = 1 << 16;
 
 impl SearchEngine {
     /// Typed pre-flight: would an `n_rows`-row reference library fit
@@ -291,7 +321,20 @@ impl SearchEngine {
             program_ops: ops,
             program_report,
             program_wall: wall,
+            query_cache: RefCell::new(HashMap::new()),
+            cache_stats: RefCell::new(EncodeCacheStats::default()),
         })
+    }
+
+    /// Cumulative query-HV cache hits/misses across every served batch.
+    pub fn encode_cache_stats(&self) -> EncodeCacheStats {
+        *self.cache_stats.borrow()
+    }
+
+    /// Drop every cached query HV (the cache refills on subsequent
+    /// batches; results are identical either way).
+    pub fn clear_query_cache(&self) {
+        self.query_cache.borrow_mut().clear();
     }
 
     /// One-time library ops (encode + pack + program + verify), charged at
@@ -348,9 +391,56 @@ impl SearchEngine {
         let mut ops = OpCounts::default();
         let mut wall = StageTimer::new();
 
-        let packed_queries = wall.time("encode queries", || {
-            self.frontend.encode_pack(queries, backend, &mut ops)
+        // Encode through the query-HV cache: unique uncached level vectors
+        // encode once per batch, everything else is a copy. The ASIC op
+        // charge covers every query regardless — the cache is host-time
+        // only (module docs, "Query-HV cache").
+        let mut batch_cache = EncodeCacheStats::default();
+        let packed_queries = wall.time("encode queries", || -> Result<Vec<f32>> {
+            let levels = self.frontend.levels_of(queries);
+            self.frontend.count_encode_ops(queries.len(), &mut ops);
+
+            let mut miss_of: HashMap<&Vec<u16>, usize> = HashMap::new();
+            let mut miss_levels: Vec<Vec<u16>> = Vec::new();
+            {
+                let cache = self.query_cache.borrow();
+                for lv in &levels {
+                    if !cache.contains_key(lv) && !miss_of.contains_key(lv) {
+                        miss_of.insert(lv, miss_levels.len());
+                        miss_levels.push(lv.clone());
+                    }
+                }
+            }
+            let miss_packed = if miss_levels.is_empty() {
+                Vec::new()
+            } else {
+                self.frontend.encode_pack_levels(&miss_levels, backend)?
+            };
+            {
+                let mut cache = self.query_cache.borrow_mut();
+                for (mi, lv) in miss_levels.iter().enumerate() {
+                    if cache.len() >= QUERY_CACHE_MAX_ENTRIES {
+                        break;
+                    }
+                    cache.insert(lv.clone(), miss_packed[mi * cp..(mi + 1) * cp].to_vec());
+                }
+            }
+            batch_cache.misses = miss_levels.len() as u64;
+            batch_cache.hits = (levels.len() - miss_levels.len()) as u64;
+
+            let mut packed = vec![0f32; levels.len() * cp];
+            let cache = self.query_cache.borrow();
+            for (qi, lv) in levels.iter().enumerate() {
+                let dst = &mut packed[qi * cp..(qi + 1) * cp];
+                if let Some(&mi) = miss_of.get(lv) {
+                    dst.copy_from_slice(&miss_packed[mi * cp..(mi + 1) * cp]);
+                } else {
+                    dst.copy_from_slice(&cache[lv]);
+                }
+            }
+            Ok(packed)
         })?;
+        *self.cache_stats.borrow_mut() += batch_cache;
 
         // Group queries by identical candidate-key sets so one IMC batch
         // shares one reference row block.
@@ -423,6 +513,7 @@ impl SearchEngine {
             matched,
             ops,
             report,
+            cache: batch_cache,
             wall,
         })
     }
@@ -559,6 +650,48 @@ mod tests {
         let out = engine.finalize(&queries, &[batch]).unwrap();
         assert_eq!(out.total_queries, queries.len());
         assert_eq!(out.ops.program_rounds, engine.program_ops().program_rounds);
+    }
+
+    #[test]
+    fn query_cache_hits_are_bit_identical_and_reported() {
+        let ds = SearchDataset::generate("t", 45, 30, 12, 0.8, 0.2, 0, 0);
+        let be = BackendDispatcher::reference();
+        let engine = SearchEngine::program(small_cfg(), &ds, &be).unwrap();
+        let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+        // Cold engine: every distinct query is a miss.
+        let cold = engine.search_batch(&queries, &be).unwrap();
+        assert_eq!(cold.cache.total(), queries.len() as u64);
+
+        // The same batch again: all hits, and the outcome is bit-identical
+        // (pairs, matches, marginal ops and energy all unchanged).
+        let warm = engine.search_batch(&queries, &be).unwrap();
+        assert_eq!(warm.cache.hits, queries.len() as u64);
+        assert_eq!(warm.cache.misses, 0);
+        assert_eq!(warm.pairs, cold.pairs);
+        assert_eq!(warm.matched, cold.matched);
+        assert_eq!(warm.ops, cold.ops);
+        assert_eq!(warm.report.total_j(), cold.report.total_j());
+
+        // Duplicates inside one batch hit too: only uniques encode.
+        engine.clear_query_cache();
+        let doubled: Vec<&Spectrum> = queries.iter().chain(queries.iter()).copied().collect();
+        let dup = engine.search_batch(&doubled, &be).unwrap();
+        assert_eq!(dup.cache.misses, cold.cache.misses);
+        assert_eq!(dup.cache.hits as usize + dup.cache.misses as usize, doubled.len());
+        assert_eq!(&dup.pairs[..queries.len()], &cold.pairs[..]);
+        assert_eq!(&dup.pairs[queries.len()..], &cold.pairs[..]);
+        // Accounting never sees the cache: double the queries, double the
+        // encode charge.
+        assert_eq!(dup.ops.encode_spectra, 2 * cold.ops.encode_spectra);
+
+        // Cumulative stats fold every batch.
+        let total = engine.encode_cache_stats();
+        assert_eq!(
+            total.total(),
+            (queries.len() * 2 + doubled.len()) as u64
+        );
+        assert!(total.hit_rate() > 0.0);
     }
 
     #[test]

@@ -1,13 +1,15 @@
-//! HD encode+pack frontend: one call per spectra batch, executed on the
-//! PJRT encoder artifact when the dispatcher carries a runtime and the
-//! (D, n) variant exists, with the bit-identical rust path (`hd::encode` +
-//! `hd::pack`) as fallback for artifact-free runs and for sweep dimensions
-//! outside the variant set.
+//! HD encode+pack frontend: one call per spectra batch. Routing order:
+//! the PJRT encoder artifact when the dispatcher carries a runtime and
+//! the (D, n) variant exists, else the dispatcher's configured
+//! `encode::EncodeBackend` (scalar reference / word-packed bitpacked /
+//! spectra-sharded parallel) — all bit-identical by contract, so the
+//! choice affects host wall time only.
 
 use crate::backend::BackendDispatcher;
 use crate::config::SpecPcmConfig;
+use crate::encode::EncodeJob;
 use crate::energy::OpCounts;
-use crate::hd::{self, ItemMemory};
+use crate::hd::{self, BitItemMemory, ItemMemory};
 use crate::ms::{preprocess, PreprocessConfig, Spectrum};
 #[cfg(feature = "pjrt")]
 use crate::runtime::{Manifest, Runtime};
@@ -15,6 +17,9 @@ use crate::util::error::Result;
 
 pub struct HdFrontend {
     pub im: ItemMemory,
+    /// Word-packed codebooks, derived once from `im` for the bitpacked
+    /// and parallel encode backends.
+    pub bit_im: BitItemMemory,
     pub d: usize,
     pub n: usize,
     pub packed_width: usize,
@@ -32,6 +37,7 @@ impl HdFrontend {
             ..PreprocessConfig::default()
         };
         let im = ItemMemory::generate(cfg.seed ^ 0x1d, cfg.features, cfg.levels, cfg.hd_dim);
+        let bit_im = BitItemMemory::from_item_memory(&im);
         let id_hvs_f32 = im.id_hvs_f32();
         let level_hvs_f32 = im.level_hvs_f32();
         HdFrontend {
@@ -39,6 +45,7 @@ impl HdFrontend {
             d: cfg.hd_dim,
             n: cfg.packing(),
             im,
+            bit_im,
             preprocess_cfg,
             id_hvs_f32,
             level_hvs_f32,
@@ -53,10 +60,22 @@ impl HdFrontend {
             .collect()
     }
 
+    /// Charge the ASIC encode+pack op counts for `n_spectra` spectra.
+    /// Split out from [`Self::encode_pack`] so the engine's query-HV cache
+    /// can charge the *physical* work for every spectrum while skipping
+    /// only the redundant host arithmetic (the cache changes host time,
+    /// never accounting).
+    pub fn count_encode_ops(&self, n_spectra: usize, ops: &mut OpCounts) {
+        ops.encode_spectra += n_spectra as u64;
+        // `features` is a workload property, not an event count: merge via
+        // max so accumulating across calls (or parallel shards, see
+        // `OpCounts::add`) never sums it into nonsense.
+        ops.features = ops.features.max(self.preprocess_cfg.bins as u64);
+        ops.pack_elements += (n_spectra * self.packed_width) as u64;
+    }
+
     /// Encode + pack a set of spectra into row-major packed HVs
-    /// (`spectra.len() x packed_width`). Uses the PJRT encoder artifact
-    /// when the dispatcher carries a runtime with the (D, n) variant;
-    /// counts ASIC encode and pack work either way.
+    /// (`spectra.len() x packed_width`); counts ASIC encode and pack work.
     pub fn encode_pack(
         &self,
         spectra: &[&Spectrum],
@@ -64,34 +83,30 @@ impl HdFrontend {
         ops: &mut OpCounts,
     ) -> Result<Vec<f32>> {
         let levels = self.levels_of(spectra);
-        ops.encode_spectra += spectra.len() as u64;
-        // `features` is a workload property, not an event count: merge via
-        // max so accumulating across calls (or parallel shards, see
-        // `OpCounts::add`) never sums it into nonsense.
-        ops.features = ops.features.max(self.preprocess_cfg.bins as u64);
-        ops.pack_elements += (spectra.len() * self.packed_width) as u64;
+        self.count_encode_ops(spectra.len(), ops);
+        self.encode_pack_levels(&levels, backend)
+    }
 
+    /// Encode + pack already-quantized level vectors (no op accounting —
+    /// see [`Self::count_encode_ops`]). Uses the PJRT encoder artifact
+    /// when available, else the dispatcher's encode backend.
+    pub fn encode_pack_levels(
+        &self,
+        levels: &[Vec<u16>],
+        backend: &BackendDispatcher,
+    ) -> Result<Vec<f32>> {
         #[cfg(feature = "pjrt")]
         if let Some(rt) = backend.runtime() {
             let name = Manifest::enc_pack_name(self.d, self.n);
             let mut rt = rt.borrow_mut();
             if rt.manifest.get(&name).is_some() {
-                return self.encode_pack_artifact(&levels, &mut rt);
+                return self.encode_pack_artifact(levels, &mut rt);
             }
         }
-        #[cfg(not(feature = "pjrt"))]
-        let _ = backend;
-        Ok(self.encode_pack_rust(&levels))
-    }
-
-    /// Pure-rust reference path.
-    fn encode_pack_rust(&self, levels: &[Vec<u16>]) -> Vec<f32> {
-        let mut out = Vec::with_capacity(levels.len() * self.packed_width);
-        for lv in levels {
-            let hv = hd::encode(lv, &self.im);
-            out.extend_from_slice(&hd::pack(&hv, self.n));
-        }
-        out
+        let job = EncodeJob::new(levels, &self.im, &self.bit_im, self.n);
+        let mut out = vec![0f32; job.out_len()];
+        backend.encode_pack(&job, &mut out)?;
+        Ok(out)
     }
 
     /// PJRT artifact path: batches of the manifest's B spectra.
@@ -119,6 +134,7 @@ impl HdFrontend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::encode::EncodeKind;
     use crate::ms::dataset::ClusteringDataset;
 
     fn small_cfg() -> SpecPcmConfig {
@@ -159,5 +175,22 @@ mod tests {
         // instead of overwriting or summing it.
         assert_eq!(ops.features, cfg.features as u64);
         assert_eq!(ops.encode_spectra, 2);
+    }
+
+    #[test]
+    fn encode_backends_agree_at_frontend_level() {
+        let cfg = small_cfg();
+        let fe = HdFrontend::new(&cfg);
+        let ds = ClusteringDataset::generate("t", 3, 6, 2, 3, 4, 0);
+        let refs: Vec<&Spectrum> = ds.spectra.iter().collect();
+        let mut ops = OpCounts::default();
+        let want = fe
+            .encode_pack(&refs, &BackendDispatcher::reference(), &mut ops)
+            .unwrap();
+        for kind in [EncodeKind::Bitpacked, EncodeKind::Parallel] {
+            let be = BackendDispatcher::reference().with_encode_kind(kind, 2);
+            let got = fe.encode_pack(&refs, &be, &mut ops).unwrap();
+            assert_eq!(got, want, "encode kind {}", kind.name());
+        }
     }
 }

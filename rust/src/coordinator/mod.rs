@@ -6,13 +6,16 @@
 //!   §III-C).
 //! * [`batcher`] — groups work into fixed-geometry tiles (e.g. the B=64 /
 //!   R=1024 PJRT artifact), padding with zeros and slicing results back.
-//! * [`frontend`] — HD encode+pack via the PJRT artifacts with a bit-exact
-//!   rust fallback.
+//! * [`frontend`] — HD encode+pack routed through the dispatcher's
+//!   pluggable `encode::EncodeBackend` (scalar / word-packed bitpacked /
+//!   spectra-sharded parallel), or the PJRT artifacts when available —
+//!   all bit-identical.
 //! * [`engine`] — the persistent program-once/query-many [`SearchEngine`]
 //!   (library encoded + programmed exactly once, query batches served
-//!   against the stored conductances) and the shared [`ProgramContext`]
-//!   (programmer + noise stream + capacity allocator) both pipelines
-//!   program through.
+//!   against the stored conductances, repeated query spectra served from
+//!   a level-vector-keyed query-HV cache) and the shared
+//!   [`ProgramContext`] (programmer + noise stream + capacity allocator)
+//!   both pipelines program through.
 //! * [`pipeline`] — the end-to-end clustering and DB-search drivers that
 //!   the CLI, examples and benches call; both execute score tiles through
 //!   the `backend::BackendDispatcher` they are handed. `SearchPipeline` is

@@ -1,0 +1,162 @@
+//! Pluggable HD encode+pack execution backends — the second backend seam,
+//! mirroring `backend/` (the MVM seam).
+//!
+//! PR 1 made the MVM score tile a swappable, bank-sharded layer; this
+//! module does the same for the remaining host hot path, the HD frontend:
+//!
+//! * [`EncodeJob`] — one batch of quantized level vectors to encode+pack
+//!   into row-major packed f32 rows, carrying both codebook views (the
+//!   scalar [`ItemMemory`] and the word-packed [`BitItemMemory`]).
+//! * [`EncodeBackend`] — the execution contract: `encode_pack(&EncodeJob,
+//!   &mut out)`. Every implementation must be **bit-identical** to
+//!   `hd::encode` + `hd::pack` (same `sign(0) = +1` tie rule, same zero
+//!   padding) — backends change *where* the arithmetic runs, never *what*
+//!   it computes (`rust/tests/encode_equivalence.rs`).
+//! * [`ScalarEncodeBackend`] — the element-serial reference path.
+//! * [`BitpackedEncodeBackend`] — the u64 word-packed kernels
+//!   (`hd::bitpacked`): XOR binding, bit-sliced counter accumulation,
+//!   fused encode+pack.
+//! * [`ParallelEncodeBackend`] — shards the batch's spectra across
+//!   `std::thread::scope` workers, each running the bitpacked kernel.
+//!
+//! Selection is routed through `backend::BackendDispatcher` (the same
+//! object the MVM path runs through) and configured via the `[backend]`
+//! section's `encode_kind` key or the `--encode-backend` CLI flag.
+
+pub mod bitpacked;
+pub mod parallel;
+pub mod scalar;
+
+pub use bitpacked::BitpackedEncodeBackend;
+pub use parallel::ParallelEncodeBackend;
+pub use scalar::ScalarEncodeBackend;
+
+use crate::hd::{padded_packed_len, BitItemMemory, ItemMemory};
+use crate::util::error::Result;
+
+/// Which encode backend the dispatcher routes the frontend to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EncodeKind {
+    /// Element-serial rust reference path (bit-exact oracle).
+    Scalar,
+    /// Word-packed u64 kernel, single-threaded.
+    Bitpacked,
+    /// Spectra sharded across threads, bitpacked kernel per shard
+    /// (default).
+    Parallel,
+}
+
+impl EncodeKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EncodeKind::Scalar => "scalar",
+            EncodeKind::Bitpacked => "bitpacked",
+            EncodeKind::Parallel => "parallel",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Result<Self, String> {
+        match s {
+            "scalar" | "ref" | "reference" => Ok(EncodeKind::Scalar),
+            "bitpacked" => Ok(EncodeKind::Bitpacked),
+            "parallel" => Ok(EncodeKind::Parallel),
+            other => Err(format!(
+                "unknown encode backend '{other}' (want scalar|bitpacked|parallel)"
+            )),
+        }
+    }
+}
+
+/// One encode+pack batch job: `levels.len()` quantized level vectors to
+/// turn into row-major `levels.len() x cp` packed f32 rows.
+#[derive(Clone, Copy, Debug)]
+pub struct EncodeJob<'a> {
+    /// Quantized level vectors, one per spectrum (each `im.features()`
+    /// long; level 0 = empty bin).
+    pub levels: &'a [Vec<u16>],
+    /// Scalar codebooks (the reference path reads these).
+    pub im: &'a ItemMemory,
+    /// Word-packed codebooks, derived once per frontend (the bitpacked
+    /// and parallel paths read these).
+    pub bits: &'a BitItemMemory,
+    /// Packing factor n (MLC bits per cell).
+    pub n: usize,
+    /// Padded packed row width (`hd::padded_packed_len(d, n)`).
+    pub cp: usize,
+}
+
+impl<'a> EncodeJob<'a> {
+    pub fn new(
+        levels: &'a [Vec<u16>],
+        im: &'a ItemMemory,
+        bits: &'a BitItemMemory,
+        n: usize,
+    ) -> Self {
+        assert_eq!(im.dim, bits.d, "codebook dims disagree");
+        let cp = padded_packed_len(im.dim, n);
+        EncodeJob { levels, im, bits, n, cp }
+    }
+
+    /// Spectra in the batch.
+    pub fn nq(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Expected output buffer length.
+    pub fn out_len(&self) -> usize {
+        self.nq() * self.cp
+    }
+}
+
+/// The execution contract every encode backend implements. `out` is the
+/// row-major `nq x cp` destination; implementations must fill every
+/// element (including the zero padding region of each row).
+pub trait EncodeBackend {
+    /// Short stable identifier (telemetry / CLI echo).
+    fn name(&self) -> &'static str;
+
+    /// Encode+pack one batch into `out` (`job.out_len()` long).
+    fn encode_pack(&self, job: &EncodeJob, out: &mut [f32]) -> Result<()>;
+}
+
+/// Build the backend a config's `encode_kind` asks for (`threads` only
+/// matters for the parallel kind; 0 = auto-detect).
+pub fn backend_of_kind(kind: EncodeKind, threads: usize) -> Box<dyn EncodeBackend> {
+    match kind {
+        EncodeKind::Scalar => Box::new(ScalarEncodeBackend),
+        EncodeKind::Bitpacked => Box::new(BitpackedEncodeBackend),
+        EncodeKind::Parallel => Box::new(ParallelEncodeBackend::new(threads)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [EncodeKind::Scalar, EncodeKind::Bitpacked, EncodeKind::Parallel] {
+            assert_eq!(EncodeKind::from_name(k.name()).unwrap(), k);
+        }
+        assert_eq!(EncodeKind::from_name("ref").unwrap(), EncodeKind::Scalar);
+        assert!(EncodeKind::from_name("gpu").is_err());
+    }
+
+    #[test]
+    fn backend_factory_honours_kind() {
+        assert_eq!(backend_of_kind(EncodeKind::Scalar, 0).name(), "scalar");
+        assert_eq!(backend_of_kind(EncodeKind::Bitpacked, 0).name(), "bitpacked");
+        assert_eq!(backend_of_kind(EncodeKind::Parallel, 4).name(), "parallel");
+    }
+
+    #[test]
+    fn job_shapes() {
+        let im = ItemMemory::generate(1, 8, 4, 256);
+        let bits = BitItemMemory::from_item_memory(&im);
+        let levels = vec![vec![0u16; 8]; 3];
+        let job = EncodeJob::new(&levels, &im, &bits, 3);
+        assert_eq!(job.cp, 128);
+        assert_eq!(job.nq(), 3);
+        assert_eq!(job.out_len(), 384);
+    }
+}

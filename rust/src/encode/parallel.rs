@@ -1,0 +1,146 @@
+//! Thread-sharded parallel encode backend: the batch's spectra are split
+//! into contiguous row chunks across `std::thread::scope` workers, each
+//! running the word-packed kernel with its own scratch into a disjoint
+//! `&mut` stripe of the output buffer. Per-spectrum arithmetic is the
+//! bitpacked kernel unchanged, so results are bit-identical to both the
+//! bitpacked and scalar backends for every thread count.
+
+use crate::hd::bitpacked::{encode_pack_into, EncodeScratch};
+use crate::util::error::Result;
+
+use super::bitpacked::BitpackedEncodeBackend;
+use super::{EncodeBackend, EncodeJob};
+
+/// Minimum scalar multiply-accumulate-equivalent work (`nq * d`) before
+/// spawning threads pays for itself; smaller batches run the bitpacked
+/// kernel on the caller's thread. Single-spectrum query batches are
+/// common in serving, so this guard matters for end-to-end wall time.
+const MIN_PARALLEL_WORK: usize = 1 << 16;
+
+/// Shards [`EncodeJob`]s across `threads` scoped workers.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelEncodeBackend {
+    threads: usize,
+}
+
+impl ParallelEncodeBackend {
+    /// `threads = 0` auto-detects (`std::thread::available_parallelism`).
+    pub fn new(threads: usize) -> Self {
+        ParallelEncodeBackend { threads }
+    }
+
+    /// The worker count jobs actually run with.
+    pub fn effective_threads(&self) -> usize {
+        if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        }
+    }
+}
+
+impl Default for ParallelEncodeBackend {
+    fn default() -> Self {
+        ParallelEncodeBackend::new(0)
+    }
+}
+
+impl EncodeBackend for ParallelEncodeBackend {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn encode_pack(&self, job: &EncodeJob, out: &mut [f32]) -> Result<()> {
+        assert_eq!(out.len(), job.out_len(), "output buffer shape");
+        let nq = job.nq();
+        let threads = self.effective_threads().min(nq.max(1));
+        if threads <= 1 || nq * job.bits.d < MIN_PARALLEL_WORK {
+            return BitpackedEncodeBackend.encode_pack(job, out);
+        }
+
+        // Contiguous spectrum-row chunks; the last chunk absorbs the
+        // ragged remainder. `chunks_mut` hands each worker a disjoint
+        // &mut stripe.
+        let chunk_rows = nq.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (ci, out_chunk) in out.chunks_mut(chunk_rows * job.cp).enumerate() {
+                let q0 = ci * chunk_rows;
+                let qn = out_chunk.len() / job.cp;
+                let levels = &job.levels[q0..q0 + qn];
+                let (bits, n, cp) = (job.bits, job.n, job.cp);
+                s.spawn(move || {
+                    let mut scratch = EncodeScratch::default();
+                    let mut words = vec![0u64; bits.w];
+                    for (lv, row) in levels.iter().zip(out_chunk.chunks_mut(cp)) {
+                        encode_pack_into(lv, bits, n, &mut scratch, &mut words, row);
+                    }
+                });
+            }
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encode::ScalarEncodeBackend;
+    use crate::hd::{BitItemMemory, ItemMemory};
+    use crate::util::Rng;
+
+    fn sparse_batch(rng: &mut Rng, b: usize, f: usize, m: usize) -> Vec<Vec<u16>> {
+        (0..b)
+            .map(|_| {
+                let mut v = vec![0u16; f];
+                for _ in 0..30 {
+                    v[rng.below(f)] = 1 + rng.below(m - 1) as u16;
+                }
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(31);
+        let im = ItemMemory::generate(31, 128, 32, 2048);
+        let bits = BitItemMemory::from_item_memory(&im);
+        // 37 rows x 2048 dims is above the threading cutoff.
+        let levels = sparse_batch(&mut rng, 37, 128, 32);
+        let job = EncodeJob::new(&levels, &im, &bits, 3);
+        let mut want = vec![0f32; job.out_len()];
+        ScalarEncodeBackend.encode_pack(&job, &mut want).unwrap();
+        for threads in [1usize, 2, 3, 8, 64] {
+            let mut got = vec![f32::NAN; job.out_len()];
+            ParallelEncodeBackend::new(threads)
+                .encode_pack(&job, &mut got)
+                .unwrap();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tiny_batch_takes_serial_path_and_empty_batch_is_fine() {
+        let im = ItemMemory::generate(32, 16, 4, 256);
+        let bits = BitItemMemory::from_item_memory(&im);
+        let levels = vec![vec![1u16; 16]; 2];
+        let job = EncodeJob::new(&levels, &im, &bits, 2);
+        let mut got = vec![0f32; job.out_len()];
+        ParallelEncodeBackend::new(8).encode_pack(&job, &mut got).unwrap();
+        let mut want = vec![0f32; job.out_len()];
+        ScalarEncodeBackend.encode_pack(&job, &mut want).unwrap();
+        assert_eq!(got, want);
+
+        let empty: Vec<Vec<u16>> = Vec::new();
+        let job = EncodeJob::new(&empty, &im, &bits, 2);
+        ParallelEncodeBackend::new(8).encode_pack(&job, &mut []).unwrap();
+    }
+
+    #[test]
+    fn auto_threads_resolve() {
+        assert!(ParallelEncodeBackend::new(0).effective_threads() >= 1);
+        assert_eq!(ParallelEncodeBackend::new(5).effective_threads(), 5);
+    }
+}

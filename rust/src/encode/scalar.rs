@@ -1,0 +1,51 @@
+//! Scalar reference encode backend — the element-serial oracle
+//! (`hd::encode` + `hd::pack_into`) every faster encode path is checked
+//! against.
+
+use crate::hd;
+use crate::util::error::Result;
+
+use super::{EncodeBackend, EncodeJob};
+
+/// Executes encode+pack with the single-threaded scalar kernels. One
+/// intermediate `Vec<i8>` HV per spectrum, packed straight into the
+/// caller's output row (no per-row f32 allocation).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScalarEncodeBackend;
+
+impl EncodeBackend for ScalarEncodeBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn encode_pack(&self, job: &EncodeJob, out: &mut [f32]) -> Result<()> {
+        assert_eq!(out.len(), job.out_len(), "output buffer shape");
+        for (lv, row) in job.levels.iter().zip(out.chunks_mut(job.cp)) {
+            let hv = hd::encode(lv, job.im);
+            hd::pack_into(&hv, job.n, row);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hd::{BitItemMemory, ItemMemory};
+
+    #[test]
+    fn matches_encode_plus_pack() {
+        let im = ItemMemory::generate(9, 32, 8, 512);
+        let bits = BitItemMemory::from_item_memory(&im);
+        let levels: Vec<Vec<u16>> = (0..4)
+            .map(|i| (0..32).map(|j| ((i + j) % 8) as u16).collect())
+            .collect();
+        let job = EncodeJob::new(&levels, &im, &bits, 3);
+        let mut out = vec![f32::NAN; job.out_len()];
+        ScalarEncodeBackend.encode_pack(&job, &mut out).unwrap();
+        for (i, lv) in levels.iter().enumerate() {
+            let want = hd::pack(&hd::encode(lv, &im), 3);
+            assert_eq!(&out[i * job.cp..(i + 1) * job.cp], &want[..], "row {i}");
+        }
+    }
+}

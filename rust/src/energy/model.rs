@@ -23,7 +23,7 @@ fn component_power_mw(c: Component) -> f64 {
 }
 
 /// Operation counts accumulated by a pipeline run.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpCounts {
     /// Whole-array IMC MVM operations (one 128x128 bank, one input vector).
     pub mvm_ops: u64,

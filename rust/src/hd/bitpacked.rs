@@ -1,0 +1,371 @@
+//! Word-packed (u64 sign-bit) HD kernels — the bit-level fast path behind
+//! the pluggable [`crate::encode`] backends.
+//!
+//! A +/-1 hypervector stores one element per bit (bit set = element is
+//! **-1**), so the element-wise product of two HVs is a single XOR per 64
+//! elements and similarity is a popcount: `dot = D - 2 * popcount(a ^ b)`.
+//! This is exactly the observation SpecHD and HyperOMS build their
+//! throughput on; here it turns the scalar O(peaks x D) `i32` multiply-add
+//! encode loop (`super::encode`) into an O(peaks x D/64) word loop.
+//!
+//! # Encoding with bit-sliced counters
+//!
+//! `HV = sign(sum_f LV[level_f] (*) ID_f)` needs a per-element integer
+//! accumulator across the P contributing peaks. Instead of 64 scalar
+//! adds per word we keep a **vertical (bit-sliced) counter**: plane `k`
+//! holds bit `k` of the running count of -1 products for each of the 64
+//! lanes of a word. Adding one bound word is a ripple-carry add of a
+//! 1-bit operand — amortized ~2 bitwise ops per word regardless of P.
+//! After all peaks, `acc[j] = P - 2 * count[j]`, so the output sign bit is
+//! a bit-sliced magnitude compare `count[j] > floor(P / 2)` — which also
+//! reproduces the scalar path's `sign(0) = +1` tie rule exactly (acc == 0
+//! means count == P/2, which is *not* greater than floor(P/2)).
+//!
+//! Every kernel here is **bit-identical** to `super::encode` +
+//! `super::pack` by contract (same tie rule, same zero padding), enforced
+//! by `rust/tests/encode_equivalence.rs` across dims that are not
+//! multiples of 64 (tail-word masking), empty spectra and all-tie inputs.
+
+use super::itemmem::ItemMemory;
+use super::pack::{packed_len, padded_packed_len};
+use super::Hv;
+
+/// Elements per machine word.
+pub const WORD_BITS: usize = 64;
+
+/// Words needed for a D-element bit-packed HV.
+#[inline]
+pub fn words_len(d: usize) -> usize {
+    d.div_ceil(WORD_BITS)
+}
+
+/// Mask of the valid bits in the last word (all-ones when D is a multiple
+/// of 64).
+#[inline]
+pub fn tail_mask(d: usize) -> u64 {
+    match d % WORD_BITS {
+        0 => !0u64,
+        r => (1u64 << r) - 1,
+    }
+}
+
+/// Bit-packed +/-1 hypervector: bit set = element is -1. Bits past `d` in
+/// the last word are always zero (the invariant `hamming`/`dot` rely on).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitHv {
+    pub words: Vec<u64>,
+    pub d: usize,
+}
+
+impl BitHv {
+    /// Pack an i8 +/-1 hypervector.
+    pub fn from_hv(hv: &[i8]) -> Self {
+        let d = hv.len();
+        let mut words = vec![0u64; words_len(d)];
+        for (j, &x) in hv.iter().enumerate() {
+            debug_assert!(x == 1 || x == -1, "element {j} is {x}, not +/-1");
+            if x == -1 {
+                words[j / WORD_BITS] |= 1u64 << (j % WORD_BITS);
+            }
+        }
+        BitHv { words, d }
+    }
+
+    /// Unpack to the i8 representation.
+    pub fn to_hv(&self) -> Hv {
+        (0..self.d)
+            .map(|j| {
+                if (self.words[j / WORD_BITS] >> (j % WORD_BITS)) & 1 == 1 {
+                    -1
+                } else {
+                    1
+                }
+            })
+            .collect()
+    }
+
+    /// Hamming distance via XOR + popcount.
+    pub fn hamming(&self, other: &BitHv) -> usize {
+        assert_eq!(self.d, other.d);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(&a, &b)| (a ^ b).count_ones() as usize)
+            .sum()
+    }
+
+    /// Dot product of the underlying +/-1 vectors: `D - 2 * hamming`.
+    pub fn dot(&self, other: &BitHv) -> i64 {
+        self.d as i64 - 2 * self.hamming(other) as i64
+    }
+
+    /// Normalized similarity in [-1, 1] (popcount analogue of
+    /// [`super::cosine_pm1`]).
+    pub fn cosine_pm1(&self, other: &BitHv) -> f64 {
+        self.dot(other) as f64 / self.d as f64
+    }
+}
+
+/// Word-packed ID and level codebooks, derived once from an
+/// [`ItemMemory`] (row-major `features x W` and `levels x W` u64 words).
+#[derive(Clone, Debug)]
+pub struct BitItemMemory {
+    id_words: Vec<u64>,
+    level_words: Vec<u64>,
+    /// Words per hypervector.
+    pub w: usize,
+    pub d: usize,
+    features: usize,
+    levels: usize,
+}
+
+impl BitItemMemory {
+    pub fn from_item_memory(im: &ItemMemory) -> Self {
+        let d = im.dim;
+        let pack_rows = |rows: &[Hv]| -> Vec<u64> {
+            rows.iter()
+                .flat_map(|hv| BitHv::from_hv(hv).words)
+                .collect()
+        };
+        BitItemMemory {
+            id_words: pack_rows(&im.id_hvs),
+            level_words: pack_rows(&im.level_hvs),
+            w: words_len(d),
+            d,
+            features: im.id_hvs.len(),
+            levels: im.level_hvs.len(),
+        }
+    }
+
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    pub fn levels(&self) -> usize {
+        self.levels
+    }
+
+    #[inline]
+    fn id_row(&self, f: usize) -> &[u64] {
+        &self.id_words[f * self.w..(f + 1) * self.w]
+    }
+
+    #[inline]
+    fn level_row(&self, l: usize) -> &[u64] {
+        &self.level_words[l * self.w..(l + 1) * self.w]
+    }
+}
+
+/// Reusable bit-sliced counter planes (one allocation per worker, not per
+/// spectrum).
+#[derive(Clone, Debug, Default)]
+pub struct EncodeScratch {
+    planes: Vec<u64>,
+}
+
+/// Encode one quantized-level feature vector into sign-bit words —
+/// bit-identical to [`super::encode`] (level 0 is inert, `sign(0) = +1`).
+/// `out` must be `words_len(d)` long.
+pub fn encode_bits_into(
+    levels: &[u16],
+    bim: &BitItemMemory,
+    scratch: &mut EncodeScratch,
+    out: &mut [u64],
+) {
+    assert_eq!(levels.len(), bim.features(), "feature count");
+    assert_eq!(out.len(), bim.w, "output word count");
+    let w = bim.w;
+
+    // P = contributing peaks; K = planes needed to count to P.
+    let p = levels.iter().filter(|&&l| l > 0).count();
+    let k_planes = (usize::BITS - p.leading_zeros()) as usize;
+    scratch.planes.clear();
+    scratch.planes.resize(k_planes * w, 0);
+    let planes = &mut scratch.planes;
+
+    for (f, &lvl) in levels.iter().enumerate() {
+        if lvl == 0 {
+            continue; // empty bin: no peak, no contribution
+        }
+        let id = bim.id_row(f);
+        let lv = bim.level_row(lvl as usize);
+        for wi in 0..w {
+            // Bound word: bit set where lv * id == -1.
+            let mut carry = id[wi] ^ lv[wi];
+            let mut k = 0;
+            while carry != 0 {
+                debug_assert!(k < k_planes, "counter overflow past {k_planes} planes");
+                let plane = &mut planes[k * w + wi];
+                let t = *plane & carry;
+                *plane ^= carry;
+                carry = t;
+                k += 1;
+            }
+        }
+    }
+
+    // Output is -1 exactly where count > floor(P/2): bit-sliced unsigned
+    // compare, MSB plane first.
+    let threshold = p / 2;
+    for wi in 0..w {
+        let mut gt = 0u64;
+        let mut eq = !0u64;
+        for k in (0..k_planes).rev() {
+            let plane = planes[k * w + wi];
+            let t = if (threshold >> k) & 1 == 1 { !0u64 } else { 0u64 };
+            gt |= eq & plane & !t;
+            eq &= !(plane ^ t);
+        }
+        out[wi] = gt;
+    }
+    if w > 0 {
+        out[w - 1] &= tail_mask(bim.d);
+    }
+}
+
+/// Encode into an owned [`BitHv`] (convenience over [`encode_bits_into`]).
+pub fn encode_bits(levels: &[u16], bim: &BitItemMemory) -> BitHv {
+    let mut scratch = EncodeScratch::default();
+    let mut words = vec![0u64; bim.w];
+    encode_bits_into(levels, bim, &mut scratch, &mut words);
+    BitHv { words, d: bim.d }
+}
+
+/// Pack sign-bit words into the coordinator's f32 row layout —
+/// bit-identical to [`super::pack`] on the unpacked HV: group `j` holds
+/// the sum of elements `j*n .. min((j+1)*n, d)` and the padding region up
+/// to `padded_packed_len(d, n)` is zero. `out` must be exactly that long.
+pub fn pack_bits_into(words: &[u64], d: usize, n: usize, out: &mut [f32]) {
+    assert!(n >= 1);
+    assert_eq!(words.len(), words_len(d));
+    assert_eq!(out.len(), padded_packed_len(d, n), "packed row length");
+    let groups = packed_len(d, n);
+    for (j, slot) in out.iter_mut().enumerate().take(groups) {
+        let start = j * n;
+        let end = (start + n).min(d);
+        let mut neg = 0i32;
+        for b in start..end {
+            neg += ((words[b / WORD_BITS] >> (b % WORD_BITS)) & 1) as i32;
+        }
+        *slot = ((end - start) as i32 - 2 * neg) as f32;
+    }
+    out[groups..].fill(0.0);
+}
+
+/// Fused encode + pack: writes one packed f32 row directly, never
+/// materializing the intermediate `Vec<i8>` hypervector. `out` must be
+/// `padded_packed_len(bim.d, n)` long; `word_buf` must be `bim.w` long.
+pub fn encode_pack_into(
+    levels: &[u16],
+    bim: &BitItemMemory,
+    n: usize,
+    scratch: &mut EncodeScratch,
+    word_buf: &mut [u64],
+    out: &mut [f32],
+) {
+    encode_bits_into(levels, bim, scratch, word_buf);
+    pack_bits_into(word_buf, bim.d, n, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hd::{self, pack};
+    use crate::util::Rng;
+
+    fn rand_hv(rng: &mut Rng, d: usize) -> Hv {
+        (0..d).map(|_| rng.pm1()).collect()
+    }
+
+    fn sparse_levels(rng: &mut Rng, f: usize, m: usize, peaks: usize) -> Vec<u16> {
+        let mut v = vec![0u16; f];
+        for _ in 0..peaks {
+            v[rng.below(f)] = 1 + rng.below(m - 1) as u16;
+        }
+        v
+    }
+
+    #[test]
+    fn bithv_roundtrip_and_tail_masking() {
+        let mut rng = Rng::new(1);
+        for d in [1usize, 63, 64, 65, 100, 128, 2048] {
+            let hv = rand_hv(&mut rng, d);
+            let b = BitHv::from_hv(&hv);
+            assert_eq!(b.to_hv(), hv, "d={d}");
+            // Tail bits past d stay zero.
+            assert_eq!(b.words[b.words.len() - 1] & !tail_mask(d), 0);
+        }
+    }
+
+    #[test]
+    fn popcount_dot_hamming_match_scalar() {
+        let mut rng = Rng::new(2);
+        for d in [64usize, 100, 1024, 2048] {
+            let a = rand_hv(&mut rng, d);
+            let b = rand_hv(&mut rng, d);
+            let (ba, bb) = (BitHv::from_hv(&a), BitHv::from_hv(&b));
+            assert_eq!(ba.dot(&bb), hd::dot(&a, &b), "d={d}");
+            assert_eq!(ba.hamming(&bb), hd::hamming(&a, &b), "d={d}");
+            assert_eq!(ba.cosine_pm1(&bb), hd::cosine_pm1(&a, &b), "d={d}");
+        }
+    }
+
+    #[test]
+    fn encode_bits_matches_scalar_encode() {
+        let mut rng = Rng::new(3);
+        for d in [64usize, 100, 130, 512, 2048] {
+            let im = ItemMemory::generate(d as u64, 64, 16, d);
+            let bim = BitItemMemory::from_item_memory(&im);
+            for peaks in [0usize, 1, 10, 40] {
+                let levels = sparse_levels(&mut rng, 64, 16, peaks);
+                let want = hd::encode(&levels, &im);
+                let got = encode_bits(&levels, &bim).to_hv();
+                assert_eq!(got, want, "d={d} peaks={peaks}");
+            }
+        }
+    }
+
+    #[test]
+    fn tie_rule_is_plus_one() {
+        // Exactly cancelling contributions (see encoder::tests): acc == 0
+        // everywhere must produce +1 everywhere, i.e. all-zero sign bits.
+        let mut im = ItemMemory::generate(4, 2, 3, 64);
+        im.id_hvs = vec![vec![1; 64], vec![1; 64]];
+        im.level_hvs = vec![vec![1; 64], vec![1; 64], vec![-1; 64]];
+        let bim = BitItemMemory::from_item_memory(&im);
+        let hv = encode_bits(&[1, 2], &bim).to_hv();
+        assert!(hv.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn fused_encode_pack_matches_reference() {
+        let mut rng = Rng::new(5);
+        for d in [512usize, 2000, 2048] {
+            let im = ItemMemory::generate(7 ^ d as u64, 128, 32, d);
+            let bim = BitItemMemory::from_item_memory(&im);
+            let mut scratch = EncodeScratch::default();
+            let mut words = vec![0u64; bim.w];
+            for n in 1usize..=4 {
+                let levels = sparse_levels(&mut rng, 128, 32, 30);
+                let want = pack(&hd::encode(&levels, &im), n);
+                let mut got = vec![f32::NAN; padded_packed_len(d, n)];
+                encode_pack_into(&levels, &bim, n, &mut scratch, &mut words, &mut got);
+                assert_eq!(got, want, "d={d} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_bits_matches_pack() {
+        let mut rng = Rng::new(6);
+        for d in [64usize, 100, 300, 2048] {
+            let hv = rand_hv(&mut rng, d);
+            let b = BitHv::from_hv(&hv);
+            for n in 1usize..=4 {
+                let mut got = vec![f32::NAN; padded_packed_len(d, n)];
+                pack_bits_into(&b.words, d, n, &mut got);
+                assert_eq!(got, pack(&hv, n), "d={d} n={n}");
+            }
+        }
+    }
+}

@@ -1,28 +1,54 @@
-//! Hyperdimensional computing (paper §II-A, §III-B) — rust reference path.
+//! Hyperdimensional computing (paper §II-A, §III-B).
 //!
-//! The production pipeline encodes and packs on the AOT jax artifacts
-//! (`runtime`); this module provides the bit-identical rust implementation
-//! used for validation, for artifact-free runs, and for HD dimensions the
-//! artifact set does not cover.
+//! Two bit-identical host implementations live here, mirroring the
+//! two-backend-seam architecture of the crate (see `backend/` for the MVM
+//! seam, `encode/` for the encode seam):
+//!
+//! * **Scalar reference** ([`encoder::encode`] + [`pack::pack`]) — the
+//!   element-serial `i32` oracle every faster path is checked against.
+//! * **Word-packed kernels** ([`bitpacked`]) — `u64` sign-bit HVs
+//!   ([`BitHv`]), XOR binding with bit-sliced counter accumulation,
+//!   popcount similarity, and a fused encode+pack that writes packed f32
+//!   rows directly. This is the SpecHD/HyperOMS observation that +/-1
+//!   arithmetic is word-parallel, applied to the host hot path.
+//!
+//! The production pipeline can also encode on the AOT jax artifacts
+//! (`runtime`, feature `pjrt`); all paths are bit-for-bit interchangeable
+//! (`rust/tests/encode_equivalence.rs`).
 
+pub mod bitpacked;
 pub mod encoder;
 pub mod itemmem;
 pub mod pack;
 
+pub use bitpacked::{BitHv, BitItemMemory};
 pub use encoder::encode;
 pub use itemmem::ItemMemory;
-pub use pack::{pack, packed_len, padded_packed_len};
+pub use pack::{pack, pack_into, packed_len, padded_packed_len};
 
 /// Binary hypervector: elements are +/-1 stored as i8.
 pub type Hv = Vec<i8>;
 
+/// Per-element products are +/-1, so a partial sum over a chunk this size
+/// fits an i32 with room to spare; chunked accumulation avoids the
+/// per-element widening to i64 the old loop paid.
+const DOT_CHUNK: usize = 4096;
+
 /// Dot-product similarity of two +/-1 hypervectors. Equals
 /// `D - 2 * hamming_distance` — the similarity both pipelines rank by.
+/// Accumulates in i32 per [`DOT_CHUNK`]-sized chunk (exact: each chunk's
+/// sum is bounded by the chunk length), folding into i64 across chunks.
 pub fn dot(a: &[i8], b: &[i8]) -> i64 {
     assert_eq!(a.len(), b.len());
-    a.iter()
-        .zip(b)
-        .map(|(&x, &y)| (x as i64) * (y as i64))
+    a.chunks(DOT_CHUNK)
+        .zip(b.chunks(DOT_CHUNK))
+        .map(|(ca, cb)| {
+            let mut acc = 0i32;
+            for (&x, &y) in ca.iter().zip(cb) {
+                acc += (x as i32) * (y as i32);
+            }
+            acc as i64
+        })
         .sum()
 }
 
@@ -62,6 +88,18 @@ mod tests {
         let a = rand_hv(&mut rng, 2048);
         assert_eq!(dot(&a, &a), 2048);
         assert_eq!(hamming(&a, &a), 0);
+    }
+
+    #[test]
+    fn chunked_dot_matches_naive_across_chunk_boundary() {
+        let mut rng = Rng::new(4);
+        // Straddles DOT_CHUNK so the i64 fold across chunks is exercised.
+        for d in [1usize, DOT_CHUNK - 1, DOT_CHUNK, DOT_CHUNK + 1, 10_000] {
+            let a = rand_hv(&mut rng, d);
+            let b = rand_hv(&mut rng, d);
+            let naive: i64 = a.iter().zip(&b).map(|(&x, &y)| (x as i64) * (y as i64)).sum();
+            assert_eq!(dot(&a, &b), naive, "d={d}");
+        }
     }
 
     #[test]

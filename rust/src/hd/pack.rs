@@ -22,26 +22,38 @@ pub fn padded_packed_len(d: usize, n: usize) -> usize {
     ceil_to(packed_len(d, n), ARRAY_DIM)
 }
 
+/// Pack one +/-1 hypervector into a caller-provided row of exactly
+/// `padded_packed_len` f32 entries (integer-valued, in [-n, n]) — the
+/// allocation-free primitive batch packing and the encode backends build
+/// on.
+pub fn pack_into(hv: &Hv, n: usize, out: &mut [f32]) {
+    assert!(n >= 1);
+    let cp = padded_packed_len(hv.len(), n);
+    assert_eq!(out.len(), cp, "packed row length");
+    let groups = packed_len(hv.len(), n);
+    for (slot, chunk) in out.iter_mut().zip(hv.chunks(n)) {
+        *slot = chunk.iter().map(|&x| x as i32).sum::<i32>() as f32;
+    }
+    out[groups..].fill(0.0);
+}
+
 /// Pack one +/-1 hypervector; output has `padded_packed_len` f32 entries
 /// (integer-valued, in [-n, n]).
 pub fn pack(hv: &Hv, n: usize) -> Vec<f32> {
-    assert!(n >= 1);
-    let cp = padded_packed_len(hv.len(), n);
-    let mut out = vec![0f32; cp];
-    for (j, chunk) in hv.chunks(n).enumerate() {
-        out[j] = chunk.iter().map(|&x| x as i32).sum::<i32>() as f32;
-    }
+    let mut out = vec![0f32; padded_packed_len(hv.len(), n)];
+    pack_into(hv, n, &mut out);
     out
 }
 
-/// Pack a batch into one row-major buffer (B x padded_packed_len).
+/// Pack a batch into one row-major buffer (B x padded_packed_len). One
+/// allocation for the whole batch, not one per row.
 pub fn pack_batch(hvs: &[Hv], n: usize) -> (Vec<f32>, usize) {
     assert!(!hvs.is_empty());
     let cp = padded_packed_len(hvs[0].len(), n);
-    let mut out = Vec::with_capacity(hvs.len() * cp);
-    for hv in hvs {
+    let mut out = vec![0f32; hvs.len() * cp];
+    for (hv, row) in hvs.iter().zip(out.chunks_mut(cp)) {
         assert_eq!(hv.len(), hvs[0].len(), "ragged HV batch");
-        out.extend_from_slice(&pack(hv, n));
+        pack_into(hv, n, row);
     }
     (out, cp)
 }
@@ -114,6 +126,17 @@ mod tests {
         let mean_err = err_sum / trials as f64;
         // Unbiased: mean error small relative to sqrt(D) noise scale.
         assert!(mean_err.abs() < 3.0 * (2.0 * d as f64).sqrt() / (trials as f64).sqrt());
+    }
+
+    #[test]
+    fn pack_into_matches_pack_and_clears_padding() {
+        let mut rng = Rng::new(5);
+        let hv = rand_hv(&mut rng, 300);
+        // A dirty output row must end up identical to a fresh pack().
+        let mut row = vec![f32::NAN; padded_packed_len(300, 3)];
+        pack_into(&hv, 3, &mut row);
+        assert_eq!(row, pack(&hv, 3));
+        assert!(row[packed_len(300, 3)..].iter().all(|&v| v == 0.0));
     }
 
     #[test]

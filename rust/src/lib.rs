@@ -22,7 +22,8 @@
 //! |---|---|---|
 //! | [`device`] | §III-E, Fig. 7, Table S1 | superlattice PCM material models, MLC noise, write-verify, drift |
 //! | [`array`] | §III-C, Table 1 | 128x128 2T2R array: DAC/ADC transfer, cycle model, banks |
-//! | [`hd`] | §II-A, §III-B | hypervectors, ID-level encoding, dimension packing (rust reference) |
+//! | [`hd`] | §II-A, §III-B | hypervectors, ID-level encoding, dimension packing (scalar reference + word-packed `bitpacked` kernels) |
+//! | [`encode`] | §III-B host path | pluggable encode+pack execution: scalar / bitpacked / spectra-sharded parallel |
 //! | [`ms`] | §II-B | spectra, synthetic workloads, preprocessing, bucketing |
 //! | [`energy`] | §IV, Tables S3/1, Fig. 8 | power/area/latency accounting (mergeable `OpCounts`) |
 //! | [`isa`] | §III-F, Table S2 | STORE_HV / READ_HV / MVM_COMPUTE instruction set |
@@ -43,6 +44,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod device;
+pub mod encode;
 pub mod energy;
 pub mod hd;
 pub mod isa;

@@ -13,6 +13,7 @@ use specpcm::baselines::latency_model;
 use specpcm::cluster::quality::clustered_at_incorrect;
 use specpcm::config::{SpecPcmConfig, Task};
 use specpcm::coordinator::{ClusteringPipeline, SearchEngine, SearchPipeline};
+use specpcm::encode::EncodeKind;
 use specpcm::energy::area_breakdown;
 use specpcm::ms::{ClusteringDataset, SearchDataset, Spectrum};
 use specpcm::telemetry::render_table;
@@ -24,9 +25,10 @@ specpcm — PCM-based analog IMC accelerator for MS analysis
 USAGE:
   specpcm cluster [--dataset pxd001468|pxd000561] [--scale F] [--config FILE]
                   [--backend ref|parallel|pjrt] [--threads N] [--num-banks N]
-                  [--no-artifacts]
+                  [--encode-backend scalar|bitpacked|parallel] [--no-artifacts]
   specpcm search  [--dataset iprg2012|hek293]     [--scale F] [--config FILE]
                   [--backend ref|parallel|pjrt] [--threads N] [--num-banks N]
+                  [--encode-backend scalar|bitpacked|parallel]
                   [--serve-batches N] [--no-artifacts]
   specpcm info                  print the hardware model (Tables 1/S3, Fig. 8)
   specpcm config [clustering|search]   print a config preset
@@ -48,9 +50,15 @@ CAPACITY:
   more banks, e.g. `--num-banks 256`.
 
 BACKENDS:
-  ref       single-threaded reference path (bit-exact oracle)
-  parallel  bank-sharded across host threads (default; --threads 0 = auto)
-  pjrt      AOT artifacts through PJRT (needs the `pjrt` cargo feature)
+  MVM (--backend): how score tiles execute
+    ref       single-threaded reference path (bit-exact oracle)
+    parallel  bank-sharded across host threads (default; --threads 0 = auto)
+    pjrt      AOT artifacts through PJRT (needs the `pjrt` cargo feature)
+  Encode (--encode-backend): how HD encode+pack executes
+    scalar     element-serial reference path (bit-exact oracle)
+    bitpacked  u64 word-packed kernels (XOR bind + popcount)
+    parallel   spectra sharded across threads, bitpacked per shard (default)
+  All combinations produce bit-identical results; only host speed differs.
 ";
 
 /// Tiny flag parser: `--key value`, `--key=value` and bare `--flag` forms.
@@ -131,6 +139,9 @@ fn load_cfg(args: &Args, default: SpecPcmConfig) -> Result<SpecPcmConfig> {
     if let Some(b) = args.flags.get("backend") {
         cfg.backend.kind = BackendKind::from_name(b)?;
     }
+    if let Some(e) = args.flags.get("encode-backend") {
+        cfg.backend.encode_kind = EncodeKind::from_name(e)?;
+    }
     cfg.backend.threads = args.get_usize("threads", cfg.backend.threads)?;
     cfg.num_banks = args.get_usize("num-banks", cfg.num_banks)?;
     cfg.validate()?;
@@ -139,7 +150,11 @@ fn load_cfg(args: &Args, default: SpecPcmConfig) -> Result<SpecPcmConfig> {
 
 fn open_backend(cfg: &SpecPcmConfig) -> BackendDispatcher {
     let backend = BackendDispatcher::from_config(cfg);
-    eprintln!("backend: {}", backend.primary_name());
+    eprintln!(
+        "backend: mvm={} encode={}",
+        backend.primary_name(),
+        backend.encode_name()
+    );
     backend
 }
 
@@ -416,6 +431,19 @@ mod tests {
         assert_eq!(cfg.backend.kind, BackendKind::Reference);
         assert_eq!(cfg.backend.threads, 2);
         let bad = Args::parse(&argv(&["--backend", "gpu"])).unwrap();
+        assert!(load_cfg(&bad, SpecPcmConfig::paper_clustering()).is_err());
+    }
+
+    #[test]
+    fn encode_backend_flag_applies_to_config() {
+        let a = Args::parse(&argv(&["--encode-backend", "bitpacked"])).unwrap();
+        let cfg = load_cfg(&a, SpecPcmConfig::paper_clustering()).unwrap();
+        assert_eq!(cfg.backend.encode_kind, EncodeKind::Bitpacked);
+        // Default stays the parallel encode path.
+        let none = Args::parse(&argv(&[])).unwrap();
+        let cfg = load_cfg(&none, SpecPcmConfig::paper_clustering()).unwrap();
+        assert_eq!(cfg.backend.encode_kind, EncodeKind::Parallel);
+        let bad = Args::parse(&argv(&["--encode-backend", "gpu"])).unwrap();
         assert!(load_cfg(&bad, SpecPcmConfig::paper_clustering()).is_err());
     }
 

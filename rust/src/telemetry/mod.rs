@@ -4,6 +4,38 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+/// Query-HV cache hit/miss counters (the engine's encode cache; see
+/// `coordinator::SearchEngine`). A "hit" is any spectrum whose packed HV
+/// was served without running the encode kernel — from an earlier batch
+/// or from a duplicate earlier in the same batch.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EncodeCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl EncodeCacheStats {
+    pub fn total(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hit fraction in [0, 1] (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.total() as f64
+        }
+    }
+}
+
+impl std::ops::AddAssign for EncodeCacheStats {
+    fn add_assign(&mut self, rhs: Self) {
+        self.hits += rhs.hits;
+        self.misses += rhs.misses;
+    }
+}
+
 /// Named wall-clock stage timings (the Fig. 3-style latency breakdown).
 #[derive(Debug, Default, Clone)]
 pub struct StageTimer {
@@ -87,6 +119,16 @@ pub fn render_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> Stri
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn cache_stats_accumulate_and_rate() {
+        let mut s = EncodeCacheStats::default();
+        assert_eq!(s.hit_rate(), 0.0);
+        s += EncodeCacheStats { hits: 3, misses: 1 };
+        s += EncodeCacheStats { hits: 1, misses: 0 };
+        assert_eq!(s.total(), 5);
+        assert!((s.hit_rate() - 0.8).abs() < 1e-12);
+    }
 
     #[test]
     fn timer_accumulates() {

@@ -1,0 +1,214 @@
+//! Encode-backend equivalence (the second half of the pluggable-backend
+//! contract): every encode backend — scalar reference, word-packed
+//! bitpacked, spectra-sharded parallel at any thread count — must produce
+//! **bit-identical** packed HV rows to `hd::encode` + `hd::pack` (same
+//! `sign(0) = +1` tie rule, same zero padding), at kernel level, at
+//! frontend level, and at pipeline level (clustering and search summaries
+//! unchanged for every backend choice). Also locks in the engine's
+//! query-HV cache contract: cached batches are bit-identical and hits are
+//! surfaced. Runs on the default feature set (no artifacts, no external
+//! crates).
+
+use specpcm::backend::BackendDispatcher;
+use specpcm::cluster::quality::clustered_at_incorrect;
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::{ClusteringPipeline, SearchEngine, SearchPipeline};
+use specpcm::encode::{
+    backend_of_kind, EncodeBackend, EncodeJob, EncodeKind, ParallelEncodeBackend,
+    ScalarEncodeBackend,
+};
+use specpcm::hd::{self, BitItemMemory, ItemMemory};
+use specpcm::ms::{ClusteringDataset, SearchDataset, Spectrum};
+use specpcm::util::Rng;
+
+fn sparse_levels(rng: &mut Rng, f: usize, m: usize, peaks: usize) -> Vec<u16> {
+    let mut v = vec![0u16; f];
+    for _ in 0..peaks {
+        v[rng.below(f)] = 1 + rng.below(m - 1) as u16;
+    }
+    v
+}
+
+/// Property test: across random seeds, sparse/empty spectra, all-tie
+/// inputs and dims that are *not* multiples of 64 (tail-word masking),
+/// the bitpacked encode+pack matches the scalar reference bit for bit.
+#[test]
+fn bitpacked_matches_scalar_reference_property() {
+    // 100/130/2000 exercise the tail-word mask; 64/2048 the aligned path.
+    for (seed, d) in [(1u64, 64usize), (2, 100), (3, 130), (4, 512), (5, 2000), (6, 2048)] {
+        let mut rng = Rng::new(0xec0de ^ seed);
+        let im = ItemMemory::generate(seed, 96, 16, d);
+        let bim = BitItemMemory::from_item_memory(&im);
+        for n in 1usize..=4 {
+            let mut batch: Vec<Vec<u16>> = Vec::new();
+            batch.push(vec![0u16; 96]); // empty spectrum: all-tie output
+            batch.push(vec![1u16; 96]); // every bin occupied
+            for peaks in [1usize, 7, 30, 96] {
+                batch.push(sparse_levels(&mut rng, 96, 16, peaks));
+            }
+            let job = EncodeJob::new(&batch, &im, &bim, n);
+            let mut want = vec![0f32; job.out_len()];
+            ScalarEncodeBackend.encode_pack(&job, &mut want).unwrap();
+            // Row 0 (empty spectrum) must be the packed all-(+1) vector:
+            // sign(0) = +1 everywhere, so every full group packs to n.
+            assert!(
+                want[..hd::packed_len(d, n)]
+                    .iter()
+                    .take(d / n)
+                    .all(|&v| v == n as f32),
+                "tie rule broke: seed={seed} d={d} n={n}"
+            );
+            for kind in [EncodeKind::Bitpacked, EncodeKind::Parallel] {
+                let mut got = vec![f32::NAN; job.out_len()];
+                backend_of_kind(kind, 2).encode_pack(&job, &mut got).unwrap();
+                assert_eq!(got, want, "seed={seed} d={d} n={n} kind={}", kind.name());
+            }
+        }
+    }
+}
+
+/// Exactly cancelling contributions: acc == 0 on every element, so the
+/// `sign(0) = +1` tie rule decides the entire output — on every backend.
+#[test]
+fn all_tie_inputs_agree_across_backends() {
+    let mut im = ItemMemory::generate(44, 2, 3, 192);
+    im.id_hvs = vec![vec![1; 192], vec![1; 192]];
+    im.level_hvs = vec![vec![1; 192], vec![1; 192], vec![-1; 192]];
+    let bim = BitItemMemory::from_item_memory(&im);
+    let batch = vec![vec![1u16, 2u16]];
+    let job = EncodeJob::new(&batch, &im, &bim, 3);
+    let want = hd::pack(&vec![1i8; 192], 3);
+    for kind in [EncodeKind::Scalar, EncodeKind::Bitpacked, EncodeKind::Parallel] {
+        let mut got = vec![f32::NAN; job.out_len()];
+        backend_of_kind(kind, 2).encode_pack(&job, &mut got).unwrap();
+        assert_eq!(got, want, "kind={}", kind.name());
+    }
+}
+
+#[test]
+fn parallel_encode_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(0xabc);
+    let im = ItemMemory::generate(9, 128, 32, 2048);
+    let bim = BitItemMemory::from_item_memory(&im);
+    let batch: Vec<Vec<u16>> = (0..41).map(|_| sparse_levels(&mut rng, 128, 32, 40)).collect();
+    let job = EncodeJob::new(&batch, &im, &bim, 3);
+    let mut want = vec![0f32; job.out_len()];
+    ScalarEncodeBackend.encode_pack(&job, &mut want).unwrap();
+    for threads in [1usize, 2, 8] {
+        let mut got = vec![f32::NAN; job.out_len()];
+        ParallelEncodeBackend::new(threads)
+            .encode_pack(&job, &mut got)
+            .unwrap();
+        assert_eq!(got, want, "threads={threads}");
+    }
+}
+
+fn encode_dispatchers() -> Vec<(String, BackendDispatcher)> {
+    let mut out = vec![(
+        "scalar".to_string(),
+        BackendDispatcher::reference(),
+    )];
+    out.push((
+        "bitpacked".to_string(),
+        BackendDispatcher::reference().with_encode_kind(EncodeKind::Bitpacked, 0),
+    ));
+    for threads in [1usize, 2, 8] {
+        out.push((
+            format!("parallel x{threads}"),
+            BackendDispatcher::reference().with_encode_kind(EncodeKind::Parallel, threads),
+        ));
+    }
+    out
+}
+
+#[test]
+fn clustering_pipeline_identical_across_encode_backends() {
+    let cfg = SpecPcmConfig {
+        hd_dim: 1024,
+        bucket_width: 50.0,
+        num_banks: 64,
+        ..SpecPcmConfig::paper_clustering()
+    };
+    // Same dataset as backend_equivalence.rs's clustering test, so the
+    // closing quality assert is a known-green workload.
+    let ds = ClusteringDataset::generate("t", 31, 10, 4, 6, 8, 0);
+    let via_scalar = ClusteringPipeline::new(cfg.clone())
+        .run(&ds, &BackendDispatcher::reference())
+        .unwrap();
+    for (name, be) in encode_dispatchers() {
+        let via = ClusteringPipeline::new(cfg.clone()).run(&ds, &be).unwrap();
+        assert_eq!(via.ops.mvm_ops, via_scalar.ops.mvm_ops, "{name}");
+        assert_eq!(via.ops.encode_spectra, via_scalar.ops.encode_spectra, "{name}");
+        assert_eq!(via.n_buckets, via_scalar.n_buckets, "{name}");
+        for (a, b) in via.curve.iter().zip(&via_scalar.curve) {
+            assert_eq!(a.clustered_ratio, b.clustered_ratio, "{name} t={}", a.threshold);
+            assert_eq!(a.incorrect_ratio, b.incorrect_ratio, "{name} t={}", a.threshold);
+        }
+    }
+    assert!(clustered_at_incorrect(&via_scalar.curve, 0.02) > 0.3);
+}
+
+#[test]
+fn search_pipeline_identical_across_encode_backends() {
+    let cfg = SpecPcmConfig {
+        hd_dim: 2048,
+        num_banks: 64,
+        ..SpecPcmConfig::paper_search()
+    };
+    // Same dataset as backend_equivalence.rs's search test (known-green
+    // identification count).
+    let ds = SearchDataset::generate("t", 32, 60, 80, 0.8, 0.2, 0, 0);
+    let via_scalar = SearchPipeline::new(cfg.clone())
+        .run(&ds, &BackendDispatcher::reference())
+        .unwrap();
+    for (name, be) in encode_dispatchers() {
+        let via = SearchPipeline::new(cfg.clone()).run(&ds, &be).unwrap();
+        assert_eq!(via.pairs, via_scalar.pairs, "{name}");
+        assert_eq!(via.identified, via_scalar.identified, "{name}");
+        assert_eq!(via.correct, via_scalar.correct, "{name}");
+        assert_eq!(via.identified_peptides, via_scalar.identified_peptides, "{name}");
+        assert_eq!(via.ops.encode_spectra, via_scalar.ops.encode_spectra, "{name}");
+    }
+    assert!(via_scalar.identified > 20, "identified {}", via_scalar.identified);
+}
+
+/// The engine's query-HV cache serves repeated spectra without
+/// re-encoding, returns bit-identical [`BatchOutcome`]s, reports its
+/// hits, and never perturbs op/energy accounting.
+#[test]
+fn engine_query_cache_bit_identical_and_reports_hits() {
+    let cfg = SpecPcmConfig {
+        hd_dim: 2048,
+        bucket_width: 5.0,
+        num_banks: 64,
+        ..SpecPcmConfig::paper_search()
+    };
+    let ds = SearchDataset::generate("t", 63, 30, 20, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::parallel(2);
+    let engine = SearchEngine::program(cfg, &ds, &be).unwrap();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+    let cold = engine.search_batch(&queries, &be).unwrap();
+    assert_eq!(cold.cache.hits + cold.cache.misses, queries.len() as u64);
+    assert!(cold.cache.misses > 0);
+
+    // Serving the same spectra again: all hits, outcome bit-identical.
+    let warm = engine.search_batch(&queries, &be).unwrap();
+    assert_eq!(warm.cache.hits, queries.len() as u64);
+    assert_eq!(warm.cache.misses, 0);
+    assert_eq!(warm.pairs, cold.pairs);
+    assert_eq!(warm.matched, cold.matched);
+    assert_eq!(warm.ops, cold.ops);
+    assert_eq!(warm.report.total_j(), cold.report.total_j());
+
+    // finalize over cached batches still folds to the one-shot summary.
+    let doubled: Vec<&Spectrum> = queries.iter().chain(queries.iter()).copied().collect();
+    let out = engine.finalize(&doubled, &[cold.clone(), warm]).unwrap();
+    assert_eq!(out.total_queries, doubled.len());
+    assert_eq!(&out.pairs[..queries.len()], &cold.pairs[..]);
+    assert_eq!(&out.pairs[queries.len()..], &cold.pairs[..]);
+
+    let stats = engine.encode_cache_stats();
+    assert_eq!(stats.total(), 2 * queries.len() as u64);
+    assert!(stats.hit_rate() >= 0.5);
+}
