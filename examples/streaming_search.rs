@@ -4,11 +4,15 @@
 //! the stored conductances. Contrast with re-running `SearchPipeline::run`,
 //! which would re-pay the one-time programming cost on every invocation.
 //!
+//! The last section shows the shard layer: the same library on engines too
+//! small to hold it, split by a [`ShardedSearchEngine`] and served with
+//! concurrent per-shard fan-out — bit-identical to one big-enough engine.
+//!
 //! Run: `cargo run --release --example streaming_search [n_batches]`
 
 use specpcm::backend::BackendDispatcher;
 use specpcm::config::SpecPcmConfig;
-use specpcm::coordinator::{SearchEngine, SearchPipeline};
+use specpcm::coordinator::{SearchEngine, SearchPipeline, ShardedSearchEngine};
 use specpcm::ms::{SearchDataset, Spectrum};
 use specpcm::telemetry::render_table;
 use specpcm::util::error::Result;
@@ -84,13 +88,57 @@ fn main() -> Result<()> {
         out.correct
     );
 
-    let one_shot = SearchPipeline::new(cfg).run(&ds, &backend)?;
+    let one_shot = SearchPipeline::new(cfg.clone()).run(&ds, &backend)?;
     assert_eq!(out.pairs, one_shot.pairs);
     assert_eq!(out.fdr.accepted, one_shot.fdr.accepted);
     assert_eq!(out.ops.mvm_ops, one_shot.ops.mvm_ops);
     println!(
         "check OK: {n_batches}-batch serving is bit-identical to the one-shot \
          pipeline, with the library programmed once instead of twice."
+    );
+
+    // ---- shard layer: the library on engines too small to hold it ----------
+    // 12 banks at D=2048 n=3 hold 256 reference rows; the 400-row library
+    // overflows one engine, so the shard layer auto-splits it in two and
+    // fans every batch across both shards on scoped threads.
+    let small = SpecPcmConfig {
+        num_banks: 12,
+        ..cfg.clone()
+    };
+    assert!(SearchEngine::program(small.clone(), &ds, &backend).is_err());
+    let sharded = ShardedSearchEngine::program(small, &ds, &backend, 0)?;
+    println!(
+        "sharded: {} rows across {} shards x 12 banks, rows/shard {:?}",
+        sharded.n_refs(),
+        sharded.n_shards(),
+        sharded
+            .plan()
+            .ranges()
+            .iter()
+            .map(|r| r.len())
+            .collect::<Vec<_>>()
+    );
+    let sharded_out = {
+        let outcomes = sharded.serve_chunked(&queries, n_batches, &backend)?;
+        sharded.finalize(&queries, &outcomes)?
+    };
+
+    // The monolithic equivalent owns the union pool: 2 x 12 = 24 banks.
+    let union = SpecPcmConfig {
+        num_banks: sharded.total_banks(),
+        ..cfg
+    };
+    let mono = SearchEngine::program(union, &ds, &backend)?;
+    let mono_batch = mono.search_batch(&queries, &backend)?;
+    let mono_out = mono.finalize(&queries, &[mono_batch])?;
+    assert_eq!(sharded_out.pairs, mono_out.pairs);
+    assert_eq!(sharded_out.fdr.accepted, mono_out.fdr.accepted);
+    assert_eq!(sharded_out.ops, mono_out.ops);
+    println!(
+        "shard check OK: {} shards of 12 banks serve bit-identically to one \
+         {}-bank engine — same results, same total simulated ASIC work.",
+        sharded.n_shards(),
+        sharded.total_banks()
     );
     Ok(())
 }

@@ -14,9 +14,7 @@
 //! executes [`EncodeJob`]s through — one object, both hot paths.
 
 #[cfg(feature = "pjrt")]
-use std::cell::RefCell;
-#[cfg(feature = "pjrt")]
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::config::SpecPcmConfig;
 use crate::encode::{backend_of_kind, EncodeBackend, EncodeJob, EncodeKind};
@@ -43,7 +41,7 @@ pub struct BackendDispatcher {
     /// Shared PJRT runtime handle when the primary is the artifact
     /// backend — the HD frontend uses it for the encoder artifact.
     #[cfg(feature = "pjrt")]
-    runtime: Option<Rc<RefCell<Runtime>>>,
+    runtime: Option<Arc<Mutex<Runtime>>>,
 }
 
 impl BackendDispatcher {
@@ -145,7 +143,7 @@ impl BackendDispatcher {
 
     /// Shared PJRT runtime handle, when the primary backend carries one.
     #[cfg(feature = "pjrt")]
-    pub fn runtime(&self) -> Option<&Rc<RefCell<Runtime>>> {
+    pub fn runtime(&self) -> Option<&Arc<Mutex<Runtime>>> {
         self.runtime.as_ref()
     }
 

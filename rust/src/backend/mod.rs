@@ -147,7 +147,13 @@ impl<'a> MvmJob<'a> {
 /// [`crate::array::imc_mvm_ref`] on the same job (the PJRT artifact is
 /// bit-exact by the pow-2 ADC full-scale argument; the parallel backend by
 /// running the identical scalar kernel per shard).
-pub trait MvmBackend {
+///
+/// `Send + Sync` are part of the contract: the coordinator's shard layer
+/// fans one query batch out across scoped threads that all execute jobs
+/// through one shared [`BackendDispatcher`], so a backend with
+/// single-thread interior mutability must synchronize it internally
+/// (`Mutex`, not `RefCell`).
+pub trait MvmBackend: Send + Sync {
     /// Short stable identifier (telemetry / CLI echo).
     fn name(&self) -> &'static str;
 

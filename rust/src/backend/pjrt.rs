@@ -7,12 +7,12 @@
 //! §Perf L3) and reports padded-tile utilization so the dispatcher can
 //! route low-occupancy jobs to the scalar path instead.
 //!
-//! The runtime sits behind `Rc<RefCell<_>>` because executable compilation
-//! caches mutate it; the dispatcher shares the same handle with the HD
-//! frontend for the encoder artifact.
+//! The runtime sits behind `Arc<Mutex<_>>` because executable compilation
+//! caches mutate it and the `MvmBackend` contract is `Send + Sync` (the
+//! shard layer executes jobs from scoped threads); the dispatcher shares
+//! the same handle with the HD frontend for the encoder artifact.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::coordinator::batcher::{pad_matrix, Batcher};
 use crate::runtime::{Manifest, Runtime};
@@ -22,14 +22,14 @@ use super::{MvmBackend, MvmJob};
 
 /// Executes jobs on the PJRT runtime's compiled MVM artifacts.
 pub struct PjrtBackend {
-    rt: Rc<RefCell<Runtime>>,
+    rt: Arc<Mutex<Runtime>>,
 }
 
 impl PjrtBackend {
     /// Wrap an already-loaded runtime.
     pub fn new(rt: Runtime) -> Self {
         PjrtBackend {
-            rt: Rc::new(RefCell::new(rt)),
+            rt: Arc::new(Mutex::new(rt)),
         }
     }
 
@@ -40,7 +40,7 @@ impl PjrtBackend {
 
     /// Shared handle to the underlying runtime (encoder artifact path,
     /// telemetry).
-    pub fn shared_runtime(&self) -> Rc<RefCell<Runtime>> {
+    pub fn shared_runtime(&self) -> Arc<Mutex<Runtime>> {
         self.rt.clone()
     }
 }
@@ -58,7 +58,8 @@ impl MvmBackend for PjrtBackend {
             && job.nr > 0
             && self
                 .rt
-                .borrow()
+                .lock()
+                .expect("pjrt runtime poisoned")
                 .manifest
                 .get(&Manifest::mvm_name(job.cp))
                 .is_some()
@@ -70,7 +71,7 @@ impl MvmBackend for PjrtBackend {
         if !self.supports(job) {
             return 0.0;
         }
-        let rt = self.rt.borrow();
+        let rt = self.rt.lock().expect("pjrt runtime poisoned");
         let padded = job.nq.div_ceil(rt.manifest.batch)
             * rt.manifest.batch
             * job.nr.div_ceil(rt.manifest.rows)
@@ -79,7 +80,7 @@ impl MvmBackend for PjrtBackend {
     }
 
     fn mvm_scores(&self, job: &MvmJob) -> Result<Vec<f32>> {
-        let mut rt = self.rt.borrow_mut();
+        let mut rt = self.rt.lock().expect("pjrt runtime poisoned");
         let b = rt.manifest.batch;
         let r_block = rt.manifest.rows;
         let (nq, nr, cp) = (job.nq, job.nr, job.cp);

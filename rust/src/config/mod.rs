@@ -63,6 +63,11 @@ pub struct BackendConfig {
     /// MVM job to the primary backend instead of the scalar fallback
     /// (measured crossover ~0.3 for the fixed-geometry PJRT artifact).
     pub min_utilization: f64,
+    /// Library shards for DB search (the third seam,
+    /// `coordinator::sharded`): 0 = auto-compute the minimum shard count
+    /// whose per-shard library fits `num_banks` banks (1 when it already
+    /// fits), N = force exactly N engines of `num_banks` banks each.
+    pub shards: usize,
 }
 
 impl Default for BackendConfig {
@@ -72,6 +77,7 @@ impl Default for BackendConfig {
             encode_kind: EncodeKind::Parallel,
             threads: 0,
             min_utilization: 0.3,
+            shards: 0,
         }
     }
 }
@@ -205,6 +211,7 @@ impl SpecPcmConfig {
                     )?
                 }
                 "backend.threads" => cfg.backend.threads = get_usize(val, key)?,
+                "backend.shards" => cfg.backend.shards = get_usize(val, key)?,
                 "backend.min_utilization" => {
                     cfg.backend.min_utilization =
                         val.as_f64().ok_or("backend.min_utilization")?
@@ -239,6 +246,7 @@ impl SpecPcmConfig {
         s += &kv::fmt_str("encode_kind", self.backend.encode_kind.name());
         s += &kv::fmt_num("threads", self.backend.threads);
         s += &kv::fmt_num("min_utilization", self.backend.min_utilization);
+        s += &kv::fmt_num("shards", self.backend.shards);
         s
     }
 
@@ -354,13 +362,16 @@ mod tests {
 
         let c = SpecPcmConfig::from_toml(
             "hd_dim = 1024\n[backend]\nkind = \"ref\"\nencode_kind = \"bitpacked\"\n\
-             threads = 4\nmin_utilization = 0.5\n",
+             threads = 4\nmin_utilization = 0.5\nshards = 3\n",
         )
         .unwrap();
         assert_eq!(c.backend.kind, BackendKind::Reference);
         assert_eq!(c.backend.encode_kind, EncodeKind::Bitpacked);
         assert_eq!(c.backend.threads, 4);
         assert_eq!(c.backend.min_utilization, 0.5);
+        assert_eq!(c.backend.shards, 3);
+        // Default stays auto (0).
+        assert_eq!(SpecPcmConfig::paper_search().backend.shards, 0);
 
         // to_toml emits the section and parses back identically.
         let back = SpecPcmConfig::from_toml(&c.to_toml()).unwrap();

@@ -28,7 +28,15 @@ pub struct SegmentAllocator {
     num_banks: usize,
     /// Free rows per group (LIFO).
     free: Vec<Vec<usize>>,
+    /// Per-group occupancy bitset (bit `row` set = allocated). Keeps the
+    /// double-release check O(1) in every build — the former
+    /// `free.contains(&row)` scan was O(rows) per release, which made
+    /// bulk release/reuse (clustering reprograms every bucket) quadratic.
+    used: Vec<u128>,
 }
+
+// One `u128` word per group covers every row.
+const _: () = assert!(ARRAY_DIM <= 128);
 
 impl SegmentAllocator {
     /// `num_banks` physical banks serving HVs of `packed_width` (must be a
@@ -59,6 +67,7 @@ impl SegmentAllocator {
             free: (0..groups)
                 .map(|_| (0..ARRAY_DIM).rev().collect())
                 .collect(),
+            used: vec![0u128; groups],
         })
     }
 
@@ -83,19 +92,25 @@ impl SegmentAllocator {
     pub fn alloc(&mut self) -> Option<Slot> {
         for (g, rows) in self.free.iter_mut().enumerate() {
             if let Some(row) = rows.pop() {
+                self.used[g] |= 1u128 << row;
                 return Some(Slot { group: g, row });
             }
         }
         None
     }
 
-    /// Release a slot back to the pool.
+    /// Release a slot back to the pool. Double releases are caught in
+    /// every build via the O(1) occupancy bitset (not an O(rows) scan of
+    /// the free list, and not debug-only — a double-booked row would
+    /// silently corrupt placement).
     pub fn release(&mut self, slot: Slot) {
         assert!(slot.group < self.groups && slot.row < ARRAY_DIM);
-        debug_assert!(
-            !self.free[slot.group].contains(&slot.row),
+        let bit = 1u128 << slot.row;
+        assert!(
+            self.used[slot.group] & bit != 0,
             "double release of {slot:?}"
         );
+        self.used[slot.group] &= !bit;
         self.free[slot.group].push(slot.row);
     }
 
@@ -152,5 +167,31 @@ mod tests {
     #[should_panic]
     fn too_wide_for_banks() {
         SegmentAllocator::new(2, 768); // needs 6 banks
+    }
+
+    #[test]
+    #[should_panic(expected = "double release")]
+    fn double_release_is_caught_in_release_builds() {
+        let mut a = SegmentAllocator::new(2, 256);
+        let s = a.alloc().unwrap();
+        a.release(s);
+        a.release(s); // O(1) bitset check, armed in every build profile
+    }
+
+    #[test]
+    fn bulk_release_and_reuse_round_trips() {
+        let mut a = SegmentAllocator::new(4, 256); // 2 groups x 128 rows
+        let slots: Vec<Slot> = (0..256).map(|_| a.alloc().unwrap()).collect();
+        assert_eq!(a.free_slots(), 0);
+        for &s in &slots {
+            a.release(s);
+        }
+        assert_eq!(a.free_slots(), a.capacity());
+        // Every slot is allocatable again, still without double-booking.
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..256 {
+            assert!(seen.insert(a.alloc().unwrap()));
+        }
+        assert!(a.alloc().is_none());
     }
 }

@@ -24,7 +24,11 @@
 //! the queries were split into batches.
 //!
 //! A library that does not fit the configured banks fails construction
-//! with a typed [`CapacityError`] instead of silently ignoring `num_banks`.
+//! with a typed [`CapacityError`] instead of silently ignoring `num_banks`
+//! — and a library that overflows one engine can be split across several
+//! via the shard layer ([`super::sharded::ShardedSearchEngine`]), which
+//! builds on the [`SearchEngine::encode_queries`] /
+//! [`SearchEngine::score_packed`] / [`GroupCharges`] primitives below.
 //!
 //! # Query-HV cache
 //!
@@ -39,9 +43,12 @@
 //! every spectrum, the cache only removes redundant *host* arithmetic
 //! (exactly like backend selection, it can never change results or
 //! simulated cost — `rust/tests/encode_equivalence.rs` locks this in).
+//! The cache lives behind a `Mutex`, never a `RefCell`: `&SearchEngine`
+//! is `Sync`, so the shard layer can fan one batch out across scoped
+//! threads while hit/miss reporting keeps working per batch.
 
-use std::cell::RefCell;
 use std::collections::{BTreeMap, HashMap};
+use std::sync::Mutex;
 
 use crate::array::AdcConfig;
 use crate::backend::{BackendDispatcher, MvmJob};
@@ -108,6 +115,17 @@ impl ProgramContext {
     /// `seed_tag` keeps the clustering and search noise streams distinct
     /// (`seed ^ 0xc1` / `seed ^ 0x5e`, matching the pre-engine pipelines).
     pub fn new(cfg: &SpecPcmConfig, packed_width: usize, seed_tag: u64) -> Result<Self> {
+        Self::with_rng(cfg, packed_width, Rng::new(cfg.seed ^ seed_tag))
+    }
+
+    /// Construct with an explicit programming-noise RNG state. The shard
+    /// layer chains contexts through this: shard `i+1` starts from the
+    /// exact state shard `i` finished with, so the concatenated per-row
+    /// noise stream is bit-identical to one monolithic context programming
+    /// every row in sequence (RNG consumption per row is data-dependent —
+    /// write-verify converges early — so only state hand-off, not seed
+    /// arithmetic, can reproduce the stream).
+    pub fn with_rng(cfg: &SpecPcmConfig, packed_width: usize, rng: Rng) -> Result<Self> {
         let programmer = Programmer::new(
             NoiseModel::new(cfg.material, MlcConfig::new(cfg.mlc_bits)),
             cfg.write_verify,
@@ -116,8 +134,14 @@ impl ProgramContext {
         Ok(ProgramContext {
             programmer,
             allocator,
-            rng: Rng::new(cfg.seed ^ seed_tag),
+            rng,
         })
+    }
+
+    /// Snapshot of the programming-noise RNG after everything programmed
+    /// so far (the hand-off state for the next shard's context).
+    pub fn rng_state(&self) -> Rng {
+        self.rng.clone()
     }
 
     /// Typed pre-flight check: do `n_rows` more HVs fit the free slots?
@@ -183,7 +207,7 @@ pub struct BatchOutcome {
 /// One-time vs. marginal vs. amortized energy/latency split over a serving
 /// run — the single place the accounting formulas live; the CLI, the
 /// streaming example and the Table 3 bench only format it.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct ServingCost {
     /// Library encode+program energy, paid once at engine construction.
     pub one_time_j: f64,
@@ -197,6 +221,19 @@ pub struct ServingCost {
 }
 
 impl ServingCost {
+    /// Build the one-time/marginal split from a programming report plus
+    /// the served batches' marginal reports — the single constructor
+    /// behind both the engine's and the shard layer's `serving_cost`.
+    pub fn from_reports(one_time: &EnergyReport, batches: &[BatchOutcome]) -> ServingCost {
+        ServingCost {
+            one_time_j: one_time.total_j(),
+            marginal_j: batches.iter().map(|b| b.report.total_j()).sum(),
+            one_time_s: one_time.total_latency_s(),
+            marginal_s: batches.iter().map(|b| b.report.overlapped_latency_s()).sum(),
+            n_batches: batches.len(),
+        }
+    }
+
     pub fn amortized_j_per_batch(&self) -> f64 {
         (self.one_time_j + self.marginal_j) / self.n_batches.max(1) as f64
     }
@@ -204,6 +241,107 @@ impl ServingCost {
     pub fn amortized_s_per_batch(&self) -> f64 {
         (self.one_time_s + self.marginal_s) / self.n_batches.max(1) as f64
     }
+
+    /// Fold another engine's cost for the *same* serving run into this one
+    /// (shard aggregation): energies and latencies sum — each shard's
+    /// banks did its share of the physical work — while `n_batches` takes
+    /// the max, because every shard saw the same fan-out batch sequence,
+    /// not extra batches.
+    pub fn merge(&mut self, other: &ServingCost) {
+        self.one_time_j += other.one_time_j;
+        self.marginal_j += other.marginal_j;
+        self.one_time_s += other.one_time_s;
+        self.marginal_s += other.marginal_s;
+        self.n_batches = self.n_batches.max(other.n_batches);
+    }
+}
+
+impl std::ops::AddAssign<&ServingCost> for ServingCost {
+    fn add_assign(&mut self, other: &ServingCost) {
+        self.merge(other);
+    }
+}
+
+impl std::ops::AddAssign for ServingCost {
+    fn add_assign(&mut self, other: ServingCost) {
+        self.merge(&other);
+    }
+}
+
+impl std::iter::Sum for ServingCost {
+    fn sum<I: Iterator<Item = ServingCost>>(iter: I) -> ServingCost {
+        iter.fold(ServingCost::default(), |mut acc, c| {
+            acc.merge(&c);
+            acc
+        })
+    }
+}
+
+/// Per-candidate-group scoring charges: for every distinct candidate-key
+/// set served in a batch, the number of queries in the group and the
+/// candidate reference rows scored against them. This is the input of the
+/// tile-granular ASIC op accounting ([`GroupCharges::charge`]), kept
+/// separate from score execution so the shard layer can *merge* the
+/// per-shard candidate counts back into global groups before charging —
+/// bank MVM ops round candidate rows up to whole 128-row tiles
+/// (`MvmJob::bank_ops`), so charging per shard would over-count partial
+/// tiles at shard boundaries relative to the monolithic equivalent.
+/// Sharding must change placement and host concurrency only, never the
+/// simulated ASIC work (`rust/tests/engine_equivalence.rs` locks this in).
+#[derive(Clone, Debug, Default)]
+pub struct GroupCharges {
+    /// Candidate-key set -> (queries in group, candidate rows scored).
+    by_group: BTreeMap<Vec<BucketKey>, (usize, usize)>,
+}
+
+impl GroupCharges {
+    /// Record one group's scoring work (`n_cand` may be 0 for groups whose
+    /// candidate set is empty on this shard — they still merge).
+    pub fn record(&mut self, keys: Vec<BucketKey>, n_queries: usize, n_cand: usize) {
+        let entry = self.by_group.entry(keys).or_insert((n_queries, 0));
+        debug_assert_eq!(entry.0, n_queries, "group query count disagrees");
+        entry.1 += n_cand;
+    }
+
+    /// Fold another shard's charges for the same query batch into this
+    /// one: candidate counts sum per group (shards partition the library,
+    /// so per-shard candidate sets are disjoint).
+    pub fn merge(&mut self, other: &GroupCharges) {
+        for (keys, &(nq, nc)) in &other.by_group {
+            self.record(keys.clone(), nq, nc);
+        }
+    }
+
+    /// Charge the batch's IMC scoring + ASIC top-1 merge ops: per group
+    /// with a non-empty *global* candidate set, every query drives
+    /// `ceil(n_cand / 128)` row tiles x `cp / 128` column tiles of bank
+    /// MVMs (the [`crate::backend::MvmJob::bank_ops`] formula) and one
+    /// merge-element comparison per candidate.
+    pub fn charge(&self, cp: usize, ops: &mut OpCounts) {
+        let col_tiles = (cp / crate::array::ARRAY_DIM) as u64;
+        for &(nq, nc) in self.by_group.values() {
+            if nc == 0 {
+                continue;
+            }
+            let row_tiles = nc.div_ceil(crate::array::ARRAY_DIM) as u64;
+            ops.mvm_ops += nq as u64 * row_tiles * col_tiles;
+            ops.merge_elements += (nq * nc) as u64;
+        }
+    }
+}
+
+/// One engine's (or one shard's) scoring result for a query batch,
+/// before op/energy folding: per-query bests, the per-group charge info,
+/// and the host wall-time of the scoring stages.
+#[derive(Clone, Debug)]
+pub struct ShardScores {
+    /// Per-query `(best target score, best decoy score, matched peptide)`
+    /// in batch order; `(NEG_INFINITY, NEG_INFINITY, None)` when the
+    /// query had no candidates on this engine.
+    pub best: Vec<(f32, f32, Option<u32>)>,
+    /// Per-candidate-group query/candidate counts for central charging.
+    pub charges: GroupCharges,
+    pub wall: StageTimer,
 }
 
 /// Program-once / query-many DB-search engine. See the module docs for the
@@ -228,10 +366,11 @@ pub struct SearchEngine {
     program_report: EnergyReport,
     program_wall: StageTimer,
     /// Packed query HVs keyed by quantized level vector (see the module
-    /// docs' "Query-HV cache" section). Interior mutability keeps
-    /// `search_batch(&self)` signature-stable.
-    query_cache: RefCell<HashMap<Vec<u16>, Vec<f32>>>,
-    cache_stats: RefCell<EncodeCacheStats>,
+    /// docs' "Query-HV cache" section). A `Mutex` (not `RefCell`) keeps
+    /// `search_batch(&self)` signature-stable *and* the engine `Sync`, so
+    /// shard fan-out can share it across scoped threads.
+    query_cache: Mutex<HashMap<Vec<u16>, Vec<f32>>>,
+    cache_stats: Mutex<EncodeCacheStats>,
 }
 
 /// Entry cap for the query-HV cache: past this many distinct spectra the
@@ -276,10 +415,26 @@ impl SearchEngine {
         dataset: &SearchDataset,
         backend: &BackendDispatcher,
     ) -> Result<Self> {
+        let rng = Rng::new(cfg.seed ^ 0x5e);
+        Self::program_with_rng(cfg, dataset, backend, rng)
+    }
+
+    /// [`SearchEngine::program`] with an explicit programming-noise RNG
+    /// state (see [`ProgramContext::with_rng`]). The shard layer programs
+    /// shard `i+1` from the state [`SearchEngine::noise_rng_state`]
+    /// reports after shard `i`, which makes the sharded library's stored
+    /// conductances bit-identical to one monolithic engine programming
+    /// the same rows in the same order.
+    pub fn program_with_rng(
+        cfg: SpecPcmConfig,
+        dataset: &SearchDataset,
+        backend: &BackendDispatcher,
+        rng: Rng,
+    ) -> Result<Self> {
         let frontend = HdFrontend::new(&cfg);
         let cp = frontend.packed_width;
         let adc = AdcConfig::default_for_packing(cfg.adc_bits, cfg.packing());
-        let mut ctx = ProgramContext::new(&cfg, cp, 0x5e)?;
+        let mut ctx = ProgramContext::with_rng(&cfg, cp, rng)?;
         let mut ops = OpCounts::default();
         let mut wall = StageTimer::new();
 
@@ -321,20 +476,27 @@ impl SearchEngine {
             program_ops: ops,
             program_report,
             program_wall: wall,
-            query_cache: RefCell::new(HashMap::new()),
-            cache_stats: RefCell::new(EncodeCacheStats::default()),
+            query_cache: Mutex::new(HashMap::new()),
+            cache_stats: Mutex::new(EncodeCacheStats::default()),
         })
+    }
+
+    /// Programming-noise RNG state after everything programmed so far —
+    /// the hand-off for the next shard (see
+    /// [`SearchEngine::program_with_rng`]).
+    pub fn noise_rng_state(&self) -> Rng {
+        self.ctx.rng_state()
     }
 
     /// Cumulative query-HV cache hits/misses across every served batch.
     pub fn encode_cache_stats(&self) -> EncodeCacheStats {
-        *self.cache_stats.borrow()
+        *self.cache_stats.lock().expect("cache stats poisoned")
     }
 
     /// Drop every cached query HV (the cache refills on subsequent
     /// batches; results are identical either way).
     pub fn clear_query_cache(&self) {
-        self.query_cache.borrow_mut().clear();
+        self.query_cache.lock().expect("query cache poisoned").clear();
     }
 
     /// One-time library ops (encode + pack + program + verify), charged at
@@ -346,6 +508,11 @@ impl SearchEngine {
     /// Energy/latency of the one-time library programming alone.
     pub fn program_report(&self) -> &EnergyReport {
         &self.program_report
+    }
+
+    /// Host wall-time breakdown of the one-time library programming.
+    pub fn program_wall(&self) -> &StageTimer {
+        &self.program_wall
     }
 
     /// Reference rows programmed (targets + decoys).
@@ -377,70 +544,102 @@ impl SearchEngine {
         &self.noisy_refs[ri * self.cp..(ri + 1) * self.cp]
     }
 
-    /// Serve one query batch against the programmed library. Scores are
-    /// bit-identical regardless of how queries are split into batches: the
-    /// per-(query, candidate) IMC score depends only on the query HV, the
-    /// stored conductances and the ADC, never on batch composition.
-    pub fn search_batch(
+    /// Encode one query batch into packed HVs through the query-HV cache:
+    /// unique uncached level vectors encode once per batch, everything
+    /// else is a copy. Returns the row-major `queries.len() x cp` packed
+    /// rows plus this batch's hit/miss stats (also folded into the
+    /// cumulative [`SearchEngine::encode_cache_stats`]).
+    ///
+    /// **No op accounting happens here** — the ASIC encode charge covers
+    /// every query regardless of the cache (module docs, "Query-HV
+    /// cache"), and belongs to whoever owns the batch: callers charge
+    /// [`HdFrontend::count_encode_ops`] exactly once per batch. The shard
+    /// layer relies on this split to encode once and share the packed
+    /// rows across every shard instead of paying the encode per shard.
+    pub fn encode_queries(
         &self,
         queries: &[&Spectrum],
         backend: &BackendDispatcher,
-    ) -> Result<BatchOutcome> {
+    ) -> Result<(Vec<f32>, EncodeCacheStats)> {
+        let cp = self.cp;
+        let mut batch_cache = EncodeCacheStats::default();
+        let levels = self.frontend.levels_of(queries);
+
+        // One classification pass under one lock hold: hit rows are copied
+        // out *while the entry is provably present*, so a concurrent
+        // `clear_query_cache` (the engine is Sync and may be shared across
+        // threads) can never invalidate a hit between classification and
+        // copy. Misses are deduped and encoded after the lock drops — the
+        // expensive kernel never runs under the lock.
+        let mut packed = vec![0f32; levels.len() * cp];
+        let mut miss_of: HashMap<&Vec<u16>, usize> = HashMap::new();
+        let mut miss_levels: Vec<Vec<u16>> = Vec::new();
+        // (query index, miss index) rows to fill once the misses encode.
+        let mut pending: Vec<(usize, usize)> = Vec::new();
+        {
+            let cache = self.query_cache.lock().expect("query cache poisoned");
+            for (qi, lv) in levels.iter().enumerate() {
+                if let Some(row) = cache.get(lv) {
+                    packed[qi * cp..(qi + 1) * cp].copy_from_slice(row);
+                } else if let Some(&mi) = miss_of.get(lv) {
+                    pending.push((qi, mi));
+                } else {
+                    let mi = miss_levels.len();
+                    miss_of.insert(lv, mi);
+                    miss_levels.push(lv.clone());
+                    pending.push((qi, mi));
+                }
+            }
+        }
+
+        let miss_packed = if miss_levels.is_empty() {
+            Vec::new()
+        } else {
+            self.frontend.encode_pack_levels(&miss_levels, backend)?
+        };
+        for &(qi, mi) in &pending {
+            packed[qi * cp..(qi + 1) * cp].copy_from_slice(&miss_packed[mi * cp..(mi + 1) * cp]);
+        }
+        {
+            let mut cache = self.query_cache.lock().expect("query cache poisoned");
+            for (mi, lv) in miss_levels.iter().enumerate() {
+                if cache.len() >= QUERY_CACHE_MAX_ENTRIES {
+                    break;
+                }
+                cache.insert(lv.clone(), miss_packed[mi * cp..(mi + 1) * cp].to_vec());
+            }
+        }
+        batch_cache.misses = miss_levels.len() as u64;
+        batch_cache.hits = (levels.len() - miss_levels.len()) as u64;
+
+        *self.cache_stats.lock().expect("cache stats poisoned") += batch_cache;
+        Ok((packed, batch_cache))
+    }
+
+    /// Score pre-packed query HVs against this engine's programmed rows:
+    /// candidate selection, IMC score tiles and the in-engine top-1 merge,
+    /// **without op accounting** — instead the per-group candidate counts
+    /// come back as [`GroupCharges`] so the caller charges globally (see
+    /// the [`GroupCharges`] docs for why per-shard charging would distort
+    /// tile counts). Returns per-query `(best target, best decoy, matched
+    /// peptide)` triples in batch order; queries with no local candidates
+    /// stay at `(NEG_INFINITY, NEG_INFINITY, None)`, which the shard
+    /// merge's strict `>` ignores.
+    pub fn score_packed(
+        &self,
+        queries: &[&Spectrum],
+        packed_queries: &[f32],
+        backend: &BackendDispatcher,
+    ) -> Result<ShardScores> {
         let cfg = &self.cfg;
         let cp = self.cp;
-        let mut ops = OpCounts::default();
+        assert_eq!(packed_queries.len(), queries.len() * cp, "packed query shape");
         let mut wall = StageTimer::new();
-
-        // Encode through the query-HV cache: unique uncached level vectors
-        // encode once per batch, everything else is a copy. The ASIC op
-        // charge covers every query regardless — the cache is host-time
-        // only (module docs, "Query-HV cache").
-        let mut batch_cache = EncodeCacheStats::default();
-        let packed_queries = wall.time("encode queries", || -> Result<Vec<f32>> {
-            let levels = self.frontend.levels_of(queries);
-            self.frontend.count_encode_ops(queries.len(), &mut ops);
-
-            let mut miss_of: HashMap<&Vec<u16>, usize> = HashMap::new();
-            let mut miss_levels: Vec<Vec<u16>> = Vec::new();
-            {
-                let cache = self.query_cache.borrow();
-                for lv in &levels {
-                    if !cache.contains_key(lv) && !miss_of.contains_key(lv) {
-                        miss_of.insert(lv, miss_levels.len());
-                        miss_levels.push(lv.clone());
-                    }
-                }
-            }
-            let miss_packed = if miss_levels.is_empty() {
-                Vec::new()
-            } else {
-                self.frontend.encode_pack_levels(&miss_levels, backend)?
-            };
-            {
-                let mut cache = self.query_cache.borrow_mut();
-                for (mi, lv) in miss_levels.iter().enumerate() {
-                    if cache.len() >= QUERY_CACHE_MAX_ENTRIES {
-                        break;
-                    }
-                    cache.insert(lv.clone(), miss_packed[mi * cp..(mi + 1) * cp].to_vec());
-                }
-            }
-            batch_cache.misses = miss_levels.len() as u64;
-            batch_cache.hits = (levels.len() - miss_levels.len()) as u64;
-
-            let mut packed = vec![0f32; levels.len() * cp];
-            let cache = self.query_cache.borrow();
-            for (qi, lv) in levels.iter().enumerate() {
-                let dst = &mut packed[qi * cp..(qi + 1) * cp];
-                if let Some(&mi) = miss_of.get(lv) {
-                    dst.copy_from_slice(&miss_packed[mi * cp..(mi + 1) * cp]);
-                } else {
-                    dst.copy_from_slice(&cache[lv]);
-                }
-            }
-            Ok(packed)
-        })?;
-        *self.cache_stats.borrow_mut() += batch_cache;
+        let mut charges = GroupCharges::default();
+        // Scores and physical ops are charged by the caller from the
+        // merged GroupCharges; the dispatcher's own charge goes to a
+        // scratch accumulator.
+        let mut scratch = OpCounts::default();
 
         // Group queries by identical candidate-key sets so one IMC batch
         // shares one reference row block.
@@ -463,6 +662,7 @@ impl SearchEngine {
                 .collect();
             cand.sort_unstable();
             cand.dedup();
+            charges.record(keys.clone(), q_idxs.len(), cand.len());
             if cand.is_empty() {
                 continue;
             }
@@ -480,7 +680,7 @@ impl SearchEngine {
             let scores = wall.time("similarity (IMC)", || {
                 backend.execute(
                     &MvmJob::new(&q_rows, q_idxs.len(), &cand_rows, cand.len(), cp, self.adc),
-                    &mut ops,
+                    &mut scratch,
                 )
             })?;
 
@@ -500,11 +700,40 @@ impl SearchEngine {
                     }
                 }
             });
-            ops.merge_elements += (q_idxs.len() * cand.len()) as u64;
         }
 
-        let pairs: Vec<(f32, f32)> = best.iter().map(|&(t, d, _)| (t, d)).collect();
-        let matched: Vec<Option<u32>> = best.iter().map(|&(_, _, m)| m).collect();
+        Ok(ShardScores {
+            best,
+            charges,
+            wall,
+        })
+    }
+
+    /// Serve one query batch against the programmed library. Scores are
+    /// bit-identical regardless of how queries are split into batches: the
+    /// per-(query, candidate) IMC score depends only on the query HV, the
+    /// stored conductances and the ADC, never on batch composition.
+    pub fn search_batch(
+        &self,
+        queries: &[&Spectrum],
+        backend: &BackendDispatcher,
+    ) -> Result<BatchOutcome> {
+        let cfg = &self.cfg;
+        let mut ops = OpCounts::default();
+        let mut wall = StageTimer::new();
+
+        self.frontend.count_encode_ops(queries.len(), &mut ops);
+        let (packed_queries, batch_cache) =
+            wall.time("encode queries", || self.encode_queries(queries, backend))?;
+
+        let scored = self.score_packed(queries, &packed_queries, backend)?;
+        for (stage, t, _) in scored.wall.breakdown() {
+            wall.add(&stage, t);
+        }
+        scored.charges.charge(self.cp, &mut ops);
+
+        let pairs: Vec<(f32, f32)> = scored.best.iter().map(|&(t, d, _)| (t, d)).collect();
+        let matched: Vec<Option<u32>> = scored.best.iter().map(|&(_, _, m)| m).collect();
         let model = EnergyLatencyModel::new(cfg.material, cfg.adc_bits, cfg.num_banks);
         let report = model.report(&ops);
 
@@ -530,28 +759,15 @@ impl SearchEngine {
         n_batches: usize,
         backend: &BackendDispatcher,
     ) -> Result<Vec<BatchOutcome>> {
-        let n = n_batches.max(1).min(queries.len().max(1));
-        let base = queries.len() / n;
-        let rem = queries.len() % n;
-        let mut outcomes = Vec::with_capacity(n);
-        let mut start = 0;
-        for i in 0..n {
-            let len = base + usize::from(i < rem);
-            outcomes.push(self.search_batch(&queries[start..start + len], backend)?);
-            start += len;
-        }
-        Ok(outcomes)
+        chunk_ranges(queries.len(), n_batches)
+            .into_iter()
+            .map(|r| self.search_batch(&queries[r], backend))
+            .collect()
     }
 
     /// Fold served batches into the one-time/marginal/amortized cost split.
     pub fn serving_cost(&self, batches: &[BatchOutcome]) -> ServingCost {
-        ServingCost {
-            one_time_j: self.program_report.total_j(),
-            marginal_j: batches.iter().map(|b| b.report.total_j()).sum(),
-            one_time_s: self.program_report.total_latency_s(),
-            marginal_s: batches.iter().map(|b| b.report.overlapped_latency_s()).sum(),
-            n_batches: batches.len(),
-        }
+        ServingCost::from_reports(&self.program_report, batches)
     }
 
     /// Pool accumulated batch outcomes into the one-shot summary shape:
@@ -563,56 +779,100 @@ impl SearchEngine {
         queries: &[&Spectrum],
         batches: &[BatchOutcome],
     ) -> Result<SearchOutcomeSummary> {
-        let total: usize = batches.iter().map(|b| b.pairs.len()).sum();
-        crate::ensure!(
-            total == queries.len(),
-            "finalize: {total} batch results for {} queries",
-            queries.len()
-        );
-
-        let mut pairs = Vec::with_capacity(total);
-        let mut matched = Vec::with_capacity(total);
-        let mut ops = self.program_ops;
-        let mut wall = self.program_wall.clone();
-        for b in batches {
-            pairs.extend_from_slice(&b.pairs);
-            matched.extend_from_slice(&b.matched);
-            ops += &b.ops;
-            for (stage, t, _) in b.wall.breakdown() {
-                wall.add(&stage, t);
-            }
-        }
-
-        let fdr = wall.time("FDR filter", || fdr_filter(&pairs, self.cfg.fdr));
-
-        let mut correct = 0usize;
-        let mut identified_peptides = Vec::new();
-        for &qi in &fdr.accepted {
-            if let (Some(m), Some(truth)) = (matched[qi], queries[qi].peptide_id) {
-                if m == truth {
-                    correct += 1;
-                    identified_peptides.push(m);
-                }
-            }
-        }
-        identified_peptides.sort_unstable();
-        identified_peptides.dedup();
-
-        let model = EnergyLatencyModel::new(self.cfg.material, self.cfg.adc_bits, self.cfg.num_banks);
-        let report = model.report(&ops);
-
-        Ok(SearchOutcomeSummary {
-            identified: fdr.accepted.len(),
-            pairs,
-            correct,
-            total_queries: queries.len(),
-            identified_peptides,
-            fdr,
-            ops,
-            report,
-            wall,
-        })
+        let model =
+            EnergyLatencyModel::new(self.cfg.material, self.cfg.adc_bits, self.cfg.num_banks);
+        fold_batches(
+            self.cfg.fdr,
+            &model,
+            &self.program_ops,
+            &self.program_wall,
+            queries,
+            batches,
+        )
     }
+}
+
+/// The one balanced contiguous-chunking rule in the serving layer, shared
+/// by both `serve_chunked` impls and [`super::sharded::ShardPlan`]:
+/// exactly `min(n_chunks, n_items).max(1)` ranges tiling `[0, n_items)`
+/// in order, sizes differing by at most one (earlier chunks take the
+/// remainder; a zero-item input keeps one empty range so per-batch
+/// averages downstream never divide by zero).
+pub(crate) fn chunk_ranges(n_items: usize, n_chunks: usize) -> Vec<std::ops::Range<usize>> {
+    let n = n_chunks.max(1).min(n_items.max(1));
+    let base = n_items / n;
+    let rem = n_items % n;
+    let mut ranges = Vec::with_capacity(n);
+    let mut start = 0;
+    for i in 0..n {
+        let len = base + usize::from(i < rem);
+        ranges.push(start..start + len);
+        start += len;
+    }
+    ranges
+}
+
+/// The shared serving fold behind [`SearchEngine::finalize`] and the shard
+/// layer's finalize: concatenate batch results in order, run the
+/// target-decoy FDR filter over all pairs, score correctness against
+/// ground truth, and report total ops = one-time programming + every
+/// marginal batch through the given energy model.
+pub(crate) fn fold_batches(
+    fdr_rate: f64,
+    model: &EnergyLatencyModel,
+    program_ops: &OpCounts,
+    program_wall: &StageTimer,
+    queries: &[&Spectrum],
+    batches: &[BatchOutcome],
+) -> Result<SearchOutcomeSummary> {
+    let total: usize = batches.iter().map(|b| b.pairs.len()).sum();
+    crate::ensure!(
+        total == queries.len(),
+        "finalize: {total} batch results for {} queries",
+        queries.len()
+    );
+
+    let mut pairs = Vec::with_capacity(total);
+    let mut matched = Vec::with_capacity(total);
+    let mut ops = *program_ops;
+    let mut wall = program_wall.clone();
+    for b in batches {
+        pairs.extend_from_slice(&b.pairs);
+        matched.extend_from_slice(&b.matched);
+        ops += &b.ops;
+        for (stage, t, _) in b.wall.breakdown() {
+            wall.add(&stage, t);
+        }
+    }
+
+    let fdr = wall.time("FDR filter", || fdr_filter(&pairs, fdr_rate));
+
+    let mut correct = 0usize;
+    let mut identified_peptides = Vec::new();
+    for &qi in &fdr.accepted {
+        if let (Some(m), Some(truth)) = (matched[qi], queries[qi].peptide_id) {
+            if m == truth {
+                correct += 1;
+                identified_peptides.push(m);
+            }
+        }
+    }
+    identified_peptides.sort_unstable();
+    identified_peptides.dedup();
+
+    let report = model.report(&ops);
+
+    Ok(SearchOutcomeSummary {
+        identified: fdr.accepted.len(),
+        pairs,
+        correct,
+        total_queries: queries.len(),
+        identified_peptides,
+        fdr,
+        ops,
+        report,
+        wall,
+    })
 }
 
 #[cfg(test)]
@@ -753,6 +1013,97 @@ mod tests {
         assert_eq!(e.num_banks, 6);
         assert_eq!(e.segments, 6);
         assert!(ctx.check_fit(128).is_ok());
+    }
+
+    #[test]
+    fn engine_is_sync_shareable() {
+        // The shard layer fans `search_batch` out across scoped threads;
+        // this fails to compile if interior mutability regresses to
+        // `RefCell`.
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<SearchEngine>();
+    }
+
+    #[test]
+    fn serving_cost_merge_sums_work_and_maxes_batches() {
+        let a = ServingCost {
+            one_time_j: 1.0,
+            marginal_j: 0.25,
+            one_time_s: 2.0,
+            marginal_s: 0.5,
+            n_batches: 4,
+        };
+        let b = ServingCost {
+            one_time_j: 3.0,
+            marginal_j: 0.75,
+            one_time_s: 1.0,
+            marginal_s: 1.5,
+            n_batches: 4,
+        };
+        let mut m = a;
+        m += &b;
+        assert_eq!(m.one_time_j, 4.0);
+        assert_eq!(m.marginal_j, 1.0);
+        assert_eq!(m.one_time_s, 3.0);
+        assert_eq!(m.marginal_s, 2.0);
+        // Same fan-out run on both shards: not 8 batches.
+        assert_eq!(m.n_batches, 4);
+        assert_eq!(m.amortized_j_per_batch(), 5.0 / 4.0);
+
+        let s: ServingCost = [a, b].into_iter().sum();
+        assert_eq!(s.one_time_j, m.one_time_j);
+        assert_eq!(s.n_batches, 4);
+    }
+
+    #[test]
+    fn group_charges_merge_matches_monolithic_tiling() {
+        let key = |i: i64| vec![(2u8, i)];
+
+        // Monolithic: one group of 2 queries x 300 candidates.
+        let mut mono = GroupCharges::default();
+        mono.record(key(0), 2, 300);
+        let mut mono_ops = OpCounts::default();
+        mono.charge(256, &mut mono_ops);
+        // 2 queries x ceil(300/128)=3 row tiles x 2 col tiles.
+        assert_eq!(mono_ops.mvm_ops, 12);
+        assert_eq!(mono_ops.merge_elements, 600);
+
+        // The same group split 130 / 170 across two shards: per-shard
+        // charging would see ceil(130/128) + ceil(170/128) = 4 row tiles;
+        // merging first restores the monolithic 3.
+        let mut a = GroupCharges::default();
+        a.record(key(0), 2, 130);
+        let mut b = GroupCharges::default();
+        b.record(key(0), 2, 170);
+        // A group empty on shard b merges harmlessly.
+        b.record(key(1), 1, 0);
+        a.merge(&b);
+        let mut sharded_ops = OpCounts::default();
+        a.charge(256, &mut sharded_ops);
+        assert_eq!(sharded_ops.mvm_ops, mono_ops.mvm_ops);
+        assert_eq!(sharded_ops.merge_elements, mono_ops.merge_elements);
+    }
+
+    #[test]
+    fn encode_then_score_packed_equals_search_batch() {
+        let ds = SearchDataset::generate("t", 47, 25, 10, 0.8, 0.2, 0, 0);
+        let be = BackendDispatcher::reference();
+        let engine = SearchEngine::program(small_cfg(), &ds, &be).unwrap();
+        let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+        let batch = engine.search_batch(&queries, &be).unwrap();
+
+        engine.clear_query_cache();
+        let (packed, cache) = engine.encode_queries(&queries, &be).unwrap();
+        assert_eq!(cache.total(), queries.len() as u64);
+        let scored = engine.score_packed(&queries, &packed, &be).unwrap();
+        let pairs: Vec<(f32, f32)> = scored.best.iter().map(|&(t, d, _)| (t, d)).collect();
+        assert_eq!(pairs, batch.pairs);
+
+        let mut ops = OpCounts::default();
+        engine.frontend.count_encode_ops(queries.len(), &mut ops);
+        scored.charges.charge(engine.packed_width(), &mut ops);
+        assert_eq!(ops, batch.ops);
     }
 
     #[test]

@@ -16,21 +16,55 @@
 //!   a level-vector-keyed query-HV cache) and the shared
 //!   [`ProgramContext`] (programmer + noise stream + capacity allocator)
 //!   both pipelines program through.
+//! * [`sharded`] — the shard layer: [`ShardPlan`] partitions a library
+//!   that overflows one engine's banks into contiguous per-engine row
+//!   ranges, and [`ShardedSearchEngine`] programs one engine per range
+//!   and fans query batches across them on scoped threads.
 //! * [`pipeline`] — the end-to-end clustering and DB-search drivers that
 //!   the CLI, examples and benches call; both execute score tiles through
 //!   the `backend::BackendDispatcher` they are handed. `SearchPipeline` is
 //!   a thin one-shot wrapper over the engine.
+//!
+//! # The three swappable seams
+//!
+//! The stack deliberately exposes exactly three places where *how* work
+//! executes is decoupled from *what* is computed, each bit-identical
+//! across its implementations:
+//!
+//! 1. **MVM backend** (`crate::backend`): where an `nq x nr` score tile's
+//!    arithmetic runs — scalar reference, bank-sharded threads, or the
+//!    PJRT artifact. Selected by `[backend] kind` / `--backend`.
+//! 2. **Encode backend** (`crate::encode`): where HD encode+pack runs —
+//!    scalar, u64 word-packed, or spectra-sharded threads. Selected by
+//!    `[backend] encode_kind` / `--encode-backend`.
+//! 3. **Shard layer** ([`sharded`]): where the reference library's rows
+//!    *live* — one engine's bank pool or several engines' pools with
+//!    concurrent per-shard fan-out. Selected by `[backend] shards` /
+//!    `--shards N|auto`.
+//!
+//! Accounting composes across the seams: backends never touch op counts
+//! (the dispatcher charges the physical job regardless of route), the
+//! encode cache only removes host arithmetic, and the shard layer charges
+//! encode once per batch plus IMC/merge ops from *merged* per-group
+//! candidate counts ([`engine::GroupCharges`]) — so total simulated ASIC
+//! work is one fixed function of the workload, no matter which seam
+//! choices execute it.
 
 pub mod allocator;
 pub mod batcher;
 pub mod engine;
 pub mod frontend;
 pub mod pipeline;
+pub mod sharded;
 
 pub use allocator::{SegmentAllocator, Slot};
 pub use batcher::{pad_matrix, Batcher};
-pub use engine::{BatchOutcome, CapacityError, ProgramContext, SearchEngine, ServingCost};
+pub use engine::{
+    BatchOutcome, CapacityError, GroupCharges, ProgramContext, SearchEngine, ServingCost,
+    ShardScores,
+};
 pub use frontend::HdFrontend;
 pub use pipeline::{
     ClusteringOutcome, ClusteringPipeline, SearchOutcomeSummary, SearchPipeline,
 };
+pub use sharded::{ShardPlan, ShardedSearchEngine};

@@ -1,0 +1,528 @@
+//! Shard layer: serving a reference library that overflows one engine's
+//! bank capacity by partitioning it across several [`SearchEngine`]s
+//! (paper Table 3 at real library scales; ROADMAP "sharded libraries" +
+//! "concurrent serving" items).
+//!
+//! [`ShardPlan`] splits the global reference row order — targets followed
+//! by decoys, exactly the order one monolithic engine would program —
+//! into contiguous, disjoint, exhaustive row ranges, each sized to fit
+//! one engine's banks. [`ShardedSearchEngine`] programs one engine per
+//! range (each with its own [`super::ProgramContext`], `SegmentAllocator`
+//! and bank pool) and fans every query batch out across the shards on
+//! `std::thread::scope` threads.
+//!
+//! # Bit-identity contract
+//!
+//! A sharded engine over `k` shards of `B` banks each returns per-query
+//! results **bit-identical** to one monolithic engine with `k * B` banks
+//! (`rust/tests/engine_equivalence.rs`), because every ingredient is
+//! partition-safe by construction:
+//!
+//! * **Programming noise**: shard `i+1`'s noise RNG starts from the exact
+//!   state shard `i` finished with ([`SearchEngine::program_with_rng`] /
+//!   [`SearchEngine::noise_rng_state`]), so the concatenated per-row
+//!   noise stream equals the monolithic stream.
+//! * **Query encode**: queries are encoded **once**, through shard 0's
+//!   query-HV cache, and the packed rows are shared with every shard
+//!   ([`SearchEngine::encode_queries`]) — no per-shard encode
+//!   duplication, in host time or in op accounting.
+//! * **Top-1 merge**: shards hold contiguous ascending row ranges and the
+//!   cross-shard merge folds them in shard order with the same strict-`>`
+//!   rule the in-engine merge uses, so ties keep resolving to the lowest
+//!   global row index.
+//! * **Decoys and FDR**: the contiguous split may land inside the decoy
+//!   block; each shard gets its own targets/decoys subranges and
+//!   classifies locally, and the FDR filter runs once over the merged
+//!   per-query pairs — identical inputs, identical output.
+//!
+//! # Accounting
+//!
+//! Sharding changes *placement and host concurrency* only. Total
+//! simulated ASIC work equals the monolithic equivalent: encode ops are
+//! charged once per batch, and IMC/merge ops are charged from the merged
+//! per-group candidate counts ([`super::engine::GroupCharges`]) rather
+//! than per shard, so 128-row tile rounding never double-counts shard
+//! boundaries. Energy/latency reports model the union bank pool
+//! (`num_banks x n_shards`) — the physical hardware the sharded system
+//! actually owns.
+
+use crate::backend::BackendDispatcher;
+use crate::config::SpecPcmConfig;
+use crate::energy::{EnergyLatencyModel, EnergyReport, OpCounts};
+use crate::ms::{SearchDataset, Spectrum};
+use crate::telemetry::{EncodeCacheStats, StageTimer};
+use crate::util::error::{Error, Result};
+use crate::util::Rng;
+
+use super::allocator::SegmentAllocator;
+use super::engine::{
+    chunk_ranges, fold_batches, BatchOutcome, CapacityError, GroupCharges, SearchEngine,
+    ServingCost,
+};
+use super::pipeline::SearchOutcomeSummary;
+
+/// A partition of the global reference row order (targets then decoys)
+/// into contiguous shard ranges. Invariants — disjoint, exhaustive, and
+/// order-preserving (range `i` ends where range `i+1` starts) — are
+/// property-tested in `rust/tests/property_tests.rs`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    n_targets: usize,
+    n_decoys: usize,
+    /// Global row ranges, ascending and contiguous.
+    ranges: Vec<std::ops::Range<usize>>,
+}
+
+impl ShardPlan {
+    /// Split `n_targets + n_decoys` rows into `n_shards` contiguous
+    /// ranges with sizes differing by at most one (earlier shards take
+    /// the remainder; same `chunk_ranges` rule as `serve_chunked`).
+    /// `n_shards` is clamped to `[1, rows.max(1)]` so no shard is ever
+    /// empty (except the degenerate empty-library plan, which keeps one
+    /// empty shard).
+    pub fn balanced(n_targets: usize, n_decoys: usize, n_shards: usize) -> ShardPlan {
+        ShardPlan {
+            n_targets,
+            n_decoys,
+            ranges: chunk_ranges(n_targets + n_decoys, n_shards),
+        }
+    }
+
+    /// Plan against `cfg`'s per-engine bank capacity. `n_shards = 0`
+    /// auto-computes the minimum shard count that fits; an explicit count
+    /// is validated (its largest shard must fit one engine) and returns
+    /// the typed [`CapacityError`] otherwise.
+    pub fn for_capacity(
+        cfg: &SpecPcmConfig,
+        n_targets: usize,
+        n_decoys: usize,
+        n_shards: usize,
+    ) -> Result<ShardPlan, CapacityError> {
+        let rows = n_targets + n_decoys;
+        let packed = crate::hd::padded_packed_len(cfg.hd_dim, cfg.packing());
+        let (capacity, segments) = match SegmentAllocator::try_new(cfg.num_banks, packed) {
+            Ok(a) => (a.capacity(), a.segments()),
+            Err(_) => (0, packed / crate::array::ARRAY_DIM),
+        };
+        let err = |needed: usize| CapacityError {
+            rows_needed: needed,
+            capacity,
+            num_banks: cfg.num_banks,
+            segments,
+        };
+        if capacity == 0 {
+            return Err(err(rows));
+        }
+        let n = if n_shards == 0 {
+            rows.div_ceil(capacity).max(1)
+        } else {
+            n_shards
+        };
+        let plan = ShardPlan::balanced(n_targets, n_decoys, n);
+        let widest = plan.ranges.iter().map(|r| r.len()).max().unwrap_or(0);
+        if widest > capacity {
+            return Err(err(widest));
+        }
+        Ok(plan)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn n_targets(&self) -> usize {
+        self.n_targets
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_targets + self.n_decoys
+    }
+
+    /// Global row range of shard `i`.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        self.ranges[i].clone()
+    }
+
+    pub fn ranges(&self) -> &[std::ops::Range<usize>] {
+        &self.ranges
+    }
+
+    /// Target-library index range of shard `i` (may be empty when the
+    /// whole shard sits inside the decoy block).
+    pub fn target_range(&self, i: usize) -> std::ops::Range<usize> {
+        let r = &self.ranges[i];
+        r.start.min(self.n_targets)..r.end.min(self.n_targets)
+    }
+
+    /// Decoy index range of shard `i` (indices into the decoy list; may
+    /// be empty when the shard sits inside the target block).
+    pub fn decoy_range(&self, i: usize) -> std::ops::Range<usize> {
+        let r = &self.ranges[i];
+        r.start.max(self.n_targets) - self.n_targets..r.end.max(self.n_targets) - self.n_targets
+    }
+}
+
+/// N [`SearchEngine`]s serving one partitioned library as a single
+/// engine-shaped unit: program once per shard, fan every batch out on
+/// scoped threads, merge per-query bests and accounting bit-identically
+/// to the monolithic equivalent (module docs).
+pub struct ShardedSearchEngine {
+    pub cfg: SpecPcmConfig,
+    plan: ShardPlan,
+    shards: Vec<SearchEngine>,
+    program_ops: OpCounts,
+    program_report: EnergyReport,
+    program_wall: StageTimer,
+}
+
+impl ShardedSearchEngine {
+    /// Partition the dataset's reference library and program one engine
+    /// per shard. `n_shards = 0` auto-computes the minimum count that
+    /// fits `cfg`'s per-engine banks (1 when the library already fits —
+    /// the result is then bit-identical to [`SearchEngine::program`],
+    /// including the noise stream).
+    pub fn program(
+        cfg: SpecPcmConfig,
+        dataset: &SearchDataset,
+        backend: &BackendDispatcher,
+        n_shards: usize,
+    ) -> Result<Self> {
+        let plan = ShardPlan::for_capacity(
+            &cfg,
+            dataset.library.len(),
+            dataset.decoys.len(),
+            n_shards,
+        )?;
+        Self::program_with_plan(cfg, dataset, backend, plan)
+    }
+
+    /// [`ShardedSearchEngine::program`] with a plan the caller already
+    /// computed (and possibly printed) through [`ShardPlan::for_capacity`]
+    /// — one planning call site, so what was validated is exactly what
+    /// gets programmed. The plan must cover this dataset's library.
+    pub fn program_with_plan(
+        cfg: SpecPcmConfig,
+        dataset: &SearchDataset,
+        backend: &BackendDispatcher,
+        plan: ShardPlan,
+    ) -> Result<Self> {
+        crate::ensure!(
+            plan.n_targets() == dataset.library.len()
+                && plan.n_rows() == dataset.library.len() + dataset.decoys.len(),
+            "shard plan covers {} targets / {} rows, dataset has {} / {}",
+            plan.n_targets(),
+            plan.n_rows(),
+            dataset.library.len(),
+            dataset.library.len() + dataset.decoys.len()
+        );
+
+        // Chain the programming-noise RNG through the shards in row order
+        // so the concatenated noise stream equals the monolithic one.
+        let mut rng = Rng::new(cfg.seed ^ 0x5e);
+        let mut shards = Vec::with_capacity(plan.n_shards());
+        let mut program_ops = OpCounts::default();
+        let mut program_wall = StageTimer::new();
+        for i in 0..plan.n_shards() {
+            let shard_ds = SearchDataset {
+                name: dataset.name,
+                library: dataset.library[plan.target_range(i)].to_vec(),
+                decoys: dataset.decoys[plan.decoy_range(i)].to_vec(),
+                queries: Vec::new(),
+                identifiable_fraction: dataset.identifiable_fraction,
+                paper_queries: dataset.paper_queries,
+                paper_library: dataset.paper_library,
+            };
+            let engine = SearchEngine::program_with_rng(cfg.clone(), &shard_ds, backend, rng)?;
+            rng = engine.noise_rng_state();
+            program_ops += engine.program_ops();
+            for (stage, t, _) in engine.program_wall().breakdown() {
+                program_wall.add(&stage, t);
+            }
+            shards.push(engine);
+        }
+
+        // One-time report over the union bank pool (the hardware the
+        // sharded system physically owns), equal to the monolithic
+        // equivalent's report because the summed ops are equal.
+        let model = Self::pool_model(&cfg, plan.n_shards());
+        let program_report = model.report(&program_ops);
+
+        Ok(ShardedSearchEngine {
+            cfg,
+            plan,
+            shards,
+            program_ops,
+            program_report,
+            program_wall,
+        })
+    }
+
+    /// Energy/latency model of the union bank pool: `n_shards` engines of
+    /// `cfg.num_banks` banks each.
+    fn pool_model(cfg: &SpecPcmConfig, n_shards: usize) -> EnergyLatencyModel {
+        EnergyLatencyModel::new(cfg.material, cfg.adc_bits, cfg.num_banks * n_shards.max(1))
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Reference rows programmed across every shard (targets + decoys).
+    pub fn n_refs(&self) -> usize {
+        self.shards.iter().map(|s| s.n_refs()).sum()
+    }
+
+    pub fn n_targets(&self) -> usize {
+        self.plan.n_targets()
+    }
+
+    /// Total banks across every shard's pool.
+    pub fn total_banks(&self) -> usize {
+        self.cfg.num_banks * self.shards.len()
+    }
+
+    /// Shard `i`'s engine (placement introspection, tests).
+    pub fn shard(&self, i: usize) -> &SearchEngine {
+        &self.shards[i]
+    }
+
+    /// One-time library ops summed over every shard.
+    pub fn program_ops(&self) -> &OpCounts {
+        &self.program_ops
+    }
+
+    /// One-time programming energy/latency over the union bank pool.
+    pub fn program_report(&self) -> &EnergyReport {
+        &self.program_report
+    }
+
+    /// Cumulative query-HV cache stats (shard 0 owns the shared cache —
+    /// queries are encoded once, not per shard).
+    pub fn encode_cache_stats(&self) -> EncodeCacheStats {
+        self.shards[0].encode_cache_stats()
+    }
+
+    pub fn clear_query_cache(&self) {
+        self.shards[0].clear_query_cache();
+    }
+
+    /// Serve one query batch: encode once through shard 0's query-HV
+    /// cache, fan the packed rows out across every shard on scoped
+    /// threads, merge per-query bests in shard order (strict `>`, so ties
+    /// keep the lowest global row) and charge ops from the merged
+    /// per-group candidate counts. Wall-time stages sum the per-shard
+    /// host time (threads run concurrently, so the sum is CPU time, not
+    /// elapsed time).
+    pub fn search_batch(
+        &self,
+        queries: &[&Spectrum],
+        backend: &BackendDispatcher,
+    ) -> Result<BatchOutcome> {
+        let mut ops = OpCounts::default();
+        let mut wall = StageTimer::new();
+
+        self.shards[0]
+            .frontend
+            .count_encode_ops(queries.len(), &mut ops);
+        let (packed, batch_cache) =
+            wall.time("encode queries", || self.shards[0].encode_queries(queries, backend))?;
+
+        let shard_scores = if self.shards.len() == 1 {
+            vec![self.shards[0].score_packed(queries, &packed, backend)?]
+        } else {
+            let packed = &packed;
+            let joined = std::thread::scope(|s| {
+                let handles: Vec<_> = self
+                    .shards
+                    .iter()
+                    .map(|shard| s.spawn(move || shard.score_packed(queries, packed, backend)))
+                    .collect();
+                handles.into_iter().map(|h| h.join()).collect::<Vec<_>>()
+            });
+            let mut scores = Vec::with_capacity(joined.len());
+            for (si, r) in joined.into_iter().enumerate() {
+                // Preserve the panic payload — "thread panicked" alone
+                // would hide which shard and why.
+                let r = r.map_err(|payload| {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".to_string());
+                    Error::msg(format!("shard {si} scoring thread panicked: {msg}"))
+                })?;
+                scores.push(r?);
+            }
+            scores
+        };
+
+        // Merge per-query bests in shard order; merge group candidate
+        // counts and charge the monolithic-equivalent op totals.
+        let mut best: Vec<(f32, f32, Option<u32>)> =
+            vec![(f32::NEG_INFINITY, f32::NEG_INFINITY, None); queries.len()];
+        let mut charges = GroupCharges::default();
+        for scored in &shard_scores {
+            for (qi, &(t, d, m)) in scored.best.iter().enumerate() {
+                if t > best[qi].0 {
+                    best[qi].0 = t;
+                    best[qi].2 = m;
+                }
+                if d > best[qi].1 {
+                    best[qi].1 = d;
+                }
+            }
+            charges.merge(&scored.charges);
+            for (stage, t, _) in scored.wall.breakdown() {
+                wall.add(&stage, t);
+            }
+        }
+        charges.charge(self.shards[0].packed_width(), &mut ops);
+
+        let pairs: Vec<(f32, f32)> = best.iter().map(|&(t, d, _)| (t, d)).collect();
+        let matched: Vec<Option<u32>> = best.iter().map(|&(_, _, m)| m).collect();
+        let report = Self::pool_model(&self.cfg, self.shards.len()).report(&ops);
+
+        Ok(BatchOutcome {
+            pairs,
+            matched,
+            ops,
+            report,
+            cache: batch_cache,
+            wall,
+        })
+    }
+
+    /// Split `queries` into contiguous batches and serve each in order —
+    /// same chunking contract as [`SearchEngine::serve_chunked`] (exactly
+    /// `min(n_batches, queries.len()).max(1)` batches, sizes differing by
+    /// at most one).
+    pub fn serve_chunked(
+        &self,
+        queries: &[&Spectrum],
+        n_batches: usize,
+        backend: &BackendDispatcher,
+    ) -> Result<Vec<BatchOutcome>> {
+        chunk_ranges(queries.len(), n_batches)
+            .into_iter()
+            .map(|r| self.search_batch(&queries[r], backend))
+            .collect()
+    }
+
+    /// Fold served batches into the one-time/marginal/amortized cost
+    /// split (the one-time column covers every shard's programming).
+    pub fn serving_cost(&self, batches: &[BatchOutcome]) -> ServingCost {
+        ServingCost::from_reports(&self.program_report, batches)
+    }
+
+    /// Pool accumulated batch outcomes into the one-shot summary shape —
+    /// the same fold as [`SearchEngine::finalize`], with the one-time
+    /// column summed over shards and the union-pool energy model, so the
+    /// result is bit-identical to the monolithic equivalent's summary.
+    pub fn finalize(
+        &self,
+        queries: &[&Spectrum],
+        batches: &[BatchOutcome],
+    ) -> Result<SearchOutcomeSummary> {
+        let model = Self::pool_model(&self.cfg, self.shards.len());
+        fold_batches(
+            self.cfg.fdr,
+            &model,
+            &self.program_ops,
+            &self.program_wall,
+            queries,
+            batches,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::BackendDispatcher;
+
+    fn small_cfg() -> SpecPcmConfig {
+        SpecPcmConfig {
+            hd_dim: 2048,
+            bucket_width: 5.0,
+            num_banks: 12, // 2 groups x 128 rows = 256 reference slots
+            ..SpecPcmConfig::paper_search()
+        }
+    }
+
+    #[test]
+    fn balanced_plan_is_contiguous_and_even() {
+        let p = ShardPlan::balanced(100, 100, 3);
+        assert_eq!(p.n_shards(), 3);
+        assert_eq!(p.ranges(), &[0..67, 67..134, 134..200]);
+        // Shard 1 straddles the target/decoy boundary at row 100.
+        assert_eq!(p.target_range(1), 67..100);
+        assert_eq!(p.decoy_range(1), 0..34);
+        assert_eq!(p.target_range(2), 100..100);
+        assert_eq!(p.decoy_range(2), 34..100);
+    }
+
+    #[test]
+    fn plan_clamps_and_degenerates_gracefully() {
+        // More shards than rows: one row per shard.
+        let p = ShardPlan::balanced(2, 1, 10);
+        assert_eq!(p.n_shards(), 3);
+        // Empty library: a single empty shard.
+        let p = ShardPlan::balanced(0, 0, 4);
+        assert_eq!(p.n_shards(), 1);
+        assert_eq!(p.range(0), 0..0);
+    }
+
+    #[test]
+    fn for_capacity_auto_computes_minimum_shards() {
+        let cfg = small_cfg(); // 256 slots per engine
+        let p = ShardPlan::for_capacity(&cfg, 300, 300, 0).unwrap();
+        assert_eq!(p.n_shards(), 3); // ceil(600 / 256)
+        assert!(p.ranges().iter().all(|r| r.len() <= 256));
+
+        // A fitting library auto-plans to one shard.
+        let p = ShardPlan::for_capacity(&cfg, 100, 100, 0).unwrap();
+        assert_eq!(p.n_shards(), 1);
+
+        // An explicit under-provisioned count is a typed error.
+        let e = ShardPlan::for_capacity(&cfg, 300, 300, 2).unwrap_err();
+        assert_eq!(e.rows_needed, 300); // widest shard of 2
+        assert_eq!(e.capacity, 256);
+
+        // A single HV wider than all banks: zero capacity.
+        let tiny = SpecPcmConfig {
+            num_banks: 2,
+            ..small_cfg()
+        };
+        let e = ShardPlan::for_capacity(&tiny, 10, 10, 0).unwrap_err();
+        assert_eq!(e.capacity, 0);
+    }
+
+    #[test]
+    fn sharded_engine_spans_overflowing_library() {
+        // 180 targets + 180 decoys = 360 rows > 256 slots per engine.
+        let ds = SearchDataset::generate("t", 21, 180, 12, 0.8, 0.2, 0, 0);
+        let be = BackendDispatcher::reference();
+        let cfg = small_cfg();
+        assert!(SearchEngine::program(cfg.clone(), &ds, &be).is_err());
+
+        let sharded = ShardedSearchEngine::program(cfg, &ds, &be, 0).unwrap();
+        assert_eq!(sharded.n_shards(), 2);
+        assert_eq!(sharded.n_refs(), 360);
+        assert_eq!(sharded.n_targets(), 180);
+        assert_eq!(sharded.total_banks(), 24);
+        assert!(sharded.program_ops().program_rounds > 0);
+
+        let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+        let batch = sharded.search_batch(&queries, &be).unwrap();
+        assert_eq!(batch.pairs.len(), queries.len());
+        assert_eq!(batch.ops.program_rounds, 0);
+        // Encode is charged once per batch, never per shard.
+        assert_eq!(batch.ops.encode_spectra, queries.len() as u64);
+        let out = sharded.finalize(&queries, &[batch]).unwrap();
+        assert_eq!(out.total_queries, queries.len());
+    }
+}

@@ -111,7 +111,7 @@ impl<'a> EncodeJob<'a> {
 /// The execution contract every encode backend implements. `out` is the
 /// row-major `nq x cp` destination; implementations must fill every
 /// element (including the zero padding region of each row).
-pub trait EncodeBackend {
+pub trait EncodeBackend: Send + Sync {
     /// Short stable identifier (telemetry / CLI echo).
     fn name(&self) -> &'static str;
 

@@ -32,8 +32,8 @@
 //! | [`baselines`] | §IV-A | Falcon/msCRUSH/HyperSpec/HyperOMS/ANN-SoLo-like comparators |
 //! | [`backend`] | §III-C bank tiling | pluggable MVM execution: ref / bank-sharded parallel / PJRT, utilization-routing dispatcher |
 //! | [`runtime`] | DESIGN.md §2 | PJRT client, artifact registry, executor cache (feature `pjrt`) |
-//! | [`coordinator`] | DESIGN.md §2, Table 3 | capacity allocator, batcher, program-once/query-many `SearchEngine`, pipeline drivers |
-//! | [`config`] | §IV-A | TOML config system + paper presets, `[backend]` section |
+//! | [`coordinator`] | DESIGN.md §2, Table 3 | capacity allocator, batcher, program-once/query-many `SearchEngine`, sharded multi-engine serving, pipeline drivers |
+//! | [`config`] | §IV-A | TOML config system + paper presets, `[backend]` section (incl. `shards`) |
 //! | [`telemetry`] | — | counters and report tables |
 //! | [`util`] | — | RNG, JSON/kv parsers, crate-wide `error::{Error, Result}` |
 

@@ -12,7 +12,9 @@ use specpcm::backend::{BackendDispatcher, BackendKind};
 use specpcm::baselines::latency_model;
 use specpcm::cluster::quality::clustered_at_incorrect;
 use specpcm::config::{SpecPcmConfig, Task};
-use specpcm::coordinator::{ClusteringPipeline, SearchEngine, SearchPipeline};
+use specpcm::coordinator::{
+    ClusteringPipeline, SearchEngine, SearchPipeline, ShardPlan, ShardedSearchEngine,
+};
 use specpcm::encode::EncodeKind;
 use specpcm::energy::area_breakdown;
 use specpcm::ms::{ClusteringDataset, SearchDataset, Spectrum};
@@ -29,7 +31,7 @@ USAGE:
   specpcm search  [--dataset iprg2012|hek293]     [--scale F] [--config FILE]
                   [--backend ref|parallel|pjrt] [--threads N] [--num-banks N]
                   [--encode-backend scalar|bitpacked|parallel]
-                  [--serve-batches N] [--no-artifacts]
+                  [--serve-batches N] [--shards N|auto] [--no-artifacts]
   specpcm info                  print the hardware model (Tables 1/S3, Fig. 8)
   specpcm config [clustering|search]   print a config preset
   specpcm isa <file>            assemble + run an ISA program
@@ -41,13 +43,21 @@ SERVING:
                       programming cost vs the marginal per-batch cost and
                       the amortized total.
 
+SHARDING:
+  --shards N|auto     split a library that overflows one engine's banks
+                      across N engines (each with its own num_banks bank
+                      pool), served concurrently with per-query bests
+                      merged bit-identically to one big-enough engine.
+                      'auto' (the default) computes the minimum shard
+                      count from the capacity pre-flight, so the full
+                      presets run at --scale 1.0 without shrinking.
+
 CAPACITY:
-  The engine places every reference HV on a physical bank row and fails
-  with a CapacityError when the library does not fit (it no longer
-  silently ignores num_banks). At the paper-default D=8192 / 128 banks
-  there are 640 reference slots; the default --scale per dataset is
-  chosen to fit (iprg2012 0.25, hek293 0.18). A larger --scale needs
-  more banks, e.g. `--num-banks 256`.
+  The engine places every reference HV on a physical bank row; at the
+  paper-default D=8192 / 128 banks there are 640 reference slots per
+  engine. A library that overflows them is auto-sharded (see SHARDING);
+  forcing --shards N that still doesn't fit fails with a typed
+  CapacityError rather than silently ignoring num_banks.
 
 BACKENDS:
   MVM (--backend): how score tiles execute
@@ -144,6 +154,15 @@ fn load_cfg(args: &Args, default: SpecPcmConfig) -> Result<SpecPcmConfig> {
     }
     cfg.backend.threads = args.get_usize("threads", cfg.backend.threads)?;
     cfg.num_banks = args.get_usize("num-banks", cfg.num_banks)?;
+    if let Some(s) = args.flags.get("shards") {
+        cfg.backend.shards = if s == "auto" {
+            0
+        } else {
+            s.parse().map_err(|_| {
+                Error::msg(format!("--shards: '{s}' is not a shard count or 'auto'"))
+            })?
+        };
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -198,11 +217,10 @@ fn cmd_search(args: &Args) -> Result<()> {
     let cfg = load_cfg(args, SpecPcmConfig::paper_search())?;
     specpcm::ensure!(cfg.task == Task::Search, "config task must be search");
     let dataset = args.get("dataset", "iprg2012");
-    // Default scales keep each preset library inside the paper config's
-    // 640 reference slots (D=8192 n=3 on 128 banks); an explicit --scale
-    // that overflows them fails with the engine's CapacityError.
-    let default_scale = if dataset == "hek293" { 0.18 } else { 0.25 };
-    let scale = args.get_f64("scale", default_scale)?;
+    // Full presets by default: a library that overflows one engine's
+    // banks is auto-sharded (`--shards auto`), so --scale no longer needs
+    // shrunken per-dataset defaults to fit 640 slots.
+    let scale = args.get_f64("scale", 1.0)?;
     let ds = match dataset.as_str() {
         "iprg2012" => SearchDataset::iprg2012_like(cfg.seed, scale),
         "hek293" => SearchDataset::hek293_like(cfg.seed, scale),
@@ -210,6 +228,15 @@ fn cmd_search(args: &Args) -> Result<()> {
     };
     let backend = open_backend(&cfg);
     let n_batches = args.get_usize("serve-batches", 0)?;
+    let plan = ShardPlan::for_capacity(
+        &cfg,
+        ds.library.len(),
+        ds.decoys.len(),
+        cfg.backend.shards,
+    )?;
+    if plan.n_shards() > 1 {
+        return cmd_search_sharded(cfg, &ds, &backend, plan, n_batches);
+    }
     if n_batches > 0 {
         return cmd_serve(cfg, &ds, &backend, n_batches);
     }
@@ -236,6 +263,90 @@ fn cmd_search(args: &Args) -> Result<()> {
         .map(|(s, t, f)| vec![s, format!("{t:.3}s"), format!("{:.1}%", f * 100.0)])
         .collect();
     println!("{}", render_table("host wall time", &["stage", "time", "%"], &rows));
+    Ok(())
+}
+
+/// A library that overflows one engine's banks: program it across
+/// `n_shards` engines and serve concurrently (`--shards N|auto`). With
+/// `--serve-batches 0` the queries go through in one batch; either way
+/// the merged results are bit-identical to one big-enough engine.
+fn cmd_search_sharded(
+    cfg: SpecPcmConfig,
+    ds: &SearchDataset,
+    backend: &BackendDispatcher,
+    plan: ShardPlan,
+    n_batches: usize,
+) -> Result<()> {
+    let fdr = cfg.fdr;
+    let per_shard_banks = cfg.num_banks;
+    // The plan cmd_search validated (and routes on) is exactly the plan
+    // the engine programs — one planning call site.
+    let engine = ShardedSearchEngine::program_with_plan(cfg, ds, backend, plan)?;
+    println!(
+        "sharded library: {} reference rows across {} shards ({} banks each, {} total); \
+         rows/shard: {:?}",
+        engine.n_refs(),
+        engine.n_shards(),
+        per_shard_banks,
+        engine.total_banks(),
+        engine
+            .plan()
+            .ranges()
+            .iter()
+            .map(|r| r.len())
+            .collect::<Vec<_>>()
+    );
+    let prog = *engine.program_report();
+    println!(
+        "programmed once: {:.4} mJ, {:.4} ms ({} program rounds)",
+        prog.total_j() * 1e3,
+        prog.total_latency_s() * 1e3,
+        engine.program_ops().program_rounds
+    );
+
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let outcomes = engine.serve_chunked(&queries, n_batches.max(1), backend)?;
+    if outcomes.len() > 1 {
+        let rows: Vec<Vec<String>> = outcomes
+            .iter()
+            .enumerate()
+            .map(|(bi, out)| {
+                vec![
+                    format!("{bi}"),
+                    format!("{}", out.pairs.len()),
+                    format!("{:.4}", out.report.total_j() * 1e3),
+                    format!("{:.4}", out.report.overlapped_latency_s() * 1e3),
+                ]
+            })
+            .collect();
+        println!(
+            "{}",
+            render_table(
+                "marginal per-batch cost (fanned out across every shard)",
+                &["batch", "queries", "energy mJ", "latency ms"],
+                &rows
+            )
+        );
+    }
+
+    let cost = engine.serving_cost(&outcomes);
+    println!(
+        "energy:  one-time {:.4} mJ | marginal total {:.4} mJ | amortized/batch {:.4} mJ",
+        cost.one_time_j * 1e3,
+        cost.marginal_j * 1e3,
+        cost.amortized_j_per_batch() * 1e3
+    );
+
+    let out = engine.finalize(&queries, &outcomes)?;
+    println!(
+        "identified {}/{} queries at {:.0}% FDR ({} correct) — bit-identical to one \
+         monolithic engine with {} banks",
+        out.identified,
+        out.total_queries,
+        fdr * 100.0,
+        out.correct,
+        engine.total_banks()
+    );
     Ok(())
 }
 
@@ -445,6 +556,38 @@ mod tests {
         assert_eq!(cfg.backend.encode_kind, EncodeKind::Parallel);
         let bad = Args::parse(&argv(&["--encode-backend", "gpu"])).unwrap();
         assert!(load_cfg(&bad, SpecPcmConfig::paper_clustering()).is_err());
+    }
+
+    #[test]
+    fn shards_flag_parses_count_and_auto() {
+        let a = Args::parse(&argv(&["--shards", "4"])).unwrap();
+        let cfg = load_cfg(&a, SpecPcmConfig::paper_search()).unwrap();
+        assert_eq!(cfg.backend.shards, 4);
+
+        let a = Args::parse(&argv(&["--shards", "auto"])).unwrap();
+        let cfg = load_cfg(&a, SpecPcmConfig::paper_search()).unwrap();
+        assert_eq!(cfg.backend.shards, 0);
+
+        // Default is auto.
+        let none = Args::parse(&argv(&[])).unwrap();
+        let cfg = load_cfg(&none, SpecPcmConfig::paper_search()).unwrap();
+        assert_eq!(cfg.backend.shards, 0);
+
+        let bad = Args::parse(&argv(&["--shards", "many"])).unwrap();
+        assert!(load_cfg(&bad, SpecPcmConfig::paper_search()).is_err());
+    }
+
+    #[test]
+    fn full_scale_presets_auto_shard() {
+        // The satellite contract: `--scale 1.0 --dataset hek293` must
+        // resolve to a runnable shard plan instead of a CapacityError.
+        let cfg = SpecPcmConfig::paper_search();
+        let ds = SearchDataset::hek293_like(cfg.seed, 1.0);
+        let plan =
+            ShardPlan::for_capacity(&cfg, ds.library.len(), ds.decoys.len(), 0).unwrap();
+        assert!(plan.n_shards() > 1, "full HEK293 must shard");
+        // 640 slots per engine at D=8192 n=3 / 128 banks.
+        assert!(plan.ranges().iter().all(|r| r.len() <= 640));
     }
 
     #[test]

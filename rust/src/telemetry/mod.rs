@@ -27,12 +27,33 @@ impl EncodeCacheStats {
             self.hits as f64 / self.total() as f64
         }
     }
+
+    /// Fold another counter into this one (mirrors `OpCounts::add`, so
+    /// shard/batch aggregation is one fold).
+    pub fn merge(&mut self, other: &EncodeCacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+    }
+}
+
+impl std::ops::AddAssign<&EncodeCacheStats> for EncodeCacheStats {
+    fn add_assign(&mut self, rhs: &EncodeCacheStats) {
+        self.merge(rhs);
+    }
 }
 
 impl std::ops::AddAssign for EncodeCacheStats {
     fn add_assign(&mut self, rhs: Self) {
-        self.hits += rhs.hits;
-        self.misses += rhs.misses;
+        self.merge(&rhs);
+    }
+}
+
+impl std::iter::Sum for EncodeCacheStats {
+    fn sum<I: Iterator<Item = EncodeCacheStats>>(iter: I) -> EncodeCacheStats {
+        iter.fold(EncodeCacheStats::default(), |mut acc, s| {
+            acc.merge(&s);
+            acc
+        })
     }
 }
 
@@ -128,6 +149,19 @@ mod tests {
         s += EncodeCacheStats { hits: 1, misses: 0 };
         assert_eq!(s.total(), 5);
         assert!((s.hit_rate() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cache_stats_merge_by_ref_and_sum() {
+        let a = EncodeCacheStats { hits: 2, misses: 3 };
+        let b = EncodeCacheStats { hits: 5, misses: 1 };
+        let mut m = a;
+        m += &b; // by-ref AddAssign, mirroring OpCounts
+        assert_eq!(m, EncodeCacheStats { hits: 7, misses: 4 });
+
+        // Shard aggregation as one fold.
+        let folded: EncodeCacheStats = [a, b, EncodeCacheStats::default()].into_iter().sum();
+        assert_eq!(folded, m);
     }
 
     #[test]

@@ -4,10 +4,18 @@
 //! [`SearchPipeline::run`] — same per-query score pairs, same accepted
 //! queries, same total op counts — while the library's encode+program work
 //! is charged exactly once, on the engine, regardless of batch count.
+//!
+//! The second half covers the shard layer's contract: a
+//! [`ShardedSearchEngine`] over `k` shards of `B` banks each — programming
+//! noise chained across shards, queries encoded once, per-query bests
+//! merged in shard order, ops charged from merged group candidate counts —
+//! is bit-identical to one monolithic engine with `k * B` banks, for every
+//! shard count and batch split, including shard ranges that straddle the
+//! target/decoy boundary.
 
 use specpcm::backend::BackendDispatcher;
 use specpcm::config::SpecPcmConfig;
-use specpcm::coordinator::{BatchOutcome, SearchEngine, SearchPipeline};
+use specpcm::coordinator::{BatchOutcome, SearchEngine, SearchPipeline, ShardedSearchEngine};
 use specpcm::ms::{SearchDataset, Spectrum};
 
 fn cfg() -> SpecPcmConfig {
@@ -144,4 +152,152 @@ fn finalize_rejects_mismatched_query_count() {
     let queries: Vec<&Spectrum> = ds.queries.iter().collect();
     let batch = engine.search_batch(&queries[..5], &be).unwrap();
     assert!(engine.finalize(&queries, &[batch]).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Shard layer
+// ---------------------------------------------------------------------------
+
+/// 36 banks at D=2048 n=3 (6 segments) = 6 bank groups x 128 = 768 slots.
+const UNION_BANKS: usize = 36;
+
+#[test]
+fn sharded_matches_monolithic_across_shard_counts_and_batch_splits() {
+    // 120 targets + 120 decoys = 240 reference rows, 60 queries.
+    let ds = SearchDataset::generate("t", 11, 120, 60, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::reference();
+
+    // Monolithic oracle: one engine owning the whole union bank pool.
+    let mono_cfg = SpecPcmConfig {
+        num_banks: UNION_BANKS,
+        ..cfg()
+    };
+    let mono = SearchEngine::program(mono_cfg, &ds, &be).unwrap();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let mono_batch = mono.search_batch(&queries, &be).unwrap();
+    let mono_out = mono.finalize(&queries, &[mono_batch.clone()]).unwrap();
+
+    for shards in [1usize, 2, 3] {
+        // Split the same pool: k shards of 36/k banks each.
+        let shard_cfg = SpecPcmConfig {
+            num_banks: UNION_BANKS / shards,
+            ..cfg()
+        };
+        let engine = ShardedSearchEngine::program(shard_cfg, &ds, &be, shards).unwrap();
+        assert_eq!(engine.n_shards(), shards);
+        assert_eq!(engine.n_refs(), 240);
+        assert_eq!(engine.total_banks(), UNION_BANKS);
+
+        // One-time programming: the chained noise RNG reproduces the
+        // monolithic pulse trajectory row for row, so op counts (which
+        // depend on write-verify convergence draws) match exactly.
+        assert_eq!(engine.program_ops(), mono.program_ops(), "{shards} shards");
+
+        // Single fan-out batch: results, ops and energy all bit-identical.
+        let batch = engine.search_batch(&queries, &be).unwrap();
+        assert_eq!(batch.pairs, mono_batch.pairs, "{shards} shards");
+        assert_eq!(batch.matched, mono_batch.matched, "{shards} shards");
+        assert_eq!(batch.ops, mono_batch.ops, "{shards} shards");
+        assert_eq!(batch.report.total_j(), mono_batch.report.total_j());
+        // Queries encode once at the shard layer, never per shard.
+        assert_eq!(batch.ops.encode_spectra, queries.len() as u64);
+        assert_eq!(batch.cache.misses + batch.cache.hits, queries.len() as u64);
+
+        // Uneven batch splits fold to the same summary.
+        engine.clear_query_cache();
+        let splits: [&[usize]; 2] = [&[60], &[13, 7, 23, 17]];
+        for sizes in splits {
+            let mut outcomes = Vec::new();
+            let mut start = 0;
+            for &s in sizes {
+                outcomes.push(engine.search_batch(&queries[start..start + s], &be).unwrap());
+                start += s;
+            }
+            for b in &outcomes {
+                assert_eq!(b.ops.program_rounds, 0);
+                assert_eq!(b.ops.verify_rounds, 0);
+            }
+            let out = engine.finalize(&queries, &outcomes).unwrap();
+            assert_eq!(out.pairs, mono_out.pairs, "{shards} shards, split {sizes:?}");
+            assert_eq!(out.fdr.accepted, mono_out.fdr.accepted);
+            assert_eq!(out.fdr.threshold, mono_out.fdr.threshold);
+            assert_eq!(out.identified, mono_out.identified);
+            assert_eq!(out.correct, mono_out.correct);
+            assert_eq!(out.identified_peptides, mono_out.identified_peptides);
+            assert_eq!(out.ops, mono_out.ops, "{shards} shards, split {sizes:?}");
+            assert_eq!(out.report.total_j(), mono_out.report.total_j());
+        }
+    }
+}
+
+#[test]
+fn shard_boundary_inside_decoy_block_is_partition_safe() {
+    // 3 shards over 120 + 120 rows: ranges [0, 80), [80, 160), [160, 240)
+    // — shard 1 straddles the target/decoy boundary at row 120.
+    let ds = SearchDataset::generate("t", 11, 120, 40, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::reference();
+    let shard_cfg = SpecPcmConfig {
+        num_banks: UNION_BANKS / 3,
+        ..cfg()
+    };
+    let engine = ShardedSearchEngine::program(shard_cfg, &ds, &be, 3).unwrap();
+    let plan = engine.plan();
+    assert_eq!(plan.target_range(1), 80..120);
+    assert_eq!(plan.decoy_range(1), 0..40);
+    assert_eq!(engine.shard(1).n_targets(), 40);
+    assert_eq!(engine.shard(1).n_refs(), 80);
+    assert_eq!(engine.shard(2).n_targets(), 0, "pure-decoy shard");
+
+    // Decoy classification stays correct across the split: identical
+    // per-query (target, decoy) pairs to the monolithic engine.
+    let mono_cfg = SpecPcmConfig {
+        num_banks: UNION_BANKS,
+        ..cfg()
+    };
+    let mono = SearchEngine::program(mono_cfg, &ds, &be).unwrap();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let sharded = engine.search_batch(&queries, &be).unwrap();
+    let monolithic = mono.search_batch(&queries, &be).unwrap();
+    assert_eq!(sharded.pairs, monolithic.pairs);
+    assert_eq!(sharded.matched, monolithic.matched);
+}
+
+#[test]
+fn over_capacity_library_completes_via_auto_sharding() {
+    // 240 rows vs 128 slots per engine (6 banks): monolithic fails,
+    // auto-sharding resolves to 2 engines and matches a monolithic
+    // engine with the union pool (12 banks, 256 slots).
+    let ds = SearchDataset::generate("t", 13, 120, 30, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::reference();
+    let small = SpecPcmConfig {
+        num_banks: 6,
+        ..cfg()
+    };
+    assert!(SearchEngine::program(small.clone(), &ds, &be).is_err());
+
+    let engine = ShardedSearchEngine::program(small, &ds, &be, 0).unwrap();
+    assert_eq!(engine.n_shards(), 2);
+
+    let mono_cfg = SpecPcmConfig {
+        num_banks: 12,
+        ..cfg()
+    };
+    let mono = SearchEngine::program(mono_cfg, &ds, &be).unwrap();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+    let sharded_out = {
+        let outcomes = engine.serve_chunked(&queries, 3, &be).unwrap();
+        engine.finalize(&queries, &outcomes).unwrap()
+    };
+    let mono_out = {
+        let outcomes = mono.serve_chunked(&queries, 3, &be).unwrap();
+        mono.finalize(&queries, &outcomes).unwrap()
+    };
+    assert_eq!(sharded_out.pairs, mono_out.pairs);
+    assert_eq!(sharded_out.fdr.accepted, mono_out.fdr.accepted);
+    assert_eq!(sharded_out.ops, mono_out.ops, "total ASIC work unchanged by sharding");
+    assert_eq!(sharded_out.report.total_j(), mono_out.report.total_j());
+
+    // Sanity: something is actually identified on this workload.
+    assert!(sharded_out.identified > 0);
 }

@@ -12,10 +12,13 @@
 //!   cut at +inf yields one cluster per connected component.
 //! * ADC transfer: idempotent on its own output codes, odd symmetry.
 //! * FDR: achieved FDR never exceeds the requested rate.
+//! * ShardPlan: partitions are disjoint, exhaustive, order-preserving and
+//!   balanced; auto plans fit per-engine capacity with a minimal count.
 
 use specpcm::array::AdcConfig;
 use specpcm::cluster::complete_linkage;
-use specpcm::coordinator::{Batcher, SegmentAllocator};
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::{Batcher, SegmentAllocator, ShardPlan};
 use specpcm::hd;
 use specpcm::isa::{decode, encode, Instruction};
 use specpcm::search::fdr_filter;
@@ -200,6 +203,88 @@ fn prop_fdr_never_exceeds_requested() {
         // All accepted beat the threshold and their own decoy.
         for &i in &r.accepted {
             assert!(pairs[i].0 >= r.threshold && pairs[i].0 > pairs[i].1);
+        }
+    }
+}
+
+#[test]
+fn prop_shard_plan_disjoint_exhaustive_order_preserving() {
+    let mut rng = Rng::new(0x5a4d);
+    for case in 0..CASES {
+        let t = rng.below(500);
+        let d = rng.below(500);
+        let k = 1 + rng.below(12);
+        let p = ShardPlan::balanced(t, d, k);
+        let rows = t + d;
+
+        // Exhaustive + disjoint + order-preserving: the ranges tile
+        // [0, rows) exactly, in ascending order.
+        let mut cursor = 0;
+        for i in 0..p.n_shards() {
+            let r = p.range(i);
+            assert_eq!(r.start, cursor, "case {case}: gap/overlap at shard {i}");
+            assert!(r.end >= r.start, "case {case}");
+            cursor = r.end;
+
+            // The target/decoy subranges re-compose the global range and
+            // never cross the boundary.
+            let tr = p.target_range(i);
+            let dr = p.decoy_range(i);
+            assert_eq!(tr.len() + dr.len(), r.len(), "case {case} shard {i}");
+            assert!(tr.end <= t && dr.end <= d, "case {case} shard {i}");
+            if !tr.is_empty() {
+                assert_eq!(tr.start, r.start, "case {case} shard {i}");
+            }
+            if !dr.is_empty() {
+                assert_eq!(t + dr.end, r.end, "case {case} shard {i}");
+            }
+        }
+        assert_eq!(cursor, rows, "case {case}: ranges must cover every row");
+
+        // Balanced: shard sizes differ by at most one, larger shards first.
+        let sizes: Vec<usize> = p.ranges().iter().map(|r| r.len()).collect();
+        let mn = *sizes.iter().min().unwrap();
+        let mx = *sizes.iter().max().unwrap();
+        assert!(mx - mn <= 1, "case {case}: sizes {sizes:?}");
+        assert!(
+            sizes.windows(2).all(|w| w[0] >= w[1]),
+            "case {case}: remainder must go to earlier shards: {sizes:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_shard_plan_auto_fits_capacity_minimally() {
+    let mut rng = Rng::new(0xca9);
+    for case in 0..CASES {
+        let t = rng.below(900);
+        let d = rng.below(900);
+        // D=2048 n=3 packs to 6 segments; banks a multiple of that keeps
+        // the per-engine capacity math exact: (banks/6) * 128 slots.
+        let banks = 6 * (1 + rng.below(8));
+        let cfg = SpecPcmConfig {
+            hd_dim: 2048,
+            num_banks: banks,
+            ..SpecPcmConfig::paper_search()
+        };
+        let capacity = (banks / 6) * 128;
+        let p = ShardPlan::for_capacity(&cfg, t, d, 0).unwrap();
+
+        // Every shard fits one engine...
+        assert!(
+            p.ranges().iter().all(|r| r.len() <= capacity),
+            "case {case}: banks={banks} t={t} d={d} ranges={:?}",
+            p.ranges()
+        );
+        // ...and the shard count is minimal: one fewer could not hold
+        // every row (vacuous for the degenerate empty-library plan).
+        if t + d > 0 {
+            assert!(
+                (t + d) > (p.n_shards() - 1) * capacity,
+                "case {case}: {} shards not minimal for {} rows @ {capacity}",
+                p.n_shards(),
+                t + d
+            );
         }
     }
 }
