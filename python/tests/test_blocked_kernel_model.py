@@ -1,0 +1,122 @@
+"""Float32 model of the rust cache-blocked segmented MVM kernel.
+
+`rust/src/array/transfer.rs::imc_mvm_blocked_into` claims bit-identity
+with the naive reference transfer function (`imc_mvm_ref`) because the
+blocking only reorders *which output* is computed next, never the
+accumulation order inside one output. This test reproduces both loop
+structures in numpy float32 — including the DAC round/clip, the per-tile
+ADC quantization, and the f32 partial-sum ordering — and asserts exact
+(bitwise) equality over randomized ragged-segment workloads.
+
+numpy-only (no jax): runs wherever the other kernel tests run.
+"""
+
+import numpy as np
+
+ARRAY_DIM = 128
+QUERY_BLOCK = 16  # must match transfer.rs::QUERY_BLOCK
+
+
+def dac_quantize(x):
+    # round half away from zero, clip to the 3-bit DAC range [-4, 3]
+    q = np.where(x >= 0, np.floor(x + 0.5), np.ceil(x - 0.5)).astype(np.float32)
+    return np.clip(q, -4.0, 3.0).astype(np.float32)
+
+
+def adc_quantize(s, lsb, qmax):
+    v = s / np.float32(lsb)
+    v = np.where(v >= 0, np.floor(v + 0.5), np.ceil(v - 0.5)).astype(np.float32)
+    v = np.clip(v, -(qmax + 1.0), qmax).astype(np.float32)
+    return (v * np.float32(lsb)).astype(np.float32)
+
+
+def imc_mvm_ref(queries, refs, b, r, c, lsb, qmax):
+    """The naive reference loop nest: per (query, row), tiles in order."""
+    dacq = dac_quantize(queries)
+    tiles = c // ARRAY_DIM
+    out = np.zeros(b * r, dtype=np.float32)
+    for bi in range(b):
+        qrow = dacq[bi * c : (bi + 1) * c]
+        for ri in range(r):
+            grow = refs[ri * c : (ri + 1) * c]
+            acc = np.float32(0)
+            for t in range(tiles):
+                lo = t * ARRAY_DIM
+                part = np.float32(0)
+                for k in range(lo, lo + ARRAY_DIM):
+                    part = np.float32(part + np.float32(qrow[k] * grow[k]))
+                acc = np.float32(acc + adc_quantize(part, lsb, qmax))
+            out[bi * r + ri] = acc
+    return out
+
+
+def imc_mvm_blocked(queries, panel, segments, b, c, lsb, qmax):
+    """The blocked loop nest from transfer.rs, transcribed 1:1."""
+    dacq = dac_quantize(queries)
+    tiles = c // ARRAY_DIM
+    r = sum(e - s for (s, e) in segments)
+    out = np.zeros(b * r, dtype=np.float32)
+    acc = np.zeros(QUERY_BLOCK * ARRAY_DIM, dtype=np.float32)
+    q0 = 0
+    while q0 < b:
+        qn = min(QUERY_BLOCK, b - q0)
+        oc = 0
+        for (seg_s, seg_e) in segments:
+            p0 = seg_s
+            while p0 < seg_e:
+                pn = min(ARRAY_DIM, seg_e - p0)
+                acc[: qn * pn] = 0
+                for t in range(tiles):
+                    lo = t * ARRAY_DIM
+                    for qi in range(qn):
+                        qoff = (q0 + qi) * c + lo
+                        for pi in range(pn):
+                            goff = (p0 + pi) * c + lo
+                            part = np.float32(0)
+                            for k in range(ARRAY_DIM):
+                                part = np.float32(
+                                    part + np.float32(dacq[qoff + k] * panel[goff + k])
+                                )
+                            acc[qi * pn + pi] = np.float32(
+                                acc[qi * pn + pi] + adc_quantize(part, lsb, qmax)
+                            )
+                for qi in range(qn):
+                    ooff = (q0 + qi) * r + oc
+                    out[ooff : ooff + pn] = acc[qi * pn : (qi + 1) * pn]
+                oc += pn
+                p0 += pn
+        q0 += qn
+    return out
+
+
+def gather(panel, segments, c):
+    parts = [panel[s * c : e * c] for (s, e) in segments]
+    return np.concatenate(parts) if parts else np.zeros(0, dtype=np.float32)
+
+
+def test_blocked_bit_identical_to_gathered_ref():
+    rng = np.random.default_rng(0x5EC)
+    for trial in range(8):
+        c = ARRAY_DIM * int(rng.integers(1, 3))
+        panel_rows = int(rng.integers(1, 180))
+        b = int(rng.integers(1, QUERY_BLOCK + 5))  # crosses the block edge
+        panel = rng.integers(-3, 4, size=panel_rows * c).astype(np.float32)
+        # Non-integer conductances exercise f32 rounding in the dot chain.
+        panel += rng.normal(0, 0.05, size=panel.shape).astype(np.float32)
+        queries = rng.integers(-3, 4, size=b * c).astype(np.float32)
+
+        segments = []
+        for _ in range(int(rng.integers(0, 5))):
+            a, z = sorted(rng.integers(0, panel_rows + 1, size=2).tolist())
+            segments.append((int(a), int(z)))
+        segments.append((0, 0))  # empty segment
+        single = int(rng.integers(0, panel_rows))
+        segments.append((single, single + 1))  # single-row bucket
+        if panel_rows > ARRAY_DIM + 5:
+            segments.append((ARRAY_DIM - 3, ARRAY_DIM + 5))  # tile straddle
+
+        lsb, qmax = 16.0, 31.0
+        r = sum(e - s for (s, e) in segments)
+        want = imc_mvm_ref(queries, gather(panel, segments, c), b, r, c, lsb, qmax)
+        got = imc_mvm_blocked(queries, panel, segments, b, c, lsb, qmax)
+        assert got.tobytes() == want.tobytes(), f"trial {trial}: blocked != ref"

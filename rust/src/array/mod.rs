@@ -17,7 +17,7 @@ pub use adc::AdcConfig;
 pub use bank::ArrayBank;
 pub use dac::dac_quantize;
 pub use timing::TimingModel;
-pub use transfer::imc_mvm_ref;
+pub use transfer::{imc_mvm_blocked_into, imc_mvm_ref};
 
 /// Array geometry (Table 1): 128x128 2T2R cells per bank.
 pub const ARRAY_DIM: usize = 128;

@@ -53,6 +53,101 @@ pub fn imc_mvm_ref(
     out
 }
 
+/// Query rows per blocking step of [`imc_mvm_blocked_into`]: small enough
+/// that the per-sub-tile accumulator scratch (`QUERY_BLOCK x ARRAY_DIM`
+/// f32 = 8 KB) lives comfortably in L1 next to the 64 KB reference tile.
+const QUERY_BLOCK: usize = 16;
+
+/// Cache-blocked, segment-aware variant of [`imc_mvm_ref`]: scores `b`
+/// packed query rows against the reference rows named by `segments` —
+/// physical row ranges into the row-major `panel` (`panel.len() / c`
+/// rows), concatenated left-to-right into the output columns. Writes the
+/// `b x sum(segment lens)` row-major scores into `out` (caller-owned, so
+/// serving loops reuse one buffer across batches).
+///
+/// # Bit-identity with the gathered reference path
+///
+/// The blocking only reorders *which output* is worked on next — never the
+/// arithmetic inside one output. For every `(query, reference)` pair the
+/// accumulation is exactly [`imc_mvm_ref`]'s: column tiles visited in
+/// ascending order, the 128 products of each tile summed in ascending `k`,
+/// one ADC quantization per tile, partial sums added in tile order. f32
+/// addition is performed in the identical sequence, so every score is
+/// bit-identical to gathering the segment rows into a dense matrix and
+/// calling [`imc_mvm_ref`] (locked in by `rust/tests/segmented_equivalence.rs`).
+///
+/// # Blocking structure
+///
+/// Queries advance in [`QUERY_BLOCK`]-row blocks; within a block, each
+/// segment is walked in [`ARRAY_DIM`]-row panels, and each panel's scores
+/// accumulate column-tile-by-column-tile into a small scratch sub-tile.
+/// The inner `t -> (query, panel-row)` order means one 128x128 reference
+/// tile (64 KB) is reused by every query of the block while hot, instead
+/// of being re-streamed from memory once per query — the reference
+/// kernel's behavior at large `r`.
+pub fn imc_mvm_blocked_into(
+    queries: &[f32],
+    panel: &[f32],
+    segments: &[std::ops::Range<usize>],
+    b: usize,
+    c: usize,
+    adc: AdcConfig,
+    out: &mut [f32],
+) {
+    assert_eq!(queries.len(), b * c, "queries shape");
+    assert_eq!(c % ARRAY_DIM, 0, "C must be a multiple of {ARRAY_DIM}");
+    assert_eq!(panel.len() % c.max(1), 0, "panel shape");
+    let panel_rows = panel.len() / c.max(1);
+    let r: usize = segments.iter().map(|s| s.len()).sum();
+    for s in segments {
+        assert!(s.start <= s.end && s.end <= panel_rows, "segment {s:?} out of panel");
+    }
+    assert_eq!(out.len(), b * r, "out shape");
+
+    // DAC once per query element, exactly as the reference kernel does.
+    let dacq: Vec<f32> = queries.iter().map(|&x| dac_quantize(x)).collect();
+
+    let tiles = c / ARRAY_DIM;
+    let mut acc = [0f32; QUERY_BLOCK * ARRAY_DIM];
+    let mut q0 = 0;
+    while q0 < b {
+        let qn = QUERY_BLOCK.min(b - q0);
+        // Output-column cursor across the concatenated segments.
+        let mut oc = 0usize;
+        for seg in segments {
+            let mut p0 = seg.start;
+            while p0 < seg.end {
+                let pn = ARRAY_DIM.min(seg.end - p0);
+                let sub = &mut acc[..qn * pn];
+                sub.fill(0.0);
+                for t in 0..tiles {
+                    let lo = t * ARRAY_DIM;
+                    for qi in 0..qn {
+                        let qoff = (q0 + qi) * c + lo;
+                        let qrow = &dacq[qoff..qoff + ARRAY_DIM];
+                        for pi in 0..pn {
+                            let goff = (p0 + pi) * c + lo;
+                            let grow = &panel[goff..goff + ARRAY_DIM];
+                            let mut part = 0f32;
+                            for k in 0..ARRAY_DIM {
+                                part += qrow[k] * grow[k];
+                            }
+                            sub[qi * pn + pi] += adc.quantize(part);
+                        }
+                    }
+                }
+                for qi in 0..qn {
+                    let ooff = (q0 + qi) * r + oc;
+                    out[ooff..ooff + pn].copy_from_slice(&sub[qi * pn..(qi + 1) * pn]);
+                }
+                oc += pn;
+                p0 += pn;
+            }
+        }
+        q0 += qn;
+    }
+}
+
 /// Exact (no DAC/ADC) dot-product scores — the "digital" upper bound used
 /// by the HyperSpec/HyperOMS-style software baselines.
 pub fn exact_mvm(queries: &[f32], refs: &[f32], b: usize, r: usize, c: usize) -> Vec<f32> {
@@ -126,5 +221,69 @@ mod tests {
     #[should_panic(expected = "multiple")]
     fn rejects_untiled_c() {
         imc_mvm_ref(&[0.0; 100], &[0.0; 100], 1, 1, 100, AdcConfig::ideal());
+    }
+
+    /// Gather the segment rows into a dense matrix — the oracle the
+    /// blocked kernel must match bit-for-bit.
+    fn gather_rows(panel: &[f32], segments: &[std::ops::Range<usize>], c: usize) -> Vec<f32> {
+        let mut g = Vec::new();
+        for s in segments {
+            g.extend_from_slice(&panel[s.start * c..s.end * c]);
+        }
+        g
+    }
+
+    #[test]
+    fn blocked_dense_matches_ref_bitwise() {
+        let mut rng = Rng::new(31);
+        // b > QUERY_BLOCK so multiple query blocks run; r > 128 so
+        // multiple row panels run; non-pow2 raggedness everywhere.
+        let (b, r, c) = (37, 300, 384);
+        let q = rand_packed(&mut rng, b * c, 3);
+        let g = rand_packed(&mut rng, r * c, 3);
+        for adc in [AdcConfig::ideal(), AdcConfig::new(6, 512.0), AdcConfig::new(3, 128.0)] {
+            let want = imc_mvm_ref(&q, &g, b, r, c, adc);
+            let mut got = vec![f32::NAN; b * r];
+            imc_mvm_blocked_into(&q, &g, &[0..r], b, c, adc, &mut got);
+            assert_eq!(got, want, "adc {adc:?}");
+        }
+    }
+
+    #[test]
+    fn blocked_segmented_matches_gathered_ref_bitwise() {
+        let mut rng = Rng::new(32);
+        let (panel_rows, c) = (500, 256);
+        let panel = rand_packed(&mut rng, panel_rows * c, 3);
+        let q = rand_packed(&mut rng, 5 * c, 3);
+        let adc = AdcConfig::new(6, 512.0);
+        // Ragged segments: empty, single-row, straddling the 128-row tile
+        // boundary, and out-of-order-sized ranges.
+        let segs: Vec<std::ops::Range<usize>> =
+            vec![3..3, 10..11, 100..260, 0..1, 300..500, 42..42];
+        let gathered = gather_rows(&panel, &segs, c);
+        let r: usize = segs.iter().map(|s| s.len()).sum();
+        let want = imc_mvm_ref(&q, &gathered, 5, r, c, adc);
+        let mut got = vec![f32::NAN; 5 * r];
+        imc_mvm_blocked_into(&q, &panel, &segs, 5, c, adc, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn blocked_empty_inputs() {
+        let adc = AdcConfig::ideal();
+        let g = vec![1.0f32; 4 * 128];
+        // No queries.
+        imc_mvm_blocked_into(&[], &g, &[0..4], 0, 128, adc, &mut []);
+        // No candidate rows (only empty segments).
+        let q = vec![1.0f32; 2 * 128];
+        imc_mvm_blocked_into(&q, &g, &[2..2], 2, 128, adc, &mut []);
+        imc_mvm_blocked_into(&q, &g, &[], 2, 128, adc, &mut []);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of panel")]
+    fn blocked_rejects_out_of_range_segment() {
+        let g = vec![0f32; 4 * 128];
+        imc_mvm_blocked_into(&[0.0; 128], &g, &[2..5], 1, 128, AdcConfig::ideal(), &mut [0.0; 3]);
     }
 }

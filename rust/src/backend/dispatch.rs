@@ -154,11 +154,22 @@ impl BackendDispatcher {
     /// artifact for this packed width) and applies even at
     /// `min_utilization = 0`.
     pub fn execute(&self, job: &MvmJob, ops: &mut OpCounts) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; job.nq * job.nr];
+        self.execute_into(job, &mut out, ops)?;
+        Ok(out)
+    }
+
+    /// [`BackendDispatcher::execute`] writing into a caller-owned buffer
+    /// (exactly `nq * nr` long) — the zero-allocation primitive the
+    /// serving hot loop drives segmented jobs through, reusing one score
+    /// buffer across groups and batches. Routing and op charging are
+    /// identical to `execute`.
+    pub fn execute_into(&self, job: &MvmJob, out: &mut [f32], ops: &mut OpCounts) -> Result<()> {
         job.count_ops(ops);
         if self.primary.supports(job) && self.primary.utilization(job) >= self.min_utilization {
-            self.primary.mvm_scores(job)
+            self.primary.mvm_scores_into(job, out)
         } else {
-            self.fallback.mvm_scores(job)
+            self.fallback.mvm_scores_into(job, out)
         }
     }
 }
@@ -195,8 +206,10 @@ mod tests {
             self.util
         }
 
-        fn mvm_scores(&self, job: &MvmJob) -> Result<Vec<f32>> {
-            Ok(vec![42.0; job.nq * job.nr])
+        fn mvm_scores_into(&self, job: &MvmJob, out: &mut [f32]) -> Result<()> {
+            assert_eq!(out.len(), job.nq * job.nr);
+            out.fill(42.0);
+            Ok(())
         }
     }
 
@@ -230,6 +243,31 @@ mod tests {
         let unsupported = BackendDispatcher::new(padded(false, 1.0), 0.0);
         let scores = unsupported.execute(&job, &mut ops).unwrap();
         assert_eq!(scores, RefBackend.mvm_scores(&job).unwrap());
+    }
+
+    #[test]
+    fn execute_into_reuses_buffer_and_matches_execute() {
+        let mut rng = Rng::new(9);
+        let cp = 256;
+        let panel: Vec<f32> = (0..40 * cp).map(|_| rng.range_i64(-3, 3) as f32).collect();
+        let q: Vec<f32> = (0..2 * cp).map(|_| rng.range_i64(-3, 3) as f32).collect();
+        let segs = vec![0..10, 25..40];
+        let job = MvmJob::segmented(&q, 2, &panel, &segs, cp, AdcConfig::new(6, 512.0));
+
+        let mut ops = OpCounts::default();
+        let want = BackendDispatcher::reference().execute(&job, &mut ops).unwrap();
+
+        // One poisoned buffer reused across repeated batches: every call
+        // overwrites it fully and charges the job again.
+        let mut out = vec![f32::NAN; job.nq * job.nr];
+        let mut ops_into = OpCounts::default();
+        for rep in 1..=3u64 {
+            BackendDispatcher::parallel(2)
+                .execute_into(&job, &mut out, &mut ops_into)
+                .unwrap();
+            assert_eq!(out, want, "rep {rep}");
+            assert_eq!(ops_into.mvm_ops, rep * job.bank_ops());
+        }
     }
 
     #[test]

@@ -6,12 +6,22 @@
 //! first-class, swappable layer:
 //!
 //! * [`MvmJob`] — one `nq x nr` score-tile computation over `cp`-wide
-//!   packed HVs, plus its physical bank-op accounting.
-//! * [`MvmBackend`] — the execution contract: `mvm_scores(&MvmJob)`.
+//!   packed HVs, plus its physical bank-op accounting. A job is either
+//!   **dense** (`refs` is exactly `nr` gathered rows) or **segmented**
+//!   ([`MvmJob::segmented`]): `refs` borrows one large bucket-contiguous
+//!   panel and `segments` names the candidate row ranges, so serving
+//!   never copies reference rows out of the programmed library.
+//! * [`MvmBackend`] — the execution contract:
+//!   `mvm_scores_into(&MvmJob, &mut [f32])` (the allocating
+//!   `mvm_scores` wrapper is provided). Callers own the output buffer and
+//!   reuse it across batches — the hot serving loop performs zero
+//!   per-batch reference copies and zero per-batch score allocations.
 //!   Every implementation must be **bit-identical** to the reference
-//!   transfer function (`array::imc_mvm_ref`) — backends change *where*
-//!   the arithmetic runs, never *what* it computes (integration-tested in
-//!   `rust/tests/backend_equivalence.rs`).
+//!   transfer function (`array::imc_mvm_ref`) on the gathered equivalent
+//!   of the job — backends change *where* the arithmetic runs, never
+//!   *what* it computes (integration-tested in
+//!   `rust/tests/backend_equivalence.rs` and
+//!   `rust/tests/segmented_equivalence.rs`).
 //! * [`RefBackend`] — the scalar reference path.
 //! * [`ParallelBackend`] — shards the score tile's query rows across
 //!   `std::thread::scope` workers (host-side analogue of bank
@@ -90,18 +100,27 @@ impl BackendKind {
 
 /// One IMC MVM score-tile job: `nq x nr` scores over `cp`-wide packed HVs.
 ///
-/// `queries` is row-major `nq x cp` (packed query HVs after DAC driving),
-/// `refs` is row-major `nr x cp` (stored noisy conductance differences).
-/// `cp` must be a multiple of [`ARRAY_DIM`] — the coordinator always pads
-/// packed HVs to whole array segments.
+/// `queries` is row-major `nq x cp` (packed query HVs after DAC driving).
+/// For a **dense** job ([`MvmJob::new`], `segments` empty) `refs` is
+/// row-major `nr x cp` (stored noisy conductance differences). For a
+/// **segmented** job ([`MvmJob::segmented`]) `refs` borrows a whole
+/// bucket-contiguous panel and `segments` names the candidate row ranges
+/// into it, concatenated left-to-right into the `nr` output columns — the
+/// zero-copy serving shape. `cp` must be a multiple of [`ARRAY_DIM`] —
+/// the coordinator always pads packed HVs to whole array segments.
 #[derive(Clone, Copy, Debug)]
 pub struct MvmJob<'a> {
     pub queries: &'a [f32],
     pub nq: usize,
     pub refs: &'a [f32],
+    /// Candidate reference rows scored (sum of segment lengths for
+    /// segmented jobs) — the score matrix is `nq x nr` either way.
     pub nr: usize,
     pub cp: usize,
     pub adc: AdcConfig,
+    /// Physical row ranges of `refs` making up the candidate set, in
+    /// output-column order. Empty means a dense job over rows `0..nr`.
+    pub segments: &'a [std::ops::Range<usize>],
 }
 
 impl<'a> MvmJob<'a> {
@@ -123,6 +142,59 @@ impl<'a> MvmJob<'a> {
             nr,
             cp,
             adc,
+            segments: &[],
+        }
+    }
+
+    /// A zero-copy job over `segments` of a borrowed row-major `panel`
+    /// (`panel.len() / cp` rows). The candidate count `nr` — and with it
+    /// the [`MvmJob::bank_ops`] charge — is the summed segment length, so
+    /// accounting is identical to gathering the same rows into a dense
+    /// job. Empty segments are legal (an empty bucket contributes no
+    /// output columns).
+    pub fn segmented(
+        queries: &'a [f32],
+        nq: usize,
+        panel: &'a [f32],
+        segments: &'a [std::ops::Range<usize>],
+        cp: usize,
+        adc: AdcConfig,
+    ) -> Self {
+        assert_eq!(queries.len(), nq * cp, "queries shape");
+        assert!(cp > 0 && cp % ARRAY_DIM == 0, "cp must be a multiple of {ARRAY_DIM}");
+        assert_eq!(panel.len() % cp, 0, "panel shape");
+        let panel_rows = panel.len() / cp;
+        let mut nr = 0usize;
+        for s in segments {
+            assert!(s.start <= s.end && s.end <= panel_rows, "segment {s:?} out of panel");
+            nr += s.len();
+        }
+        MvmJob {
+            queries,
+            nq,
+            refs: panel,
+            nr,
+            cp,
+            adc,
+            segments,
+        }
+    }
+
+    /// The candidate row ranges this job scores: its `segments`, or the
+    /// whole dense range for gathered jobs. `storage` is written only in
+    /// the dense case (borrow it from the caller's stack).
+    pub fn effective_segments<'s>(
+        &self,
+        storage: &'s mut [std::ops::Range<usize>; 1],
+    ) -> &'s [std::ops::Range<usize>]
+    where
+        'a: 's,
+    {
+        if self.segments.is_empty() {
+            storage[0] = 0..self.nr;
+            &storage[..]
+        } else {
+            self.segments
         }
     }
 
@@ -144,9 +216,11 @@ impl<'a> MvmJob<'a> {
 /// The execution contract every backend implements.
 ///
 /// Implementations must produce scores **bit-identical** to
-/// [`crate::array::imc_mvm_ref`] on the same job (the PJRT artifact is
-/// bit-exact by the pow-2 ADC full-scale argument; the parallel backend by
-/// running the identical scalar kernel per shard).
+/// [`crate::array::imc_mvm_ref`] on the gathered equivalent of the job
+/// (the PJRT artifact is bit-exact by the pow-2 ADC full-scale argument;
+/// the parallel backend by running the identical blocked kernel per
+/// shard; the blocked kernel by preserving each output's accumulation
+/// order — see [`crate::array::imc_mvm_blocked_into`]).
 ///
 /// `Send + Sync` are part of the contract: the coordinator's shard layer
 /// fans one query batch out across scoped threads that all execute jobs
@@ -157,8 +231,20 @@ pub trait MvmBackend: Send + Sync {
     /// Short stable identifier (telemetry / CLI echo).
     fn name(&self) -> &'static str;
 
-    /// Execute one score-tile job, returning `nq * nr` row-major scores.
-    fn mvm_scores(&self, job: &MvmJob) -> Result<Vec<f32>>;
+    /// Execute one score-tile job, writing the `nq * nr` row-major scores
+    /// into the caller-owned `out` (must be exactly `nq * nr` long). This
+    /// is the primitive serving loops call so one output buffer is reused
+    /// across batches instead of allocated per job.
+    fn mvm_scores_into(&self, job: &MvmJob, out: &mut [f32]) -> Result<()>;
+
+    /// Execute one score-tile job, returning `nq * nr` row-major scores
+    /// in a fresh allocation (convenience wrapper over
+    /// [`MvmBackend::mvm_scores_into`]).
+    fn mvm_scores(&self, job: &MvmJob) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; job.nq * job.nr];
+        self.mvm_scores_into(job, &mut out)?;
+        Ok(out)
+    }
 
     /// Whether this backend can execute the job at all (e.g. the PJRT
     /// backend needs a compiled artifact for the job's packed width). The
@@ -208,5 +294,31 @@ mod tests {
         let q = vec![0f32; 100];
         let g = vec![0f32; 100];
         MvmJob::new(&q, 1, &g, 1, 100, AdcConfig::ideal());
+    }
+
+    #[test]
+    fn segmented_job_counts_summed_rows() {
+        let q = vec![0f32; 3 * 256];
+        let panel = vec![0f32; 400 * 256];
+        let segs = vec![0..100, 150..150, 200..400];
+        let job = MvmJob::segmented(&q, 3, &panel, &segs, 256, AdcConfig::ideal());
+        assert_eq!(job.nr, 300);
+        // Identical bank-op charge to the gathered 300-row job: the tiling
+        // formula sees only the candidate count, never the layout.
+        assert_eq!(job.bank_ops(), 3 * 3 * 2);
+        let mut storage = [0..0];
+        assert_eq!(job.effective_segments(&mut storage), &segs[..]);
+
+        let dense = MvmJob::new(&q, 3, &panel[..300 * 256], 300, 256, AdcConfig::ideal());
+        let mut storage = [0..0];
+        assert_eq!(dense.effective_segments(&mut storage), &[0..300]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of panel")]
+    fn segmented_job_rejects_out_of_panel_range() {
+        let q = vec![0f32; 128];
+        let panel = vec![0f32; 4 * 128];
+        MvmJob::segmented(&q, 1, &panel, &[2..5], 128, AdcConfig::ideal());
     }
 }

@@ -4,19 +4,22 @@
 //! OS threads).
 //!
 //! Sharding is by **query rows of the output tile**: each worker computes
-//! a contiguous `qn x nr` stripe with the identical scalar kernel the
-//! reference backend runs, writing into a disjoint slice of the output
-//! buffer. Per-element arithmetic and ordering are unchanged, so results
+//! a contiguous `qn x nr` stripe with the identical blocked kernel the
+//! reference backend runs, writing directly into its disjoint slice of
+//! the caller's output buffer (no per-worker score allocation, no final
+//! copy). Per-element arithmetic and ordering are unchanged, so results
 //! are bit-identical to [`RefBackend`] for every thread count — the
-//! invariant `rust/tests/backend_equivalence.rs` locks in. Each worker
-//! also accumulates its shard's physical [`OpCounts`], merged after the
-//! scope joins (the counts are deterministic, so the merge must agree
-//! with [`MvmJob::bank_ops`] — debug-asserted).
+//! invariant `rust/tests/backend_equivalence.rs` locks in. Segmented jobs
+//! shard the same way: every worker scores the same borrowed panel
+//! ranges for its query stripe, so the zero-copy property survives the
+//! fan-out. Each worker also accumulates its shard's physical
+//! [`OpCounts`], merged after the scope joins (the counts are
+//! deterministic, so the merge must agree with [`MvmJob::bank_ops`] —
+//! debug-asserted).
 //!
 //! `std::thread::scope` keeps the implementation dependency-free; workers
 //! borrow the job buffers directly, no cloning.
 
-use crate::array::imc_mvm_ref;
 use crate::energy::OpCounts;
 use crate::util::error::Result;
 
@@ -64,16 +67,17 @@ impl MvmBackend for ParallelBackend {
         "parallel"
     }
 
-    fn mvm_scores(&self, job: &MvmJob) -> Result<Vec<f32>> {
+    fn mvm_scores_into(&self, job: &MvmJob, out: &mut [f32]) -> Result<()> {
         let (nq, nr, cp) = (job.nq, job.nr, job.cp);
+        assert_eq!(out.len(), nq * nr, "out shape");
         let threads = self.effective_threads().min(nq.max(1));
         if threads <= 1 || nq * nr * cp < MIN_PARALLEL_MACS {
-            return RefBackend.mvm_scores(job);
+            return RefBackend.mvm_scores_into(job, out);
         }
 
-        let mut out = vec![0f32; nq * nr];
         // Contiguous query-row chunks; the last chunk absorbs the ragged
-        // remainder. `chunks_mut` hands each worker a disjoint &mut stripe.
+        // remainder. `chunks_mut` hands each worker a disjoint &mut stripe
+        // of the caller's buffer.
         let chunk_rows = nq.div_ceil(threads);
         let mut merged = OpCounts::default();
         std::thread::scope(|s| {
@@ -83,12 +87,18 @@ impl MvmBackend for ParallelBackend {
                 let qn = out_chunk.len() / nr;
                 let q_rows = &job.queries[q0 * cp..(q0 + qn) * cp];
                 let refs = job.refs;
+                let segments = job.segments;
                 let adc = job.adc;
                 handles.push(s.spawn(move || {
-                    let scores = imc_mvm_ref(q_rows, refs, qn, nr, cp, adc);
-                    out_chunk.copy_from_slice(&scores);
+                    let shard_job = if segments.is_empty() {
+                        MvmJob::new(q_rows, qn, refs, nr, cp, adc)
+                    } else {
+                        MvmJob::segmented(q_rows, qn, refs, segments, cp, adc)
+                    };
+                    RefBackend
+                        .mvm_scores_into(&shard_job, out_chunk)
+                        .expect("reference kernel is infallible");
                     // Shard-local physical op count, merged after join.
-                    let shard_job = MvmJob::new(q_rows, qn, refs, nr, cp, adc);
                     let mut shard_ops = OpCounts::default();
                     shard_job.count_ops(&mut shard_ops);
                     shard_ops
@@ -103,7 +113,7 @@ impl MvmBackend for ParallelBackend {
             job.bank_ops(),
             "merged shard op counts must equal the whole-job count"
         );
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -130,6 +140,21 @@ mod tests {
         let want = RefBackend.mvm_scores(&job).unwrap();
         for threads in [1usize, 2, 3, 8, 64] {
             let got = ParallelBackend::new(threads).mvm_scores(&job).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn segmented_bit_identical_across_thread_counts() {
+        let (nq, panel_rows, cp) = (23, 600, 256);
+        let (q, panel) = job_buffers(14, nq, panel_rows, cp);
+        let segs = vec![0..100, 130..131, 200..200, 250..600];
+        let adc = AdcConfig::new(6, 512.0);
+        let job = MvmJob::segmented(&q, nq, &panel, &segs, cp, adc);
+        let want = RefBackend.mvm_scores(&job).unwrap();
+        for threads in [2usize, 3, 8] {
+            let mut got = vec![f32::NAN; nq * job.nr];
+            ParallelBackend::new(threads).mvm_scores_into(&job, &mut got).unwrap();
             assert_eq!(got, want, "threads={threads}");
         }
     }

@@ -79,12 +79,27 @@ impl MvmBackend for PjrtBackend {
         (job.nq * job.nr) as f64 / padded as f64
     }
 
-    fn mvm_scores(&self, job: &MvmJob) -> Result<Vec<f32>> {
+    fn mvm_scores_into(&self, job: &MvmJob, out: &mut [f32]) -> Result<()> {
+        // The artifact runs fixed dense `B x R` tiles, so segmented jobs
+        // gather their candidate panel into a contiguous block first —
+        // the host-side gather is the price of the fixed geometry and
+        // stays behind the same bit-identical contract (the dispatcher's
+        // utilization routing is unchanged either way).
+        if !job.segments.is_empty() {
+            let cp = job.cp;
+            let mut gathered = Vec::with_capacity(job.nr * cp);
+            for seg in job.segments {
+                gathered.extend_from_slice(&job.refs[seg.start * cp..seg.end * cp]);
+            }
+            let dense = MvmJob::new(job.queries, job.nq, &gathered, job.nr, cp, job.adc);
+            return self.mvm_scores_into(&dense, out);
+        }
+
         let mut rt = self.rt.lock().expect("pjrt runtime poisoned");
         let b = rt.manifest.batch;
         let r_block = rt.manifest.rows;
         let (nq, nr, cp) = (job.nq, job.nr, job.cp);
-        let mut out = vec![0f32; nq * nr];
+        assert_eq!(out.len(), nq * nr, "out shape");
 
         for rb in Batcher::new(nr, r_block).batches() {
             let refs_block = pad_matrix(
@@ -113,6 +128,6 @@ impl MvmBackend for PjrtBackend {
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 }

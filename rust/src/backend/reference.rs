@@ -1,14 +1,24 @@
 //! Scalar reference backend — the bit-exact oracle every other backend is
 //! checked against, and the fallback target of the dispatcher's routing
 //! heuristic.
+//!
+//! Jobs execute through the cache-blocked kernel
+//! (`array::imc_mvm_blocked_into`), which is bit-identical to the
+//! unblocked `array::imc_mvm_ref` by construction — blocking reorders
+//! which output is computed next, never the accumulation order inside one
+//! output — so "reference" still means "the transfer function", just with
+//! the 128-col reference tiles kept hot across a query block. Dense jobs
+//! run as a single full-panel segment; segmented jobs score their ranges
+//! in place with no gather.
 
-use crate::array::imc_mvm_ref;
+use crate::array::imc_mvm_blocked_into;
 use crate::util::error::Result;
 
 use super::{MvmBackend, MvmJob};
 
-/// Executes jobs with the single-threaded reference transfer function
-/// (`array::imc_mvm_ref` — the rust mirror of the L1 Pallas kernel).
+/// Executes jobs with the single-threaded blocked transfer function
+/// (bit-identical to `array::imc_mvm_ref` — the rust mirror of the L1
+/// Pallas kernel).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RefBackend;
 
@@ -17,22 +27,18 @@ impl MvmBackend for RefBackend {
         "ref"
     }
 
-    fn mvm_scores(&self, job: &MvmJob) -> Result<Vec<f32>> {
-        Ok(imc_mvm_ref(
-            job.queries,
-            job.refs,
-            job.nq,
-            job.nr,
-            job.cp,
-            job.adc,
-        ))
+    fn mvm_scores_into(&self, job: &MvmJob, out: &mut [f32]) -> Result<()> {
+        let mut storage = [0..0];
+        let segments = job.effective_segments(&mut storage);
+        imc_mvm_blocked_into(job.queries, job.refs, segments, job.nq, job.cp, job.adc, out);
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::array::AdcConfig;
+    use crate::array::{imc_mvm_ref, AdcConfig};
     use crate::util::Rng;
 
     #[test]
@@ -47,5 +53,27 @@ mod tests {
         let want = imc_mvm_ref(&q, &g, nq, nr, cp, adc);
         assert_eq!(got, want);
         assert_eq!(RefBackend.utilization(&job), 1.0);
+    }
+
+    #[test]
+    fn segmented_matches_gathered_transfer_function() {
+        let mut rng = Rng::new(8);
+        let (nq, panel_rows, cp) = (3, 200, 128);
+        let q: Vec<f32> = (0..nq * cp).map(|_| rng.range_i64(-3, 3) as f32).collect();
+        let panel: Vec<f32> =
+            (0..panel_rows * cp).map(|_| rng.range_i64(-3, 3) as f32).collect();
+        let segs = vec![0..10, 50..50, 120..200];
+        let adc = AdcConfig::new(6, 512.0);
+        let job = MvmJob::segmented(&q, nq, &panel, &segs, cp, adc);
+
+        let mut gathered = Vec::new();
+        for s in &segs {
+            gathered.extend_from_slice(&panel[s.start * cp..s.end * cp]);
+        }
+        let want = imc_mvm_ref(&q, &gathered, nq, job.nr, cp, adc);
+
+        let mut got = vec![f32::NAN; nq * job.nr];
+        RefBackend.mvm_scores_into(&job, &mut got).unwrap();
+        assert_eq!(got, want);
     }
 }

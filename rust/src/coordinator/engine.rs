@@ -30,6 +30,31 @@
 //! builds on the [`SearchEngine::encode_queries`] /
 //! [`SearchEngine::score_packed`] / [`GroupCharges`] primitives below.
 //!
+//! # Bucket-contiguous serving layout
+//!
+//! Serving is zero-copy on the reference side: after programming, the
+//! engine physically reorders its host copy of the stored conductances so
+//! that each precursor bucket's rows occupy one contiguous range
+//! (`BucketKey -> Range<physical row>`, [`SearchEngine::bucket_row_range`]).
+//! A candidate set from `candidate_keys_open` is then a handful of
+//! contiguous panels handed to the backend as a segmented
+//! [`MvmJob`](crate::backend::MvmJob) — no per-batch gather of reference
+//! rows, and the per-group score/query buffers are reused across batches
+//! through [`BackendDispatcher::execute_into`].
+//!
+//! The permutation happens strictly **after** write-verify programming, so
+//! the data-dependent per-row noise RNG stream is consumed in the same
+//! logical order (targets then decoys) as always — which is what keeps
+//! sharded and monolithic engines programming bit-identical conductances.
+//! A physical→logical row map ([`SearchEngine::logical_of_physical`])
+//! translates scored columns back to logical rows for target/decoy
+//! classification, peptide lookup and slot bookkeeping
+//! ([`SearchEngine::slots`] / [`SearchEngine::noisy_row`] stay in logical
+//! row order). The top-1 merge breaks score ties by **lowest logical
+//! row** explicitly, reproducing the gathered path's ascending-logical
+//! iteration bit-for-bit — and, downstream, the shard merge's
+//! lowest-global-row contract.
+//!
 //! # Query-HV cache
 //!
 //! Real serving traffic repeats spectra (re-queries, overlapping batches,
@@ -305,10 +330,17 @@ impl GroupCharges {
 
     /// Fold another shard's charges for the same query batch into this
     /// one: candidate counts sum per group (shards partition the library,
-    /// so per-shard candidate sets are disjoint).
+    /// so per-shard candidate sets are disjoint). Keys already present
+    /// merge in place; a key vector is cloned only the first time a group
+    /// appears, so each group key is allocated once per batch.
     pub fn merge(&mut self, other: &GroupCharges) {
         for (keys, &(nq, nc)) in &other.by_group {
-            self.record(keys.clone(), nq, nc);
+            if let Some(entry) = self.by_group.get_mut(keys) {
+                debug_assert_eq!(entry.0, nq, "group query count disagrees");
+                entry.1 += nc;
+            } else {
+                self.by_group.insert(keys.clone(), (nq, nc));
+            }
         }
     }
 
@@ -353,15 +385,25 @@ pub struct SearchEngine {
     adc: AdcConfig,
     cp: usize,
     n_targets: usize,
-    /// Peptide id per reference row (targets then decoys) — the only
-    /// per-spectrum metadata serving needs, so the engine does not retain
-    /// the peak data of a library it already programmed.
+    /// Peptide id per *logical* reference row (targets then decoys) — the
+    /// only per-spectrum metadata serving needs, so the engine does not
+    /// retain the peak data of a library it already programmed.
     ref_peptides: Vec<Option<u32>>,
-    /// Programmed noisy conductances, row-major `n_refs x cp`.
+    /// Programmed noisy conductances, row-major `n_refs x cp`, in
+    /// **bucket-contiguous physical row order**: each precursor bucket's
+    /// rows form one contiguous range (`bucket_ranges`), so candidate
+    /// panels are borrowed row ranges instead of per-batch gathered
+    /// copies. Permuted from logical order *after* programming — the
+    /// noise stream is consumed in logical row order, untouched.
     noisy_refs: Vec<f32>,
-    /// Physical (bank group, row) slot of each reference row.
+    /// Physical (bank group, row) slot of each *logical* reference row.
     ref_slots: Vec<Slot>,
-    ref_buckets: BTreeMap<BucketKey, Vec<usize>>,
+    /// Precursor bucket -> physical row range into `noisy_refs`.
+    bucket_ranges: BTreeMap<BucketKey, std::ops::Range<usize>>,
+    /// Physical row in `noisy_refs` -> logical reference row.
+    logical_of_phys: Vec<usize>,
+    /// Logical reference row -> physical row in `noisy_refs`.
+    phys_of_logical: Vec<usize>,
     program_ops: OpCounts,
     program_report: EnergyReport,
     program_wall: StageTimer,
@@ -371,6 +413,21 @@ pub struct SearchEngine {
     /// shard fan-out can share it across scoped threads.
     query_cache: Mutex<HashMap<Vec<u16>, Vec<f32>>>,
     cache_stats: Mutex<EncodeCacheStats>,
+    /// Reusable scoring buffers (segment list, gathered query rows, score
+    /// tile), kept across groups *and* batches so steady-state serving
+    /// performs no per-batch allocations on the score path. `try_lock`
+    /// semantics: a concurrent `search_batch` on the same engine simply
+    /// falls back to fresh buffers instead of blocking.
+    score_scratch: Mutex<ScoreScratch>,
+}
+
+/// Buffers [`SearchEngine::score_packed`] reuses across candidate groups
+/// and batches (see the `score_scratch` field).
+#[derive(Debug, Default)]
+struct ScoreScratch {
+    segments: Vec<std::ops::Range<usize>>,
+    q_rows: Vec<f32>,
+    scores: Vec<f32>,
 }
 
 /// Entry cap for the query-HV cache: past this many distinct spectra the
@@ -449,15 +506,42 @@ impl SearchEngine {
         let packed_refs = wall.time("encode refs", || {
             frontend.encode_pack(&all_refs, backend, &mut ops)
         })?;
-        let (noisy_refs, ref_slots) = wall.time("program refs", || {
+        let (noisy_logical, ref_slots) = wall.time("program refs", || {
             ctx.program_rows(&packed_refs, all_refs.len(), cp, &mut ops)
         })?;
 
         // Bucket the references for candidate selection, then keep only the
-        // peptide ids — the peak data is already encoded into `noisy_refs`.
+        // peptide ids — the peak data is already encoded into the noisy
+        // conductances.
         let ref_spectra: Vec<Spectrum> = all_refs.iter().map(|s| (*s).clone()).collect();
         let ref_buckets = bucket_by_precursor(&ref_spectra, cfg.bucket_width);
         let ref_peptides: Vec<Option<u32>> = ref_spectra.iter().map(|s| s.peptide_id).collect();
+
+        // Permute the host copy of the stored conductances into
+        // bucket-contiguous physical order (module docs). This happens
+        // strictly *after* programming: every logical row's conductances —
+        // and the data-dependent noise stream that produced them — are
+        // exactly what a layout-free engine would hold; only the host
+        // buffer order changes, in bucket-key order so adjacent candidate
+        // buckets coalesce into one contiguous panel.
+        let n_refs = all_refs.len();
+        let mut logical_of_phys = Vec::with_capacity(n_refs);
+        let mut bucket_ranges = BTreeMap::new();
+        for (key, rows) in &ref_buckets {
+            let start = logical_of_phys.len();
+            logical_of_phys.extend_from_slice(rows);
+            bucket_ranges.insert(*key, start..logical_of_phys.len());
+        }
+        debug_assert_eq!(logical_of_phys.len(), n_refs, "buckets partition the rows");
+        let mut phys_of_logical = vec![0usize; n_refs];
+        let mut noisy_refs = vec![0f32; noisy_logical.len()];
+        wall.time("layout refs", || {
+            for (p, &l) in logical_of_phys.iter().enumerate() {
+                phys_of_logical[l] = p;
+                noisy_refs[p * cp..(p + 1) * cp]
+                    .copy_from_slice(&noisy_logical[l * cp..(l + 1) * cp]);
+            }
+        });
 
         let model = EnergyLatencyModel::new(cfg.material, cfg.adc_bits, cfg.num_banks);
         let program_report = model.report(&ops);
@@ -472,12 +556,15 @@ impl SearchEngine {
             ref_peptides,
             noisy_refs,
             ref_slots,
-            ref_buckets,
+            bucket_ranges,
+            logical_of_phys,
+            phys_of_logical,
             program_ops: ops,
             program_report,
             program_wall: wall,
             query_cache: Mutex::new(HashMap::new()),
             cache_stats: Mutex::new(EncodeCacheStats::default()),
+            score_scratch: Mutex::new(ScoreScratch::default()),
         })
     }
 
@@ -539,9 +626,29 @@ impl SearchEngine {
         self.ctx.allocator.banks_of(slot)
     }
 
-    /// Stored noisy conductances of reference row `ri` (`cp` wide).
+    /// Stored noisy conductances of *logical* reference row `ri` (`cp`
+    /// wide) — indexed through the physical layout map, so callers (ISA
+    /// mirroring, tests) keep the targets-then-decoys row order no matter
+    /// how the host buffer is physically arranged.
     pub fn noisy_row(&self, ri: usize) -> &[f32] {
-        &self.noisy_refs[ri * self.cp..(ri + 1) * self.cp]
+        let p = self.phys_of_logical[ri];
+        &self.noisy_refs[p * self.cp..(p + 1) * self.cp]
+    }
+
+    /// Physical row range the given precursor bucket occupies in the
+    /// bucket-contiguous reference layout (`None` when no reference falls
+    /// in the bucket). Ranges of adjacent `BucketKey`s are physically
+    /// adjacent, which is what lets open-search candidate sets collapse
+    /// into a few contiguous panels.
+    pub fn bucket_row_range(&self, key: &BucketKey) -> Option<std::ops::Range<usize>> {
+        self.bucket_ranges.get(key).cloned()
+    }
+
+    /// Physical-to-logical row map of the bucket-contiguous layout:
+    /// `logical_of_physical()[p]` is the logical (targets-then-decoys)
+    /// reference row stored at physical row `p` of the serving panel.
+    pub fn logical_of_physical(&self) -> &[usize] {
+        &self.logical_of_phys
     }
 
     /// Encode one query batch into packed HVs through the query-HV cache:
@@ -592,6 +699,7 @@ impl SearchEngine {
             }
         }
 
+        let n_misses = miss_levels.len();
         let miss_packed = if miss_levels.is_empty() {
             Vec::new()
         } else {
@@ -601,16 +709,19 @@ impl SearchEngine {
             packed[qi * cp..(qi + 1) * cp].copy_from_slice(&miss_packed[mi * cp..(mi + 1) * cp]);
         }
         {
+            // Insert by *moving* the already-owned miss level vectors:
+            // exactly one allocation per miss (the cached row copy), not
+            // two (the key was cloned here before).
             let mut cache = self.query_cache.lock().expect("query cache poisoned");
-            for (mi, lv) in miss_levels.iter().enumerate() {
+            for (mi, lv) in miss_levels.into_iter().enumerate() {
                 if cache.len() >= QUERY_CACHE_MAX_ENTRIES {
                     break;
                 }
-                cache.insert(lv.clone(), miss_packed[mi * cp..(mi + 1) * cp].to_vec());
+                cache.insert(lv, miss_packed[mi * cp..(mi + 1) * cp].to_vec());
             }
         }
-        batch_cache.misses = miss_levels.len() as u64;
-        batch_cache.hits = (levels.len() - miss_levels.len()) as u64;
+        batch_cache.misses = n_misses as u64;
+        batch_cache.hits = (levels.len() - n_misses) as u64;
 
         *self.cache_stats.lock().expect("cache stats poisoned") += batch_cache;
         Ok((packed, batch_cache))
@@ -625,6 +736,16 @@ impl SearchEngine {
     /// peptide)` triples in batch order; queries with no local candidates
     /// stay at `(NEG_INFINITY, NEG_INFINITY, None)`, which the shard
     /// merge's strict `>` ignores.
+    ///
+    /// This is the zero-copy hot loop: candidate sets are contiguous
+    /// physical row ranges of the bucket-contiguous layout (adjacent
+    /// buckets coalesce into one segment), handed to the backend as
+    /// segmented jobs against the borrowed `noisy_refs` panel, with the
+    /// segment/query/score buffers reused across groups and batches. The
+    /// scores — and, via the explicit lowest-logical-row tie rule, the
+    /// per-query bests — are bit-identical to gathering every candidate
+    /// row and scoring through `array::imc_mvm_ref`
+    /// (`rust/tests/segmented_equivalence.rs`).
     pub fn score_packed(
         &self,
         queries: &[&Spectrum],
@@ -639,7 +760,16 @@ impl SearchEngine {
         // Scores and physical ops are charged by the caller from the
         // merged GroupCharges; the dispatcher's own charge goes to a
         // scratch accumulator.
-        let mut scratch = OpCounts::default();
+        let mut scratch_ops = OpCounts::default();
+
+        // Reusable buffers, carried across batches. A concurrent
+        // `search_batch` on the same engine (the engine is Sync) just
+        // takes fresh buffers instead of waiting.
+        let mut bufs = self
+            .score_scratch
+            .try_lock()
+            .map(|mut g| std::mem::take(&mut *g))
+            .unwrap_or_default();
 
         // Group queries by identical candidate-key sets so one IMC batch
         // shares one reference row block.
@@ -649,57 +779,88 @@ impl SearchEngine {
             groups.entry(keys).or_default().push(qi);
         }
 
-        // Per-query best (target score, decoy score) + matched peptide.
+        // Per-query best (target score, decoy score) + matched peptide,
+        // plus the logical row of the current best target for the
+        // lowest-logical-row tie rule (physical iteration order is bucket
+        // order, so ties must be broken explicitly to reproduce the
+        // gathered path's ascending-logical scan).
         let mut best: Vec<(f32, f32, Option<u32>)> =
             vec![(f32::NEG_INFINITY, f32::NEG_INFINITY, None); queries.len()];
+        let mut best_row: Vec<usize> = vec![usize::MAX; queries.len()];
 
-        for (keys, q_idxs) in &groups {
-            let mut cand: Vec<usize> = keys
-                .iter()
-                .filter_map(|k| self.ref_buckets.get(k))
-                .flatten()
-                .copied()
-                .collect();
-            cand.sort_unstable();
-            cand.dedup();
-            charges.record(keys.clone(), q_idxs.len(), cand.len());
-            if cand.is_empty() {
+        for (keys, q_idxs) in groups {
+            // Candidate panels straight out of the bucket-contiguous
+            // layout. `keys` is sorted and `bucket_ranges` assigns
+            // physical rows in key order, so ranges arrive in ascending
+            // physical order and adjacent buckets merge into one segment.
+            bufs.segments.clear();
+            let mut n_cand = 0usize;
+            for k in &keys {
+                if let Some(r) = self.bucket_ranges.get(k) {
+                    n_cand += r.len();
+                    match bufs.segments.last_mut() {
+                        Some(last) if last.end == r.start => last.end = r.end,
+                        _ => bufs.segments.push(r.clone()),
+                    }
+                }
+            }
+            let nq = q_idxs.len();
+            charges.record(keys, nq, n_cand);
+            if n_cand == 0 {
                 continue;
             }
 
-            // Gather candidate rows (targets + decoys interleaved by index).
-            let mut cand_rows = Vec::with_capacity(cand.len() * cp);
-            for &ri in &cand {
-                cand_rows.extend_from_slice(&self.noisy_refs[ri * cp..(ri + 1) * cp]);
+            // Queries within a group are scattered in the batch; gather
+            // just those rows into the reused stripe (references are
+            // never gathered).
+            bufs.q_rows.clear();
+            bufs.q_rows.reserve(nq * cp);
+            for &qi in &q_idxs {
+                bufs.q_rows
+                    .extend_from_slice(&packed_queries[qi * cp..(qi + 1) * cp]);
             }
-            let mut q_rows = Vec::with_capacity(q_idxs.len() * cp);
-            for &qi in q_idxs {
-                q_rows.extend_from_slice(&packed_queries[qi * cp..(qi + 1) * cp]);
-            }
+            bufs.scores.clear();
+            bufs.scores.resize(nq * n_cand, 0.0);
 
-            let scores = wall.time("similarity (IMC)", || {
-                backend.execute(
-                    &MvmJob::new(&q_rows, q_idxs.len(), &cand_rows, cand.len(), cp, self.adc),
-                    &mut scratch,
-                )
+            let job = MvmJob::segmented(
+                &bufs.q_rows,
+                nq,
+                &self.noisy_refs,
+                &bufs.segments,
+                cp,
+                self.adc,
+            );
+            debug_assert_eq!(job.nr, n_cand);
+            wall.time("similarity (IMC)", || {
+                backend.execute_into(&job, &mut bufs.scores, &mut scratch_ops)
             })?;
 
             wall.time("top-1 + merge (ASIC)", || {
                 for (bi, &qi) in q_idxs.iter().enumerate() {
-                    let row = &scores[bi * cand.len()..(bi + 1) * cand.len()];
-                    for (ci, &ri) in cand.iter().enumerate() {
-                        let s = row[ci];
-                        if ri < self.n_targets {
-                            if s > best[qi].0 {
-                                best[qi].0 = s;
-                                best[qi].2 = self.ref_peptides[ri];
+                    let row = &bufs.scores[bi * n_cand..(bi + 1) * n_cand];
+                    let mut ci = 0usize;
+                    for seg in &bufs.segments {
+                        for p in seg.clone() {
+                            let s = row[ci];
+                            ci += 1;
+                            let ri = self.logical_of_phys[p];
+                            if ri < self.n_targets {
+                                if s > best[qi].0 || (s == best[qi].0 && ri < best_row[qi]) {
+                                    best[qi].0 = s;
+                                    best[qi].2 = self.ref_peptides[ri];
+                                    best_row[qi] = ri;
+                                }
+                            } else if s > best[qi].1 {
+                                best[qi].1 = s;
                             }
-                        } else if s > best[qi].1 {
-                            best[qi].1 = s;
                         }
                     }
                 }
             });
+        }
+
+        if let Ok(mut g) = self.score_scratch.try_lock() {
+            *g = bufs;
         }
 
         Ok(ShardScores {
@@ -1104,6 +1265,55 @@ mod tests {
         engine.frontend.count_encode_ops(queries.len(), &mut ops);
         scored.charges.charge(engine.packed_width(), &mut ops);
         assert_eq!(ops, batch.ops);
+    }
+
+    #[test]
+    fn bucket_contiguous_layout_invariants() {
+        let ds = SearchDataset::generate("t", 49, 40, 10, 0.8, 0.2, 0, 0);
+        let be = BackendDispatcher::reference();
+        let engine = SearchEngine::program(small_cfg(), &ds, &be).unwrap();
+        let n = engine.n_refs();
+
+        // The physical->logical map is a permutation of every row.
+        let mut seen = vec![false; n];
+        for &l in engine.logical_of_physical() {
+            assert!(!seen[l], "logical row {l} stored twice");
+            seen[l] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "every logical row is stored");
+
+        // Bucket ranges tile the physical rows contiguously in key order
+        // (adjacent buckets are physically adjacent), and each bucket's
+        // physical rows hold ascending logical rows — the property the
+        // merge tie rule and segment coalescing rely on.
+        let mut cursor = 0usize;
+        let all_refs: Vec<Spectrum> = ds
+            .library
+            .iter()
+            .chain(ds.decoys.iter())
+            .cloned()
+            .collect();
+        let buckets = bucket_by_precursor(&all_refs, engine.cfg.bucket_width);
+        for (key, rows) in &buckets {
+            let range = engine.bucket_row_range(key).expect("bucket indexed");
+            assert_eq!(range.start, cursor, "ranges contiguous in key order");
+            assert_eq!(range.len(), rows.len());
+            let stored: Vec<usize> = range
+                .clone()
+                .map(|p| engine.logical_of_physical()[p])
+                .collect();
+            assert_eq!(&stored, rows, "bucket rows ascend logically");
+            cursor = range.end;
+        }
+        assert_eq!(cursor, n, "ranges exhaustive");
+        assert!(engine.bucket_row_range(&(200, -1)).is_none());
+
+        // noisy_row stays logical: row ri's conductances sit at the
+        // mapped physical offset of the serving panel.
+        for ri in [0usize, 1, n / 2, n - 1] {
+            let row = engine.noisy_row(ri);
+            assert_eq!(row.len(), engine.packed_width());
+        }
     }
 
     #[test]

@@ -15,7 +15,13 @@
 //!   against the stored conductances, repeated query spectra served from
 //!   a level-vector-keyed query-HV cache) and the shared
 //!   [`ProgramContext`] (programmer + noise stream + capacity allocator)
-//!   both pipelines program through.
+//!   both pipelines program through. Serving is zero-copy: the stored
+//!   conductances are laid out bucket-contiguously after programming, so
+//!   candidate sets are borrowed row segments (segmented
+//!   `backend::MvmJob`s through `execute_into` with reused buffers), not
+//!   per-batch gathered copies — bit-identical to the gathered path
+//!   because the blocked kernel preserves each output's accumulation
+//!   order and the merge tie-breaks on logical rows (engine module docs).
 //! * [`sharded`] — the shard layer: [`ShardPlan`] partitions a library
 //!   that overflows one engine's banks into contiguous per-engine row
 //!   ranges, and [`ShardedSearchEngine`] programs one engine per range

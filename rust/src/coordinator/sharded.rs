@@ -29,7 +29,11 @@
 //! * **Top-1 merge**: shards hold contiguous ascending row ranges and the
 //!   cross-shard merge folds them in shard order with the same strict-`>`
 //!   rule the in-engine merge uses, so ties keep resolving to the lowest
-//!   global row index.
+//!   global row index. Each shard engine lays *its* rows out
+//!   bucket-contiguously for zero-copy segmented scoring (see the
+//!   [`super::engine`] module docs), but its in-engine merge tie-breaks
+//!   on **logical** rows — so the physical layout never leaks into
+//!   results and this merge contract is untouched by the layout.
 //! * **Decoys and FDR**: the contiguous split may land inside the decoy
 //!   block; each shard gets its own targets/decoys subranges and
 //!   classifies locally, and the FDR filter runs once over the merged

@@ -102,6 +102,75 @@ impl StageTimer {
     }
 }
 
+/// One field value of a machine-readable bench record (see
+/// [`render_json_records`]). Kept deliberately tiny — flat records of
+/// numbers/strings/bools are all the perf-trajectory files need, and the
+/// offline build has no serde.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonField {
+    U(u64),
+    F(f64),
+    S(String),
+    B(bool),
+}
+
+impl JsonField {
+    fn render(&self) -> String {
+        match self {
+            JsonField::U(v) => v.to_string(),
+            // `{:?}` on f64 round-trips (shortest representation that
+            // parses back exactly); JSON has no NaN/Inf, so map those to
+            // null rather than emit an unparsable token.
+            JsonField::F(v) if v.is_finite() => format!("{v:?}"),
+            JsonField::F(_) => "null".to_string(),
+            JsonField::S(v) => {
+                let mut out = String::with_capacity(v.len() + 2);
+                out.push('"');
+                for ch in v.chars() {
+                    match ch {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+                out
+            }
+            JsonField::B(v) => v.to_string(),
+        }
+    }
+}
+
+/// Render flat `(key, value)` records as a pretty-printed JSON array of
+/// objects — the machine-readable side channel benches write next to
+/// their human text tables (e.g. `BENCH_serving.json`, the perf
+/// trajectory seed). Keys are emitted in the given order.
+pub fn render_json_records(records: &[Vec<(&str, JsonField)>]) -> String {
+    let mut out = String::from("[\n");
+    for (i, rec) in records.iter().enumerate() {
+        out.push_str("  {");
+        for (j, (k, v)) in rec.iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&JsonField::S(k.to_string()).render());
+            out.push_str(": ");
+            out.push_str(&v.render());
+        }
+        out.push('}');
+        if i + 1 < records.len() {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push(']');
+    out
+}
+
 /// Render rows as a fixed-width text table (benches print these).
 pub fn render_table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
     let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
@@ -183,6 +252,32 @@ mod tests {
         let v = t.time("work", || 42);
         assert_eq!(v, 42);
         assert!(t.get("work") >= 0.0);
+    }
+
+    #[test]
+    fn json_records_render_and_escape() {
+        let records = vec![
+            vec![
+                ("kernel", JsonField::S("seg\"mented\n".into())),
+                ("threads", JsonField::U(4)),
+                ("qps", JsonField::F(1234.5)),
+                ("ok", JsonField::B(true)),
+            ],
+            vec![("qps", JsonField::F(f64::NAN))],
+        ];
+        let s = render_json_records(&records);
+        assert!(s.starts_with("[\n"));
+        assert!(s.ends_with(']'));
+        assert!(s.contains("\"kernel\": \"seg\\\"mented\\n\""), "{s}");
+        assert!(s.contains("\"threads\": 4"));
+        assert!(s.contains("\"qps\": 1234.5"));
+        assert!(s.contains("\"ok\": true"));
+        // Non-finite floats become null, never an unparsable token.
+        assert!(s.contains("\"qps\": null"));
+        // Exactly one comma between the two records.
+        assert_eq!(s.matches("},").count(), 1);
+
+        assert_eq!(render_json_records(&[]), "[\n]");
     }
 
     #[test]

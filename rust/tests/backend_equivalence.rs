@@ -141,6 +141,44 @@ fn search_pipeline_identical_across_backends() {
 }
 
 #[test]
+fn segmented_jobs_and_buffer_reuse_bit_identical() {
+    // A segmented job over a borrowed panel must equal the gathered dense
+    // job on every backend, with `mvm_scores_into` fully overwriting a
+    // reused output buffer (no stale values survive between batches).
+    let (nq, panel_rows, cp) = (37, 400, 256);
+    let mut rng = Rng::new(0x5e9);
+    let q = rand_packed(&mut rng, nq * cp, 3);
+    let panel = rand_packed(&mut rng, panel_rows * cp, 3);
+    let segs = vec![0..50, 120..121, 200..200, 250..400];
+    let adc = AdcConfig::new(6, 512.0);
+    let seg_job = MvmJob::segmented(&q, nq, &panel, &segs, cp, adc);
+
+    let mut gathered = Vec::new();
+    for s in &segs {
+        gathered.extend_from_slice(&panel[s.start * cp..s.end * cp]);
+    }
+    let want = RefBackend
+        .mvm_scores(&MvmJob::new(&q, nq, &gathered, seg_job.nr, cp, adc))
+        .unwrap();
+
+    let mut out = vec![f32::NAN; nq * seg_job.nr];
+    for threads in [1usize, 2, 8] {
+        out.fill(f32::NAN);
+        ParallelBackend::new(threads)
+            .mvm_scores_into(&seg_job, &mut out)
+            .unwrap();
+        assert_eq!(out, want, "threads={threads}");
+    }
+    let mut ops = OpCounts::default();
+    out.fill(f32::NAN);
+    BackendDispatcher::reference()
+        .execute_into(&seg_job, &mut out, &mut ops)
+        .unwrap();
+    assert_eq!(out, want);
+    assert_eq!(ops.mvm_ops, seg_job.bank_ops());
+}
+
+#[test]
 fn empty_and_degenerate_jobs() {
     let adc = AdcConfig::ideal();
     // No queries.

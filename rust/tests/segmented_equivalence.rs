@@ -1,0 +1,200 @@
+//! Zero-copy serving equivalence: segmented jobs over a borrowed
+//! bucket-contiguous panel — executed through the cache-blocked kernel by
+//! every backend — must be **bit-identical** to gathering the same
+//! candidate rows into a dense matrix and scoring through the unblocked
+//! reference transfer function, for scores AND physical op counts. Three
+//! levels:
+//!
+//! 1. a randomized property test over ragged segment lists (empty
+//!    segments, single-row buckets, ranges straddling the 128-row tile
+//!    boundary, overlapping ranges) across backends and thread counts;
+//! 2. the engine's `search_batch` against an independent gathered oracle
+//!    reconstructed from the public layout API (`bucket_row_range`,
+//!    `logical_of_physical`, `noisy_row`);
+//! 3. sharded-vs-monolithic serving on the segmented path (the layout is
+//!    per-shard; the merge contract must not see it).
+
+use std::ops::Range;
+
+use specpcm::array::{imc_mvm_ref, AdcConfig};
+use specpcm::backend::{BackendDispatcher, MvmBackend, MvmJob, ParallelBackend, RefBackend};
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::{SearchEngine, ShardedSearchEngine};
+use specpcm::energy::OpCounts;
+use specpcm::ms::bucket::candidate_keys_open;
+use specpcm::ms::synth::PTM_SHIFTS;
+use specpcm::ms::{SearchDataset, Spectrum};
+use specpcm::util::Rng;
+
+fn rand_packed(rng: &mut Rng, len: usize, n: i64) -> Vec<f32> {
+    (0..len).map(|_| rng.range_i64(-n, n) as f32).collect()
+}
+
+fn gather_rows(panel: &[f32], segs: &[Range<usize>], cp: usize) -> Vec<f32> {
+    let mut g = Vec::new();
+    for s in segs {
+        g.extend_from_slice(&panel[s.start * cp..s.end * cp]);
+    }
+    g
+}
+
+#[test]
+fn ragged_segments_bit_identical_to_gathered_path() {
+    let mut rng = Rng::new(0x5e6);
+    for trial in 0..25u64 {
+        let panel_rows = 1 + rng.below(300);
+        let cp = [128usize, 256][rng.below(2)];
+        let nq = rng.below(6); // includes nq = 0
+        let panel = rand_packed(&mut rng, panel_rows * cp, 3);
+        let queries = rand_packed(&mut rng, nq * cp, 3);
+        let adc = [AdcConfig::new(6, 512.0), AdcConfig::new(3, 128.0)][rng.below(2)];
+
+        // Random ragged ranges (may overlap — stricter than the engine
+        // ever produces), plus deliberate edge shapes: an empty segment,
+        // a single-row bucket, and a range straddling the 128-row tile
+        // boundary when the panel is big enough.
+        let mut segs: Vec<Range<usize>> = Vec::new();
+        for _ in 0..rng.below(6) {
+            let a = rng.below(panel_rows + 1);
+            let b = rng.below(panel_rows + 1);
+            segs.push(a.min(b)..a.max(b));
+        }
+        let single = rng.below(panel_rows);
+        segs.push(single..single + 1);
+        segs.push(0..0);
+        if panel_rows > 130 {
+            segs.push(120..135);
+        }
+
+        let gathered = gather_rows(&panel, &segs, cp);
+        let n_cand: usize = segs.iter().map(|s| s.len()).sum();
+        let want = imc_mvm_ref(&queries, &gathered, nq, n_cand, cp, adc);
+
+        let seg_job = MvmJob::segmented(&queries, nq, &panel, &segs, cp, adc);
+        assert_eq!(seg_job.nr, n_cand, "trial {trial}");
+        let dense_job = MvmJob::new(&queries, nq, &gathered, n_cand, cp, adc);
+        // Identical physical work no matter the layout.
+        assert_eq!(seg_job.bank_ops(), dense_job.bank_ops(), "trial {trial}");
+
+        // Reference backend, segmented and dense.
+        assert_eq!(RefBackend.mvm_scores(&seg_job).unwrap(), want, "trial {trial} ref/seg");
+        assert_eq!(RefBackend.mvm_scores(&dense_job).unwrap(), want, "trial {trial} ref/dense");
+
+        // Parallel backend across thread counts, writing into a reused
+        // poisoned buffer.
+        let mut out = vec![f32::NAN; nq * n_cand];
+        for threads in [1usize, 2, 8] {
+            out.fill(f32::NAN);
+            ParallelBackend::new(threads)
+                .mvm_scores_into(&seg_job, &mut out)
+                .unwrap();
+            assert_eq!(out, want, "trial {trial} parallel x{threads}");
+        }
+
+        // Dispatcher: identical scores and identical op charge for the
+        // segmented and gathered forms of the same candidate set.
+        for disp in [BackendDispatcher::reference(), BackendDispatcher::parallel(2)] {
+            let mut ops_seg = OpCounts::default();
+            let mut ops_dense = OpCounts::default();
+            let got = disp.execute(&seg_job, &mut ops_seg).unwrap();
+            assert_eq!(got, want, "trial {trial} dispatcher {}", disp.primary_name());
+            disp.execute(&dense_job, &mut ops_dense).unwrap();
+            assert_eq!(ops_seg, ops_dense, "trial {trial}");
+        }
+    }
+}
+
+fn search_cfg() -> SpecPcmConfig {
+    SpecPcmConfig {
+        hd_dim: 2048,
+        bucket_width: 5.0,
+        num_banks: 64,
+        ..SpecPcmConfig::paper_search()
+    }
+}
+
+/// Reconstruct the pre-layout gathered scoring path from the engine's
+/// public API and assert `search_batch` (the segmented path) reproduces
+/// it bit-for-bit: per-query candidate rows in ascending *logical* order,
+/// gathered into a dense matrix, scored through the unblocked reference
+/// transfer function, merged with the first-strictly-greater scan.
+#[test]
+fn engine_search_batch_matches_gathered_oracle() {
+    let ds = SearchDataset::generate("t", 51, 60, 30, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::reference();
+    let cfg = search_cfg();
+    let engine = SearchEngine::program(cfg.clone(), &ds, &be).unwrap();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+    let batch = engine.search_batch(&queries, &be).unwrap();
+
+    let cp = engine.packed_width();
+    let adc = AdcConfig::default_for_packing(cfg.adc_bits, cfg.packing());
+    let (packed, _) = engine.encode_queries(&queries, &be).unwrap();
+
+    let mut oracle_pairs = Vec::with_capacity(queries.len());
+    let mut oracle_matched = Vec::with_capacity(queries.len());
+    for (qi, q) in queries.iter().enumerate() {
+        let keys = candidate_keys_open(q.charge, q.precursor_mz, cfg.bucket_width, &PTM_SHIFTS);
+        let mut cand: Vec<usize> = keys
+            .iter()
+            .filter_map(|k| engine.bucket_row_range(k))
+            .flat_map(|r| r.map(|p| engine.logical_of_physical()[p]))
+            .collect();
+        cand.sort_unstable();
+        cand.dedup();
+
+        let mut best_t = f32::NEG_INFINITY;
+        let mut best_d = f32::NEG_INFINITY;
+        let mut matched: Option<u32> = None;
+        if !cand.is_empty() {
+            let mut rows = Vec::with_capacity(cand.len() * cp);
+            for &ri in &cand {
+                rows.extend_from_slice(engine.noisy_row(ri));
+            }
+            let scores = imc_mvm_ref(&packed[qi * cp..(qi + 1) * cp], &rows, 1, cand.len(), cp, adc);
+            for (ci, &ri) in cand.iter().enumerate() {
+                let s = scores[ci];
+                if ri < engine.n_targets() {
+                    if s > best_t {
+                        best_t = s;
+                        matched = ds.library[ri].peptide_id;
+                    }
+                } else if s > best_d {
+                    best_d = s;
+                }
+            }
+        }
+        oracle_pairs.push((best_t, best_d));
+        oracle_matched.push(matched);
+    }
+
+    assert_eq!(batch.pairs, oracle_pairs, "segmented scores diverge from gathered oracle");
+    assert_eq!(batch.matched, oracle_matched, "matched peptides diverge");
+}
+
+#[test]
+fn sharded_segmented_serving_matches_monolithic() {
+    // 3 shards of 12 banks vs one 36-bank monolith; each shard lays its
+    // own rows out bucket-contiguously, yet results and total op counts
+    // must match the monolithic engine exactly.
+    let ds = SearchDataset::generate("t", 53, 90, 40, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::reference();
+    let mono_cfg = SpecPcmConfig {
+        num_banks: 36,
+        ..search_cfg()
+    };
+    let shard_cfg = SpecPcmConfig {
+        num_banks: 12,
+        ..search_cfg()
+    };
+    let mono = SearchEngine::program(mono_cfg, &ds, &be).unwrap();
+    let sharded = ShardedSearchEngine::program(shard_cfg, &ds, &be, 3).unwrap();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+    let mono_batch = mono.search_batch(&queries, &be).unwrap();
+    let shard_batch = sharded.search_batch(&queries, &be).unwrap();
+    assert_eq!(shard_batch.pairs, mono_batch.pairs);
+    assert_eq!(shard_batch.matched, mono_batch.matched);
+    assert_eq!(shard_batch.ops, mono_batch.ops);
+}
