@@ -20,10 +20,23 @@ Numeric contract (shared bit-exactly with the rust reference
     adc(s)   = clip(round_away(s / lsb), -(qmax+1), qmax) * lsb
     score    = sum over col-tiles of adc(part)
 
-where round_away is round-half-away-from-zero (rust ``f32::round``).
+where round_away is round-half-away-from-zero (rust ``f32``'s ``round``).
 Conductance non-idealities (programming noise after write-verify, drift)
 are applied by the device model *when the refs are programmed*, i.e. the
 ``g`` argument already carries them; see rust/src/device/.
+
+In-tile accumulation order: the rust *host* kernels canonicalized on a
+lane-ordered in-tile sum in PR 6 (eight ``k % 8`` partial-sum lanes
+reduced by a fixed binary tree; see ``rust/src/array/transfer.rs``) so
+the blocked kernel autovectorizes. This kernel and the jnp oracle keep
+whatever association order the MXU/XLA emit. Both stay inside the shared
+numeric contract because equality is only asserted on the integer
+envelope: packed queries and programmed conductance levels are integral,
+per-tile partial sums are integer-valued and exactly representable in
+f32, so *every* association order — ascending-k, lane tree, MXU
+systolic — produces identical bits. Reassociation only becomes
+observable on non-integer data (e.g. noisy analog conductances), which
+the rust side covers with its own lane-order regression tests.
 """
 
 from functools import partial

@@ -4,6 +4,15 @@ These reference implementations use no Pallas, no tiling and no fused
 quantization tricks — just the written-out math from DESIGN.md §2/§3. The
 pytest suite asserts the production kernels match them exactly (the whole
 pipeline is integer-valued until the ADC divide, so exact equality holds).
+
+Note on accumulation order: ``imc_mvm`` here reduces each 128-column tile
+with whatever order ``@`` lowers to; the rust host kernels pin a specific
+lane-ordered in-tile sum (``rust/src/array/transfer.rs``, PR 6). On the
+integer-valued data this suite tests, partial sums are exact in f32 and
+all association orders agree bitwise, so this oracle remains valid for
+the Pallas kernel without modeling the lane tree (the float32 model of
+the lane order itself lives in
+``python/tests/test_blocked_kernel_model.py``).
 """
 
 import jax.numpy as jnp

@@ -1,12 +1,27 @@
-"""Float32 model of the rust cache-blocked segmented MVM kernel.
+"""Float32 model of the rust lane-ordered MVM kernels (PR 6).
 
-`rust/src/array/transfer.rs::imc_mvm_blocked_into` claims bit-identity
-with the naive reference transfer function (`imc_mvm_ref`) because the
-blocking only reorders *which output* is computed next, never the
-accumulation order inside one output. This test reproduces both loop
-structures in numpy float32 — including the DAC round/clip, the per-tile
-ADC quantization, and the f32 partial-sum ordering — and asserts exact
-(bitwise) equality over randomized ragged-segment workloads.
+`rust/src/array/transfer.rs` defines the canonical in-tile accumulation
+order: eight `k % 8` partial-sum lanes (each accumulated in ascending
+`k`) reduced by the fixed binary tree
+`((l0 + l4) + (l2 + l6)) + ((l1 + l5) + (l3 + l7))`. The scalar oracle
+(`imc_mvm_ref`) codes the lanes lane-major; the fast blocked kernel
+(`imc_mvm_blocked_into` via `lane_tile_dot`) codes them chunk-major so
+the autovectorizer emits SIMD. This test reproduces both codings in
+numpy float32 — including the DAC round/clip, the per-tile ADC
+quantization, and the exact f32 partial-sum ordering — and asserts:
+
+* the two codings are bit-identical (each lane performs the identical
+  f32 add sequence either way);
+* the blocked/segmented loop nest equals the gathered reference nest
+  bitwise over randomized ragged-segment workloads with non-integer
+  conductances (integer data is exact under *any* association order and
+  would mask a reassociation bug);
+* hoisting the DAC out of the kernel (the engine's `ScoreScratch`
+  optimization) is score-neutral, because the DAC is idempotent on its
+  own output;
+* the pinned f32 bit patterns asserted by the rust regression test
+  (`lane_order_pinned_bits`) are exactly what this model computes for
+  the same hand-built tile — the constants' provenance.
 
 numpy-only (no jax): runs wherever the other kernel tests run.
 """
@@ -14,6 +29,7 @@ numpy-only (no jax): runs wherever the other kernel tests run.
 import numpy as np
 
 ARRAY_DIM = 128
+MVM_LANES = 8  # must match transfer.rs::MVM_LANES
 QUERY_BLOCK = 16  # must match transfer.rs::QUERY_BLOCK
 
 
@@ -30,8 +46,35 @@ def adc_quantize(s, lsb, qmax):
     return (v * np.float32(lsb)).astype(np.float32)
 
 
+def lane_tree_reduce(lanes):
+    a = np.float32(np.float32(lanes[0] + lanes[4]) + np.float32(lanes[2] + lanes[6]))
+    b = np.float32(np.float32(lanes[1] + lanes[5]) + np.float32(lanes[3] + lanes[7]))
+    return np.float32(a + b)
+
+
+def lane_tile_dot_lane_major(q, g):
+    """Oracle coding (imc_mvm_ref): one scalar loop per lane."""
+    lanes = np.zeros(MVM_LANES, dtype=np.float32)
+    for l in range(MVM_LANES):
+        for k in range(l, ARRAY_DIM, MVM_LANES):
+            lanes[l] = np.float32(lanes[l] + np.float32(q[k] * g[k]))
+    return lane_tree_reduce(lanes)
+
+
+def lane_tile_dot_chunk_major(q, g):
+    """Fast-kernel coding (lane_tile_dot): walk 16 chunks of 8, all 8
+    lane accumulators in flight — the autovectorizable shape."""
+    lanes = np.zeros(MVM_LANES, dtype=np.float32)
+    for i in range(ARRAY_DIM // MVM_LANES):
+        for j in range(MVM_LANES):
+            k = i * MVM_LANES + j
+            lanes[j] = np.float32(lanes[j] + np.float32(q[k] * g[k]))
+    return lane_tree_reduce(lanes)
+
+
 def imc_mvm_ref(queries, refs, b, r, c, lsb, qmax):
-    """The naive reference loop nest: per (query, row), tiles in order."""
+    """The reference loop nest: per (query, row), tiles in order, each
+    tile reduced in the canonical lane order (lane-major coding)."""
     dacq = dac_quantize(queries)
     tiles = c // ARRAY_DIM
     out = np.zeros(b * r, dtype=np.float32)
@@ -42,17 +85,15 @@ def imc_mvm_ref(queries, refs, b, r, c, lsb, qmax):
             acc = np.float32(0)
             for t in range(tiles):
                 lo = t * ARRAY_DIM
-                part = np.float32(0)
-                for k in range(lo, lo + ARRAY_DIM):
-                    part = np.float32(part + np.float32(qrow[k] * grow[k]))
+                part = lane_tile_dot_lane_major(qrow[lo : lo + ARRAY_DIM], grow[lo : lo + ARRAY_DIM])
                 acc = np.float32(acc + adc_quantize(part, lsb, qmax))
             out[bi * r + ri] = acc
     return out
 
 
-def imc_mvm_blocked(queries, panel, segments, b, c, lsb, qmax):
-    """The blocked loop nest from transfer.rs, transcribed 1:1."""
-    dacq = dac_quantize(queries)
+def imc_mvm_blocked_dacq(dacq, panel, segments, b, c, lsb, qmax):
+    """The blocked loop nest from transfer.rs (pre-quantized queries),
+    transcribed 1:1 with the chunk-major tile dot."""
     tiles = c // ARRAY_DIM
     r = sum(e - s for (s, e) in segments)
     out = np.zeros(b * r, dtype=np.float32)
@@ -72,11 +113,10 @@ def imc_mvm_blocked(queries, panel, segments, b, c, lsb, qmax):
                         qoff = (q0 + qi) * c + lo
                         for pi in range(pn):
                             goff = (p0 + pi) * c + lo
-                            part = np.float32(0)
-                            for k in range(ARRAY_DIM):
-                                part = np.float32(
-                                    part + np.float32(dacq[qoff + k] * panel[goff + k])
-                                )
+                            part = lane_tile_dot_chunk_major(
+                                dacq[qoff : qoff + ARRAY_DIM],
+                                panel[goff : goff + ARRAY_DIM],
+                            )
                             acc[qi * pn + pi] = np.float32(
                                 acc[qi * pn + pi] + adc_quantize(part, lsb, qmax)
                             )
@@ -89,9 +129,53 @@ def imc_mvm_blocked(queries, panel, segments, b, c, lsb, qmax):
     return out
 
 
+def imc_mvm_blocked(queries, panel, segments, b, c, lsb, qmax):
+    return imc_mvm_blocked_dacq(dac_quantize(queries), panel, segments, b, c, lsb, qmax)
+
+
 def gather(panel, segments, c):
     parts = [panel[s * c : e * c] for (s, e) in segments]
     return np.concatenate(parts) if parts else np.zeros(0, dtype=np.float32)
+
+
+def pinned_tile():
+    """The hand-built reassociation-sensitive tile shared with the rust
+    `lane_order_pinned_bits` test: integer DAC levels against non-dyadic
+    conductances (so f32 rounding is live and the association order shows
+    in the result bits)."""
+    q = np.array([((k * 7) % 8) - 4 for k in range(ARRAY_DIM)], dtype=np.float32)
+    g = np.array(
+        [np.float32(np.float32(k - 64) / np.float32(100.0)) for k in range(ARRAY_DIM)],
+        dtype=np.float32,
+    )
+    return q, g
+
+
+def test_lane_codings_bit_identical():
+    rng = np.random.default_rng(7)
+    for trial in range(50):
+        q = rng.integers(-4, 4, ARRAY_DIM).astype(np.float32)
+        g = (
+            rng.integers(-3, 4, ARRAY_DIM).astype(np.float32)
+            + rng.normal(0, 0.05, ARRAY_DIM).astype(np.float32)
+        )
+        a = lane_tile_dot_lane_major(q, g)
+        b = lane_tile_dot_chunk_major(q, g)
+        assert a.tobytes() == b.tobytes(), f"trial {trial}: codings disagree"
+
+
+def test_pinned_bits_match_rust_regression_constants():
+    q, g = pinned_tile()
+    lane = lane_tile_dot_chunk_major(q, g)
+    assert lane.tobytes() == lane_tile_dot_lane_major(q, g).tobytes()
+    # The exact constants asserted by transfer.rs::lane_order_pinned_bits.
+    assert int(lane.view(np.uint32)) == 0xBFF5C288, hex(int(lane.view(np.uint32)))
+    # The pre-PR-6 ascending-k order lands on different bits — the tile
+    # really is sensitive to reassociation.
+    asc = np.float32(0)
+    for k in range(ARRAY_DIM):
+        asc = np.float32(asc + np.float32(q[k] * g[k]))
+    assert int(asc.view(np.uint32)) == 0xBFF5C290, hex(int(asc.view(np.uint32)))
 
 
 def test_blocked_bit_identical_to_gathered_ref():
@@ -120,3 +204,34 @@ def test_blocked_bit_identical_to_gathered_ref():
         want = imc_mvm_ref(queries, gather(panel, segments, c), b, r, c, lsb, qmax)
         got = imc_mvm_blocked(queries, panel, segments, b, c, lsb, qmax)
         assert got.tobytes() == want.tobytes(), f"trial {trial}: blocked != ref"
+
+
+def test_dac_hoisting_is_score_neutral():
+    # The engine quantizes each batch once (ScoreScratch.dacq) and marks
+    # jobs dac_applied; because dac_quantize(dac_quantize(x)) ==
+    # dac_quantize(x), pre-quantized scoring is bit-identical.
+    rng = np.random.default_rng(0xDAC)
+    c = ARRAY_DIM * 2
+    b, panel_rows = 5, 90
+    queries = (rng.integers(-40, 41, size=b * c) / 8.0).astype(np.float32)
+    panel = rng.integers(-3, 4, size=panel_rows * c).astype(np.float32)
+    panel += rng.normal(0, 0.05, size=panel.shape).astype(np.float32)
+    segments = [(0, 40), (50, 51), (60, 60), (70, 90)]
+    lsb, qmax = 16.0, 31.0
+
+    dacq = dac_quantize(queries)
+    # Numeric idempotence (this model's np.where flips -0.0 to +0.0 on the
+    # second pass — rust's f32::round/clamp preserve the zero sign and are
+    # bitwise idempotent — but the sign of zero never reaches a score:
+    # +-0.0 products leave every accumulator unchanged).
+    assert np.array_equal(dac_quantize(dacq), dacq), "DAC must be idempotent"
+    # The property the dac_applied flag relies on: scoring pre-quantized
+    # queries (hoisted path) is bit-identical to the kernel re-quantizing
+    # them (un-hoisted path).
+    requantized = imc_mvm_blocked(dacq, panel, segments, b, c, lsb, qmax)
+    hoisted = imc_mvm_blocked_dacq(dacq, panel, segments, b, c, lsb, qmax)
+    assert hoisted.tobytes() == requantized.tobytes()
+    # And hoisting commutes with the full pipeline on raw (fractional)
+    # queries: quantize-once-then-score == score-with-internal-quantize.
+    want = imc_mvm_blocked(queries, panel, segments, b, c, lsb, qmax)
+    assert hoisted.tobytes() == want.tobytes()

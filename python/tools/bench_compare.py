@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""Diff two serving-bench JSON files and fail on throughput regressions.
+
+Usage:
+    python3 python/tools/bench_compare.py BASELINE.json CURRENT.json \
+        [--max-regression 0.15]
+
+Both inputs are `BENCH_serving.json`-shaped files: a flat JSON array of
+records, each carrying a `section` ("batch_scoring", "single_query",
+"engine_search_batch", ...), a `threads` count, and one or more
+queries-per-second fields (`qps_gathered`, `qps_segmented`). Records are
+matched across files by `(section, threads)`; for every qps field present
+in both, the tool reports the current/baseline ratio and **exits 1** if
+any measurement dropped by more than `--max-regression` (default 15%).
+
+Conventions:
+* A baseline qps of 0 (or any non-positive / missing value) is an
+  *unmeasured sentinel* — e.g. a schema-only baseline committed from a
+  machine without the rust toolchain, or a `--tiny` smoke record. Those
+  comparisons are skipped with a warning, never failed, so a sentinel
+  baseline degrades to a schema check until a real driver run refreshes
+  it (`cargo bench --bench serving_throughput`, then copy the emitted
+  BENCH_serving.json over the committed one).
+* Records whose `section` has no qps field at all (e.g. a `meta`
+  provenance record) are ignored.
+* When the two records disagree on the `tiny` flag the comparison is
+  skipped with a warning: a `--tiny` smoke run measures a different
+  workload and its q/s is not commensurable with the full-scale
+  baseline. (CI runs the smoke config unconditionally and the full
+  config only on big runners; this rule keeps the same compare step
+  correct for both.)
+* A `(section, threads)` pair present in the baseline but absent from
+  the current run is a hard failure: silently dropping a measured
+  configuration is how regressions hide.
+
+Exit codes: 0 ok / nothing comparable, 1 regression or missing record,
+2 usage or parse error. stdlib-only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+QPS_FIELDS = ("qps_gathered", "qps_segmented")
+
+
+def load_records(path):
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            data = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"error: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    if not isinstance(data, list):
+        print(f"error: {path}: expected a JSON array of records", file=sys.stderr)
+        sys.exit(2)
+    out = {}
+    for rec in data:
+        if not isinstance(rec, dict) or "section" not in rec:
+            continue
+        if not any(f in rec for f in QPS_FIELDS):
+            continue  # meta/provenance record
+        key = (rec["section"], rec.get("threads"))
+        if key in out:
+            print(f"warning: {path}: duplicate record {key}; keeping the last")
+        out[key] = rec
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed BENCH_serving.json to compare against")
+    ap.add_argument("current", help="freshly generated BENCH_serving.json")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.15,
+        metavar="FRAC",
+        help="fail when current qps < baseline * (1 - FRAC) (default 0.15)",
+    )
+    args = ap.parse_args(argv)
+    if not 0.0 <= args.max_regression < 1.0:
+        ap.error("--max-regression must be in [0, 1)")
+
+    base = load_records(args.baseline)
+    curr = load_records(args.current)
+
+    failures = []
+    compared = skipped = 0
+    for key in sorted(base, key=lambda k: (k[0], k[1] if k[1] is not None else -1)):
+        section, threads = key
+        tag = f"{section} x{threads}"
+        if key not in curr:
+            failures.append(f"{tag}: present in baseline but missing from current run")
+            continue
+        b_tiny, c_tiny = base[key].get("tiny"), curr[key].get("tiny")
+        if b_tiny != c_tiny:
+            print(f"skip  {tag}: scale mismatch (baseline tiny={b_tiny}, current tiny={c_tiny})")
+            skipped += 1
+            continue
+        for field in QPS_FIELDS:
+            if field not in base[key] or field not in curr[key]:
+                continue
+            b, c = base[key][field], curr[key][field]
+            if not isinstance(b, (int, float)) or b <= 0:
+                print(f"skip  {tag} {field}: baseline unmeasured (sentinel {b!r})")
+                skipped += 1
+                continue
+            if not isinstance(c, (int, float)) or c <= 0:
+                failures.append(f"{tag} {field}: current run unmeasured ({c!r})")
+                continue
+            compared += 1
+            ratio = c / b
+            verdict = "FAIL" if ratio < 1.0 - args.max_regression else "ok"
+            print(f"{verdict:<5} {tag} {field}: {b:.1f} -> {c:.1f} q/s ({ratio:.2f}x)")
+            if verdict == "FAIL":
+                failures.append(
+                    f"{tag} {field}: {ratio:.2f}x of baseline "
+                    f"(threshold {1.0 - args.max_regression:.2f}x)"
+                )
+
+    print(f"\ncompared {compared} measurement(s), skipped {skipped} sentinel(s)")
+    if failures:
+        print(f"\n{len(failures)} regression check(s) failed:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

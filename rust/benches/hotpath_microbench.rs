@@ -2,12 +2,14 @@
 //! the MVM execution backends against each other across packed widths —
 //! the rust reference path vs the bank-sharded parallel backend at 2/4/8
 //! threads (and the PJRT artifact when built with `--features pjrt`) —
-//! plus the encoder artifact vs rust encode+pack. No criterion offline —
+//! the PR 6 lane-ordered blocked kernel vs a bench-local copy of the PR 5
+//! ascending-k kernel (the SIMD-enablement before/after), plus the
+//! encoder artifact vs rust encode+pack. No criterion offline —
 //! median-of-N timing with warmup.
 
 use std::time::Instant;
 
-use specpcm::array::AdcConfig;
+use specpcm::array::{imc_mvm_blocked_into, AdcConfig, ARRAY_DIM};
 use specpcm::backend::{MvmBackend, MvmJob, ParallelBackend, RefBackend};
 use specpcm::encode::{
     BitpackedEncodeBackend, EncodeBackend, EncodeJob, ParallelEncodeBackend, ScalarEncodeBackend,
@@ -31,6 +33,60 @@ fn median_time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
 
 fn rand_packed(rng: &mut Rng, len: usize, n: i64) -> Vec<f32> {
     (0..len).map(|_| rng.range_i64(-n, n) as f32).collect()
+}
+
+/// Bench-local copy of the PR 5 blocked kernel: identical cache blocking,
+/// but the tile dot accumulates in ascending `k` — the serialized
+/// dependence chain the PR 6 lane-ordered contract removed. Kept here (not
+/// in the library) purely as the before/after comparison point. On integer
+/// packed data every partial sum is exact, so its scores still equal the
+/// lane-ordered kernel's bit-for-bit (asserted below) — only the wall
+/// clock differs.
+#[allow(clippy::too_many_arguments)]
+fn blocked_ascending_k(
+    q: &[f32],
+    g: &[f32],
+    b: usize,
+    r: usize,
+    c: usize,
+    adc: AdcConfig,
+    out: &mut [f32],
+) {
+    const QUERY_BLOCK: usize = 16;
+    let tiles = c / ARRAY_DIM;
+    let mut acc = [0f32; QUERY_BLOCK * ARRAY_DIM];
+    let mut q0 = 0;
+    while q0 < b {
+        let qn = QUERY_BLOCK.min(b - q0);
+        let mut p0 = 0;
+        while p0 < r {
+            let pn = ARRAY_DIM.min(r - p0);
+            let sub = &mut acc[..qn * pn];
+            sub.fill(0.0);
+            for t in 0..tiles {
+                let lo = t * ARRAY_DIM;
+                for qi in 0..qn {
+                    let qoff = (q0 + qi) * c + lo;
+                    let qrow = &q[qoff..qoff + ARRAY_DIM];
+                    for pi in 0..pn {
+                        let goff = (p0 + pi) * c + lo;
+                        let grow = &g[goff..goff + ARRAY_DIM];
+                        let mut part = 0f32;
+                        for k in 0..ARRAY_DIM {
+                            part += qrow[k] * grow[k];
+                        }
+                        sub[qi * pn + pi] += adc.quantize(part);
+                    }
+                }
+            }
+            for qi in 0..qn {
+                let ooff = (q0 + qi) * r + p0;
+                out[ooff..ooff + pn].copy_from_slice(&sub[qi * pn..(qi + 1) * pn]);
+            }
+            p0 += pn;
+        }
+        q0 += qn;
+    }
 }
 
 fn main() {
@@ -102,6 +158,51 @@ fn main() {
                 format!("{:.2}x", rust_t / pjrt_t),
             ]);
         }
+    }
+
+    // ---- Tile dot: PR 6 lane-ordered kernel vs PR 5 ascending-k -------------
+    // Same cache blocking, same single thread; the only difference is the
+    // in-tile accumulation order (8 independent lanes + tree reduce vs one
+    // serialized dependence chain), i.e. whether the autovectorizer can
+    // emit SIMD. Integer data keeps the two bit-identical.
+    let lane_speedup;
+    {
+        let c = 768usize;
+        let q = rand_packed(&mut rng, b * c, 3);
+        let g = rand_packed(&mut rng, r * c, 3);
+        let adc = AdcConfig::new(6, 512.0);
+        let scores = (b * r) as f64;
+        let mut out_old = vec![0f32; b * r];
+        let mut out_new = vec![0f32; b * r];
+
+        let old_t = median_time(
+            || {
+                blocked_ascending_k(&q, &g, b, r, c, adc, &mut out_old);
+                std::hint::black_box(&out_old);
+            },
+            5,
+        );
+        let new_t = median_time(
+            || {
+                imc_mvm_blocked_into(&q, &g, &[0..r], b, c, adc, &mut out_new);
+                std::hint::black_box(&out_new);
+            },
+            5,
+        );
+        assert_eq!(out_new, out_old, "integer data must be order-insensitive");
+        lane_speedup = old_t / new_t;
+        rows.push(vec![
+            format!("mvm c={c} blocked ascending-k (PR 5)"),
+            format!("{:.2} ms", old_t * 1e3),
+            format!("{:.1}", scores / old_t / 1e6),
+            "1.00x".into(),
+        ]);
+        rows.push(vec![
+            format!("mvm c={c} blocked lane-ordered (PR 6)"),
+            format!("{:.2} ms", new_t * 1e3),
+            format!("{:.1}", scores / new_t / 1e6),
+            format!("{lane_speedup:.2}x"),
+        ]);
     }
 
     // ---- Encoder: rust reference (artifact path needs `pjrt`) ---------------
@@ -258,6 +359,24 @@ fn main() {
         );
     } else {
         println!("shape check skipped: only {cores} cores available.");
+    }
+
+    // Lane-order reproduction contract: the vectorized tile dot is a
+    // single-thread property (no core-count guard), same opt-in as above.
+    // >=1.2x is deliberately conservative — 8 independent f32 lanes
+    // usually buy 2x+ over the serialized chain on any SSE-or-wider host.
+    if enforce {
+        assert!(
+            lane_speedup > 1.2,
+            "lane-ordered blocked kernel should outrun the PR 5 ascending-k \
+             kernel (got {lane_speedup:.2}x)"
+        );
+        println!("lane shape check OK: lane-ordered = {lane_speedup:.2}x ascending-k.");
+    } else {
+        println!(
+            "lane shape check (informational; SPECPCM_ASSERT_SPEEDUP=1 to enforce): \
+             lane-ordered = {lane_speedup:.2}x ascending-k."
+        );
     }
 
     // Encode reproduction contract: the word-packed kernel replaces 64

@@ -8,12 +8,18 @@
 //! 1/2/4 worker threads. Both paths produce bit-identical scores
 //! (asserted every run), so the only thing compared is host wall time.
 //!
-//! Also reports end-to-end `SearchEngine::search_batch` throughput on a
-//! synthetic library, and writes the machine-readable `BENCH_serving.json`
-//! next to the text table so future PRs have a baseline to diff against.
+//! Also measures **single-query** (`nq = 1`) segmented serving across
+//! thread counts — the dominant front-door shape, which PR 6's
+//! reference-row striping fans out across workers (before PR 6 it ran
+//! single-threaded at every thread count) — plus end-to-end
+//! `SearchEngine::search_batch` throughput on a synthetic library, and
+//! writes the machine-readable `BENCH_serving.json` next to the text
+//! table so future PRs have a baseline to diff against
+//! (`python/tools/bench_compare.py` diffs two such files).
 //!
 //! `--tiny` runs a seconds-scale smoke configuration (CI's default step);
-//! the >=1.5x speedup assert at 4 threads is opt-in via
+//! the >=1.5x speedup asserts (segmented-vs-gathered at 4 threads, and
+//! single-query 4-thread-vs-1-thread) are opt-in via
 //! `SPECPCM_ASSERT_SPEEDUP=1` and guarded on >=4 real cores, mirroring
 //! `hotpath_microbench`.
 
@@ -196,6 +202,52 @@ fn main() {
         ]);
     }
 
+    // ---- Single-query serving (nq = 1, the front-door latency shape) --------
+    // Before PR 6 the parallel backend could only shard query rows, so
+    // this section was flat across thread counts; reference-row striping
+    // splits the candidate span instead.
+    let q1 = &queries[..cp];
+    let q1_job = MvmJob::segmented(q1, 1, &panel, &segs, cp, adc);
+    let want1 = ParallelBackend::new(1).mvm_scores(&q1_job).unwrap();
+    let mut out1 = vec![0f32; n_cand];
+    let mut single_qps_1t = 0.0f64;
+    let mut single_speedup_4t = 0.0f64;
+    for threads in [1usize, 2, 4] {
+        let backend = ParallelBackend::new(threads);
+        let t = median_time(
+            || {
+                backend.mvm_scores_into(&q1_job, &mut out1).unwrap();
+                std::hint::black_box(&out1);
+            },
+            scale.reps,
+        );
+        assert_eq!(out1, want1, "striped single-query scoring diverged");
+        let qps = 1.0 / t;
+        if threads == 1 {
+            single_qps_1t = qps;
+        }
+        let speedup = qps / single_qps_1t;
+        if threads == 4 {
+            single_speedup_4t = speedup;
+        }
+        rows.push(vec![
+            format!("single query x{threads}"),
+            "-".into(),
+            format!("{qps:.1}"),
+            format!("{speedup:.2}x"),
+        ]);
+        records.push(vec![
+            ("section", JsonField::S("single_query".into())),
+            ("threads", JsonField::U(threads as u64)),
+            ("cand_rows", JsonField::U(n_cand as u64)),
+            ("cp", JsonField::U(cp as u64)),
+            ("queries_per_batch", JsonField::U(1)),
+            ("qps_segmented", JsonField::F(qps)),
+            ("speedup", JsonField::F(speedup)),
+            ("tiny", JsonField::B(tiny)),
+        ]);
+    }
+
     // ---- End-to-end engine serving (segmented path, informational) ----------
     let cfg = SpecPcmConfig {
         hd_dim: 2048,
@@ -270,11 +322,22 @@ fn main() {
             "segmented serving should be >=1.5x the gathered path at 4 threads \
              (got {speedup_4t:.2}x)"
         );
-        println!("shape check OK: segmented = {speedup_4t:.2}x gathered at 4 threads.");
+        // PR 6 acceptance: striping must make single-query latency scale
+        // (it was ~1.0x by construction before reference-row striping).
+        assert!(
+            single_speedup_4t > 1.5,
+            "single-query serving should be >=1.5x at 4 threads vs 1 \
+             (got {single_speedup_4t:.2}x)"
+        );
+        println!(
+            "shape check OK: segmented = {speedup_4t:.2}x gathered at 4 threads; \
+             single query = {single_speedup_4t:.2}x its 1-thread time."
+        );
     } else if cores >= 4 {
         println!(
             "shape check (informational; SPECPCM_ASSERT_SPEEDUP=1 to enforce): \
-             segmented = {speedup_4t:.2}x gathered at 4 threads."
+             segmented = {speedup_4t:.2}x gathered at 4 threads; \
+             single query = {single_speedup_4t:.2}x its 1-thread time."
         );
     } else {
         println!("shape check skipped: only {cores} cores available.");

@@ -6,6 +6,15 @@
 //! is the *same math* as the L1 Pallas kernel (bit-exact for power-of-two
 //! ADC full-scales); this module additionally owns the cycle-accurate
 //! timing model used by the energy/latency accounting.
+//!
+//! Since PR 6 every tile dot product follows the **lane-ordered
+//! accumulation contract**: eight `k % 8` partial-sum lanes reduced by a
+//! fixed binary tree (see `transfer` module docs). [`imc_mvm_ref`] is the
+//! scalar oracle for that order; [`lane_tile_dot`] is the vectorizable
+//! coding every fast kernel uses. Integer packed data is exact under any
+//! association order, so the contract only redefines scores on noisy
+//! (non-integer) conductances — but there it is binding and pinned to
+//! exact f32 bits by regression tests.
 
 pub mod adc;
 pub mod bank;
@@ -17,7 +26,10 @@ pub use adc::AdcConfig;
 pub use bank::ArrayBank;
 pub use dac::dac_quantize;
 pub use timing::TimingModel;
-pub use transfer::{imc_mvm_blocked_into, imc_mvm_ref};
+pub use transfer::{
+    imc_mvm_blocked_dacq_into, imc_mvm_blocked_into, imc_mvm_ref, lane_tile_dot,
+    lane_tree_reduce, MVM_LANES,
+};
 
 /// Array geometry (Table 1): 128x128 2T2R cells per bank.
 pub const ARRAY_DIM: usize = 128;

@@ -5,10 +5,78 @@
 //! Used (a) by integration tests to check the PJRT-executed artifact
 //! bit-exactly, and (b) as a no-artifacts fallback execution path so the
 //! simulator is usable without a built `artifacts/` tree.
+//!
+//! # The lane-ordered accumulation contract (PR 6)
+//!
+//! Inside each 128-column tile the dot product is **not** accumulated in
+//! ascending `k`. Instead the canonical order is an 8-lane partial-sum
+//! layout:
+//!
+//! 1. lane `l` (`0..8`) sums the products at columns `k % 8 == l`, in
+//!    ascending `k` — eight independent f32 accumulators, the shape the
+//!    autovectorizer turns into one 8-wide SIMD accumulator;
+//! 2. the eight lanes are reduced by the fixed binary tree
+//!    `((l0 + l4) + (l2 + l6)) + ((l1 + l5) + (l3 + l7))`
+//!    (see [`lane_tree_reduce`]).
+//!
+//! This order is *the* definition of a tile dot product everywhere in the
+//! repo: [`imc_mvm_ref`] is its scalar oracle (coded lane-major, explicit
+//! loops), [`lane_tile_dot`] is the vectorizable coding (chunk-major,
+//! eight in-flight accumulators), and the two are bit-identical because
+//! each lane performs the identical f32 add sequence either way. Changing
+//! the order is a breaking change to every committed score: the pinned-bit
+//! regression test below fails loudly on any accidental reassociation.
+//!
+//! Why the order changed in PR 6: ascending-`k` accumulation serializes
+//! 128 dependent f32 adds, which the autovectorizer must preserve and so
+//! cannot vectorize. Eight independent lanes vectorize cleanly with no new
+//! dependencies and no nightly features. For *integer* packed data —
+//! DAC levels times integer conductance targets, every partial sum exactly
+//! representable in f32 — any association order gives identical results,
+//! so the switch only redefines scores on non-integer (write-verify-noised)
+//! conductances.
 
 use super::adc::AdcConfig;
 use super::dac::dac_quantize;
 use super::ARRAY_DIM;
+
+/// Partial-sum lanes per tile dot product (the canonical accumulation
+/// order splits each 128-column tile across `k % MVM_LANES`).
+pub const MVM_LANES: usize = 8;
+
+// The lane layout assumes tiles split evenly into lanes.
+const _: () = assert!(ARRAY_DIM % MVM_LANES == 0);
+
+/// The fixed lane-reduction tree: `((l0+l4)+(l2+l6)) + ((l1+l5)+(l3+l7))`.
+///
+/// Pairs are `MVM_LANES/2` apart (the shape of one in-register shuffle
+/// reduction of an 8-wide accumulator), then even/odd subtrees combine.
+/// This exact association order is part of the kernel contract — every
+/// score in the repo depends on it bit-for-bit.
+#[inline]
+pub fn lane_tree_reduce(l: &[f32; MVM_LANES]) -> f32 {
+    ((l[0] + l[4]) + (l[2] + l[6])) + ((l[1] + l[5]) + (l[3] + l[7]))
+}
+
+/// One lane-ordered 128-column tile dot product — the vectorizable coding
+/// of the canonical accumulation order (chunk-major: walk 16 chunks of 8,
+/// keeping all 8 lane accumulators in flight so LLVM maps them onto one
+/// SIMD register). Bit-identical to the lane-major scalar coding in
+/// [`imc_mvm_ref`] because every lane sees the identical add sequence.
+///
+/// Both slices must be exactly [`ARRAY_DIM`] long.
+#[inline]
+pub fn lane_tile_dot(q: &[f32], g: &[f32]) -> f32 {
+    let q = &q[..ARRAY_DIM];
+    let g = &g[..ARRAY_DIM];
+    let mut lanes = [0f32; MVM_LANES];
+    for (qc, gc) in q.chunks_exact(MVM_LANES).zip(g.chunks_exact(MVM_LANES)) {
+        for (lane, (&a, &b)) in lanes.iter_mut().zip(qc.iter().zip(gc)) {
+            *lane += a * b;
+        }
+    }
+    lane_tree_reduce(&lanes)
+}
 
 /// scores[b][r] = sum over 128-col tiles of ADC( DAC(q_tile) . g_tile ).
 ///
@@ -16,6 +84,12 @@ use super::ARRAY_DIM;
 /// * `refs`:    R x C row-major, stored (noisy) conductance differences.
 /// * C must be a multiple of [`ARRAY_DIM`]; R and B are unconstrained here
 ///   (the physical row-block granularity is enforced by the coordinator).
+///
+/// This is the scalar **oracle** for the lane-ordered accumulation
+/// contract (module docs): each tile dot is computed lane-major — one
+/// explicit scalar loop per lane, then [`lane_tree_reduce`] — so the fast
+/// kernels have an independently-coded reference to be property-tested
+/// against, not a second copy of themselves.
 pub fn imc_mvm_ref(
     queries: &[f32],
     refs: &[f32],
@@ -40,12 +114,18 @@ pub fn imc_mvm_ref(
             let mut acc = 0f32;
             for t in 0..tiles {
                 let lo = t * ARRAY_DIM;
-                let hi = lo + ARRAY_DIM;
-                let mut part = 0f32;
-                for k in lo..hi {
-                    part += qrow[k] * grow[k];
+                // Lane-major scalar coding of the canonical order: lane l
+                // sums columns k % 8 == l in ascending k, then the fixed
+                // tree reduces the eight lanes.
+                let mut lanes = [0f32; MVM_LANES];
+                for (l, lane) in lanes.iter_mut().enumerate() {
+                    let mut k = lo + l;
+                    while k < lo + ARRAY_DIM {
+                        *lane += qrow[k] * grow[k];
+                        k += MVM_LANES;
+                    }
                 }
-                acc += adc.quantize(part);
+                acc += adc.quantize(lane_tree_reduce(&lanes));
             }
             out[bi * r + ri] = acc;
         }
@@ -65,26 +145,10 @@ const QUERY_BLOCK: usize = 16;
 /// `b x sum(segment lens)` row-major scores into `out` (caller-owned, so
 /// serving loops reuse one buffer across batches).
 ///
-/// # Bit-identity with the gathered reference path
-///
-/// The blocking only reorders *which output* is worked on next — never the
-/// arithmetic inside one output. For every `(query, reference)` pair the
-/// accumulation is exactly [`imc_mvm_ref`]'s: column tiles visited in
-/// ascending order, the 128 products of each tile summed in ascending `k`,
-/// one ADC quantization per tile, partial sums added in tile order. f32
-/// addition is performed in the identical sequence, so every score is
-/// bit-identical to gathering the segment rows into a dense matrix and
-/// calling [`imc_mvm_ref`] (locked in by `rust/tests/segmented_equivalence.rs`).
-///
-/// # Blocking structure
-///
-/// Queries advance in [`QUERY_BLOCK`]-row blocks; within a block, each
-/// segment is walked in [`ARRAY_DIM`]-row panels, and each panel's scores
-/// accumulate column-tile-by-column-tile into a small scratch sub-tile.
-/// The inner `t -> (query, panel-row)` order means one 128x128 reference
-/// tile (64 KB) is reused by every query of the block while hot, instead
-/// of being re-streamed from memory once per query — the reference
-/// kernel's behavior at large `r`.
+/// DAC-quantizes `queries` internally, then runs
+/// [`imc_mvm_blocked_dacq_into`]; batch loops that score the same queries
+/// against many segment groups should quantize once and call the `dacq`
+/// variant directly (the engine's `ScoreScratch` does).
 pub fn imc_mvm_blocked_into(
     queries: &[f32],
     panel: &[f32],
@@ -95,17 +159,57 @@ pub fn imc_mvm_blocked_into(
     out: &mut [f32],
 ) {
     assert_eq!(queries.len(), b * c, "queries shape");
-    assert_eq!(c % ARRAY_DIM, 0, "C must be a multiple of {ARRAY_DIM}");
-    assert_eq!(panel.len() % c.max(1), 0, "panel shape");
-    let panel_rows = panel.len() / c.max(1);
+    // DAC once per query element, exactly as the reference kernel does.
+    let dacq: Vec<f32> = queries.iter().map(|&x| dac_quantize(x)).collect();
+    imc_mvm_blocked_dacq_into(&dacq, panel, segments, b, c, adc, out);
+}
+
+/// [`imc_mvm_blocked_into`] over **already DAC-quantized** queries.
+///
+/// `dacq` must hold `b x c` values already passed through
+/// [`dac_quantize`]; because the DAC is idempotent on its own output,
+/// scoring pre-quantized queries is bit-identical to quantizing again —
+/// this entry point only skips the redundant pass and its allocation.
+///
+/// # Bit-identity with the gathered reference path
+///
+/// The blocking only reorders *which output* is worked on next — never the
+/// arithmetic inside one output. For every `(query, reference)` pair the
+/// accumulation is exactly [`imc_mvm_ref`]'s: column tiles visited in
+/// ascending order, each tile reduced in the canonical lane order
+/// ([`lane_tile_dot`], chunk-major coding of the same lanes), one ADC
+/// quantization per tile, partial sums added in tile order. f32 addition
+/// is performed in the identical sequence, so every score is bit-identical
+/// to gathering the segment rows into a dense matrix and calling
+/// [`imc_mvm_ref`] (locked in by `rust/tests/segmented_equivalence.rs`).
+///
+/// # Blocking structure
+///
+/// Queries advance in [`QUERY_BLOCK`]-row blocks; within a block, each
+/// segment is walked in [`ARRAY_DIM`]-row panels, and each panel's scores
+/// accumulate column-tile-by-column-tile into a small scratch sub-tile.
+/// The inner `t -> (query, panel-row)` order means one 128x128 reference
+/// tile (64 KB) is reused by every query of the block while hot, instead
+/// of being re-streamed from memory once per query — the reference
+/// kernel's behavior at large `r`.
+pub fn imc_mvm_blocked_dacq_into(
+    dacq: &[f32],
+    panel: &[f32],
+    segments: &[std::ops::Range<usize>],
+    b: usize,
+    c: usize,
+    adc: AdcConfig,
+    out: &mut [f32],
+) {
+    assert_eq!(dacq.len(), b * c, "queries shape");
+    assert!(c > 0 && c % ARRAY_DIM == 0, "C must be a positive multiple of {ARRAY_DIM}");
+    assert_eq!(panel.len() % c, 0, "panel shape");
+    let panel_rows = panel.len() / c;
     let r: usize = segments.iter().map(|s| s.len()).sum();
     for s in segments {
         assert!(s.start <= s.end && s.end <= panel_rows, "segment {s:?} out of panel");
     }
     assert_eq!(out.len(), b * r, "out shape");
-
-    // DAC once per query element, exactly as the reference kernel does.
-    let dacq: Vec<f32> = queries.iter().map(|&x| dac_quantize(x)).collect();
 
     let tiles = c / ARRAY_DIM;
     let mut acc = [0f32; QUERY_BLOCK * ARRAY_DIM];
@@ -128,10 +232,7 @@ pub fn imc_mvm_blocked_into(
                         for pi in 0..pn {
                             let goff = (p0 + pi) * c + lo;
                             let grow = &panel[goff..goff + ARRAY_DIM];
-                            let mut part = 0f32;
-                            for k in 0..ARRAY_DIM {
-                                part += qrow[k] * grow[k];
-                            }
+                            let part = lane_tile_dot(qrow, grow);
                             sub[qi * pn + pi] += adc.quantize(part);
                         }
                     }
@@ -223,6 +324,60 @@ mod tests {
         imc_mvm_ref(&[0.0; 100], &[0.0; 100], 1, 1, 100, AdcConfig::ideal());
     }
 
+    /// The canonical lane order pinned to exact f32 bits on a
+    /// hand-computable non-integer tile (integer data is exact under any
+    /// association order and would hide a reassociation, so the
+    /// conductances here are deliberately non-dyadic). Constants generated
+    /// by the numpy float32 model in
+    /// `python/tests/test_blocked_kernel_model.py` — an accidental change
+    /// to the lane count, lane walk, or reduce tree fails here loudly.
+    #[test]
+    fn lane_order_pinned_bits() {
+        let q: Vec<f32> = (0..ARRAY_DIM).map(|k| ((k * 7) % 8) as f32 - 4.0).collect();
+        let g: Vec<f32> = (0..ARRAY_DIM).map(|k| (k as f32 - 64.0) / 100.0).collect();
+        let lane = lane_tile_dot(&q, &g);
+        assert_eq!(lane.to_bits(), 0xbff5_c288, "lane-ordered tile dot drifted: {lane}");
+
+        // The lane-major oracle coding must agree exactly (1x1 job, one
+        // tile, ideal-but-wide ADC is still quantizing — so pin through
+        // the raw tile dot, not the post-ADC score).
+        let mut lanes = [0f32; MVM_LANES];
+        for (l, lane) in lanes.iter_mut().enumerate() {
+            let mut k = l;
+            while k < ARRAY_DIM {
+                *lane += q[k] * g[k];
+                k += MVM_LANES;
+            }
+        }
+        assert_eq!(lane_tree_reduce(&lanes).to_bits(), lane.to_bits());
+
+        // And the pre-PR-6 ascending-k order gives a *different* f32 — the
+        // tile really exercises reassociation sensitivity.
+        let asc: f32 = q.iter().zip(&g).fold(0f32, |acc, (&a, &b)| acc + a * b);
+        assert_eq!(asc.to_bits(), 0xbff5_c290);
+        assert_ne!(asc.to_bits(), lane.to_bits());
+    }
+
+    /// Non-integer conductances exercise f32 rounding, so oracle-vs-fast
+    /// equality here fails under any lane-semantics drift between the two
+    /// codings (the integer-data tests below are exact under *any* order).
+    #[test]
+    fn blocked_matches_ref_on_noninteger_panels() {
+        let mut rng = Rng::new(41);
+        for trial in 0..10u64 {
+            let (b, r, c) = (1 + rng.below(20), 1 + rng.below(200), [128, 256, 384][rng.below(3)]);
+            let q = rand_packed(&mut rng, b * c, 3);
+            let g: Vec<f32> = (0..r * c)
+                .map(|_| rng.range_i64(-3, 3) as f32 + rng.range_i64(-400, 400) as f32 / 7000.0)
+                .collect();
+            let adc = [AdcConfig::new(6, 512.0), AdcConfig::new(3, 128.0)][rng.below(2)];
+            let want = imc_mvm_ref(&q, &g, b, r, c, adc);
+            let mut got = vec![f32::NAN; b * r];
+            imc_mvm_blocked_into(&q, &g, &[0..r], b, c, adc, &mut got);
+            assert_eq!(got, want, "trial {trial}");
+        }
+    }
+
     /// Gather the segment rows into a dense matrix — the oracle the
     /// blocked kernel must match bit-for-bit.
     fn gather_rows(panel: &[f32], segments: &[std::ops::Range<usize>], c: usize) -> Vec<f32> {
@@ -269,6 +424,22 @@ mod tests {
     }
 
     #[test]
+    fn blocked_dacq_matches_unquantized_entry() {
+        // Pre-quantizing is bit-identical (DAC idempotence), not just close.
+        let mut rng = Rng::new(33);
+        let (b, r, c) = (7, 90, 256);
+        let q: Vec<f32> = (0..b * c).map(|_| rng.range_i64(-40, 40) as f32 / 8.0).collect();
+        let g = rand_packed(&mut rng, r * c, 3);
+        let adc = AdcConfig::new(6, 512.0);
+        let mut want = vec![f32::NAN; b * r];
+        imc_mvm_blocked_into(&q, &g, &[0..r], b, c, adc, &mut want);
+        let dacq: Vec<f32> = q.iter().map(|&x| dac_quantize(x)).collect();
+        let mut got = vec![f32::NAN; b * r];
+        imc_mvm_blocked_dacq_into(&dacq, &g, &[0..r], b, c, adc, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
     fn blocked_empty_inputs() {
         let adc = AdcConfig::ideal();
         let g = vec![1.0f32; 4 * 128];
@@ -278,6 +449,14 @@ mod tests {
         let q = vec![1.0f32; 2 * 128];
         imc_mvm_blocked_into(&q, &g, &[2..2], 2, 128, adc, &mut []);
         imc_mvm_blocked_into(&q, &g, &[], 2, 128, adc, &mut []);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive multiple")]
+    fn blocked_rejects_zero_width() {
+        // c == 0 used to slip through `panel.len() % c.max(1)`; the guard
+        // must reject the degenerate width outright.
+        imc_mvm_blocked_into(&[], &[], &[], 0, 0, AdcConfig::ideal(), &mut []);
     }
 
     #[test]

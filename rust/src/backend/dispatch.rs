@@ -96,7 +96,10 @@ impl BackendDispatcher {
         let d = match cfg.backend.kind {
             BackendKind::Reference => BackendDispatcher::new(Box::new(RefBackend), min_u),
             BackendKind::Parallel => BackendDispatcher::new(
-                Box::new(ParallelBackend::new(cfg.backend.threads)),
+                Box::new(
+                    ParallelBackend::new(cfg.backend.threads)
+                        .with_stripe_rows(cfg.backend.stripe_rows),
+                ),
                 min_u,
             ),
             BackendKind::Pjrt => Self::pjrt_or_fallback(cfg, min_u),

@@ -23,9 +23,11 @@
 //!   `rust/tests/backend_equivalence.rs` and
 //!   `rust/tests/segmented_equivalence.rs`).
 //! * [`RefBackend`] — the scalar reference path.
-//! * [`ParallelBackend`] — shards the score tile's query rows across
-//!   `std::thread::scope` workers (host-side analogue of bank
-//!   parallelism; no external dependencies).
+//! * [`ParallelBackend`] — shards the score tile across
+//!   `std::thread::scope` workers in 2-D (host-side analogue of bank
+//!   parallelism; no external dependencies): query rows when the batch is
+//!   wide, tile-aligned reference-row stripes when `nq < threads` so a
+//!   single front-door query still fans out across the candidate span.
 //! * [`PjrtBackend`] (feature `pjrt`) — executes the AOT HLO artifact
 //!   through the PJRT runtime.
 //! * [`BackendDispatcher`] — owns the utilization-based routing heuristic
@@ -47,8 +49,16 @@
 //! to its scalar oracle — selection changes host wall time, never results
 //! (`rust/tests/backend_equivalence.rs`, `rust/tests/encode_equivalence.rs`)
 //! — and both are selected through the `[backend]` config section
-//! (`kind`, `encode_kind`, `threads`, `min_utilization`) or the
-//! `--backend` / `--encode-backend` / `--threads` CLI flags.
+//! (`kind`, `encode_kind`, `threads`, `min_utilization`, `stripe_rows`)
+//! or the `--backend` / `--encode-backend` / `--threads` /
+//! `--stripe-rows` CLI flags.
+//!
+//! Since PR 6 "the reference transfer function" means the **lane-ordered**
+//! oracle (`crate::array::transfer` module docs): eight `k % 8` partial
+//! sum lanes per 128-column tile, reduced by a fixed binary tree. Backends
+//! inherit the contract for free by running the blocked kernel, which
+//! shares `lane_tile_dot` with the oracle's independently-coded scalar
+//! loops.
 
 pub mod dispatch;
 pub mod parallel;
@@ -121,6 +131,12 @@ pub struct MvmJob<'a> {
     /// Physical row ranges of `refs` making up the candidate set, in
     /// output-column order. Empty means a dense job over rows `0..nr`.
     pub segments: &'a [std::ops::Range<usize>],
+    /// Caller attests `queries` already passed through the DAC
+    /// ([`crate::array::dac_quantize`]). The DAC is idempotent on its own
+    /// output, so this flag never changes scores — it only lets backends
+    /// skip the redundant re-quantization pass (and its allocation) when a
+    /// batch loop hoisted it, as the engine's `ScoreScratch` does.
+    pub dac_applied: bool,
 }
 
 impl<'a> MvmJob<'a> {
@@ -143,6 +159,7 @@ impl<'a> MvmJob<'a> {
             cp,
             adc,
             segments: &[],
+            dac_applied: false,
         }
     }
 
@@ -177,7 +194,17 @@ impl<'a> MvmJob<'a> {
             cp,
             adc,
             segments,
+            dac_applied: false,
         }
+    }
+
+    /// Mark `queries` as already DAC-quantized (see
+    /// [`MvmJob::dac_applied`]). Only pass buffers that really went
+    /// through [`crate::array::dac_quantize`]; the attestation is
+    /// score-neutral for such buffers by DAC idempotence.
+    pub fn with_dac_applied(mut self) -> Self {
+        self.dac_applied = true;
+        self
     }
 
     /// The candidate row ranges this job scores: its `segments`, or the

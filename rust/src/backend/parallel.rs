@@ -3,23 +3,43 @@
 //! across independent 128x128 banks; we tile the same score matrix across
 //! OS threads).
 //!
-//! Sharding is by **query rows of the output tile**: each worker computes
-//! a contiguous `qn x nr` stripe with the identical blocked kernel the
-//! reference backend runs, writing directly into its disjoint slice of
-//! the caller's output buffer (no per-worker score allocation, no final
-//! copy). Per-element arithmetic and ordering are unchanged, so results
-//! are bit-identical to [`RefBackend`] for every thread count — the
-//! invariant `rust/tests/backend_equivalence.rs` locks in. Segmented jobs
-//! shard the same way: every worker scores the same borrowed panel
-//! ranges for its query stripe, so the zero-copy property survives the
-//! fan-out. Each worker also accumulates its shard's physical
-//! [`OpCounts`], merged after the scope joins (the counts are
-//! deterministic, so the merge must agree with [`MvmJob::bank_ops`] —
-//! debug-asserted).
+//! Sharding is 2-D, picked per job from the output-tile shape:
+//!
+//! * **Query-row sharding** (`nq >= threads`): each worker computes a
+//!   contiguous `qn x nr` stripe with the identical blocked kernel the
+//!   reference backend runs, writing directly into its disjoint slice of
+//!   the caller's output buffer (no per-worker score allocation, no final
+//!   copy).
+//! * **Reference-row striping** (`nq < threads`, PR 6): the candidate span
+//!   is split into tile-aligned sub-ranges of output *columns*, one
+//!   `(query, stripe)` piece per worker unit, so the dominant `nq = 1`
+//!   front-door serving shape fans out instead of running single-threaded.
+//!   Stripe boundaries are multiples of [`ARRAY_DIM`] in candidate-row
+//!   space — each piece's bank-op charge then sums exactly to the whole
+//!   job's [`MvmJob::bank_ops`] (the `ceil(nr/128)` row-tile count is not
+//!   linear across arbitrary splits, but is across tile-aligned ones).
+//!   Stripe height comes from detected topology
+//!   (`available_parallelism`-bounded worker count) or the
+//!   `[backend] stripe_rows` config override.
+//!
+//! Per-element arithmetic and ordering are unchanged either way — a score
+//! depends only on its own `(query, reference)` pair under the lane-ordered
+//! accumulation contract (`crate::array::transfer`), never on which worker
+//! computes its neighbors — so results are bit-identical to [`RefBackend`]
+//! for every thread count and stripe shape, the invariant
+//! `rust/tests/backend_equivalence.rs` locks in. Segmented jobs shard the
+//! same way: stripes slice the segment list in output-column space, so the
+//! zero-copy property survives the fan-out. Each worker also accumulates
+//! its shard's physical [`OpCounts`], merged after the scope joins (the
+//! counts are deterministic, so the merge must agree with
+//! [`MvmJob::bank_ops`] — debug-asserted).
 //!
 //! `std::thread::scope` keeps the implementation dependency-free; workers
 //! borrow the job buffers directly, no cloning.
 
+use std::ops::Range;
+
+use crate::array::ARRAY_DIM;
 use crate::energy::OpCounts;
 use crate::util::error::Result;
 
@@ -29,19 +49,32 @@ use super::{MvmBackend, MvmJob};
 /// Minimum scalar multiply-accumulate count (`nq * nr * cp`) before
 /// spawning threads pays for itself; smaller jobs run on the caller's
 /// thread. Small candidate buckets dominate both pipelines, so this guard
-/// matters for end-to-end wall time.
+/// matters for end-to-end wall time. The same budget keeps 2-D striping
+/// honest: auto stripe sizing never cuts a job into stripes carrying less
+/// than this much work each.
 const MIN_PARALLEL_MACS: usize = 100_000;
 
 /// Shards `MvmJob`s across `threads` scoped workers.
 #[derive(Clone, Copy, Debug)]
 pub struct ParallelBackend {
     threads: usize,
+    stripe_rows: usize,
 }
 
 impl ParallelBackend {
     /// `threads = 0` auto-detects (`std::thread::available_parallelism`).
     pub fn new(threads: usize) -> Self {
-        ParallelBackend { threads }
+        ParallelBackend { threads, stripe_rows: 0 }
+    }
+
+    /// Override the reference-row stripe height for the `nq < threads`
+    /// path (`[backend] stripe_rows` / `--stripe-rows`). `0` sizes stripes
+    /// automatically from the worker count and the MAC budget; nonzero
+    /// values are rounded up to a multiple of [`ARRAY_DIM`] so bank-op
+    /// accounting stays exact. Score-neutral either way.
+    pub fn with_stripe_rows(mut self, rows: usize) -> Self {
+        self.stripe_rows = rows;
+        self
     }
 
     /// The worker count jobs actually run with.
@@ -54,12 +87,48 @@ impl ParallelBackend {
                 .unwrap_or(1)
         }
     }
+
+    /// Stripe height (in candidate rows) the `nq < threads` path uses for
+    /// a `nq x nr x cp` job — tile-aligned, from the override or the
+    /// topology/work heuristic. Exposed for tests and benches.
+    pub fn stripe_height(&self, nq: usize, nr: usize, cp: usize) -> usize {
+        let row_tiles = nr.div_ceil(ARRAY_DIM).max(1);
+        let tiles_per_stripe = if self.stripe_rows > 0 {
+            self.stripe_rows.div_ceil(ARRAY_DIM)
+        } else {
+            // Aim for ~threads pieces across the batch, but never stripes
+            // thinner than the scalar-path MAC budget.
+            let by_topology = self.effective_threads().div_ceil(nq.max(1));
+            let by_work = (nq * nr * cp) / MIN_PARALLEL_MACS;
+            let stripes = by_topology.min(by_work.max(1)).min(row_tiles);
+            row_tiles.div_ceil(stripes.max(1))
+        };
+        tiles_per_stripe * ARRAY_DIM
+    }
 }
 
 impl Default for ParallelBackend {
     fn default() -> Self {
         ParallelBackend::new(0)
     }
+}
+
+/// Map the output-column range `c0..c1` (candidate-row space, across the
+/// concatenated segments) back onto panel-row sub-ranges. Overlapping
+/// input segments are legal — the mapping treats each independently.
+fn slice_segments(segments: &[Range<usize>], c0: usize, c1: usize) -> Vec<Range<usize>> {
+    let mut out = Vec::new();
+    let mut base = 0usize;
+    for s in segments {
+        let len = s.len();
+        let lo = c0.max(base);
+        let hi = c1.min(base + len);
+        if lo < hi {
+            out.push(s.start + (lo - base)..s.start + (hi - base));
+        }
+        base += len;
+    }
+    out
 }
 
 impl MvmBackend for ParallelBackend {
@@ -70,14 +139,29 @@ impl MvmBackend for ParallelBackend {
     fn mvm_scores_into(&self, job: &MvmJob, out: &mut [f32]) -> Result<()> {
         let (nq, nr, cp) = (job.nq, job.nr, job.cp);
         assert_eq!(out.len(), nq * nr, "out shape");
-        let threads = self.effective_threads().min(nq.max(1));
+        // Degenerate tiles have nothing to compute — and `nr == 0` would
+        // make the row path's `chunks_mut(chunk_rows * nr)` chunk by zero.
+        if nq == 0 || nr == 0 {
+            return Ok(());
+        }
+        let threads = self.effective_threads();
         if threads <= 1 || nq * nr * cp < MIN_PARALLEL_MACS {
             return RefBackend.mvm_scores_into(job, out);
         }
+        if nq >= threads {
+            self.row_sharded(job, out, threads)
+        } else {
+            self.column_striped(job, out, threads)
+        }
+    }
+}
 
-        // Contiguous query-row chunks; the last chunk absorbs the ragged
-        // remainder. `chunks_mut` hands each worker a disjoint &mut stripe
-        // of the caller's buffer.
+impl ParallelBackend {
+    /// Query-row sharding: contiguous query chunks, the last absorbs the
+    /// ragged remainder. `chunks_mut` hands each worker a disjoint &mut
+    /// stripe of the caller's buffer.
+    fn row_sharded(&self, job: &MvmJob, out: &mut [f32], threads: usize) -> Result<()> {
+        let (nq, nr, cp) = (job.nq, job.nr, job.cp);
         let chunk_rows = nq.div_ceil(threads);
         let mut merged = OpCounts::default();
         std::thread::scope(|s| {
@@ -89,12 +173,16 @@ impl MvmBackend for ParallelBackend {
                 let refs = job.refs;
                 let segments = job.segments;
                 let adc = job.adc;
+                let dac_applied = job.dac_applied;
                 handles.push(s.spawn(move || {
-                    let shard_job = if segments.is_empty() {
+                    let mut shard_job = if segments.is_empty() {
                         MvmJob::new(q_rows, qn, refs, nr, cp, adc)
                     } else {
                         MvmJob::segmented(q_rows, qn, refs, segments, cp, adc)
                     };
+                    if dac_applied {
+                        shard_job = shard_job.with_dac_applied();
+                    }
                     RefBackend
                         .mvm_scores_into(&shard_job, out_chunk)
                         .expect("reference kernel is infallible");
@@ -115,12 +203,86 @@ impl MvmBackend for ParallelBackend {
         );
         Ok(())
     }
+
+    /// Reference-row striping for `nq < threads`: tile-aligned output
+    /// column stripes, one `(query, stripe)` piece per worker unit, each
+    /// writing a disjoint contiguous slice of `out`.
+    fn column_striped(&self, job: &MvmJob, out: &mut [f32], threads: usize) -> Result<()> {
+        let (nq, nr, cp) = (job.nq, job.nr, job.cp);
+        let sr = self.stripe_height(nq, nr, cp);
+        let n_stripes = nr.div_ceil(sr);
+        if nq * n_stripes <= 1 {
+            // One piece == the whole job; skip the spawn overhead.
+            return RefBackend.mvm_scores_into(job, out);
+        }
+
+        let mut storage = [0..0];
+        let segments = job.effective_segments(&mut storage);
+
+        // Piece list in output order: qi-outer, stripe-inner walks `out`
+        // contiguously (stripe `nr..nr` of query qi abuts stripe `0..` of
+        // qi+1), so sequential `split_at_mut` yields the disjoint slices.
+        let mut pieces = Vec::with_capacity(nq * n_stripes);
+        let mut rest = &mut out[..];
+        for qi in 0..nq {
+            let q_row = &job.queries[qi * cp..(qi + 1) * cp];
+            for si in 0..n_stripes {
+                let c0 = si * sr;
+                let c1 = nr.min(c0 + sr);
+                // `take` moves the tail out so the split-off head can
+                // outlive this iteration (a plain reborrow could not).
+                let (piece_out, tail) = std::mem::take(&mut rest).split_at_mut(c1 - c0);
+                rest = tail;
+                pieces.push((q_row, slice_segments(segments, c0, c1), piece_out));
+            }
+        }
+        debug_assert!(rest.is_empty());
+
+        let per_worker = pieces.len().div_ceil(threads);
+        let mut merged = OpCounts::default();
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(threads);
+            let mut iter = pieces.into_iter();
+            loop {
+                let group: Vec<_> = iter.by_ref().take(per_worker).collect();
+                if group.is_empty() {
+                    break;
+                }
+                let refs = job.refs;
+                let adc = job.adc;
+                let dac_applied = job.dac_applied;
+                handles.push(s.spawn(move || {
+                    let mut shard_ops = OpCounts::default();
+                    for (q_row, segs, piece_out) in group {
+                        let mut piece = MvmJob::segmented(q_row, 1, refs, &segs, cp, adc);
+                        if dac_applied {
+                            piece = piece.with_dac_applied();
+                        }
+                        RefBackend
+                            .mvm_scores_into(&piece, piece_out)
+                            .expect("reference kernel is infallible");
+                        piece.count_ops(&mut shard_ops);
+                    }
+                    shard_ops
+                }));
+            }
+            for h in handles {
+                merged += h.join().expect("MVM stripe worker panicked");
+            }
+        });
+        debug_assert_eq!(
+            merged.mvm_ops,
+            job.bank_ops(),
+            "tile-aligned stripe op counts must sum to the whole-job count"
+        );
+        Ok(())
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::array::AdcConfig;
+    use crate::array::{dac_quantize, AdcConfig};
     use crate::util::Rng;
 
     fn job_buffers(seed: u64, nq: usize, nr: usize, cp: usize) -> (Vec<f32>, Vec<f32>) {
@@ -157,6 +319,107 @@ mod tests {
             ParallelBackend::new(threads).mvm_scores_into(&job, &mut got).unwrap();
             assert_eq!(got, want, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn single_query_stripes_bit_identical_across_shapes() {
+        // The nq < threads column-striped path, dense and segmented, across
+        // thread counts and explicit stripe overrides (including heights
+        // that round up to a tile and one taller than the whole span).
+        let (nq, panel_rows, cp) = (1, 1500, 256);
+        let (q, panel) = job_buffers(15, nq, panel_rows, cp);
+        let adc = AdcConfig::new(6, 512.0);
+        let segs = vec![0..700, 800..801, 900..900, 1000..1500];
+        for job in [
+            MvmJob::new(&q, nq, &panel, panel_rows, cp, adc),
+            MvmJob::segmented(&q, nq, &panel, &segs, cp, adc),
+        ] {
+            let want = RefBackend.mvm_scores(&job).unwrap();
+            for threads in [2usize, 3, 8, 64] {
+                for stripe_rows in [0usize, 1, 128, 300, 1_000_000] {
+                    let be = ParallelBackend::new(threads).with_stripe_rows(stripe_rows);
+                    let mut got = vec![f32::NAN; nq * job.nr];
+                    be.mvm_scores_into(&job, &mut got).unwrap();
+                    assert_eq!(got, want, "threads={threads} stripe_rows={stripe_rows}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn few_queries_many_threads_stripes_bit_identical() {
+        // 2 < nq < threads: pieces mix query and stripe splits.
+        let (nq, nr, cp) = (3, 900, 256);
+        let (q, g) = job_buffers(16, nq, nr, cp);
+        let job = MvmJob::new(&q, nq, &g, nr, cp, AdcConfig::new(3, 128.0));
+        let want = RefBackend.mvm_scores(&job).unwrap();
+        for threads in [4usize, 8, 16] {
+            let got = ParallelBackend::new(threads).mvm_scores(&job).unwrap();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn stripe_height_is_tile_aligned_and_work_honest() {
+        let be = ParallelBackend::new(8);
+        // Any auto stripe is a positive multiple of ARRAY_DIM.
+        for (nq, nr, cp) in [(1usize, 1500usize, 256usize), (3, 900, 128), (1, 1, 128)] {
+            let sr = be.stripe_height(nq, nr, cp);
+            assert!(sr > 0 && sr % ARRAY_DIM == 0, "({nq},{nr},{cp}) -> {sr}");
+        }
+        // Barely above the MAC cutoff: the work budget caps striping to a
+        // single stripe rather than slicing a thin job eight ways.
+        let sr = be.stripe_height(1, 800, 128);
+        assert_eq!(sr, 800usize.div_ceil(ARRAY_DIM) * ARRAY_DIM);
+        // Overrides round up to a tile.
+        assert_eq!(ParallelBackend::new(8).with_stripe_rows(1).stripe_height(1, 1500, 256), 128);
+        assert_eq!(ParallelBackend::new(8).with_stripe_rows(300).stripe_height(1, 1500, 256), 384);
+    }
+
+    #[test]
+    fn empty_jobs_early_return() {
+        // nq == 0 and nr == 0 must return without touching chunk math.
+        let be = ParallelBackend::new(8);
+        let g = vec![1.0f32; 4 * 128];
+        let no_q = MvmJob::new(&[], 0, &g, 4, 128, AdcConfig::ideal());
+        assert_eq!(be.mvm_scores(&no_q).unwrap().len(), 0);
+        let q = vec![1.0f32; 2 * 128];
+        let no_r = MvmJob::new(&q, 2, &[], 0, 128, AdcConfig::ideal());
+        assert_eq!(be.mvm_scores(&no_r).unwrap().len(), 0);
+        // Segmented with only-empty segments is the same degenerate shape.
+        let seg_job = MvmJob::segmented(&q, 2, &g, &[2..2], 128, AdcConfig::ideal());
+        assert_eq!(be.mvm_scores(&seg_job).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn dac_applied_passthrough_bit_identical() {
+        // Fractional queries, both sharding shapes: the hoisted flag must
+        // ride through to every shard/piece without changing scores.
+        let mut rng = Rng::new(17);
+        for (nq, nr, threads) in [(1usize, 1200usize, 8usize), (24, 300, 4)] {
+            let cp = 256;
+            let q: Vec<f32> = (0..nq * cp).map(|_| rng.range_i64(-40, 40) as f32 / 8.0).collect();
+            let g: Vec<f32> = (0..nr * cp).map(|_| rng.range_i64(-3, 3) as f32).collect();
+            let adc = AdcConfig::new(6, 512.0);
+            let want = ParallelBackend::new(threads)
+                .mvm_scores(&MvmJob::new(&q, nq, &g, nr, cp, adc))
+                .unwrap();
+            let dacq: Vec<f32> = q.iter().map(|&x| dac_quantize(x)).collect();
+            let hoisted = MvmJob::new(&dacq, nq, &g, nr, cp, adc).with_dac_applied();
+            let got = ParallelBackend::new(threads).mvm_scores(&hoisted).unwrap();
+            assert_eq!(got, want, "nq={nq}");
+        }
+    }
+
+    #[test]
+    fn slice_segments_maps_output_columns_to_panel_rows() {
+        let segs = vec![10..13, 20..20, 5..9];
+        // Candidate rows: [10,11,12, 5,6,7,8].
+        assert_eq!(slice_segments(&segs, 0, 7), vec![10..13, 5..9]);
+        assert_eq!(slice_segments(&segs, 1, 3), vec![11..13]);
+        assert_eq!(slice_segments(&segs, 2, 5), vec![12..13, 5..7]);
+        assert_eq!(slice_segments(&segs, 3, 7), vec![5..9]);
+        assert!(slice_segments(&segs, 7, 7).is_empty());
     }
 
     #[test]

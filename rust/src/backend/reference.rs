@@ -11,7 +11,7 @@
 //! run as a single full-panel segment; segmented jobs score their ranges
 //! in place with no gather.
 
-use crate::array::imc_mvm_blocked_into;
+use crate::array::{imc_mvm_blocked_dacq_into, imc_mvm_blocked_into};
 use crate::util::error::Result;
 
 use super::{MvmBackend, MvmJob};
@@ -30,7 +30,14 @@ impl MvmBackend for RefBackend {
     fn mvm_scores_into(&self, job: &MvmJob, out: &mut [f32]) -> Result<()> {
         let mut storage = [0..0];
         let segments = job.effective_segments(&mut storage);
-        imc_mvm_blocked_into(job.queries, job.refs, segments, job.nq, job.cp, job.adc, out);
+        if job.dac_applied {
+            // Caller already DAC-quantized the batch (ScoreScratch
+            // hoisting); skip the per-job re-quantization pass.
+            let (q, nq, cp) = (job.queries, job.nq, job.cp);
+            imc_mvm_blocked_dacq_into(q, job.refs, segments, nq, cp, job.adc, out);
+        } else {
+            imc_mvm_blocked_into(job.queries, job.refs, segments, job.nq, job.cp, job.adc, out);
+        }
         Ok(())
     }
 }
@@ -75,5 +82,22 @@ mod tests {
         let mut got = vec![f32::NAN; nq * job.nr];
         RefBackend.mvm_scores_into(&job, &mut got).unwrap();
         assert_eq!(got, want);
+    }
+
+    #[test]
+    fn dac_applied_jobs_bit_identical() {
+        // Fractional query values so the DAC really quantizes; the hoisted
+        // (pre-quantized) job must score identically to the plain one.
+        let mut rng = Rng::new(9);
+        let (nq, nr, cp) = (5, 40, 128);
+        let q: Vec<f32> = (0..nq * cp).map(|_| rng.range_i64(-40, 40) as f32 / 8.0).collect();
+        let g: Vec<f32> = (0..nr * cp).map(|_| rng.range_i64(-3, 3) as f32).collect();
+        let adc = AdcConfig::new(6, 512.0);
+        let want = RefBackend.mvm_scores(&MvmJob::new(&q, nq, &g, nr, cp, adc)).unwrap();
+
+        let dacq: Vec<f32> = q.iter().map(|&x| crate::array::dac_quantize(x)).collect();
+        let hoisted = MvmJob::new(&dacq, nq, &g, nr, cp, adc).with_dac_applied();
+        assert!(hoisted.dac_applied);
+        assert_eq!(RefBackend.mvm_scores(&hoisted).unwrap(), want);
     }
 }

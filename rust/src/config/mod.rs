@@ -68,6 +68,11 @@ pub struct BackendConfig {
     /// whose per-shard library fits `num_banks` banks (1 when it already
     /// fits), N = force exactly N engines of `num_banks` banks each.
     pub shards: usize,
+    /// Reference-row stripe height for the parallel backend's
+    /// `nq < threads` path (candidate rows per stripe, rounded up to a
+    /// 128-row tile): 0 = size automatically from the worker count and the
+    /// MAC budget. Score-neutral — stripes change wall time only.
+    pub stripe_rows: usize,
 }
 
 impl Default for BackendConfig {
@@ -78,6 +83,7 @@ impl Default for BackendConfig {
             threads: 0,
             min_utilization: 0.3,
             shards: 0,
+            stripe_rows: 0,
         }
     }
 }
@@ -212,6 +218,7 @@ impl SpecPcmConfig {
                 }
                 "backend.threads" => cfg.backend.threads = get_usize(val, key)?,
                 "backend.shards" => cfg.backend.shards = get_usize(val, key)?,
+                "backend.stripe_rows" => cfg.backend.stripe_rows = get_usize(val, key)?,
                 "backend.min_utilization" => {
                     cfg.backend.min_utilization =
                         val.as_f64().ok_or("backend.min_utilization")?
@@ -247,6 +254,7 @@ impl SpecPcmConfig {
         s += &kv::fmt_num("threads", self.backend.threads);
         s += &kv::fmt_num("min_utilization", self.backend.min_utilization);
         s += &kv::fmt_num("shards", self.backend.shards);
+        s += &kv::fmt_num("stripe_rows", self.backend.stripe_rows);
         s
     }
 
@@ -362,7 +370,7 @@ mod tests {
 
         let c = SpecPcmConfig::from_toml(
             "hd_dim = 1024\n[backend]\nkind = \"ref\"\nencode_kind = \"bitpacked\"\n\
-             threads = 4\nmin_utilization = 0.5\nshards = 3\n",
+             threads = 4\nmin_utilization = 0.5\nshards = 3\nstripe_rows = 256\n",
         )
         .unwrap();
         assert_eq!(c.backend.kind, BackendKind::Reference);
@@ -370,8 +378,11 @@ mod tests {
         assert_eq!(c.backend.threads, 4);
         assert_eq!(c.backend.min_utilization, 0.5);
         assert_eq!(c.backend.shards, 3);
-        // Default stays auto (0).
+        assert_eq!(c.backend.stripe_rows, 256);
+        // Defaults stay auto (0).
         assert_eq!(SpecPcmConfig::paper_search().backend.shards, 0);
+        assert_eq!(SpecPcmConfig::paper_search().backend.stripe_rows, 0);
+        assert!(SpecPcmConfig::from_toml("[backend]\nstripe_rows = -1").is_err());
 
         // to_toml emits the section and parses back identically.
         let back = SpecPcmConfig::from_toml(&c.to_toml()).unwrap();

@@ -75,7 +75,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
 
-use crate::array::AdcConfig;
+use crate::array::{dac_quantize, AdcConfig};
 use crate::backend::{BackendDispatcher, MvmJob};
 use crate::config::SpecPcmConfig;
 use crate::device::{MlcConfig, NoiseModel, Programmer};
@@ -426,6 +426,12 @@ pub struct SearchEngine {
 #[derive(Debug, Default)]
 struct ScoreScratch {
     segments: Vec<std::ops::Range<usize>>,
+    /// Whole-batch DAC-quantized queries (PR 6 hoisting): each packed
+    /// query is quantized once per batch here, instead of once per
+    /// candidate-group job inside the blocked kernel. Score-neutral by
+    /// DAC idempotence; op accounting is unchanged (DAC ops are charged
+    /// per logical conversion, not per kernel call).
+    dacq: Vec<f32>,
     q_rows: Vec<f32>,
     scores: Vec<f32>,
 }
@@ -771,6 +777,12 @@ impl SearchEngine {
             .map(|mut g| std::mem::take(&mut *g))
             .unwrap_or_default();
 
+        // DAC the whole batch once; group jobs below carry `dac_applied`
+        // so the kernel skips its per-call re-quantization pass.
+        bufs.dacq.clear();
+        bufs.dacq.reserve(packed_queries.len());
+        bufs.dacq.extend(packed_queries.iter().map(|&x| dac_quantize(x)));
+
         // Group queries by identical candidate-key sets so one IMC batch
         // shares one reference row block.
         let mut groups: BTreeMap<Vec<BucketKey>, Vec<usize>> = BTreeMap::new();
@@ -811,13 +823,13 @@ impl SearchEngine {
             }
 
             // Queries within a group are scattered in the batch; gather
-            // just those rows into the reused stripe (references are
-            // never gathered).
+            // just those (already-quantized) rows into the reused stripe
+            // (references are never gathered).
             bufs.q_rows.clear();
             bufs.q_rows.reserve(nq * cp);
             for &qi in &q_idxs {
                 bufs.q_rows
-                    .extend_from_slice(&packed_queries[qi * cp..(qi + 1) * cp]);
+                    .extend_from_slice(&bufs.dacq[qi * cp..(qi + 1) * cp]);
             }
             bufs.scores.clear();
             bufs.scores.resize(nq * n_cand, 0.0);
@@ -829,7 +841,8 @@ impl SearchEngine {
                 &bufs.segments,
                 cp,
                 self.adc,
-            );
+            )
+            .with_dac_applied();
             debug_assert_eq!(job.nr, n_cand);
             wall.time("similarity (IMC)", || {
                 backend.execute_into(&job, &mut bufs.scores, &mut scratch_ops)

@@ -62,7 +62,9 @@ CAPACITY:
 BACKENDS:
   MVM (--backend): how score tiles execute
     ref       single-threaded reference path (bit-exact oracle)
-    parallel  bank-sharded across host threads (default; --threads 0 = auto)
+    parallel  bank-sharded across host threads (default; --threads 0 = auto);
+              single-query jobs stripe the candidate span across workers
+              (--stripe-rows N overrides the stripe height, 0 = auto)
     pjrt      AOT artifacts through PJRT (needs the `pjrt` cargo feature)
   Encode (--encode-backend): how HD encode+pack executes
     scalar     element-serial reference path (bit-exact oracle)
@@ -153,6 +155,7 @@ fn load_cfg(args: &Args, default: SpecPcmConfig) -> Result<SpecPcmConfig> {
         cfg.backend.encode_kind = EncodeKind::from_name(e)?;
     }
     cfg.backend.threads = args.get_usize("threads", cfg.backend.threads)?;
+    cfg.backend.stripe_rows = args.get_usize("stripe-rows", cfg.backend.stripe_rows)?;
     cfg.num_banks = args.get_usize("num-banks", cfg.num_banks)?;
     if let Some(s) = args.flags.get("shards") {
         cfg.backend.shards = if s == "auto" {
@@ -537,10 +540,12 @@ mod tests {
 
     #[test]
     fn backend_flags_apply_to_config() {
-        let a = Args::parse(&argv(&["--backend", "ref", "--threads", "2"])).unwrap();
+        let a = Args::parse(&argv(&["--backend", "ref", "--threads", "2", "--stripe-rows", "384"]))
+            .unwrap();
         let cfg = load_cfg(&a, SpecPcmConfig::paper_clustering()).unwrap();
         assert_eq!(cfg.backend.kind, BackendKind::Reference);
         assert_eq!(cfg.backend.threads, 2);
+        assert_eq!(cfg.backend.stripe_rows, 384);
         let bad = Args::parse(&argv(&["--backend", "gpu"])).unwrap();
         assert!(load_cfg(&bad, SpecPcmConfig::paper_clustering()).is_err());
     }

@@ -18,14 +18,18 @@ fn rand_packed(rng: &mut Rng, len: usize, n: i64) -> Vec<f32> {
 }
 
 /// Seeded synthetic workloads, deliberately including ragged tiles (`nq`,
-/// `nr` not multiples of 128) and a tile big enough to engage threading.
-const SHAPES: [(usize, usize, usize); 6] = [
+/// `nr` not multiples of 128), a tile big enough to engage threading, and
+/// `nq < threads` large-span shapes that route the parallel backend down
+/// the PR 6 column-striped path.
+const SHAPES: [(usize, usize, usize); 8] = [
     (1, 1, 128),     // minimal
     (3, 5, 128),     // tiny bucket
     (37, 211, 256),  // ragged both ways
     (64, 128, 384),  // aligned rows, odd width
     (128, 100, 256), // ragged refs only
     (50, 1024, 768), // wide tile (well above the threading cutoff)
+    (1, 2048, 256),  // single query, large span (column-striped)
+    (3, 1500, 384),  // few queries, large ragged span (mixed 2-D split)
 ];
 
 #[test]
@@ -45,6 +49,25 @@ fn ref_and_parallel_bit_identical_across_thread_counts() {
                     "shape ({nq},{nr},{cp}) adc {adc:?} threads {threads}"
                 );
             }
+        }
+    }
+}
+
+#[test]
+fn stripe_shapes_bit_identical_on_single_query_spans() {
+    // Every stripe-height override (auto, one-tile, ragged round-up,
+    // bigger-than-span) must be score-neutral on the column-striped path.
+    let (nq, nr, cp) = (1usize, 2048usize, 256usize);
+    let mut rng = Rng::new(0x57a1);
+    let q = rand_packed(&mut rng, nq * cp, 3);
+    let g = rand_packed(&mut rng, nr * cp, 3);
+    let job = MvmJob::new(&q, nq, &g, nr, cp, AdcConfig::new(6, 512.0));
+    let want = RefBackend.mvm_scores(&job).unwrap();
+    for threads in [2usize, 4, 16] {
+        for stripe_rows in [0usize, 1, 128, 500, 1 << 20] {
+            let be = ParallelBackend::new(threads).with_stripe_rows(stripe_rows);
+            let got = be.mvm_scores(&job).unwrap();
+            assert_eq!(got, want, "threads={threads} stripe_rows={stripe_rows}");
         }
     }
 }

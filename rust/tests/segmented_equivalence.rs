@@ -104,6 +104,49 @@ fn ragged_segments_bit_identical_to_gathered_path() {
     }
 }
 
+/// The PR 6 column-striped path (`nq < threads`, large candidate span)
+/// against the gathered scalar oracle, across thread counts and stripe
+/// overrides. The panel carries non-integer (noisy-conductance-like)
+/// values so f32 rounding is live: any drift from the lane-ordered
+/// accumulation contract — in the striped fan-out or the kernel — breaks
+/// bit-identity here, where integer-only data would mask it.
+#[test]
+fn single_query_large_span_bit_identical_to_gathered_path() {
+    let mut rng = Rng::new(0x1a9e);
+    let (panel_rows, cp) = (2200usize, 256usize);
+    let panel: Vec<f32> = (0..panel_rows * cp)
+        .map(|_| rng.range_i64(-3, 3) as f32 + rng.range_i64(-400, 400) as f32 / 7000.0)
+        .collect();
+    let queries = rand_packed(&mut rng, cp, 3);
+    let adc = AdcConfig::new(6, 512.0);
+    // Ragged large-span segments: tile-straddling, single-row, empty.
+    let segs: Vec<Range<usize>> = vec![0..700, 720..721, 800..800, 900..1930, 2000..2200];
+    let gathered = gather_rows(&panel, &segs, cp);
+    let n_cand: usize = segs.iter().map(|s| s.len()).sum();
+    let want = imc_mvm_ref(&queries, &gathered, 1, n_cand, cp, adc);
+
+    let job = MvmJob::segmented(&queries, 1, &panel, &segs, cp, adc);
+    let mut out = vec![f32::NAN; n_cand];
+    for threads in [1usize, 2, 4, 8] {
+        for stripe_rows in [0usize, 128, 384, 1 << 20] {
+            out.fill(f32::NAN);
+            ParallelBackend::new(threads)
+                .with_stripe_rows(stripe_rows)
+                .mvm_scores_into(&job, &mut out)
+                .unwrap();
+            assert_eq!(out, want, "threads={threads} stripe_rows={stripe_rows}");
+        }
+    }
+
+    // Op charge through the dispatcher is stripe-shape-independent too.
+    let disp = BackendDispatcher::parallel(8);
+    let mut ops = OpCounts::default();
+    out.fill(f32::NAN);
+    disp.execute_into(&job, &mut out, &mut ops).unwrap();
+    assert_eq!(out, want);
+    assert_eq!(ops.mvm_ops, job.bank_ops());
+}
+
 fn search_cfg() -> SpecPcmConfig {
     SpecPcmConfig {
         hd_dim: 2048,
@@ -152,7 +195,8 @@ fn engine_search_batch_matches_gathered_oracle() {
             for &ri in &cand {
                 rows.extend_from_slice(engine.noisy_row(ri));
             }
-            let scores = imc_mvm_ref(&packed[qi * cp..(qi + 1) * cp], &rows, 1, cand.len(), cp, adc);
+            let q_row = &packed[qi * cp..(qi + 1) * cp];
+            let scores = imc_mvm_ref(q_row, &rows, 1, cand.len(), cp, adc);
             for (ci, &ri) in cand.iter().enumerate() {
                 let s = scores[ci];
                 if ri < engine.n_targets() {
