@@ -1,0 +1,143 @@
+"""Tests for `python/tools/bench_compare.py` (the serving-bench
+regression gate): regression / no-regression / sentinel-skip /
+dropped-record behavior, plus the parse-error and tiny-mismatch paths.
+stdlib + pytest only.
+"""
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+_spec = importlib.util.spec_from_file_location(
+    "bench_compare", os.path.join(REPO_ROOT, "python", "tools", "bench_compare.py")
+)
+bc = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bc)
+
+
+def record(section, threads, gathered, segmented=None, tiny=False, **extra):
+    rec = {"section": section, "threads": threads, "qps_gathered": gathered, "tiny": tiny}
+    if segmented is not None:
+        rec["qps_segmented"] = segmented
+    rec.update(extra)
+    return rec
+
+
+def write(tmp_path, name, records):
+    p = tmp_path / name
+    p.write_text(json.dumps(records), encoding="utf-8")
+    return str(p)
+
+
+def compare(tmp_path, baseline, current, extra_args=()):
+    b = write(tmp_path, "baseline.json", baseline)
+    c = write(tmp_path, "current.json", current)
+    return bc.main([b, c, *extra_args])
+
+
+def test_no_regression_passes(tmp_path, capsys):
+    base = [record("batch_scoring", 4, 100.0, 120.0)]
+    curr = [record("batch_scoring", 4, 101.0, 125.0)]
+    assert compare(tmp_path, base, curr) == 0
+    out = capsys.readouterr().out
+    assert "ok" in out and "FAIL" not in out
+
+
+def test_regression_beyond_threshold_fails(tmp_path, capsys):
+    base = [record("batch_scoring", 4, 100.0)]
+    curr = [record("batch_scoring", 4, 80.0)]  # -20% < default 15% budget
+    assert compare(tmp_path, base, curr) == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_regression_within_threshold_passes(tmp_path):
+    base = [record("batch_scoring", 4, 100.0)]
+    curr = [record("batch_scoring", 4, 90.0)]  # -10% within default 15%
+    assert compare(tmp_path, base, curr) == 0
+    # ...but a tightened budget catches it.
+    assert compare(tmp_path, base, curr, ["--max-regression", "0.05"]) == 1
+
+
+def test_sentinel_baseline_skipped_not_failed(tmp_path, capsys):
+    # A schema-only baseline (qps 0.0) committed from a toolchain-less
+    # machine degrades to a schema check.
+    base = [record("single_query", 1, 0.0)]
+    curr = [record("single_query", 1, 5000.0)]
+    assert compare(tmp_path, base, curr) == 0
+    out = capsys.readouterr().out
+    assert "skip" in out and "sentinel" in out
+
+
+def test_current_unmeasured_is_a_failure(tmp_path, capsys):
+    # The inverse direction is NOT a sentinel: losing a real measurement
+    # must fail.
+    base = [record("single_query", 1, 5000.0)]
+    curr = [record("single_query", 1, 0.0)]
+    assert compare(tmp_path, base, curr) == 1
+    assert "unmeasured" in capsys.readouterr().err
+
+
+def test_dropped_record_is_a_failure(tmp_path, capsys):
+    base = [record("batch_scoring", 4, 100.0), record("single_query", 1, 900.0)]
+    curr = [record("batch_scoring", 4, 100.0)]
+    assert compare(tmp_path, base, curr) == 1
+    assert "missing from current run" in capsys.readouterr().err
+
+
+def test_tiny_scale_mismatch_skipped(tmp_path, capsys):
+    base = [record("batch_scoring", 4, 100.0, tiny=False)]
+    curr = [record("batch_scoring", 4, 2.0, tiny=True)]  # smoke run, incomparable
+    assert compare(tmp_path, base, curr) == 0
+    assert "scale mismatch" in capsys.readouterr().out
+
+
+def test_meta_records_ignored(tmp_path):
+    meta = {"section": "meta", "git": "abc123", "host": "ci"}
+    base = [meta, record("batch_scoring", 4, 100.0)]
+    curr = [meta, record("batch_scoring", 4, 100.0)]
+    assert compare(tmp_path, base, curr) == 0
+
+
+def test_records_matched_by_section_and_threads(tmp_path):
+    # Same section at different thread counts are distinct measurements.
+    base = [record("batch_scoring", 1, 50.0), record("batch_scoring", 4, 100.0)]
+    curr = [record("batch_scoring", 1, 50.0), record("batch_scoring", 4, 50.0)]
+    assert compare(tmp_path, base, curr) == 1
+
+
+def test_self_compare_is_clean(tmp_path):
+    recs = [record("batch_scoring", 4, 100.0, 120.0), record("single_query", 1, 900.0)]
+    assert compare(tmp_path, recs, recs) == 0
+
+
+def test_parse_error_exits_2(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text("not json", encoding="utf-8")
+    good = write(tmp_path, "good.json", [])
+    with pytest.raises(SystemExit) as exc:
+        bc.main([str(bad), good])
+    assert exc.value.code == 2
+
+
+def test_non_array_json_exits_2(tmp_path):
+    notarray = write(tmp_path, "obj.json", {})
+    good = write(tmp_path, "good.json", [])
+    with pytest.raises(SystemExit) as exc:
+        bc.main([notarray, good])
+    assert exc.value.code == 2
+
+
+def test_max_regression_bounds_enforced(tmp_path):
+    b = write(tmp_path, "b.json", [])
+    c = write(tmp_path, "c.json", [])
+    with pytest.raises(SystemExit):
+        bc.main([b, c, "--max-regression", "1.5"])
+
+
+def test_committed_baseline_self_compares_clean():
+    baseline = os.path.join(REPO_ROOT, "BENCH_serving.json")
+    assert bc.main([baseline, baseline]) == 0

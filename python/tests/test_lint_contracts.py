@@ -1,0 +1,474 @@
+"""Fixture tests for the contract linter (`python/tools/lint_contracts.py`).
+
+Each rule is exercised with an inline Rust snippet pair — one violating,
+one conforming — plus allowlist-marker handling, `--explain` output, and
+a self-check that the committed tree is lint-clean. stdlib + pytest only
+(no rust toolchain, no jax).
+"""
+
+import importlib.util
+import os
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+_spec = importlib.util.spec_from_file_location(
+    "lint_contracts", os.path.join(REPO_ROOT, "python", "tools", "lint_contracts.py")
+)
+lint = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(lint)
+
+
+def write_tree(tmp_path, files):
+    """Lay out {relpath-under-rust/src: text} and return the fake repo root."""
+    for rel, text in files.items():
+        p = tmp_path / "rust" / "src" / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(text, encoding="utf-8")
+    return tmp_path
+
+
+def rule_hits(findings, rule_id):
+    return [f for f in findings if f.rule_id == rule_id]
+
+
+# -------------------------------------------------------------------------
+# C1-REASSOC
+# -------------------------------------------------------------------------
+
+VIOLATING_ACCUM = """\
+pub fn hot_dot(xs: &[f32], ys: &[f32]) -> f32 {
+    let mut acc = 0f32;
+    for (x, y) in xs.iter().zip(ys) {
+        acc += x * y;
+    }
+    acc
+}
+"""
+
+CONFORMING_LANE = """\
+pub fn lane_tile_dot(xs: &[f32], ys: &[f32]) -> f32 {
+    let mut lanes = [0f32; 8];
+    for (k, (x, y)) in xs.iter().zip(ys).enumerate() {
+        lanes[k % 8] += x * y;
+    }
+    lanes.iter().copied().sum::<f32>()
+}
+"""
+
+
+def test_c1_fires_on_raw_accumulation(tmp_path):
+    root = write_tree(tmp_path, {"array/kernel.rs": VIOLATING_ACCUM})
+    hits = rule_hits(lint.lint_tree(root), "C1-REASSOC")
+    assert len(hits) == 1
+    assert hits[0].path == "array/kernel.rs"
+    assert hits[0].line == 4
+    assert "acc" in hits[0].message
+
+
+def test_c1_blesses_lane_primitive_bodies(tmp_path):
+    root = write_tree(tmp_path, {"array/kernel.rs": CONFORMING_LANE})
+    assert rule_hits(lint.lint_tree(root), "C1-REASSOC") == []
+
+
+def test_c1_scoped_to_kernel_dirs(tmp_path):
+    # The same accumulation in coordinator/ (f64 merge math lives there)
+    # is out of scope for C1.
+    root = write_tree(tmp_path, {"coordinator/foo.rs": VIOLATING_ACCUM})
+    assert rule_hits(lint.lint_tree(root), "C1-REASSOC") == []
+
+
+def test_c1_fires_on_sum_fold_and_dot_shapes(tmp_path):
+    text = """\
+pub fn a(xs: &[f32]) -> f32 {
+    xs.iter().copied().sum::<f32>()
+}
+pub fn b(xs: &[f32]) -> f32 {
+    xs.iter().fold(0f32, |a, x| a + x)
+}
+pub fn c(xs: &[f32], ys: &[f32]) -> f32 {
+    xs.iter().zip(ys).map(|(x, y)| x * y).sum()
+}
+"""
+    root = write_tree(tmp_path, {"hd/sums.rs": text})
+    hits = rule_hits(lint.lint_tree(root), "C1-REASSOC")
+    assert [h.line for h in hits] == [2, 5, 8]
+
+
+def test_c1_ignores_integer_sums_and_tests(tmp_path):
+    text = """\
+pub fn popcount_dot(xs: &[u64]) -> u32 {
+    xs.iter().map(|w| w.count_ones()).sum()
+}
+pub fn lens(xs: &[Vec<f32>]) -> usize {
+    let mut n = 0usize;
+    for x in xs { n += x.len(); }
+    xs.iter().map(|s| s.len()).sum()
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn oracle() {
+        let mut acc = 0f32;
+        for x in [1.0f32, 2.0] { acc += x; }
+        assert!(acc > 0.0);
+    }
+}
+"""
+    root = write_tree(tmp_path, {"hd/ok.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C1-REASSOC") == []
+
+
+def test_c1_tracks_mut_slice_aliases(tmp_path):
+    text = """\
+pub fn blocked(n: usize) {
+    let mut acc = [0f32; 64];
+    let sub = &mut acc[..n];
+    sub[0] += 1.0;
+}
+"""
+    root = write_tree(tmp_path, {"backend/blk.rs": text})
+    hits = rule_hits(lint.lint_tree(root), "C1-REASSOC")
+    assert [h.line for h in hits] == [4]
+
+
+def test_c1_marker_allows_with_reason(tmp_path):
+    text = VIOLATING_ACCUM.replace(
+        "        acc += x * y;",
+        "        // lint: reassoc-ok (digital baseline, never bit-compared)\n"
+        "        acc += x * y;",
+    )
+    root = write_tree(tmp_path, {"array/kernel.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C1-REASSOC") == []
+
+
+def test_c1_marker_without_reason_is_a_finding(tmp_path):
+    text = VIOLATING_ACCUM.replace(
+        "        acc += x * y;",
+        "        acc += x * y; // lint: reassoc-ok ()",
+    )
+    root = write_tree(tmp_path, {"array/kernel.rs": text})
+    hits = rule_hits(lint.lint_tree(root), "C1-REASSOC")
+    # Both the unexcused accumulation and the empty-reason marker fire.
+    assert len(hits) == 2
+    assert any("non-empty reason" in h.message for h in hits)
+
+
+# -------------------------------------------------------------------------
+# C2-CHARGE
+# -------------------------------------------------------------------------
+
+VIOLATING_CHARGE = """\
+use crate::energy::OpCounts;
+
+pub fn serve(ops: &mut OpCounts, n: u64) {
+    ops.mvm_ops += n;
+}
+"""
+
+CONFORMING_CHARGE = """\
+use crate::energy::OpCounts;
+
+pub struct GroupCharges;
+
+impl GroupCharges {
+    pub fn charge(&self, ops: &mut OpCounts, n: u64) {
+        ops.mvm_ops += n;
+        ops.merge_elements += n;
+    }
+}
+"""
+
+
+def test_c2_fires_on_decentralized_charge(tmp_path):
+    root = write_tree(tmp_path, {"coordinator/new_path.rs": VIOLATING_CHARGE})
+    hits = rule_hits(lint.lint_tree(root), "C2-CHARGE")
+    assert len(hits) == 1
+    assert hits[0].line == 4
+    assert "mvm_ops" in hits[0].message
+
+
+def test_c2_blesses_central_sites(tmp_path):
+    root = write_tree(tmp_path, {"coordinator/new_path.rs": CONFORMING_CHARGE})
+    assert rule_hits(lint.lint_tree(root), "C2-CHARGE") == []
+
+
+def test_c2_requires_opcounts_import(tmp_path):
+    # `features` / `mvm_ops` on unrelated types in a file that never
+    # touches OpCounts must not fire.
+    text = """\
+pub struct BankCounters { pub mvm_ops: u64 }
+pub fn bump(c: &mut BankCounters) { c.mvm_ops += 1; }
+"""
+    root = write_tree(tmp_path, {"array/bank2.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C2-CHARGE") == []
+
+
+def test_c2_receiver_heuristic_skips_non_ops_chains(tmp_path):
+    text = """\
+use crate::energy::OpCounts;
+pub fn bump(bank: &mut Bank) {
+    bank.counters.mvm_ops += 1;
+}
+"""
+    root = write_tree(tmp_path, {"isa/bank3.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C2-CHARGE") == []
+
+
+def test_c2_whole_struct_merges_allowed(tmp_path):
+    text = """\
+use crate::energy::OpCounts;
+pub fn fold(total: &mut OpCounts, part: &OpCounts) {
+    *total += part;
+}
+"""
+    root = write_tree(tmp_path, {"coordinator/fold.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C2-CHARGE") == []
+
+
+def test_c2_marker_allows(tmp_path):
+    text = VIOLATING_CHARGE.replace(
+        "    ops.mvm_ops += n;",
+        "    // lint: charge-ok (single-site charge, no shard split exists)\n"
+        "    ops.mvm_ops += n;",
+    )
+    root = write_tree(tmp_path, {"coordinator/new_path.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C2-CHARGE") == []
+
+
+# -------------------------------------------------------------------------
+# C3-SYNC
+# -------------------------------------------------------------------------
+
+VIOLATING_SYNC = """\
+use std::cell::RefCell;
+
+pub struct Engine {
+    cache: RefCell<Vec<f32>>,
+}
+
+pub fn stats(m: &std::sync::Mutex<u64>) -> u64 {
+    *m.lock().unwrap()
+}
+"""
+
+CONFORMING_SYNC = """\
+use crate::util::sync::lock_unpoisoned;
+
+pub fn stats(m: &std::sync::Mutex<u64>) -> u64 {
+    *lock_unpoisoned(m, "stats")
+}
+
+pub fn maybe(m: &std::sync::Mutex<u64>) -> Option<u64> {
+    m.try_lock().ok().map(|g| *g)
+}
+"""
+
+
+def test_c3_fires_on_refcell_and_bare_lock(tmp_path):
+    root = write_tree(tmp_path, {"coordinator/bad.rs": VIOLATING_SYNC})
+    hits = rule_hits(lint.lint_tree(root), "C3-SYNC")
+    assert [h.line for h in hits] == [1, 4, 8]
+    assert any("RefCell" in h.message for h in hits)
+    assert any("lock_unpoisoned" in h.message for h in hits)
+
+
+def test_c3_conforming_helper_and_try_lock_pass(tmp_path):
+    root = write_tree(tmp_path, {"coordinator/good.rs": CONFORMING_SYNC})
+    assert rule_hits(lint.lint_tree(root), "C3-SYNC") == []
+
+
+def test_c3_lock_banned_even_outside_engine_dirs(tmp_path):
+    root = write_tree(tmp_path, {"telemetry/t.rs": "fn f(m: &M) { m.lock().unwrap(); }\n"})
+    assert len(rule_hits(lint.lint_tree(root), "C3-SYNC")) == 1
+
+
+def test_c3_util_sync_itself_exempt(tmp_path):
+    root = write_tree(
+        tmp_path, {"util/sync.rs": "pub fn lock_unpoisoned(m: &M) { m.lock().unwrap(); }\n"}
+    )
+    assert rule_hits(lint.lint_tree(root), "C3-SYNC") == []
+
+
+def test_c3_refcell_in_comment_or_test_ignored(tmp_path):
+    text = """\
+// Engines must never hold a RefCell — see contract C3-SYNC.
+pub struct Engine;
+#[cfg(test)]
+mod tests {
+    use std::rc::Rc;
+    #[test]
+    fn scratch() { let _ = Rc::new(3); }
+}
+"""
+    root = write_tree(tmp_path, {"coordinator/doc.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C3-SYNC") == []
+
+
+def test_c3_arc_does_not_false_positive_as_rc(tmp_path):
+    text = "use std::sync::Arc;\npub struct E { x: Arc<Vec<f32>> }\n"
+    root = write_tree(tmp_path, {"backend/arc.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C3-SYNC") == []
+
+
+# -------------------------------------------------------------------------
+# C4-RNG
+# -------------------------------------------------------------------------
+
+VIOLATING_RNG = """\
+use crate::util::Rng;
+
+pub fn program_shard(seed: u64) -> Rng {
+    Rng::new(seed ^ 0x5e)
+}
+"""
+
+CONFORMING_RNG = """\
+use crate::util::Rng;
+
+pub struct ProgramContext { rng: Rng }
+
+impl ProgramContext {
+    pub fn noise_rng(seed: u64) -> Rng {
+        Rng::new(seed ^ 0x5e)
+    }
+}
+"""
+
+
+def test_c4_fires_on_reseeding(tmp_path):
+    root = write_tree(tmp_path, {"coordinator/shard2.rs": VIOLATING_RNG})
+    hits = rule_hits(lint.lint_tree(root), "C4-RNG")
+    assert [h.line for h in hits] == [4]
+    assert "chained" in hits[0].message
+
+
+def test_c4_blesses_program_context(tmp_path):
+    root = write_tree(tmp_path, {"coordinator/ctx.rs": CONFORMING_RNG})
+    assert rule_hits(lint.lint_tree(root), "C4-RNG") == []
+
+
+def test_c4_out_of_scope_dirs_and_tests_pass(tmp_path):
+    root = write_tree(
+        tmp_path,
+        {
+            "ms/gen.rs": VIOLATING_RNG,  # synthetic-data RNG: fine
+            "coordinator/t.rs": "#[cfg(test)]\nmod tests {\n    fn f() { let r = Rng::new(1); }\n}\n",
+        },
+    )
+    assert rule_hits(lint.lint_tree(root), "C4-RNG") == []
+
+
+def test_c4_marker_allows(tmp_path):
+    text = VIOLATING_RNG.replace(
+        "    Rng::new(seed ^ 0x5e)",
+        "    // lint: rng-ok (independent stream, never merged with scores)\n"
+        "    Rng::new(seed ^ 0x5e)",
+    )
+    root = write_tree(tmp_path, {"coordinator/shard2.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C4-RNG") == []
+
+
+# -------------------------------------------------------------------------
+# C5-UNSAFE
+# -------------------------------------------------------------------------
+
+LIB_WITH_FORBID = "#![forbid(unsafe_code)]\npub mod array;\n"
+LIB_WITHOUT_FORBID = "pub mod array;\n"
+
+
+def test_c5_missing_forbid_is_a_finding(tmp_path):
+    root = write_tree(tmp_path, {"lib.rs": LIB_WITHOUT_FORBID})
+    hits = rule_hits(lint.lint_tree(root), "C5-UNSAFE")
+    assert len(hits) == 1
+    assert "forbid(unsafe_code)" in hits[0].message
+
+
+def test_c5_unsafe_without_safety_comment(tmp_path):
+    text = """\
+pub fn peek(p: *const f32) -> f32 {
+    unsafe { *p }
+}
+"""
+    root = write_tree(tmp_path, {"lib.rs": LIB_WITH_FORBID, "array/raw.rs": text})
+    hits = rule_hits(lint.lint_tree(root), "C5-UNSAFE")
+    assert [h.line for h in hits] == [2]
+
+
+def test_c5_safety_comment_conforms(tmp_path):
+    text = """\
+pub fn peek(p: *const f32) -> f32 {
+    // SAFETY: caller guarantees p is valid and aligned for reads.
+    unsafe { *p }
+}
+"""
+    root = write_tree(tmp_path, {"lib.rs": LIB_WITH_FORBID, "array/raw.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C5-UNSAFE") == []
+
+
+def test_c5_unsafe_in_comments_ignored(tmp_path):
+    text = '// this crate has no unsafe code\npub fn f() -> &\'static str { "unsafe" }\n'
+    root = write_tree(tmp_path, {"lib.rs": LIB_WITH_FORBID, "hd/doc.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C5-UNSAFE") == []
+
+
+# -------------------------------------------------------------------------
+# Marker hygiene, CLI surface, self-check
+# -------------------------------------------------------------------------
+
+def test_unknown_marker_tag_is_flagged(tmp_path):
+    root = write_tree(
+        tmp_path, {"array/m.rs": "// lint: blessed-ok (made-up tag)\npub fn f() {}\n"}
+    )
+    hits = rule_hits(lint.lint_tree(root), "C0-MARKER")
+    assert len(hits) == 1
+    assert "blessed-ok" in hits[0].message
+
+
+def test_cli_exit_codes_and_report(tmp_path, capsys):
+    root = write_tree(tmp_path, {"coordinator/bad.rs": VIOLATING_SYNC})
+    assert lint.main(["--root", str(root)]) == 1
+    out = capsys.readouterr().out
+    assert "rust/src/coordinator/bad.rs:1: C3-SYNC" in out
+
+    root2 = write_tree(tmp_path / "clean", {"coordinator/good.rs": CONFORMING_SYNC})
+    assert lint.main(["--root", str(root2)]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_missing_root_is_usage_error(tmp_path):
+    assert lint.main(["--root", str(tmp_path / "nope")]) == 2
+
+
+@pytest.mark.parametrize("rule_id", list(lint.RULES))
+def test_explain_prints_contract_and_backing_suite(rule_id, capsys):
+    assert lint.main(["--explain", rule_id]) == 0
+    out = capsys.readouterr().out
+    assert rule_id in out
+    assert "Invariant:" in out
+    # Every contract names the dynamic suite backing it.
+    assert "Dynamic backing:" in out
+    assert f"// lint: {lint.RULES[rule_id].tag}-ok" in out
+
+
+def test_explain_all_and_unknown_rule(capsys):
+    assert lint.main(["--explain", "all"]) == 0
+    out = capsys.readouterr().out
+    for rule_id in lint.RULES:
+        assert rule_id in out
+    assert lint.main(["--explain", "C9-NOPE"]) == 2
+
+
+def test_list_names_every_rule(capsys):
+    assert lint.main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for rule_id in lint.RULES:
+        assert rule_id in out
+
+
+def test_committed_tree_is_lint_clean():
+    findings = lint.lint_tree(REPO_ROOT)
+    assert findings == [], "committed tree has lint findings:\n" + "\n".join(
+        repr(f) for f in findings
+    )

@@ -1,0 +1,716 @@
+#!/usr/bin/env python3
+"""Static contract linter for `rust/src/**` — the five standing invariants.
+
+Usage:
+    python3 python/tools/lint_contracts.py [--root DIR]
+    python3 python/tools/lint_contracts.py --explain RULE   # or `--explain all`
+    python3 python/tools/lint_contracts.py --list
+
+Six PRs of rust_pallas growth revolve around one contract: backend /
+layout / shard choices change host wall time only, never scores or
+`OpCounts`. The dynamic equivalence suites in `rust/tests/` enforce that
+for the shapes they happen to exercise; this linter rejects, at analysis
+time, the *code shapes* that have historically broken it. It is a
+line/token-level scanner (comments and string literals are stripped,
+brace depth / `#[cfg(test)]` blocks / enclosing `fn` and `impl` are
+tracked) with one small rule per contract:
+
+  C1-REASSOC   f32 loop accumulation outside the lane primitives
+  C2-CHARGE    decentralized mutation of `OpCounts` fields
+  C3-SYNC      RefCell/Rc in Sync engine code; bare `Mutex::lock()`
+  C4-RNG       noise-RNG construction outside `ProgramContext`
+  C5-UNSAFE    `unsafe` without a `// SAFETY:` comment
+
+Every rule supports a per-line allowlist marker, placed on the offending
+line or the line directly above it:
+
+    // lint: <tag>-ok (<reason>)
+
+where `<tag>` is the rule's marker tag (see `--explain`) and `<reason>`
+is mandatory prose — an empty reason is itself a finding. Findings are
+reported as `file:line: RULE-ID message`.
+
+Exit codes: 0 clean, 1 findings, 2 usage error. stdlib-only; no third
+party imports — this runs in CI before any toolchain is installed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+# --------------------------------------------------------------------------
+# Rule registry
+# --------------------------------------------------------------------------
+
+OPCOUNT_FIELDS = (
+    "mvm_ops",
+    "program_rounds",
+    "verify_rounds",
+    "row_reads",
+    "encode_spectra",
+    "features",
+    "pack_elements",
+    "merge_elements",
+)
+
+#: Functions that ARE the lane-accumulation contract (PR 6): raw f32
+#: accumulation inside their bodies is the canonical implementation, not a
+#: violation.
+LANE_PRIMITIVES = ("lane_tile_dot", "lane_tree_reduce", "imc_mvm_ref")
+
+#: (impl, fn) pairs blessed to mutate `OpCounts` fields (PR 4's central
+#: charging sites).
+CHARGE_SITES = (
+    ("GroupCharges", "charge"),
+    ("MvmJob", "count_ops"),
+    ("HdFrontend", "count_encode_ops"),
+)
+
+
+class Rule:
+    def __init__(self, rule_id, tag, title, explain):
+        self.rule_id = rule_id
+        self.tag = tag  # allowlist marker suffix: `// lint: <tag>-ok (...)`
+        self.title = title
+        self.explain = explain
+
+
+RULES = {
+    "C1-REASSOC": Rule(
+        "C1-REASSOC",
+        "reassoc",
+        "float-accumulation discipline (lane contract)",
+        """\
+Invariant: every f32 sum on the scoring path uses the PR 6 lane
+contract — 8 `k % 8` lanes combined by the fixed tree reduce
+`((l0+l4)+(l2+l6))+((l1+l5)+(l3+l7))` — so that SIMD-friendly kernels,
+the scalar oracle, and every backend produce bit-identical scores.
+f32 addition is not associative; an ad-hoc `+=` loop or `.sum::<f32>()`
+silently picks a different association and breaks bit-identity in the
+last ulp, which the equivalence suites then catch only for the shapes
+they exercise.
+
+Flagged shapes, inside `array/`, `backend/`, `hd/` (non-test code):
+  * `+=` into an f32 accumulator declared in the same function
+    (`let mut acc = 0f32` / `[0f32; N]` / `vec![0f32; ..]`, including
+    `&mut` slice aliases and `iter_mut()` loop bindings over it)
+  * `.sum::<f32>()`
+  * `.fold(` seeded with a float literal (`0.0`, `0f32`, `0.0f32`)
+  * a dot-product-shaped untyped sum: `.map(|..| a * b).sum()`
+
+Blessed: bodies of the lane primitives themselves — lane_tile_dot,
+lane_tree_reduce, imc_mvm_ref (`array/transfer.rs`) — plus `#[cfg(test)]`
+code and lines carrying `// lint: reassoc-ok (<reason>)`.
+
+Dynamic backing: `rust/tests/backend_equivalence.rs`,
+`rust/tests/segmented_equivalence.rs`, and the pinned-bits regression
+test `array::transfer::tests::lane_order_pinned_bits` (hash 0xbff5_c288),
+which fails if the association order drifts at all.""",
+    ),
+    "C2-CHARGE": Rule(
+        "C2-CHARGE",
+        "charge",
+        "central OpCounts charging",
+        """\
+Invariant: `OpCounts` fields are charged at a small set of central
+sites, so op accounting stays bit-identical across backend / shard /
+layout choices. PR 4 had to unwind exactly this bug class: per-shard
+charging of `MvmJob::bank_ops` over-counted because the
+`ceil(rows / 128)` tile term is not linear across row splits — only a
+merged, centralized charge is. Scattering `ops.mvm_ops += ..` through
+new code reintroduces that class.
+
+Flagged shape: `<recv>.<field> += / -= / =` for any OpCounts field
+(%s)
+where `<recv>` is `self`, `ops`, or a `*ops`-suffixed binding, in any
+non-test file that imports `energy::OpCounts`.
+
+Blessed charging sites: `GroupCharges::charge` (merged candidate
+tiling), `MvmJob::count_ops` (the bank_ops consumer), and
+`HdFrontend::count_encode_ops`; plus the defining module
+`energy/model.rs`, `#[cfg(test)]` code, and lines carrying
+`// lint: charge-ok (<reason>)`. Whole-struct merges
+(`ops += &other`, `OpCounts::add`) are always fine — they are how
+charges propagate, not where they originate.
+
+Dynamic backing: op-count equality asserts in
+`rust/tests/engine_equivalence.rs` and the sharded-vs-monolithic suite
+in `rust/tests/segmented_equivalence.rs`."""
+        % ", ".join(OPCOUNT_FIELDS),
+    ),
+    "C3-SYNC": Rule(
+        "C3-SYNC",
+        "sync",
+        "Sync-engine discipline",
+        """\
+Invariant: `SearchEngine` (and everything the shard fan-out touches) is
+`Sync` — shared state is `Mutex`/`atomic`, never `RefCell`/`Rc`, so
+per-shard engines can be driven from scoped threads. And every
+`Mutex::lock()` goes through `util::sync::lock_unpoisoned(&m, what)`,
+which panics with a *named* lock on poisoning, instead of a bare
+`.lock().unwrap()` whose panic message identifies nothing.
+
+Flagged shapes:
+  * `RefCell` / `Rc` (type or path use) in `coordinator/`, `backend/`,
+    `encode/` non-test code
+  * `.lock()` anywhere in `rust/src` outside `util/sync.rs` itself
+    (`try_lock()` is fine: the non-blocking fallback pattern in
+    `ScoreScratch` is part of the design)
+
+Blessed: `util/sync.rs` (the helper's own implementation),
+`#[cfg(test)]` code, and lines carrying `// lint: sync-ok (<reason>)`.
+
+Dynamic backing: the `engine_is_sync_shareable` unit test in
+`coordinator/engine.rs` (compile-time `Sync` assertion) and the scoped
+thread fan-out exercised by `rust/tests/segmented_equivalence.rs`.""",
+    ),
+    "C4-RNG": Rule(
+        "C4-RNG",
+        "rng",
+        "RNG chaining discipline",
+        """\
+Invariant: programming-noise RNG state is *chained* shard-to-shard
+(`ProgramContext::with_rng`, `SearchEngine::program_with_rng` /
+`noise_rng_state`), because write-verify early exit makes per-row RNG
+consumption data-dependent — re-seeding per shard would desynchronize
+sharded engines from the monolithic reference and break score
+bit-identity. So `Rng::new` construction in engine code is only legal
+inside `ProgramContext` (the root of each noise stream); everything
+downstream must thread an existing `Rng` through.
+
+Flagged shape: `Rng::new(..)` in `coordinator/`, `backend/`, `encode/`,
+`isa/` non-test code.
+
+Blessed: the `impl ProgramContext` block, files under `config/` and
+`util/` (the generator itself), `#[cfg(test)]` code, and lines carrying
+`// lint: rng-ok (<reason>)`. Dataset/baseline generators (`ms/`,
+`baselines/`, `cluster/`) are out of scope — their RNGs seed synthetic
+data, not device noise.
+
+Dynamic backing: the chained-RNG bit-identity asserts in
+`rust/tests/segmented_equivalence.rs` (sharded == monolithic scores
+under programming noise).""",
+    ),
+    "C5-UNSAFE": Rule(
+        "C5-UNSAFE",
+        "safety",
+        "unsafe hygiene",
+        """\
+Invariant: the crate contains no `unsafe` code at all — enforced by
+`#![forbid(unsafe_code)]` in `rust/src/lib.rs` (this rule fails if that
+attribute is ever dropped). Should a future PR deliberately relax the
+forbid for a vetted kernel, every `unsafe` keyword must carry a
+`// SAFETY:` comment on the same line or within the three lines above
+it, stating the proof obligation being discharged.
+
+Flagged shapes:
+  * `rust/src/lib.rs` missing `#![forbid(unsafe_code)]`
+  * `unsafe` (non-comment, non-string, non-test) without a nearby
+    `// SAFETY:` comment
+
+Blessed: `#[cfg(test)]` code and lines carrying
+`// lint: safety-ok (<reason>)` — though prefer a real SAFETY comment.
+
+Dynamic backing: the allowed-to-fail nightly Miri CI step over the
+`array`/`hd` kernel unit tests, which would catch UB dynamically if
+unsafe code ever lands.""",
+    ),
+}
+
+TAG_TO_RULE = {r.tag: r.rule_id for r in RULES.values()}
+
+MARKER_RE = re.compile(r"//\s*lint:\s*([a-z0-9]+)-ok\s*(?:\(([^)]*)\))?")
+
+
+class Finding:
+    __slots__ = ("path", "line", "rule_id", "message")
+
+    def __init__(self, path, line, rule_id, message):
+        self.path = path  # repo-relative, posix separators
+        self.line = line
+        self.rule_id = rule_id
+        self.message = message
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"{self.path}:{self.line}: {self.rule_id} {self.message}"
+
+
+# --------------------------------------------------------------------------
+# Scanner: comment/string stripping + scope tracking
+# --------------------------------------------------------------------------
+
+
+def strip_line(line, in_block_comment):
+    """Return (code, in_block_comment') with comments and string literal
+    *contents* removed. Good enough for this crate: no raw strings or
+    `'"'` char literals on the scanned paths."""
+    out = []
+    i, n = 0, len(line)
+    while i < n:
+        if in_block_comment:
+            j = line.find("*/", i)
+            if j < 0:
+                return "".join(out), True
+            in_block_comment = False
+            i = j + 2
+            continue
+        two = line[i : i + 2]
+        if two == "//":
+            break
+        if two == "/*":
+            in_block_comment = True
+            i += 2
+            continue
+        c = line[i]
+        if c == '"':
+            i += 1
+            while i < n:
+                if line[i] == "\\":
+                    i += 2
+                    continue
+                if line[i] == '"':
+                    i += 1
+                    break
+                i += 1
+            out.append('""')
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out), in_block_comment
+
+
+class LineInfo:
+    __slots__ = ("lineno", "raw", "code", "in_test", "fn_name", "impl_name", "markers")
+
+    def __init__(self, lineno, raw, code, in_test, fn_name, impl_name, markers):
+        self.lineno = lineno
+        self.raw = raw
+        self.code = code
+        self.in_test = in_test
+        self.fn_name = fn_name  # innermost enclosing fn (or None)
+        self.impl_name = impl_name  # innermost enclosing impl target (or None)
+        self.markers = markers  # {tag: reason-or-None} on this raw line
+
+
+FN_RE = re.compile(r"\bfn\s+([A-Za-z_]\w*)")
+IMPL_RE = re.compile(r"\bimpl\b(?:\s*<[^>]*>)?\s+(?:([\w:]+)\s+for\s+)?([\w:]+)")
+TEST_ATTR_RE = re.compile(r"#\s*\[\s*(?:cfg\s*\(\s*test\s*\)|test\b)")
+
+
+def scan_file(text):
+    """Parse a Rust source into LineInfo records with scope context."""
+    records = []
+    in_block = False
+    depth = 0
+    # Scope stack entries: (open_depth, kind, name). kind in {fn, impl, test}.
+    scopes = []
+    pending_fn = None
+    pending_impl = None
+    pending_test = False
+
+    for lineno, raw in enumerate(text.splitlines(), start=1):
+        code, in_block = strip_line(raw, in_block)
+
+        if TEST_ATTR_RE.search(code):
+            pending_test = True
+        m = FN_RE.search(code)
+        if m:
+            pending_fn = m.group(1)
+        m = IMPL_RE.search(code)
+        if m:
+            target = m.group(2)
+            pending_impl = target.rsplit("::", 1)[-1].split("<", 1)[0]
+
+        markers = {}
+        for mm in MARKER_RE.finditer(raw):
+            reason = (mm.group(2) or "").strip()
+            markers[mm.group(1)] = reason or None
+
+        in_test = any(k == "test" for (_, k, _) in scopes)
+        fn_name = next((n for (_, k, n) in reversed(scopes) if k == "fn"), None)
+        impl_name = next((n for (_, k, n) in reversed(scopes) if k == "impl"), None)
+        records.append(LineInfo(lineno, raw, code, in_test, fn_name, impl_name, markers))
+
+        # Update depth and scope stack from this line's braces.
+        for ch in code:
+            if ch == "{":
+                if pending_test:
+                    scopes.append((depth, "test", None))
+                    pending_test = False
+                    pending_fn = None
+                    pending_impl = None
+                elif pending_fn is not None:
+                    scopes.append((depth, "fn", pending_fn))
+                    pending_fn = None
+                elif pending_impl is not None:
+                    scopes.append((depth, "impl", pending_impl))
+                    pending_impl = None
+                depth += 1
+            elif ch == "}":
+                depth -= 1
+                while scopes and scopes[-1][0] >= depth:
+                    scopes.pop()
+        if ";" in code:
+            # `fn f(..);` in a trait decl / `#[cfg(test)] use ..;` consume
+            # the pending state without opening a block.
+            pending_fn = None
+            pending_test = False
+    return records
+
+
+def allowed(rec, prev, tag):
+    """True when `rec` carries (or the previous line carries) a non-empty
+    `<tag>-ok` marker."""
+    for r in (rec, prev):
+        if r is not None and tag in r.markers and r.markers[tag] is not None:
+            return True
+    return False
+
+
+# --------------------------------------------------------------------------
+# Rules
+# --------------------------------------------------------------------------
+
+F32_DECL_RE = re.compile(
+    r"let\s+mut\s+([A-Za-z_]\w*)\s*(?::\s*f32\s*)?=\s*"
+    r"(?:vec!\s*\[\s*0(?:\.0)?(?:_?f32)?\s*;"  # vec![0f32; ..]
+    r"|\[\s*0(?:\.0)?(?:_?f32)?\s*;"  # [0f32; N]
+    r"|0(?:\.0)?_?f32\b"  # 0f32 / 0.0f32
+    r"|0\.0\s*;?\s*$)"  # `: f32 = 0.0;`
+)
+ALIAS_RE = re.compile(r"let\s+(?:mut\s+)?([A-Za-z_]\w*)\s*=\s*&mut\s+([A-Za-z_]\w*)\s*\[")
+ITER_MUT_RE = re.compile(r"for\s+\(?([^)]*?)\)?\s+in\s+([A-Za-z_]\w*)\s*\.\s*iter_mut\(\)")
+ACCUM_RE = re.compile(r"(?:\*\s*)?([A-Za-z_]\w*)\s*(?:\[[^\]]*\]\s*)?\+=")
+SUM_F32_RE = re.compile(r"\.\s*sum\s*::\s*<\s*f32\s*>\s*\(\)")
+FOLD_F32_RE = re.compile(r"\.\s*fold\s*\(\s*0(?:\.0)?(?:_?f32)?\s*,")
+DOT_SUM_RE = re.compile(r"\.map\(\s*\|[^|]*\|[^)]*\*[^)]*\)\s*\.\s*sum\(\)")
+
+
+def rule_c1(relpath, records, findings):
+    if not relpath.startswith(("array/", "backend/", "hd/")):
+        return
+    tracked_fn = None  # fn whose accumulator set is live
+    tracked = set()
+    prev = None
+    for rec in records:
+        if rec.fn_name != tracked_fn:
+            tracked_fn = rec.fn_name
+            tracked = set()
+        skip = rec.in_test or rec.fn_name in LANE_PRIMITIVES or allowed(rec, prev, "reassoc")
+        code = rec.code
+
+        m = F32_DECL_RE.search(code)
+        if m:
+            tracked.add(m.group(1))
+        m = ALIAS_RE.search(code)
+        if m and m.group(2) in tracked:
+            tracked.add(m.group(1))
+        m = ITER_MUT_RE.search(code)
+        if m and m.group(2) in tracked:
+            tracked.update(re.findall(r"[A-Za-z_]\w*", m.group(1)))
+
+        if not skip:
+            m = ACCUM_RE.search(code)
+            if m and m.group(1) in tracked:
+                findings.append(
+                    Finding(
+                        relpath,
+                        rec.lineno,
+                        "C1-REASSOC",
+                        f"raw f32 accumulation into `{m.group(1)}` outside the lane "
+                        "primitives — route through lane_tile_dot/lane_tree_reduce/"
+                        "imc_mvm_ref or annotate `// lint: reassoc-ok (<reason>)`",
+                    )
+                )
+            elif SUM_F32_RE.search(code):
+                findings.append(
+                    Finding(
+                        relpath,
+                        rec.lineno,
+                        "C1-REASSOC",
+                        "`.sum::<f32>()` picks an unspecified association order — use "
+                        "the lane primitives or annotate `// lint: reassoc-ok (<reason>)`",
+                    )
+                )
+            elif FOLD_F32_RE.search(code):
+                findings.append(
+                    Finding(
+                        relpath,
+                        rec.lineno,
+                        "C1-REASSOC",
+                        "float-seeded `fold` accumulation — use the lane primitives "
+                        "or annotate `// lint: reassoc-ok (<reason>)`",
+                    )
+                )
+            elif DOT_SUM_RE.search(code):
+                findings.append(
+                    Finding(
+                        relpath,
+                        rec.lineno,
+                        "C1-REASSOC",
+                        "dot-product-shaped `.map(|..| a * b).sum()` — use the lane "
+                        "primitives or annotate `// lint: reassoc-ok (<reason>)`",
+                    )
+                )
+        prev = rec
+
+
+CHARGE_RE = re.compile(
+    r"\b(?:[A-Za-z_]\w*\.)*([A-Za-z_]\w*)\s*\.\s*(%s)\s*(\+=|-=|=(?!=))"
+    % "|".join(OPCOUNT_FIELDS)
+)
+
+
+def rule_c2(relpath, records, findings):
+    if relpath == "energy/model.rs":
+        return  # the defining module
+    if not any("OpCounts" in r.code and "use" in r.code for r in records) and not any(
+        "energy::OpCounts" in r.code for r in records
+    ):
+        return
+    prev = None
+    for rec in records:
+        skip = (
+            rec.in_test
+            or (rec.impl_name, rec.fn_name) in CHARGE_SITES
+            or allowed(rec, prev, "charge")
+        )
+        if not skip:
+            m = CHARGE_RE.search(rec.code)
+            if m:
+                recv, field = m.group(1), m.group(2)
+                if recv == "self" or recv == "ops" or recv.endswith("ops"):
+                    findings.append(
+                        Finding(
+                            relpath,
+                            rec.lineno,
+                            "C2-CHARGE",
+                            f"`{recv}.{field}` mutated outside the central charging "
+                            "sites (GroupCharges::charge, MvmJob::count_ops, "
+                            "HdFrontend::count_encode_ops) — centralize the charge "
+                            "or annotate `// lint: charge-ok (<reason>)`",
+                        )
+                    )
+        prev = rec
+
+
+REFCELL_RE = re.compile(r"\bRefCell\b|\bRc\s*<|\bRc\s*::|use\s+std\s*::\s*(?:cell|rc)\b")
+LOCK_RE = re.compile(r"\.\s*lock\s*\(\)")
+
+
+def rule_c3(relpath, records, findings):
+    if relpath == "util/sync.rs":
+        return  # the blessed helper's own implementation
+    in_engine_dirs = relpath.startswith(("coordinator/", "backend/", "encode/"))
+    prev = None
+    for rec in records:
+        skip = rec.in_test or allowed(rec, prev, "sync")
+        if not skip:
+            if in_engine_dirs and REFCELL_RE.search(rec.code):
+                findings.append(
+                    Finding(
+                        relpath,
+                        rec.lineno,
+                        "C3-SYNC",
+                        "RefCell/Rc in engine code — these types are !Sync/!Send and "
+                        "break the scoped-thread shard fan-out; use Mutex/Arc or "
+                        "annotate `// lint: sync-ok (<reason>)`",
+                    )
+                )
+            elif LOCK_RE.search(rec.code):
+                findings.append(
+                    Finding(
+                        relpath,
+                        rec.lineno,
+                        "C3-SYNC",
+                        "bare `Mutex::lock()` — use "
+                        "`util::sync::lock_unpoisoned(&m, \"<what>\")` so poisoning "
+                        "panics name the lock, or annotate "
+                        "`// lint: sync-ok (<reason>)`",
+                    )
+                )
+        prev = rec
+
+
+RNG_NEW_RE = re.compile(r"\bRng\s*::\s*new\s*\(")
+
+
+def rule_c4(relpath, records, findings):
+    if not relpath.startswith(("coordinator/", "backend/", "encode/", "isa/")):
+        return
+    prev = None
+    for rec in records:
+        skip = (
+            rec.in_test
+            or rec.impl_name == "ProgramContext"
+            or allowed(rec, prev, "rng")
+        )
+        if not skip and RNG_NEW_RE.search(rec.code):
+            findings.append(
+                Finding(
+                    relpath,
+                    rec.lineno,
+                    "C4-RNG",
+                    "`Rng::new` outside ProgramContext — noise RNG state must be "
+                    "chained (ProgramContext::with_rng / noise_rng_state), never "
+                    "re-seeded, or the sharded bit-identity contract breaks; "
+                    "annotate `// lint: rng-ok (<reason>)` if this stream is "
+                    "genuinely independent",
+                )
+            )
+        prev = rec
+
+
+UNSAFE_RE = re.compile(r"\bunsafe\b")
+SAFETY_RE = re.compile(r"//\s*SAFETY:")
+FORBID_UNSAFE_RE = re.compile(r"#!\s*\[\s*forbid\s*\(\s*unsafe_code\s*\)\s*\]")
+
+
+def rule_c5(relpath, records, findings):
+    if relpath == "lib.rs" and not any(FORBID_UNSAFE_RE.search(r.code) for r in records):
+        findings.append(
+            Finding(
+                relpath,
+                1,
+                "C5-UNSAFE",
+                "crate root is missing `#![forbid(unsafe_code)]` — the crate is "
+                "unsafe-free by contract; restore the forbid (or downgrade to "
+                "deny alongside audited unsafe with SAFETY comments)",
+            )
+        )
+    prev = None
+    for i, rec in enumerate(records):
+        skip = rec.in_test or allowed(rec, prev, "safety")
+        if not skip and UNSAFE_RE.search(rec.code) and "forbid" not in rec.code:
+            window = records[max(0, i - 3) : i + 1]
+            if not any(SAFETY_RE.search(r.raw) for r in window):
+                findings.append(
+                    Finding(
+                        relpath,
+                        rec.lineno,
+                        "C5-UNSAFE",
+                        "`unsafe` without a `// SAFETY:` comment (same line or the "
+                        "three lines above) stating the discharged proof obligation",
+                    )
+                )
+        prev = rec
+
+
+def rule_markers(relpath, records, findings):
+    """Marker hygiene: unknown tags and empty reasons are findings."""
+    for rec in records:
+        for tag, reason in rec.markers.items():
+            if tag not in TAG_TO_RULE:
+                known = ", ".join(sorted(TAG_TO_RULE))
+                findings.append(
+                    Finding(
+                        relpath,
+                        rec.lineno,
+                        "C0-MARKER",
+                        f"unknown allowlist tag `{tag}-ok` (known tags: {known})",
+                    )
+                )
+            elif reason is None:
+                findings.append(
+                    Finding(
+                        relpath,
+                        rec.lineno,
+                        TAG_TO_RULE[tag],
+                        f"allowlist marker `{tag}-ok` needs a non-empty reason: "
+                        f"`// lint: {tag}-ok (<why this line is exempt>)`",
+                    )
+                )
+
+
+RULE_FNS = (rule_c1, rule_c2, rule_c3, rule_c4, rule_c5, rule_markers)
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+
+def lint_tree(root):
+    """Lint every .rs file under `root`/rust/src. Returns a list of
+    Findings sorted by (path, line)."""
+    src = Path(root) / "rust" / "src"
+    findings = []
+    for path in sorted(src.rglob("*.rs")):
+        relpath = path.relative_to(src).as_posix()
+        records = scan_file(path.read_text(encoding="utf-8"))
+        for fn in RULE_FNS:
+            fn(relpath, records, findings)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule_id))
+    return findings
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--root",
+        default=None,
+        help="repository root (default: two levels above this script)",
+    )
+    ap.add_argument(
+        "--explain",
+        metavar="RULE",
+        help="print the contract behind RULE (e.g. C1-REASSOC, or `all`) and exit",
+    )
+    ap.add_argument("--list", action="store_true", help="list rule IDs and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for rule in RULES.values():
+            print(f"{rule.rule_id:<12} [{rule.tag}-ok]  {rule.title}")
+        return 0
+
+    if args.explain:
+        want = args.explain.upper()
+        ids = list(RULES) if want == "ALL" else [want]
+        unknown = [i for i in ids if i not in RULES]
+        if unknown:
+            known = ", ".join(RULES)
+            print(f"error: unknown rule {unknown[0]} (known: {known})", file=sys.stderr)
+            return 2
+        for i, rid in enumerate(ids):
+            rule = RULES[rid]
+            if i:
+                print()
+            print(f"{rule.rule_id} — {rule.title}")
+            print(f"allowlist marker: // lint: {rule.tag}-ok (<reason>)")
+            print()
+            print(rule.explain)
+        return 0
+
+    root = Path(args.root) if args.root else Path(__file__).resolve().parents[2]
+    src = root / "rust" / "src"
+    if not src.is_dir():
+        print(f"error: {src} not found (use --root)", file=sys.stderr)
+        return 2
+
+    findings = lint_tree(root)
+    for f in findings:
+        print(f"rust/src/{f.path}:{f.line}: {f.rule_id} {f.message}")
+    if findings:
+        per_rule = {}
+        for f in findings:
+            per_rule[f.rule_id] = per_rule.get(f.rule_id, 0) + 1
+        breakdown = ", ".join(f"{k}: {v}" for k, v in sorted(per_rule.items()))
+        print(f"\n{len(findings)} finding(s) ({breakdown})", file=sys.stderr)
+        print(
+            "run with --explain RULE for the contract behind a rule",
+            file=sys.stderr,
+        )
+        return 1
+    print("contract lint clean: all five contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except BrokenPipeError:  # e.g. `--explain all | head`
+        sys.exit(141)  # 128 + SIGPIPE, the shell convention

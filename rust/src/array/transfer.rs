@@ -233,6 +233,7 @@ pub fn imc_mvm_blocked_dacq_into(
                             let goff = (p0 + pi) * c + lo;
                             let grow = &panel[goff..goff + ARRAY_DIM];
                             let part = lane_tile_dot(qrow, grow);
+                            // lint: reassoc-ok (cross-tile ADC sums run in ascending tile order — the imc_mvm_ref association, pinned by lane_order_pinned_bits)
                             sub[qi * pn + pi] += adc.quantize(part);
                         }
                     }
@@ -259,6 +260,7 @@ pub fn exact_mvm(queries: &[f32], refs: &[f32], b: usize, r: usize, c: usize) ->
         let qrow = &queries[bi * c..(bi + 1) * c];
         for ri in 0..r {
             let grow = &refs[ri * c..(ri + 1) * c];
+            // lint: reassoc-ok (digital software baseline, deliberately outside the IMC lane contract; never compared bit-for-bit)
             out[bi * r + ri] = qrow.iter().zip(grow).map(|(a, g)| a * g).sum();
         }
     }

@@ -17,6 +17,7 @@ use std::sync::{Arc, Mutex};
 use crate::coordinator::batcher::{pad_matrix, Batcher};
 use crate::runtime::{Manifest, Runtime};
 use crate::util::error::Result;
+use crate::util::sync::lock_unpoisoned;
 
 use super::{MvmBackend, MvmJob};
 
@@ -56,10 +57,7 @@ impl MvmBackend for PjrtBackend {
     fn supports(&self, job: &MvmJob) -> bool {
         job.nq > 0
             && job.nr > 0
-            && self
-                .rt
-                .lock()
-                .expect("pjrt runtime poisoned")
+            && lock_unpoisoned(&self.rt, "pjrt runtime")
                 .manifest
                 .get(&Manifest::mvm_name(job.cp))
                 .is_some()
@@ -71,7 +69,7 @@ impl MvmBackend for PjrtBackend {
         if !self.supports(job) {
             return 0.0;
         }
-        let rt = self.rt.lock().expect("pjrt runtime poisoned");
+        let rt = lock_unpoisoned(&self.rt, "pjrt runtime");
         let padded = job.nq.div_ceil(rt.manifest.batch)
             * rt.manifest.batch
             * job.nr.div_ceil(rt.manifest.rows)
@@ -95,7 +93,7 @@ impl MvmBackend for PjrtBackend {
             return self.mvm_scores_into(&dense, out);
         }
 
-        let mut rt = self.rt.lock().expect("pjrt runtime poisoned");
+        let mut rt = lock_unpoisoned(&self.rt, "pjrt runtime");
         let b = rt.manifest.batch;
         let r_block = rt.manifest.rows;
         let (nq, nr, cp) = (job.nq, job.nr, job.cp);

@@ -86,6 +86,7 @@ use crate::ms::{SearchDataset, Spectrum};
 use crate::search::fdr_filter;
 use crate::telemetry::{EncodeCacheStats, StageTimer};
 use crate::util::error::{Error, Result};
+use crate::util::sync::lock_unpoisoned;
 use crate::util::Rng;
 
 use super::allocator::{SegmentAllocator, Slot};
@@ -137,10 +138,28 @@ pub struct ProgramContext {
 }
 
 impl ProgramContext {
+    /// Seed tag of the DB-search programming-noise stream (`seed ^ 0x5e`).
+    pub const SEARCH_SEED_TAG: u64 = 0x5e;
+    /// Seed tag of the clustering programming-noise stream (`seed ^ 0xc1`).
+    pub const CLUSTER_SEED_TAG: u64 = 0xc1;
+
     /// `seed_tag` keeps the clustering and search noise streams distinct
-    /// (`seed ^ 0xc1` / `seed ^ 0x5e`, matching the pre-engine pipelines).
+    /// ([`Self::CLUSTER_SEED_TAG`] / [`Self::SEARCH_SEED_TAG`], matching
+    /// the pre-engine pipelines).
     pub fn new(cfg: &SpecPcmConfig, packed_width: usize, seed_tag: u64) -> Result<Self> {
-        Self::with_rng(cfg, packed_width, Rng::new(cfg.seed ^ seed_tag))
+        Self::with_rng(cfg, packed_width, Self::noise_rng(cfg, seed_tag))
+    }
+
+    /// Root of a fresh programming-noise stream (`cfg.seed ^ seed_tag`).
+    /// This is the *only* blessed `Rng::new` site in engine code (contract
+    /// lint rule C4-RNG): every downstream consumer — sharded programming
+    /// in particular — must chain an existing state through
+    /// [`ProgramContext::rng_state`] / `SearchEngine::noise_rng_state`
+    /// instead of re-seeding, because per-row RNG consumption is
+    /// data-dependent (write-verify converges early) and re-seeding would
+    /// desynchronize shards from the monolithic reference.
+    pub fn noise_rng(cfg: &SpecPcmConfig, seed_tag: u64) -> Rng {
+        Rng::new(cfg.seed ^ seed_tag)
     }
 
     /// Construct with an explicit programming-noise RNG state. The shard
@@ -478,7 +497,7 @@ impl SearchEngine {
         dataset: &SearchDataset,
         backend: &BackendDispatcher,
     ) -> Result<Self> {
-        let rng = Rng::new(cfg.seed ^ 0x5e);
+        let rng = ProgramContext::noise_rng(&cfg, ProgramContext::SEARCH_SEED_TAG);
         Self::program_with_rng(cfg, dataset, backend, rng)
     }
 
@@ -583,13 +602,13 @@ impl SearchEngine {
 
     /// Cumulative query-HV cache hits/misses across every served batch.
     pub fn encode_cache_stats(&self) -> EncodeCacheStats {
-        *self.cache_stats.lock().expect("cache stats poisoned")
+        *lock_unpoisoned(&self.cache_stats, "cache stats")
     }
 
     /// Drop every cached query HV (the cache refills on subsequent
     /// batches; results are identical either way).
     pub fn clear_query_cache(&self) {
-        self.query_cache.lock().expect("query cache poisoned").clear();
+        lock_unpoisoned(&self.query_cache, "query cache").clear();
     }
 
     /// One-time library ops (encode + pack + program + verify), charged at
@@ -690,7 +709,7 @@ impl SearchEngine {
         // (query index, miss index) rows to fill once the misses encode.
         let mut pending: Vec<(usize, usize)> = Vec::new();
         {
-            let cache = self.query_cache.lock().expect("query cache poisoned");
+            let cache = lock_unpoisoned(&self.query_cache, "query cache");
             for (qi, lv) in levels.iter().enumerate() {
                 if let Some(row) = cache.get(lv) {
                     packed[qi * cp..(qi + 1) * cp].copy_from_slice(row);
@@ -718,7 +737,7 @@ impl SearchEngine {
             // Insert by *moving* the already-owned miss level vectors:
             // exactly one allocation per miss (the cached row copy), not
             // two (the key was cloned here before).
-            let mut cache = self.query_cache.lock().expect("query cache poisoned");
+            let mut cache = lock_unpoisoned(&self.query_cache, "query cache");
             for (mi, lv) in miss_levels.into_iter().enumerate() {
                 if cache.len() >= QUERY_CACHE_MAX_ENTRIES {
                     break;
@@ -729,7 +748,7 @@ impl SearchEngine {
         batch_cache.misses = n_misses as u64;
         batch_cache.hits = (levels.len() - n_misses) as u64;
 
-        *self.cache_stats.lock().expect("cache stats poisoned") += batch_cache;
+        *lock_unpoisoned(&self.cache_stats, "cache stats") += batch_cache;
         Ok((packed, batch_cache))
     }
 

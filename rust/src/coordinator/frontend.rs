@@ -98,7 +98,7 @@ impl HdFrontend {
         #[cfg(feature = "pjrt")]
         if let Some(rt) = backend.runtime() {
             let name = Manifest::enc_pack_name(self.d, self.n);
-            let mut rt = rt.lock().expect("pjrt runtime poisoned");
+            let mut rt = crate::util::sync::lock_unpoisoned(rt, "pjrt runtime");
             if rt.manifest.get(&name).is_some() {
                 return self.encode_pack_artifact(levels, &mut rt);
             }

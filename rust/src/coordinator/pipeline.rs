@@ -49,7 +49,9 @@ pub(crate) fn program_refs(
             programmer.program_slice(&packed[row * cp..(row + 1) * cp], rng);
         noisy.extend_from_slice(&stored);
         // A row round pulses all 128 cells of one segment in parallel.
+        // lint: charge-ok (program_refs IS the central programming charge — both pipelines and the engine charge rounds only through here)
         ops.program_rounds += pulses.div_ceil(ARRAY_DIM as u64).max(segments);
+        // lint: charge-ok (verify reads charged alongside the rounds above)
         ops.verify_rounds += programmer.write_verify as u64 * segments;
     }
     noisy
@@ -164,6 +166,7 @@ impl ClusteringPipeline {
                     .fold(0.0f32, f32::max);
                 (complete_linkage(&d, specs.len(), max_t), specs.len())
             });
+            // lint: charge-ok (clustering's single dendrogram-merge charge, read off the completed linkage — no per-shard split exists)
             ops.merge_elements += dend.update_elements;
             debug_assert_eq!(dist_n, specs.len());
 

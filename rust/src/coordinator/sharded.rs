@@ -56,12 +56,11 @@ use crate::energy::{EnergyLatencyModel, EnergyReport, OpCounts};
 use crate::ms::{SearchDataset, Spectrum};
 use crate::telemetry::{EncodeCacheStats, StageTimer};
 use crate::util::error::{Error, Result};
-use crate::util::Rng;
 
 use super::allocator::SegmentAllocator;
 use super::engine::{
-    chunk_ranges, fold_batches, BatchOutcome, CapacityError, GroupCharges, SearchEngine,
-    ServingCost,
+    chunk_ranges, fold_batches, BatchOutcome, CapacityError, GroupCharges, ProgramContext,
+    SearchEngine, ServingCost,
 };
 use super::pipeline::SearchOutcomeSummary;
 
@@ -222,7 +221,7 @@ impl ShardedSearchEngine {
 
         // Chain the programming-noise RNG through the shards in row order
         // so the concatenated noise stream equals the monolithic one.
-        let mut rng = Rng::new(cfg.seed ^ 0x5e);
+        let mut rng = ProgramContext::noise_rng(&cfg, ProgramContext::SEARCH_SEED_TAG);
         let mut shards = Vec::with_capacity(plan.n_shards());
         let mut program_ops = OpCounts::default();
         let mut program_wall = StageTimer::new();

@@ -45,6 +45,7 @@ impl Executor {
             material,
             backend: BackendDispatcher::reference(),
             buffers: HashMap::new(),
+            // lint: rng-ok (the ISA executor owns an independent caller-seeded device-noise stream; it is not part of the serving shard chain)
             rng: Rng::new(seed),
         }
     }
@@ -115,7 +116,9 @@ impl Executor {
                     // Cells in a row are pulsed in parallel: the number of
                     // 20 ns rounds is the worst-case per-cell pulse depth,
                     // approximated by the average (total / row width).
+                    // lint: charge-ok (ISA accounting is per-instruction by design; ProgramHv is its single programming charge)
                     result.ops.program_rounds += pulses.div_ceil(ARRAY_DIM as u64).max(1);
+                    // lint: charge-ok (verify reads for the same ProgramHv instruction)
                     result.ops.verify_rounds += write_cycles as u64;
                 }
                 Instruction::ReadHv {
@@ -126,6 +129,7 @@ impl Executor {
                         .get_mut(arr_idx as usize)
                         .ok_or(format!("pc {pc}: arr_idx {arr_idx} out of range"))?;
                     let row = bank.read_row(row_addr as usize).to_vec();
+                    // lint: charge-ok (one ReadHv instruction = one row read)
                     result.ops.row_reads += 1;
                     result.row_reads.push(row);
                 }

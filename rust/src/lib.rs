@@ -35,7 +35,61 @@
 //! | [`coordinator`] | DESIGN.md §2, Table 3 | capacity allocator, batcher, program-once/query-many `SearchEngine`, sharded multi-engine serving, pipeline drivers |
 //! | [`config`] | §IV-A | TOML config system + paper presets, `[backend]` section (incl. `shards`) |
 //! | [`telemetry`] | — | counters and report tables |
-//! | [`util`] | — | RNG, JSON/kv parsers, crate-wide `error::{Error, Result}` |
+//! | [`util`] | — | RNG, JSON/kv parsers, `sync::lock_unpoisoned`, crate-wide `error::{Error, Result}` |
+//!
+//! # Enforced contracts
+//!
+//! Everything above serves one invariant: **backend, layout, and shard
+//! choices change host wall time only — scores and [`energy::OpCounts`]
+//! stay bit-identical to the scalar reference path.** The equivalence
+//! suites in `rust/tests/` enforce it dynamically; the contract linter
+//! (`python3 python/tools/lint_contracts.py`, run in CI as the
+//! `Contract lint` step) rejects the code shapes that historically broke
+//! it *statically*. Five rules, each with a per-line allowlist marker
+//! `// lint: <tag>-ok (<reason>)` and an `--explain RULE` mode:
+//!
+//! * **C1-REASSOC — float-accumulation discipline.** Every f32 sum on
+//!   the scoring path uses the lane contract: 8 `k % 8` lanes combined
+//!   by the fixed tree reduce, implemented once by
+//!   [`array::lane_tile_dot`] / [`array::lane_tree_reduce`] with
+//!   [`array::imc_mvm_ref`] as the scalar oracle. Ad-hoc `+=` loops,
+//!   `.sum::<f32>()`, or float `fold`s in `array`/`backend`/`hd` pick a
+//!   different association and break bit-identity in the last ulp.
+//!   Backed dynamically by `backend_equivalence.rs`,
+//!   `segmented_equivalence.rs`, and the pinned-bits regression test
+//!   `lane_order_pinned_bits`.
+//! * **C2-CHARGE — central OpCounts charging.** `OpCounts` fields are
+//!   mutated only at the central charging sites
+//!   (`GroupCharges::charge`, `MvmJob::count_ops`,
+//!   `HdFrontend::count_encode_ops`, `program_refs`): the
+//!   `ceil(rows/128)` tile term is not linear across row splits, so
+//!   decentralized charging over-counts — the PR 4 bug class. Backed by
+//!   the op-count equality asserts in `engine_equivalence.rs` and
+//!   `segmented_equivalence.rs`.
+//! * **C3-SYNC — Sync-engine discipline.** No `RefCell`/`Rc` in
+//!   `coordinator`/`backend`/`encode` (the shard fan-out drives engines
+//!   from scoped threads), and every blocking `Mutex::lock()` goes
+//!   through [`util::sync::lock_unpoisoned`] so poisoning panics name
+//!   the lock. Backed by the `engine_is_sync_shareable` compile-time
+//!   assertion and the sharded serving suite.
+//! * **C4-RNG — RNG chaining discipline.** Programming-noise RNG
+//!   construction happens only inside `ProgramContext`
+//!   (`ProgramContext::noise_rng`); shards chain state via
+//!   `noise_rng_state`, never re-seed, because write-verify early exit
+//!   makes per-row RNG consumption data-dependent. Backed by the
+//!   sharded-vs-monolithic bit-identity asserts in
+//!   `segmented_equivalence.rs`.
+//! * **C5-UNSAFE — unsafe hygiene.** The crate is `unsafe`-free by
+//!   contract (`#![forbid(unsafe_code)]` below); any future audited
+//!   exception must carry a `// SAFETY:` comment. Backed by the
+//!   allowed-to-fail nightly Miri CI step over the `array`/`hd` kernel
+//!   tests.
+
+// The deny wall is deliberately conservative: lints that are true today
+// and must stay true, not aspirational style lints. C5-UNSAFE (above)
+// fails the contract linter if the forbid is ever dropped.
+#![forbid(unsafe_code)]
+#![deny(unused_must_use, non_ascii_idents, unused_extern_crates)]
 
 pub mod array;
 pub mod backend;

@@ -8,6 +8,8 @@
 //! bit-identical scores. (Offline environment: argument parsing is
 //! hand-rolled, no clap.)
 
+#![forbid(unsafe_code)]
+
 use specpcm::backend::{BackendDispatcher, BackendKind};
 use specpcm::baselines::latency_model;
 use specpcm::cluster::quality::clustered_at_incorrect;
@@ -97,13 +99,13 @@ impl Args {
                     flags.insert(key.to_string(), value.to_string());
                     continue;
                 }
-                let value = match it.peek() {
-                    // A following token is this flag's value unless it is
-                    // itself a flag. `-0.5` does not start with `--`, so
-                    // negative numeric values parse as values, never as a
-                    // bare flag plus a stray positional.
-                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
-                    _ => "true".to_string(), // bare flag
+                // A following token is this flag's value unless it is
+                // itself a flag. `-0.5` does not start with `--`, so
+                // negative numeric values parse as values, never as a
+                // bare flag plus a stray positional.
+                let value = match it.next_if(|v| !v.starts_with("--")) {
+                    Some(v) => v.clone(),
+                    None => "true".to_string(), // bare flag
                 };
                 flags.insert(name.to_string(), value);
             } else {
@@ -138,6 +140,50 @@ impl Args {
     fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+
+    /// Reject typo'd flags instead of silently ignoring them (a misspelled
+    /// `--stripe-rows` used to fall back to the default without a word).
+    fn check_known(&self, cmd: &str, known: &[&str]) -> Result<()> {
+        let mut unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .map(String::as_str)
+            .filter(|k| !known.contains(k))
+            .collect();
+        unknown.sort_unstable();
+        if let Some(k) = unknown.first() {
+            if known.is_empty() {
+                specpcm::bail!("--{k}: '{cmd}' takes no flags");
+            }
+            let list = known
+                .iter()
+                .map(|k| format!("--{k}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            specpcm::bail!("unknown flag --{k} for '{cmd}' (known: {list})");
+        }
+        Ok(())
+    }
+}
+
+/// The flags `cmd` accepts (every pipeline subcommand shares the
+/// config/backend set that `load_cfg` applies).
+fn known_flags(cmd: &str) -> Vec<&'static str> {
+    let mut v = vec![
+        "config",
+        "backend",
+        "encode-backend",
+        "threads",
+        "stripe-rows",
+        "num-banks",
+        "no-artifacts",
+    ];
+    match cmd {
+        "cluster" => v.extend(["dataset", "scale"]),
+        "search" => v.extend(["dataset", "scale", "serve-batches", "shards"]),
+        _ => v.clear(), // info/config/isa take positionals only
+    }
+    v
 }
 
 fn load_cfg(args: &Args, default: SpecPcmConfig) -> Result<SpecPcmConfig> {
@@ -463,13 +509,29 @@ fn cmd_isa(path: &str) -> Result<()> {
     Ok(())
 }
 
-fn main() -> Result<()> {
+fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        // Typed errors surface as a one-line message (not a Debug dump or
+        // a panic): `--stripe-rows banana` reports, it doesn't backtrace.
+        eprintln!("error: {e}");
+        eprintln!("run `specpcm help` for usage");
+        std::process::exit(2);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
     let Some(cmd) = argv.first() else {
         print!("{USAGE}");
         return Ok(());
     };
     let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "cluster" | "search" | "info" | "config" | "isa" => {
+            args.check_known(cmd, &known_flags(cmd))?
+        }
+        _ => {}
+    }
     match cmd.as_str() {
         "cluster" => cmd_cluster(&args)?,
         "search" => cmd_search(&args)?,
@@ -603,5 +665,59 @@ mod tests {
         // num_banks = 0 is rejected by config validation.
         let bad = Args::parse(&argv(&["--num-banks", "0"])).unwrap();
         assert!(load_cfg(&bad, SpecPcmConfig::paper_search()).is_err());
+    }
+
+    #[test]
+    fn malformed_numeric_flags_report_typed_errors() {
+        // Each of these used to be a potential panic path; now they come
+        // back as util::error values naming the offending flag.
+        let a = Args::parse(&argv(&["--stripe-rows", "banana"])).unwrap();
+        let err = load_cfg(&a, SpecPcmConfig::paper_search()).unwrap_err();
+        assert!(err.to_string().contains("--stripe-rows"), "{err}");
+
+        let a = Args::parse(&argv(&["--threads", "1.5"])).unwrap();
+        let err = load_cfg(&a, SpecPcmConfig::paper_search()).unwrap_err();
+        assert!(err.to_string().contains("--threads"), "{err}");
+
+        let a = Args::parse(&argv(&["--shards", "-2"])).unwrap();
+        let err = load_cfg(&a, SpecPcmConfig::paper_search()).unwrap_err();
+        assert!(err.to_string().contains("--shards"), "{err}");
+    }
+
+    #[test]
+    fn flag_missing_value_is_an_error_not_a_panic() {
+        // `--stripe-rows` at end of line degrades to the bare-flag value
+        // "true", which must surface as a parse error downstream.
+        let a = Args::parse(&argv(&["--stripe-rows"])).unwrap();
+        let err = load_cfg(&a, SpecPcmConfig::paper_search()).unwrap_err();
+        assert!(err.to_string().contains("--stripe-rows"), "{err}");
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_per_command() {
+        let a = Args::parse(&argv(&["--striperows", "64"])).unwrap();
+        let err = a.check_known("search", &known_flags("search")).unwrap_err();
+        assert!(err.to_string().contains("--striperows"), "{err}");
+        assert!(err.to_string().contains("--stripe-rows"), "{err}");
+
+        // `--shards` belongs to search, not cluster.
+        let a = Args::parse(&argv(&["--shards", "4"])).unwrap();
+        assert!(a.check_known("cluster", &known_flags("cluster")).is_err());
+        assert!(a.check_known("search", &known_flags("search")).is_ok());
+
+        // info/config/isa take no flags at all.
+        let a = Args::parse(&argv(&["--scale", "1.0"])).unwrap();
+        let err = a.check_known("info", &known_flags("info")).unwrap_err();
+        assert!(err.to_string().contains("takes no flags"), "{err}");
+    }
+
+    #[test]
+    fn run_reports_errors_for_malformed_argv() {
+        // End-to-end through `run`: the dispatcher surfaces the typed
+        // error instead of panicking (main() prints it and exits 2).
+        let err = run(&argv(&["search", "--shards", "many"])).unwrap_err();
+        assert!(err.to_string().contains("--shards"), "{err}");
+        let err = run(&argv(&["cluster", "--bogus-flag", "1"])).unwrap_err();
+        assert!(err.to_string().contains("--bogus-flag"), "{err}");
     }
 }

@@ -5,10 +5,12 @@ pub mod error;
 pub mod json;
 pub mod kv;
 pub mod rng;
+pub mod sync;
 
 pub use error::{Error, Result};
 pub use json::Json;
 pub use rng::Rng;
+pub use sync::lock_unpoisoned;
 
 /// Round half away from zero — matches `jnp.sign(x)*jnp.floor(|x|+0.5)` used
 /// by the Pallas kernel and the python oracle. (This is also what

@@ -1,0 +1,55 @@
+//! The crate's one blessed way to take a `Mutex`: [`lock_unpoisoned`].
+//!
+//! Engine state shared across the shard fan-out (query-HV cache, encode
+//! cache stats, the PJRT runtime handle) lives behind `Mutex`es. A
+//! poisoned lock means a worker thread panicked mid-update; recovering
+//! the possibly-inconsistent value would quietly break the bit-identity
+//! contract, so the only sane response is to propagate the panic — but a
+//! bare `.lock().unwrap()` dies with a message that names nothing.
+//! `lock_unpoisoned(&m, "query cache")` dies naming the lock, which is
+//! the difference between a five-second triage and a stack-trace hunt.
+//!
+//! Contract lint rule `C3-SYNC` (see `python/tools/lint_contracts.py`)
+//! flags every other `.lock()` call in the crate, and `clippy.toml`
+//! disallows `Mutex::lock` outside this module, so this helper stays the
+//! single idiom. `try_lock()` is intentionally *not* wrapped: the
+//! non-blocking scratch-buffer fallback in `coordinator::engine` handles
+//! contention (and poisoning) explicitly.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, panicking with a message that names the lock (`what`) if a
+/// previous holder panicked. Use for every blocking lock in the crate.
+#[allow(clippy::disallowed_methods)] // the one blessed `Mutex::lock` call
+pub fn lock_unpoisoned<'a, T>(m: &'a Mutex<T>, what: &str) -> MutexGuard<'a, T> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(_) => panic!("{what} mutex poisoned: a thread panicked while holding it"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn locks_and_returns_guard() {
+        let m = Mutex::new(7usize);
+        *lock_unpoisoned(&m, "test counter") += 1;
+        assert_eq!(*lock_unpoisoned(&m, "test counter"), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "test counter mutex poisoned")]
+    fn poisoned_lock_panics_with_name() {
+        let m = Arc::new(Mutex::new(0usize));
+        let m2 = Arc::clone(&m);
+        let handle = std::thread::spawn(move || {
+            let _guard = lock_unpoisoned(&m2, "test counter");
+            panic!("poison the lock");
+        });
+        assert!(handle.join().is_err());
+        let _ = lock_unpoisoned(&m, "test counter");
+    }
+}
