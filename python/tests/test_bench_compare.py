@@ -1,6 +1,8 @@
 """Tests for `python/tools/bench_compare.py` (the serving-bench
 regression gate): regression / no-regression / sentinel-skip /
-dropped-record behavior, plus the parse-error and tiny-mismatch paths.
+dropped-record behavior, plus the parse-error and tiny-mismatch paths,
+and the `BENCH_drift.json` shape (accuracy fields compared absolutely,
+records keyed by (section, threads, age_seconds, refresh)).
 stdlib + pytest only.
 """
 
@@ -140,4 +142,85 @@ def test_max_regression_bounds_enforced(tmp_path):
 
 def test_committed_baseline_self_compares_clean():
     baseline = os.path.join(REPO_ROOT, "BENCH_serving.json")
+    assert bc.main([baseline, baseline]) == 0
+
+
+# ---- BENCH_drift.json shape: accuracy fields + (age, refresh) keys ---------
+
+
+def drift_record(age, refresh, accuracy, qps=10.0, tiny=False):
+    return {
+        "section": "drift_serving",
+        "threads": 1,
+        "age_seconds": age,
+        "refresh": refresh,
+        "accuracy": accuracy,
+        "qps_segmented": qps,
+        "tiny": tiny,
+    }
+
+
+def test_accuracy_drop_beyond_tolerance_fails(tmp_path, capsys):
+    base = [drift_record(1e9, False, 0.90)]
+    curr = [drift_record(1e9, False, 0.85)]  # -0.05 < default 0.02 tolerance
+    assert compare(tmp_path, base, curr) == 1
+    assert "below baseline" in capsys.readouterr().err
+
+
+def test_accuracy_drop_within_tolerance_passes(tmp_path):
+    base = [drift_record(1e9, False, 0.90)]
+    curr = [drift_record(1e9, False, 0.89)]  # -0.01 within default 0.02
+    assert compare(tmp_path, base, curr) == 0
+    # ...but a zero tolerance catches any drop.
+    assert compare(tmp_path, base, curr, ["--accuracy-tolerance", "0.0"]) == 1
+
+
+def test_accuracy_improvement_passes(tmp_path, capsys):
+    base = [drift_record(1e12, True, 0.70)]
+    curr = [drift_record(1e12, True, 0.95)]
+    assert compare(tmp_path, base, curr) == 0
+    assert "ok" in capsys.readouterr().out
+
+
+def test_zero_accuracy_baseline_is_a_real_measurement(tmp_path, capsys):
+    # Unlike qps, accuracy 0.0 is a legitimate value: only negative
+    # baselines are sentinels.
+    base = [drift_record(1e12, False, 0.0)]
+    curr = [drift_record(1e12, False, 0.0)]
+    assert compare(tmp_path, base, curr) == 0
+    assert "accuracy: 0.000 -> 0.000" in capsys.readouterr().out
+
+
+def test_negative_accuracy_baseline_is_a_sentinel(tmp_path, capsys):
+    base = [drift_record(1e12, False, -1.0, qps=0.0)]
+    curr = [drift_record(1e12, False, 0.42)]
+    assert compare(tmp_path, base, curr) == 0
+    out = capsys.readouterr().out
+    assert "skip" in out and "sentinel" in out
+
+
+def test_negative_current_accuracy_is_a_failure(tmp_path, capsys):
+    base = [drift_record(1e12, False, 0.42)]
+    curr = [drift_record(1e12, False, -1.0)]
+    assert compare(tmp_path, base, curr) == 1
+    assert "unmeasured" in capsys.readouterr().err
+
+
+def test_drift_records_matched_by_age_and_refresh(tmp_path, capsys):
+    # The same section/threads at different (age, refresh) points are
+    # distinct measurements; dropping one of them must fail.
+    base = [
+        drift_record(0.0, False, 0.95),
+        drift_record(0.0, True, 0.95),
+        drift_record(1e12, False, 0.60),
+        drift_record(1e12, True, 0.95),
+    ]
+    curr = [r for r in base if not (r["age_seconds"] == 1e12 and r["refresh"])]
+    assert compare(tmp_path, base, base) == 0
+    assert compare(tmp_path, base, curr) == 1
+    assert "refresh=on" in capsys.readouterr().err
+
+
+def test_committed_drift_baseline_self_compares_clean():
+    baseline = os.path.join(REPO_ROOT, "BENCH_drift.json")
     assert bc.main([baseline, baseline]) == 0

@@ -349,6 +349,42 @@ def test_c4_blesses_program_context(tmp_path):
     assert rule_hits(lint.lint_tree(root), "C4-RNG") == []
 
 
+REFRESH_RNG_IN_CONTEXT = """\
+use crate::util::Rng;
+
+pub struct ProgramContext { rng: Rng }
+
+impl ProgramContext {
+    pub fn refresh_rng(seed: u64, global_row: u64, epoch: u64) -> Rng {
+        let mixed = (seed ^ 0xdf)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(global_row)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(epoch);
+        Rng::new(mixed)
+    }
+}
+"""
+
+
+def test_c4_blesses_refresh_roots_inside_program_context(tmp_path):
+    # The per-(global row, refresh epoch) refresh streams (PR 8) are the
+    # second legal Rng root — but only inside `impl ProgramContext`.
+    root = write_tree(tmp_path, {"coordinator/ctx.rs": REFRESH_RNG_IN_CONTEXT})
+    assert rule_hits(lint.lint_tree(root), "C4-RNG") == []
+
+
+def test_c4_fires_on_refresh_roots_outside_program_context(tmp_path):
+    # The identical helper hoisted out of ProgramContext (e.g. onto the
+    # engine or a free function) is a re-seeding site and must fire.
+    outside = REFRESH_RNG_IN_CONTEXT.replace(
+        "impl ProgramContext {", "impl RefreshScheduler {"
+    )
+    root = write_tree(tmp_path, {"coordinator/sched.rs": outside})
+    hits = rule_hits(lint.lint_tree(root), "C4-RNG")
+    assert [h.line for h in hits] == [12]
+
+
 def test_c4_out_of_scope_dirs_and_tests_pass(tmp_path):
     root = write_tree(
         tmp_path,

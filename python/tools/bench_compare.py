@@ -1,17 +1,23 @@
 #!/usr/bin/env python3
-"""Diff two serving-bench JSON files and fail on throughput regressions.
+"""Diff two bench JSON files and fail on throughput/accuracy regressions.
 
 Usage:
     python3 python/tools/bench_compare.py BASELINE.json CURRENT.json \
-        [--max-regression 0.15]
+        [--max-regression 0.15] [--accuracy-tolerance 0.02]
 
-Both inputs are `BENCH_serving.json`-shaped files: a flat JSON array of
-records, each carrying a `section` ("batch_scoring", "single_query",
-"engine_search_batch", ...), a `threads` count, and one or more
-queries-per-second fields (`qps_gathered`, `qps_segmented`). Records are
-matched across files by `(section, threads)`; for every qps field present
-in both, the tool reports the current/baseline ratio and **exits 1** if
-any measurement dropped by more than `--max-regression` (default 15%).
+Both inputs are `BENCH_serving.json` / `BENCH_drift.json`-shaped files: a
+flat JSON array of records, each carrying a `section` ("batch_scoring",
+"single_query", "engine_search_batch", "drift_serving", ...), a `threads`
+count, and one or more queries-per-second fields (`qps_gathered`,
+`qps_segmented`) and/or accuracy fields (`accuracy`). Records are matched
+across files by `(section, threads, age_seconds, refresh)` — the last two
+are absent (None) for serving-throughput records, so old-shape files keep
+their `(section, threads)` identity. For every qps field present in both,
+the tool reports the current/baseline ratio and **exits 1** if any
+measurement dropped by more than `--max-regression` (default 15%).
+Accuracy fields are compared *absolutely* (they are deterministic
+fractions, not noisy wall-clock rates): fail when
+`current < baseline - --accuracy-tolerance` (default 0.02).
 
 Conventions:
 * A baseline qps of 0 (or any non-positive / missing value) is an
@@ -20,18 +26,20 @@ Conventions:
   comparisons are skipped with a warning, never failed, so a sentinel
   baseline degrades to a schema check until a real driver run refreshes
   it (`cargo bench --bench serving_throughput`, then copy the emitted
-  BENCH_serving.json over the committed one).
-* Records whose `section` has no qps field at all (e.g. a `meta`
+  BENCH_serving.json over the committed one). For accuracy fields 0.0 is
+  a legitimate measurement, so only *negative* baselines (-1.0 by
+  convention) are sentinels.
+* Records with neither a qps nor an accuracy field (e.g. a `meta`
   provenance record) are ignored.
 * When the two records disagree on the `tiny` flag the comparison is
   skipped with a warning: a `--tiny` smoke run measures a different
-  workload and its q/s is not commensurable with the full-scale
-  baseline. (CI runs the smoke config unconditionally and the full
-  config only on big runners; this rule keeps the same compare step
-  correct for both.)
-* A `(section, threads)` pair present in the baseline but absent from
-  the current run is a hard failure: silently dropping a measured
-  configuration is how regressions hide.
+  workload and neither its q/s nor its accuracy is commensurable with
+  the full-scale baseline. (CI runs the smoke config unconditionally and
+  the full config only on big runners; this rule keeps the same compare
+  step correct for both.)
+* A record key present in the baseline but absent from the current run
+  is a hard failure: silently dropping a measured configuration is how
+  regressions hide.
 
 Exit codes: 0 ok / nothing comparable, 1 regression or missing record,
 2 usage or parse error. stdlib-only.
@@ -44,6 +52,26 @@ import json
 import sys
 
 QPS_FIELDS = ("qps_gathered", "qps_segmented")
+ACC_FIELDS = ("accuracy",)
+
+
+def record_key(rec):
+    return (
+        rec["section"],
+        rec.get("threads"),
+        rec.get("age_seconds"),
+        rec.get("refresh"),
+    )
+
+
+def key_tag(key):
+    section, threads, age, refresh = key
+    tag = f"{section} x{threads}"
+    if age is not None:
+        tag += f" age={age:g}s"
+    if refresh is not None:
+        tag += f" refresh={'on' if refresh else 'off'}"
+    return tag
 
 
 def load_records(path):
@@ -60,9 +88,9 @@ def load_records(path):
     for rec in data:
         if not isinstance(rec, dict) or "section" not in rec:
             continue
-        if not any(f in rec for f in QPS_FIELDS):
+        if not any(f in rec for f in QPS_FIELDS + ACC_FIELDS):
             continue  # meta/provenance record
-        key = (rec["section"], rec.get("threads"))
+        key = record_key(rec)
         if key in out:
             print(f"warning: {path}: duplicate record {key}; keeping the last")
         out[key] = rec
@@ -80,18 +108,35 @@ def main(argv=None):
         metavar="FRAC",
         help="fail when current qps < baseline * (1 - FRAC) (default 0.15)",
     )
+    ap.add_argument(
+        "--accuracy-tolerance",
+        type=float,
+        default=0.02,
+        metavar="ABS",
+        help="fail when current accuracy < baseline - ABS (default 0.02)",
+    )
     args = ap.parse_args(argv)
     if not 0.0 <= args.max_regression < 1.0:
         ap.error("--max-regression must be in [0, 1)")
+    if not 0.0 <= args.accuracy_tolerance < 1.0:
+        ap.error("--accuracy-tolerance must be in [0, 1)")
 
     base = load_records(args.baseline)
     curr = load_records(args.current)
 
+    def sort_key(k):
+        section, threads, age, refresh = k
+        return (
+            section,
+            threads if threads is not None else -1,
+            age if age is not None else -1.0,
+            refresh if refresh is not None else False,
+        )
+
     failures = []
     compared = skipped = 0
-    for key in sorted(base, key=lambda k: (k[0], k[1] if k[1] is not None else -1)):
-        section, threads = key
-        tag = f"{section} x{threads}"
+    for key in sorted(base, key=sort_key):
+        tag = key_tag(key)
         if key not in curr:
             failures.append(f"{tag}: present in baseline but missing from current run")
             continue
@@ -119,6 +164,26 @@ def main(argv=None):
                 failures.append(
                     f"{tag} {field}: {ratio:.2f}x of baseline "
                     f"(threshold {1.0 - args.max_regression:.2f}x)"
+                )
+        for field in ACC_FIELDS:
+            if field not in base[key] or field not in curr[key]:
+                continue
+            b, c = base[key][field], curr[key][field]
+            if not isinstance(b, (int, float)) or b < 0:
+                print(f"skip  {tag} {field}: baseline unmeasured (sentinel {b!r})")
+                skipped += 1
+                continue
+            if not isinstance(c, (int, float)) or c < 0:
+                failures.append(f"{tag} {field}: current run unmeasured ({c!r})")
+                continue
+            compared += 1
+            floor = b - args.accuracy_tolerance
+            verdict = "FAIL" if c < floor else "ok"
+            print(f"{verdict:<5} {tag} {field}: {b:.3f} -> {c:.3f} (floor {floor:.3f})")
+            if verdict == "FAIL":
+                failures.append(
+                    f"{tag} {field}: {c:.3f} below baseline {b:.3f} "
+                    f"- tolerance {args.accuracy_tolerance:.3f}"
                 )
 
     print(f"\ncompared {compared} measurement(s), skipped {skipped} sentinel(s)")

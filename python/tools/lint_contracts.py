@@ -177,9 +177,18 @@ Invariant: programming-noise RNG state is *chained* shard-to-shard
 `noise_rng_state`), because write-verify early exit makes per-row RNG
 consumption data-dependent — re-seeding per shard would desynchronize
 sharded engines from the monolithic reference and break score
-bit-identity. So `Rng::new` construction in engine code is only legal
-inside `ProgramContext` (the root of each noise stream); everything
-downstream must thread an existing `Rng` through.
+bit-identity. Fault injection (PR 8) rides the *same* chained stream:
+`FaultModel::apply` consumes exactly one draw per cell immediately after
+that cell's noise draws (zero when faults are disabled), so injected
+stuck-at/program-fail cells are bit-identical across shard counts too.
+The one other legal root is `ProgramContext::refresh_rng`, which derives
+a fresh stream per (global row, refresh epoch): refresh happens *after*
+programming, outside the chained stream, and keying it on the global row
+index keeps re-programmed conductances independent of which shard holds
+the row or the order buckets refresh in. So `Rng::new` construction in
+engine code is only legal inside `ProgramContext` (the root of the
+chained noise stream and of the per-(row, epoch) refresh streams);
+everything downstream must thread an existing `Rng` through.
 
 Flagged shape: `Rng::new(..)` in `coordinator/`, `backend/`, `encode/`,
 `isa/` non-test code.
@@ -192,7 +201,8 @@ data, not device noise.
 
 Dynamic backing: the chained-RNG bit-identity asserts in
 `rust/tests/segmented_equivalence.rs` (sharded == monolithic scores
-under programming noise).""",
+under programming noise) and the aged/faulted/refreshed schedule
+equivalence in `rust/tests/drift_equivalence.rs`.""",
     ),
     "C5-UNSAFE": Rule(
         "C5-UNSAFE",

@@ -1,0 +1,190 @@
+//! Drift-aware serving benchmark (the robustness instrument for the
+//! refresh-epoch machinery): identification accuracy versus served age
+//! for one library programmed once and then aged through a schedule of
+//! drift horizons, with the background [`RefreshPolicy`] either **off**
+//! (the panel keeps decaying) or **on** (a full re-programming epoch runs
+//! before each horizon is served). Both curves come from the *same*
+//! deterministic device state — same seed, same injected faults, same
+//! logical clock — so the gap between them is exactly what refresh buys.
+//!
+//! The accuracy lever is quantization, not noise: conductance drift
+//! scales every stored row by the same `t^-nu` factor, and with a fixed
+//! ADC full scale the shrunken scores collapse into fewer output codes
+//! (ties break toward the lowest logical row), so this config runs the
+//! drift-prone Sb2Te3 stack at 4 ADC bits where the effect bites hardest.
+//! At the largest horizon the refresh-on curve must be at least as
+//! accurate as refresh-off (hard assert, deterministic at every scale).
+//!
+//! Writes `BENCH_drift.json` (one record per (age, refresh) point, with
+//! serving qps and health telemetry) next to the text table;
+//! `python/tools/bench_compare.py` diffs the accuracy fields against the
+//! committed baseline. `--tiny` is the seconds-scale CI smoke
+//! configuration.
+
+use std::time::Instant;
+
+use specpcm::backend::BackendDispatcher;
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::{RefreshPolicy, SearchEngine};
+use specpcm::device::{FaultModel, Material};
+use specpcm::ms::{SearchDataset, Spectrum};
+use specpcm::telemetry::{render_json_records, render_table, JsonField};
+
+fn median_time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
+    f(); // warmup
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(f64::total_cmp);
+    times[times.len() / 2]
+}
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let (targets, n_queries, reps) = if tiny { (40, 8, 3) } else { (300, 64, 5) };
+
+    // Sb2Te3 (nu = 0.02, the drift-prone stack) at 4 ADC bits: by 1e12 s
+    // the stored panel sits at ~0.57x its programmed conductance, deep
+    // into code-collapse territory for a 16-code ADC. Mild fault rates
+    // keep the health telemetry exercised without drowning the drift
+    // signal.
+    let cfg = SpecPcmConfig {
+        hd_dim: 2048,
+        bucket_width: 5.0,
+        num_banks: 64,
+        adc_bits: 4,
+        material: Material::Sb2Te3Gst467,
+        fault: FaultModel::new(0.001, 0.0005, 2.0),
+        ..SpecPcmConfig::paper_search()
+    };
+    let horizons = [0.0, 1.0e6, 1.0e9, 1.0e11, 1.0e12];
+    let full_refresh = RefreshPolicy {
+        max_age_seconds: 0.0,
+        budget: 0,
+    };
+
+    let ds = SearchDataset::generate("drift", 77, targets, n_queries, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::reference();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+    // Two engines, one programmed device state: identical config and seed
+    // mean identical conductances, identical injected faults, identical
+    // logical clocks — the refresh policy is the only divergence.
+    let mut engines = [
+        (false, SearchEngine::program(cfg.clone(), &ds, &be).unwrap()),
+        (true, SearchEngine::program(cfg.clone(), &ds, &be).unwrap()),
+    ];
+
+    println!(
+        "workload: {} reference rows, {} queries, Sb2Te3 @ {} ADC bits{}\n",
+        engines[0].1.n_refs(),
+        queries.len(),
+        cfg.adc_bits,
+        if tiny { " (tiny smoke scale)" } else { "" }
+    );
+
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    let mut last_acc = [0.0f64; 2]; // [off, on] at the latest horizon
+    let mut prev_age = 0.0f64;
+    for &age in &horizons {
+        for (refresh, engine) in engines.iter_mut() {
+            engine.advance_age(age - prev_age);
+            let mut refreshed_rows = 0usize;
+            if *refresh {
+                refreshed_rows = engine.maintain(&full_refresh).rows;
+            }
+
+            let t = median_time(
+                || {
+                    engine.clear_query_cache();
+                    std::hint::black_box(engine.search_batch(&queries, &be).unwrap());
+                },
+                reps,
+            );
+            let batch = engine.search_batch(&queries, &be).unwrap();
+            let health = batch.health;
+            let out = engine
+                .finalize(&queries, std::slice::from_ref(&batch))
+                .unwrap();
+            let accuracy = out.correct as f64 / queries.len() as f64;
+            let qps = queries.len() as f64 / t;
+            last_acc[*refresh as usize] = accuracy;
+
+            rows.push(vec![
+                format!("{age:.0e}"),
+                if *refresh { "on".into() } else { "off".into() },
+                format!("{accuracy:.3}"),
+                format!("{}", out.identified),
+                format!("{qps:.1}"),
+                format!("{:.3}", health.est_conductance_loss),
+                format!("{}", health.refreshes),
+                format!("{}", health.injected_faults),
+            ]);
+            records.push(vec![
+                ("section", JsonField::S("drift_serving".into())),
+                ("threads", JsonField::U(1)),
+                ("age_seconds", JsonField::F(age)),
+                ("refresh", JsonField::B(*refresh)),
+                ("accuracy", JsonField::F(accuracy)),
+                ("identified", JsonField::U(out.identified as u64)),
+                ("correct", JsonField::U(out.correct as u64)),
+                ("qps_segmented", JsonField::F(qps)),
+                ("refreshed_rows", JsonField::U(refreshed_rows as u64)),
+                ("refreshes", JsonField::U(health.refreshes)),
+                ("injected_faults", JsonField::U(health.injected_faults)),
+                ("max_age_seconds", JsonField::F(health.max_age_seconds)),
+                (
+                    "est_conductance_loss",
+                    JsonField::F(health.est_conductance_loss),
+                ),
+                ("tiny", JsonField::B(tiny)),
+            ]);
+        }
+        prev_age = age;
+    }
+
+    println!(
+        "{}",
+        render_table(
+            "drift-aware serving (accuracy vs age, refresh off/on)",
+            &[
+                "age s",
+                "refresh",
+                "accuracy",
+                "identified",
+                "q/s",
+                "est loss",
+                "refreshes",
+                "faults",
+            ],
+            &rows
+        )
+    );
+
+    let json = render_json_records(&records);
+    let json_path = "BENCH_drift.json";
+    std::fs::write(json_path, &json).expect("write BENCH_drift.json");
+    println!("wrote {json_path} ({} records)", records.len());
+
+    // Reproduction contract (deterministic — no core-count or wall-clock
+    // guard needed): after the refresh epoch the on-curve serves an age-0
+    // panel, so at the deepest horizon it can never identify fewer
+    // queries correctly than the decayed off-curve.
+    let (acc_off, acc_on) = (last_acc[0], last_acc[1]);
+    assert!(
+        acc_on + 1e-9 >= acc_off,
+        "refresh-on accuracy ({acc_on:.3}) fell below refresh-off ({acc_off:.3}) \
+         at the {:.0e}-second horizon",
+        horizons[horizons.len() - 1]
+    );
+    println!(
+        "shape check OK: at {:.0e} s, refresh-on accuracy {acc_on:.3} >= \
+         refresh-off {acc_off:.3}.",
+        horizons[horizons.len() - 1]
+    );
+}

@@ -4,7 +4,7 @@
 //! this offline environment) with the paper's §IV-A defaults as presets.
 
 use crate::backend::BackendKind;
-use crate::device::Material;
+use crate::device::{FaultModel, Material};
 use crate::encode::EncodeKind;
 use crate::util::kv::{self, KvValue};
 
@@ -123,6 +123,10 @@ pub struct SpecPcmConfig {
     pub artifacts_dir: String,
     /// MVM execution backend (`[backend]` section).
     pub backend: BackendConfig,
+    /// Cell fault injection for drift-aware serving studies (`[fault]`
+    /// section; disabled in every preset so defaults reproduce the
+    /// fault-free results byte-for-byte).
+    pub fault: FaultModel,
 }
 
 impl Default for SpecPcmConfig {
@@ -154,6 +158,7 @@ impl SpecPcmConfig {
             use_artifacts: true,
             artifacts_dir: "artifacts".into(),
             backend: BackendConfig::default(),
+            fault: FaultModel::disabled(),
         }
     }
 
@@ -223,6 +228,16 @@ impl SpecPcmConfig {
                     cfg.backend.min_utilization =
                         val.as_f64().ok_or("backend.min_utilization")?
                 }
+                "fault.stuck_at_rate" => {
+                    cfg.fault.stuck_at_rate = val.as_f64().ok_or("fault.stuck_at_rate")?
+                }
+                "fault.program_fail_rate" => {
+                    cfg.fault.program_fail_rate =
+                        val.as_f64().ok_or("fault.program_fail_rate")?
+                }
+                "fault.stuck_g" => {
+                    cfg.fault.stuck_g = val.as_f64().ok_or("fault.stuck_g")? as f32
+                }
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -255,6 +270,10 @@ impl SpecPcmConfig {
         s += &kv::fmt_num("min_utilization", self.backend.min_utilization);
         s += &kv::fmt_num("shards", self.backend.shards);
         s += &kv::fmt_num("stripe_rows", self.backend.stripe_rows);
+        s += &kv::fmt_section("fault");
+        s += &kv::fmt_num("stuck_at_rate", self.fault.stuck_at_rate);
+        s += &kv::fmt_num("program_fail_rate", self.fault.program_fail_rate);
+        s += &kv::fmt_num("stuck_g", self.fault.stuck_g);
         s
     }
 
@@ -283,6 +302,20 @@ impl SpecPcmConfig {
             return Err(format!(
                 "backend.min_utilization {} not in [0, 1]",
                 self.backend.min_utilization
+            ));
+        }
+        for (name, rate) in [
+            ("fault.stuck_at_rate", self.fault.stuck_at_rate),
+            ("fault.program_fail_rate", self.fault.program_fail_rate),
+        ] {
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(format!("{name} {rate} not in [0, 1]"));
+            }
+        }
+        if self.fault.stuck_at_rate + self.fault.program_fail_rate > 1.0 {
+            return Err(format!(
+                "fault rates sum to {} > 1",
+                self.fault.stuck_at_rate + self.fault.program_fail_rate
             ));
         }
         Ok(())
@@ -390,5 +423,35 @@ mod tests {
 
         // Unknown encode kinds are rejected like unknown MVM kinds.
         assert!(SpecPcmConfig::from_toml("[backend]\nencode_kind = \"gpu\"").is_err());
+    }
+
+    #[test]
+    fn fault_section_roundtrip_defaults_and_validation() {
+        // Presets ship with faults disabled — the byte-identity baseline.
+        let d = SpecPcmConfig::paper_search();
+        assert_eq!(d.fault, FaultModel::disabled());
+        assert!(!d.fault.is_active());
+
+        let c = SpecPcmConfig::from_toml(
+            "hd_dim = 1024\n[fault]\nstuck_at_rate = 0.001\n\
+             program_fail_rate = 0.002\nstuck_g = 2.5\n",
+        )
+        .unwrap();
+        assert_eq!(c.fault.stuck_at_rate, 0.001);
+        assert_eq!(c.fault.program_fail_rate, 0.002);
+        assert_eq!(c.fault.stuck_g, 2.5);
+        assert!(c.fault.is_active());
+
+        // to_toml emits the section and parses back identically.
+        let back = SpecPcmConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.fault, c.fault);
+
+        // Rates must be probabilities and jointly at most 1.
+        assert!(SpecPcmConfig::from_toml("[fault]\nstuck_at_rate = 1.5").is_err());
+        assert!(SpecPcmConfig::from_toml("[fault]\nprogram_fail_rate = -0.1").is_err());
+        assert!(SpecPcmConfig::from_toml(
+            "[fault]\nstuck_at_rate = 0.7\nprogram_fail_rate = 0.7\n"
+        )
+        .is_err());
     }
 }

@@ -71,6 +71,39 @@
 //! The cache lives behind a `Mutex`, never a `RefCell`: `&SearchEngine`
 //! is `Sync`, so the shard layer can fan one batch out across scoped
 //! threads while hit/miss reporting keeps working per batch.
+//!
+//! # Drift, faults, and refresh epochs
+//!
+//! A programmed library is not frozen: PCM conductances decay by the
+//! power-law [`DriftModel`] as storage ages, and programming events can
+//! leave stuck or failed cells behind ([`crate::device::FaultModel`],
+//! enabled through `cfg.fault`). The engine models a live serving horizon
+//! with a **deterministic logical clock** — [`SearchEngine::advance_age`]
+//! moves it forward; wall time is never consulted — and serves every batch
+//! from an aged copy of the stored conductances: `programmed_logical`
+//! holds what the cells stored at their last programming event, and the
+//! bucket-contiguous serving panel is rebuilt from it through
+//! [`DriftModel::drift_slice_into`] whenever the clock or the library
+//! changes. At age 0 with faults disabled the panel is byte-identical to
+//! the pre-drift engine, so existing results are reproduced exactly.
+//!
+//! *Detection*: [`SearchEngine::device_health`] summarizes staleness over
+//! the live rows (max age since programming, estimated conductance loss,
+//! injected-fault count, refresh count) and every [`BatchOutcome`] carries
+//! the snapshot it was served under.
+//!
+//! *Recovery*: [`RefreshPolicy`] picks the stalest bucket segments
+//! (threshold + budget) and [`SearchEngine::refresh_buckets`] re-programs
+//! them in place — an **epoch swap**: each row's epoch increments and its
+//! re-programming draws from a fresh per-`(global row, epoch)` RNG rooted
+//! at [`ProgramContext::refresh_rng`], which makes refresh outcomes
+//! independent of shard count and refresh order. Refresh work is charged
+//! to the one-time ledger (`program_ops`/`program_report`), never to
+//! batches. The library is also mutable while serving:
+//! [`SearchEngine::add_references`] programs new rows through the same
+//! chained noise stream and [`SearchEngine::remove_references`] releases
+//! rows back to the [`SegmentAllocator`] for reuse, with the bucket layout
+//! rebuilt in place after every mutation.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Mutex;
@@ -78,13 +111,13 @@ use std::sync::Mutex;
 use crate::array::{dac_quantize, AdcConfig};
 use crate::backend::{BackendDispatcher, MvmJob};
 use crate::config::SpecPcmConfig;
-use crate::device::{MlcConfig, NoiseModel, Programmer};
+use crate::device::{DriftModel, MlcConfig, NoiseModel, Programmer};
 use crate::energy::{EnergyLatencyModel, EnergyReport, OpCounts};
-use crate::ms::bucket::{bucket_by_precursor, candidate_keys_open, BucketKey};
+use crate::ms::bucket::{bucket_key, candidate_keys_open, BucketKey};
 use crate::ms::synth::PTM_SHIFTS;
 use crate::ms::{SearchDataset, Spectrum};
 use crate::search::fdr_filter;
-use crate::telemetry::{EncodeCacheStats, StageTimer};
+use crate::telemetry::{DeviceHealth, EncodeCacheStats, StageTimer};
 use crate::util::error::{Error, Result};
 use crate::util::sync::lock_unpoisoned;
 use crate::util::Rng;
@@ -142,6 +175,8 @@ impl ProgramContext {
     pub const SEARCH_SEED_TAG: u64 = 0x5e;
     /// Seed tag of the clustering programming-noise stream (`seed ^ 0xc1`).
     pub const CLUSTER_SEED_TAG: u64 = 0xc1;
+    /// Seed tag of the per-(row, epoch) refresh-programming streams.
+    pub const REFRESH_SEED_TAG: u64 = 0xdf;
 
     /// `seed_tag` keeps the clustering and search noise streams distinct
     /// ([`Self::CLUSTER_SEED_TAG`] / [`Self::SEARCH_SEED_TAG`], matching
@@ -151,15 +186,37 @@ impl ProgramContext {
     }
 
     /// Root of a fresh programming-noise stream (`cfg.seed ^ seed_tag`).
-    /// This is the *only* blessed `Rng::new` site in engine code (contract
-    /// lint rule C4-RNG): every downstream consumer — sharded programming
-    /// in particular — must chain an existing state through
+    /// Together with [`ProgramContext::refresh_rng`] these are the *only*
+    /// blessed `Rng::new` sites in engine code (contract lint rule
+    /// C4-RNG): every downstream consumer — sharded programming in
+    /// particular — must chain an existing state through
     /// [`ProgramContext::rng_state`] / `SearchEngine::noise_rng_state`
     /// instead of re-seeding, because per-row RNG consumption is
-    /// data-dependent (write-verify converges early) and re-seeding would
+    /// data-dependent (write-verify converges early, and fault draws
+    /// interleave per cell when injection is active) and re-seeding would
     /// desynchronize shards from the monolithic reference.
     pub fn noise_rng(cfg: &SpecPcmConfig, seed_tag: u64) -> Rng {
         Rng::new(cfg.seed ^ seed_tag)
+    }
+
+    /// Root of the refresh-programming stream for one `(global row,
+    /// epoch)` re-programming event — the second blessed `Rng::new` site
+    /// (rule C4-RNG). Refresh cannot chain the construction-time noise
+    /// stream: which rows refresh, and in what order, depends on the
+    /// policy and the shard partition, so a chained stream would break
+    /// the sharded == monolithic contract. Keying the root on the
+    /// *global* row index and the row's epoch instead makes every refresh
+    /// outcome independent of shard count and refresh scheduling order
+    /// (`rust/tests/drift_equivalence.rs`).
+    pub fn refresh_rng(cfg: &SpecPcmConfig, global_row: u64, epoch: u64) -> Rng {
+        // Golden-ratio mixing keeps nearby (row, epoch) pairs decorrelated
+        // before SplitMix64 expands the seed inside `Rng::new`.
+        let mixed = (cfg.seed ^ Self::REFRESH_SEED_TAG)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(global_row)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(epoch);
+        Rng::new(mixed)
     }
 
     /// Construct with an explicit programming-noise RNG state. The shard
@@ -173,7 +230,8 @@ impl ProgramContext {
         let programmer = Programmer::new(
             NoiseModel::new(cfg.material, MlcConfig::new(cfg.mlc_bits)),
             cfg.write_verify,
-        );
+        )
+        .with_faults(cfg.fault);
         let allocator = SegmentAllocator::try_new(cfg.num_banks, packed_width)?;
         Ok(ProgramContext {
             programmer,
@@ -202,22 +260,24 @@ impl ProgramContext {
     }
 
     /// Allocate slots for and program `n_rows` packed rows (row-major
-    /// `n_rows x cp`). Returns the noisy stored conductances plus the
-    /// physical slots, or a [`CapacityError`] when the rows don't fit.
+    /// `n_rows x cp`). Returns the noisy stored conductances, the physical
+    /// slots, and the per-row injected-fault counts, or a
+    /// [`CapacityError`] when the rows don't fit.
     pub fn program_rows(
         &mut self,
         packed: &[f32],
         n_rows: usize,
         cp: usize,
         ops: &mut OpCounts,
-    ) -> Result<(Vec<f32>, Vec<Slot>)> {
+    ) -> Result<(Vec<f32>, Vec<Slot>, Vec<u64>)> {
         self.check_fit(n_rows)?;
         let mut slots = Vec::with_capacity(n_rows);
         for _ in 0..n_rows {
             slots.push(self.allocator.alloc().expect("free slots were checked"));
         }
-        let noisy = program_refs(packed, n_rows, cp, &self.programmer, &mut self.rng, ops);
-        Ok((noisy, slots))
+        let (noisy, row_faults) =
+            program_refs(packed, n_rows, cp, &self.programmer, &mut self.rng, ops);
+        Ok((noisy, slots, row_faults))
     }
 
     /// Release transient rows (clustering reprograms the banks per bucket).
@@ -245,7 +305,72 @@ pub struct BatchOutcome {
     /// Query-HV cache hits/misses for this batch (host-time telemetry;
     /// ops/report above are independent of the cache by design).
     pub cache: EncodeCacheStats,
+    /// Device staleness/health snapshot the batch was served under (see
+    /// the module docs' "Drift, faults, and refresh epochs" section).
+    pub health: DeviceHealth,
     pub wall: StageTimer,
+}
+
+/// When and how to re-program stale bucket segments between batches.
+///
+/// `select` is pure policy over `(bucket, staleness)` candidates; the
+/// engine (or the shard layer, after pooling per-shard candidates into
+/// one global selection) feeds the picked buckets to `refresh_buckets`.
+#[derive(Clone, Copy, Debug)]
+pub struct RefreshPolicy {
+    /// Refresh a bucket only once its stalest row exceeds this age
+    /// (seconds on the logical clock). `0.0` refreshes everything aged.
+    pub max_age_seconds: f64,
+    /// Most buckets re-programmed per maintenance pass (0 = unlimited) —
+    /// bounds the programming-energy spike of one pass.
+    pub budget: usize,
+}
+
+impl RefreshPolicy {
+    /// Pick the buckets to refresh: drop candidates at or under the age
+    /// threshold, order the rest stalest-first (ties by ascending bucket
+    /// key, so selection is deterministic), dedupe — the shard layer
+    /// reports boundary buckets once per shard — and cut at the budget.
+    pub fn select(&self, mut candidates: Vec<(BucketKey, f64)>) -> Vec<BucketKey> {
+        candidates.retain(|&(_, age)| age > self.max_age_seconds);
+        candidates.sort_by(|a, b| b.1.total_cmp(&a.1).then(a.0.cmp(&b.0)));
+        let mut seen = std::collections::BTreeSet::new();
+        let mut picked = Vec::new();
+        for (key, _) in candidates {
+            if seen.insert(key) {
+                picked.push(key);
+                if self.budget != 0 && picked.len() == self.budget {
+                    break;
+                }
+            }
+        }
+        picked
+    }
+}
+
+/// What one refresh pass did: bucket segments touched, rows re-programmed,
+/// and the programming ops charged to the one-time ledger. `rows` and
+/// `ops` are shard-count-invariant; `buckets` counts per-engine segments,
+/// so a bucket straddling a shard boundary counts once per shard.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RefreshOutcome {
+    pub buckets: usize,
+    pub rows: usize,
+    pub ops: OpCounts,
+}
+
+/// Per-logical-row lifecycle state for drift/refresh bookkeeping.
+#[derive(Clone, Copy, Debug)]
+struct RowState {
+    /// Logical-clock time the row was last programmed.
+    programmed_at: f64,
+    /// Re-programming events this row has seen (0 = initial programming).
+    epoch: u64,
+    /// Cells fault injection corrupted at the last programming event.
+    faults: u64,
+    /// False once `remove_references` released the row (tombstone; the
+    /// slot is back in the allocator pool and the row never serves again).
+    live: bool,
 }
 
 /// One-time vs. marginal vs. amortized energy/latency split over a serving
@@ -403,25 +528,52 @@ pub struct SearchEngine {
     ctx: ProgramContext,
     adc: AdcConfig,
     cp: usize,
+    /// Live target rows (maintained across add/remove mutations).
     n_targets: usize,
-    /// Peptide id per *logical* reference row (targets then decoys) — the
-    /// only per-spectrum metadata serving needs, so the engine does not
-    /// retain the peak data of a library it already programmed.
+    /// Peptide id per *logical* reference row (targets then decoys, then
+    /// any rows added live) — the only per-spectrum metadata serving
+    /// needs, so the engine does not retain the peak data of a library it
+    /// already programmed.
     ref_peptides: Vec<Option<u32>>,
-    /// Programmed noisy conductances, row-major `n_refs x cp`, in
-    /// **bucket-contiguous physical row order**: each precursor bucket's
-    /// rows form one contiguous range (`bucket_ranges`), so candidate
-    /// panels are borrowed row ranges instead of per-batch gathered
-    /// copies. Permuted from logical order *after* programming — the
-    /// noise stream is consumed in logical row order, untouched.
+    /// Precursor bucket key per logical row (drives the serving layout).
+    ref_keys: Vec<BucketKey>,
+    /// Whether each logical row is a target (vs. decoy) — replaces the
+    /// old `ri < n_targets` test, which live mutation invalidates.
+    is_target: Vec<bool>,
+    /// Drift/refresh lifecycle state per logical row.
+    row_state: Vec<RowState>,
+    /// Power-law drift model for `cfg.material`.
+    drift: DriftModel,
+    /// Deterministic logical serving clock (seconds); advanced only by
+    /// [`SearchEngine::advance_age`], never by wall time.
+    age_seconds: f64,
+    /// Global logical-row offset of this engine's row 0 (non-zero on
+    /// shards) — keys the per-row refresh RNG so sharded and monolithic
+    /// refreshes draw identical streams.
+    row_base: usize,
+    /// Clean packed reference HVs in logical row order — what refresh
+    /// re-programs (the original targets, not the noisy outcome).
+    packed_logical: Vec<f32>,
+    /// Stored noisy conductances at each row's last programming event, in
+    /// logical row order (age 0 relative to `row_state.programmed_at`).
+    programmed_logical: Vec<f32>,
+    /// The *aged serving panel*: `programmed_logical` drifted to the
+    /// current clock and permuted into **bucket-contiguous physical row
+    /// order** over the live rows: each precursor bucket's rows form one
+    /// contiguous range (`bucket_ranges`), so candidate panels are
+    /// borrowed row ranges instead of per-batch gathered copies.
+    /// Rebuilt by `rebuild_serving_panel` after every clock or library
+    /// change; at age 0 it is byte-identical to the stored conductances.
     noisy_refs: Vec<f32>,
-    /// Physical (bank group, row) slot of each *logical* reference row.
+    /// Physical (bank group, row) slot of each *logical* reference row
+    /// (slots of removed rows have been released but stay recorded).
     ref_slots: Vec<Slot>,
     /// Precursor bucket -> physical row range into `noisy_refs`.
     bucket_ranges: BTreeMap<BucketKey, std::ops::Range<usize>>,
     /// Physical row in `noisy_refs` -> logical reference row.
     logical_of_phys: Vec<usize>,
-    /// Logical reference row -> physical row in `noisy_refs`.
+    /// Logical reference row -> physical row in `noisy_refs`
+    /// (`usize::MAX` for removed rows, which have no physical row).
     phys_of_logical: Vec<usize>,
     program_ops: OpCounts,
     program_report: EnergyReport,
@@ -531,47 +683,35 @@ impl SearchEngine {
         let packed_refs = wall.time("encode refs", || {
             frontend.encode_pack(&all_refs, backend, &mut ops)
         })?;
-        let (noisy_logical, ref_slots) = wall.time("program refs", || {
+        let (noisy_logical, ref_slots, row_faults) = wall.time("program refs", || {
             ctx.program_rows(&packed_refs, all_refs.len(), cp, &mut ops)
         })?;
 
-        // Bucket the references for candidate selection, then keep only the
-        // peptide ids — the peak data is already encoded into the noisy
-        // conductances.
-        let ref_spectra: Vec<Spectrum> = all_refs.iter().map(|s| (*s).clone()).collect();
-        let ref_buckets = bucket_by_precursor(&ref_spectra, cfg.bucket_width);
-        let ref_peptides: Vec<Option<u32>> = ref_spectra.iter().map(|s| s.peptide_id).collect();
-
-        // Permute the host copy of the stored conductances into
-        // bucket-contiguous physical order (module docs). This happens
-        // strictly *after* programming: every logical row's conductances —
-        // and the data-dependent noise stream that produced them — are
-        // exactly what a layout-free engine would hold; only the host
-        // buffer order changes, in bucket-key order so adjacent candidate
-        // buckets coalesce into one contiguous panel.
+        // Keep only the serving metadata — peptide ids, bucket keys and
+        // target/decoy flags per logical row; the peak data is already
+        // encoded into the stored conductances.
         let n_refs = all_refs.len();
-        let mut logical_of_phys = Vec::with_capacity(n_refs);
-        let mut bucket_ranges = BTreeMap::new();
-        for (key, rows) in &ref_buckets {
-            let start = logical_of_phys.len();
-            logical_of_phys.extend_from_slice(rows);
-            bucket_ranges.insert(*key, start..logical_of_phys.len());
-        }
-        debug_assert_eq!(logical_of_phys.len(), n_refs, "buckets partition the rows");
-        let mut phys_of_logical = vec![0usize; n_refs];
-        let mut noisy_refs = vec![0f32; noisy_logical.len()];
-        wall.time("layout refs", || {
-            for (p, &l) in logical_of_phys.iter().enumerate() {
-                phys_of_logical[l] = p;
-                noisy_refs[p * cp..(p + 1) * cp]
-                    .copy_from_slice(&noisy_logical[l * cp..(l + 1) * cp]);
-            }
-        });
+        let ref_peptides: Vec<Option<u32>> = all_refs.iter().map(|s| s.peptide_id).collect();
+        let ref_keys: Vec<BucketKey> = all_refs
+            .iter()
+            .map(|s| bucket_key(s.charge, s.precursor_mz, cfg.bucket_width))
+            .collect();
+        let is_target: Vec<bool> = (0..n_refs).map(|l| l < n_targets).collect();
+        let row_state: Vec<RowState> = row_faults
+            .iter()
+            .map(|&faults| RowState {
+                programmed_at: 0.0,
+                epoch: 0,
+                faults,
+                live: true,
+            })
+            .collect();
 
         let model = EnergyLatencyModel::new(cfg.material, cfg.adc_bits, cfg.num_banks);
         let program_report = model.report(&ops);
+        let drift = DriftModel::for_material(cfg.material);
 
-        Ok(SearchEngine {
+        let mut engine = SearchEngine {
             cfg,
             frontend,
             ctx,
@@ -579,18 +719,81 @@ impl SearchEngine {
             cp,
             n_targets,
             ref_peptides,
-            noisy_refs,
+            ref_keys,
+            is_target,
+            row_state,
+            drift,
+            age_seconds: 0.0,
+            row_base: 0,
+            packed_logical: packed_refs,
+            programmed_logical: noisy_logical,
+            noisy_refs: Vec::new(),
             ref_slots,
-            bucket_ranges,
-            logical_of_phys,
-            phys_of_logical,
+            bucket_ranges: BTreeMap::new(),
+            logical_of_phys: Vec::new(),
+            phys_of_logical: Vec::new(),
             program_ops: ops,
             program_report,
-            program_wall: wall,
+            program_wall: StageTimer::new(),
             query_cache: Mutex::new(HashMap::new()),
             cache_stats: Mutex::new(EncodeCacheStats::default()),
             score_scratch: Mutex::new(ScoreScratch::default()),
-        })
+        };
+        // Permute the host copy of the stored conductances into
+        // bucket-contiguous physical order (module docs). This happens
+        // strictly *after* programming: every logical row's conductances —
+        // and the data-dependent noise stream that produced them — are
+        // exactly what a layout-free engine would hold; only the host
+        // buffer order changes, in bucket-key order so adjacent candidate
+        // buckets coalesce into one contiguous panel. At age 0 the drift
+        // pass inside the rebuild is a bit-exact copy.
+        wall.time("layout refs", || engine.rebuild_layout());
+        engine.program_wall = wall;
+        Ok(engine)
+    }
+
+    /// Rebuild the bucket-contiguous layout maps over the *live* rows
+    /// (ascending logical order within each bucket, buckets in key order —
+    /// exactly the `bucket_by_precursor` order initial construction used),
+    /// then re-derive the aged serving panel.
+    fn rebuild_layout(&mut self) {
+        let mut by_bucket: BTreeMap<BucketKey, Vec<usize>> = BTreeMap::new();
+        for (l, st) in self.row_state.iter().enumerate() {
+            if st.live {
+                by_bucket.entry(self.ref_keys[l]).or_default().push(l);
+            }
+        }
+        self.logical_of_phys.clear();
+        self.bucket_ranges.clear();
+        for (key, rows) in by_bucket {
+            let start = self.logical_of_phys.len();
+            self.logical_of_phys.extend_from_slice(&rows);
+            self.bucket_ranges.insert(key, start..self.logical_of_phys.len());
+        }
+        self.phys_of_logical = vec![usize::MAX; self.row_state.len()];
+        for (p, &l) in self.logical_of_phys.iter().enumerate() {
+            self.phys_of_logical[l] = p;
+        }
+        self.noisy_refs.clear();
+        self.noisy_refs
+            .resize(self.logical_of_phys.len() * self.cp, 0.0);
+        self.rebuild_serving_panel();
+    }
+
+    /// Re-derive the serving panel from the stored conductances: each live
+    /// row drifted by its own age (clock minus last programming time).
+    /// One `powf` per row (`DriftModel::drift_slice_into`), `cp`
+    /// multiplies — cheap enough to run after every clock advance.
+    fn rebuild_serving_panel(&mut self) {
+        let cp = self.cp;
+        for (p, &l) in self.logical_of_phys.iter().enumerate() {
+            let t = self.age_seconds - self.row_state[l].programmed_at;
+            self.drift.drift_slice_into(
+                &self.programmed_logical[l * cp..(l + 1) * cp],
+                t,
+                &mut self.noisy_refs[p * cp..(p + 1) * cp],
+            );
+        }
     }
 
     /// Programming-noise RNG state after everything programmed so far —
@@ -627,13 +830,220 @@ impl SearchEngine {
         &self.program_wall
     }
 
-    /// Reference rows programmed (targets + decoys).
+    /// *Live* reference rows currently serving (targets + decoys; removed
+    /// rows are excluded).
     pub fn n_refs(&self) -> usize {
-        self.ref_peptides.len()
+        self.logical_of_phys.len()
     }
 
+    /// Live target rows.
     pub fn n_targets(&self) -> usize {
         self.n_targets
+    }
+
+    /// Current logical serving clock (seconds since construction).
+    pub fn age_seconds(&self) -> f64 {
+        self.age_seconds
+    }
+
+    /// Global logical-row offset of this engine's row 0 (see
+    /// [`SearchEngine::set_row_base`]).
+    pub fn row_base(&self) -> usize {
+        self.row_base
+    }
+
+    /// Declare this engine's position in a global row space: local logical
+    /// row `l` is global row `row_base + l`. The shard layer sets each
+    /// shard's base to its plan offset so per-(global row, epoch) refresh
+    /// streams match the monolithic engine's. Placement-only — stored
+    /// conductances and scores never depend on it until a refresh draws.
+    pub fn set_row_base(&mut self, row_base: usize) {
+        self.row_base = row_base;
+    }
+
+    /// Advance the deterministic serving clock by `seconds` and re-age the
+    /// serving panel. `advance_age(0.0)` is a strict no-op on results (the
+    /// rebuild's drift factor is exactly 1.0 for every fresh row).
+    pub fn advance_age(&mut self, seconds: f64) {
+        assert!(
+            seconds.is_finite() && seconds >= 0.0,
+            "advance_age: {seconds} is not a finite non-negative duration"
+        );
+        self.age_seconds += seconds;
+        self.rebuild_serving_panel();
+    }
+
+    /// Staleness/health summary over the live rows: max age since last
+    /// programming, the conductance loss that age implies, total injected
+    /// faults, and total re-programming epochs.
+    pub fn device_health(&self) -> DeviceHealth {
+        let mut h = DeviceHealth::default();
+        for st in self.row_state.iter().filter(|st| st.live) {
+            h.max_age_seconds = h.max_age_seconds.max(self.age_seconds - st.programmed_at);
+            h.injected_faults += st.faults;
+            h.refreshes += st.epoch;
+        }
+        h.est_conductance_loss = 1.0 - self.drift.conductance_factor(h.max_age_seconds);
+        h
+    }
+
+    /// Per-bucket staleness candidates for refresh selection: every served
+    /// bucket with the age of its stalest row. The shard layer pools these
+    /// across shards before one global [`RefreshPolicy::select`].
+    pub fn refresh_candidates(&self) -> Vec<(BucketKey, f64)> {
+        self.bucket_ranges
+            .iter()
+            .map(|(key, range)| {
+                let age = range
+                    .clone()
+                    .map(|p| self.age_seconds - self.row_state[self.logical_of_phys[p]].programmed_at)
+                    .fold(0.0f64, f64::max);
+                (*key, age)
+            })
+            .collect()
+    }
+
+    /// Re-program the given bucket segments in place (epoch swap): every
+    /// live row of each bucket present on this engine is re-programmed
+    /// from its clean packed HV through a fresh per-(global row, epoch)
+    /// refresh stream, its programming time reset to the current clock,
+    /// and the serving panel rebuilt. The incremental programming work is
+    /// charged to the **one-time** ledger — batches stay marginal-only.
+    /// Unknown buckets are skipped (a shard refreshes only its portion).
+    pub fn refresh_buckets(&mut self, keys: &[BucketKey]) -> RefreshOutcome {
+        let cp = self.cp;
+        let mut out = RefreshOutcome::default();
+        for key in keys {
+            let Some(range) = self.bucket_ranges.get(key).cloned() else {
+                continue;
+            };
+            out.buckets += 1;
+            // Ascending logical order within the bucket, matching the
+            // layout invariant — but order cannot matter: each row's
+            // stream is rooted on its own (global row, epoch).
+            let mut rows: Vec<usize> =
+                range.map(|p| self.logical_of_phys[p]).collect();
+            rows.sort_unstable();
+            for l in rows {
+                let epoch = self.row_state[l].epoch + 1;
+                let mut rng = ProgramContext::refresh_rng(
+                    &self.cfg,
+                    (self.row_base + l) as u64,
+                    epoch,
+                );
+                let (stored, row_faults) = program_refs(
+                    &self.packed_logical[l * cp..(l + 1) * cp],
+                    1,
+                    cp,
+                    &self.ctx.programmer,
+                    &mut rng,
+                    &mut out.ops,
+                );
+                self.programmed_logical[l * cp..(l + 1) * cp].copy_from_slice(&stored);
+                let st = &mut self.row_state[l];
+                st.programmed_at = self.age_seconds;
+                st.epoch = epoch;
+                st.faults = row_faults[0];
+                out.rows += 1;
+            }
+        }
+        if out.rows > 0 {
+            self.rebuild_serving_panel();
+            self.program_ops += &out.ops;
+            let model =
+                EnergyLatencyModel::new(self.cfg.material, self.cfg.adc_bits, self.cfg.num_banks);
+            self.program_report = model.report(&self.program_ops);
+        }
+        out
+    }
+
+    /// One maintenance pass: select stale buckets under `policy` and
+    /// refresh them. Intended between serving batches.
+    pub fn maintain(&mut self, policy: &RefreshPolicy) -> RefreshOutcome {
+        let keys = policy.select(self.refresh_candidates());
+        self.refresh_buckets(&keys)
+    }
+
+    /// Program additional reference spectra into the live library (target
+    /// rows when `is_target`, decoy rows otherwise), reusing slots that
+    /// `remove_references` released. New rows continue the engine's
+    /// chained programming-noise stream and are stamped with the current
+    /// clock; encode + programming work is charged to the one-time
+    /// ledger. Returns the new logical row indices.
+    pub fn add_references(
+        &mut self,
+        spectra: &[&Spectrum],
+        is_target: bool,
+        backend: &BackendDispatcher,
+    ) -> Result<Vec<usize>> {
+        if spectra.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.ctx.check_fit(spectra.len())?;
+        let cp = self.cp;
+        let mut ops = OpCounts::default();
+        let packed = self.frontend.encode_pack(spectra, backend, &mut ops)?;
+        let (noisy, slots, row_faults) =
+            self.ctx.program_rows(&packed, spectra.len(), cp, &mut ops)?;
+
+        let mut new_rows = Vec::with_capacity(spectra.len());
+        for (i, s) in spectra.iter().enumerate() {
+            new_rows.push(self.row_state.len());
+            self.ref_peptides.push(s.peptide_id);
+            self.ref_keys
+                .push(bucket_key(s.charge, s.precursor_mz, self.cfg.bucket_width));
+            self.is_target.push(is_target);
+            if is_target {
+                self.n_targets += 1;
+            }
+            self.ref_slots.push(slots[i]);
+            self.row_state.push(RowState {
+                programmed_at: self.age_seconds,
+                epoch: 0,
+                faults: row_faults[i],
+                live: true,
+            });
+        }
+        self.packed_logical.extend_from_slice(&packed);
+        self.programmed_logical.extend_from_slice(&noisy);
+        self.program_ops += &ops;
+        let model =
+            EnergyLatencyModel::new(self.cfg.material, self.cfg.adc_bits, self.cfg.num_banks);
+        self.program_report = model.report(&self.program_ops);
+        self.rebuild_layout();
+        Ok(new_rows)
+    }
+
+    /// Remove live reference rows from service: their allocator slots are
+    /// released for reuse, target counts updated, and the serving layout
+    /// rebuilt without them. Rows are tombstoned, never reindexed, so
+    /// logical row indices stay stable across mutations. Fails without
+    /// touching any state when a row is out of range, already removed, or
+    /// listed twice.
+    pub fn remove_references(&mut self, rows: &[usize]) -> Result<()> {
+        let mut seen = std::collections::BTreeSet::new();
+        for &l in rows {
+            crate::ensure!(
+                l < self.row_state.len(),
+                "remove_references: row {l} out of range"
+            );
+            crate::ensure!(
+                self.row_state[l].live,
+                "remove_references: row {l} is not live"
+            );
+            crate::ensure!(seen.insert(l), "remove_references: row {l} listed twice");
+        }
+        for &l in rows {
+            self.row_state[l].live = false;
+            self.ctx.allocator.release(self.ref_slots[l]);
+            if self.is_target[l] {
+                self.n_targets -= 1;
+            }
+        }
+        if !rows.is_empty() {
+            self.rebuild_layout();
+        }
+        Ok(())
     }
 
     /// Packed width (`cp`) of every programmed row.
@@ -651,12 +1061,15 @@ impl SearchEngine {
         self.ctx.allocator.banks_of(slot)
     }
 
-    /// Stored noisy conductances of *logical* reference row `ri` (`cp`
-    /// wide) — indexed through the physical layout map, so callers (ISA
-    /// mirroring, tests) keep the targets-then-decoys row order no matter
-    /// how the host buffer is physically arranged.
+    /// *Aged* stored conductances of live *logical* reference row `ri`
+    /// (`cp` wide) — indexed through the physical layout map, so callers
+    /// (ISA mirroring, tests) keep the targets-then-decoys row order no
+    /// matter how the host buffer is physically arranged. At age 0 this is
+    /// byte-identical to the programmed values. Panics on removed rows
+    /// (they have no physical row in the serving panel).
     pub fn noisy_row(&self, ri: usize) -> &[f32] {
         let p = self.phys_of_logical[ri];
+        assert!(p != usize::MAX, "noisy_row: logical row {ri} was removed");
         &self.noisy_refs[p * self.cp..(p + 1) * self.cp]
     }
 
@@ -876,7 +1289,7 @@ impl SearchEngine {
                             let s = row[ci];
                             ci += 1;
                             let ri = self.logical_of_phys[p];
-                            if ri < self.n_targets {
+                            if self.is_target[ri] {
                                 if s > best[qi].0 || (s == best[qi].0 && ri < best_row[qi]) {
                                     best[qi].0 = s;
                                     best[qi].2 = self.ref_peptides[ri];
@@ -936,6 +1349,7 @@ impl SearchEngine {
             ops,
             report,
             cache: batch_cache,
+            health: self.device_health(),
             wall,
         })
     }
@@ -1071,6 +1485,7 @@ pub(crate) fn fold_batches(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ms::bucket::bucket_by_precursor;
 
     fn small_cfg() -> SpecPcmConfig {
         SpecPcmConfig {
@@ -1357,13 +1772,193 @@ mod tests {
         let mut ctx = ProgramContext::new(&cfg, 768, 0xc1).unwrap();
         let packed = vec![1.0f32; 100 * 768];
         let mut ops = OpCounts::default();
-        let (noisy, slots) = ctx.program_rows(&packed, 100, 768, &mut ops).unwrap();
+        let (noisy, slots, faults) = ctx.program_rows(&packed, 100, 768, &mut ops).unwrap();
         assert_eq!(noisy.len(), packed.len());
         assert_eq!(slots.len(), 100);
+        assert!(faults.iter().all(|&f| f == 0), "faults default-disabled");
         assert_eq!(ctx.allocator.free_slots(), 28);
         // A second 100-row bucket does not fit until the first is released.
         assert!(ctx.check_fit(100).is_err());
         ctx.release_rows(slots);
         assert!(ctx.check_fit(100).is_ok());
+    }
+
+    #[test]
+    fn refresh_policy_select_threshold_order_dedupe_budget() {
+        let k = |i: i64| (2u8, i);
+        let cands = vec![
+            (k(3), 10.0),
+            (k(1), 50.0),
+            (k(2), 30.0),
+            (k(1), 50.0), // shard duplicate of the stalest bucket
+            (k(4), 50.0), // same age as k(1): key order breaks the tie
+        ];
+        let all = RefreshPolicy {
+            max_age_seconds: 0.0,
+            budget: 0,
+        };
+        assert_eq!(all.select(cands.clone()), vec![k(1), k(4), k(2), k(3)]);
+
+        let thresholded = RefreshPolicy {
+            max_age_seconds: 20.0,
+            budget: 0,
+        };
+        assert_eq!(thresholded.select(cands.clone()), vec![k(1), k(4), k(2)]);
+
+        // Budget counts distinct buckets, not candidate entries.
+        let budgeted = RefreshPolicy {
+            max_age_seconds: 0.0,
+            budget: 2,
+        };
+        assert_eq!(budgeted.select(cands), vec![k(1), k(4)]);
+    }
+
+    #[test]
+    fn zero_age_clock_is_a_strict_noop() {
+        let ds = SearchDataset::generate("t", 51, 25, 12, 0.8, 0.2, 0, 0);
+        let be = BackendDispatcher::reference();
+        let mut engine = SearchEngine::program(small_cfg(), &ds, &be).unwrap();
+        let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+        let before = engine.search_batch(&queries, &be).unwrap();
+        let panel_before = engine.noisy_refs.clone();
+
+        engine.advance_age(0.0);
+        assert_eq!(engine.age_seconds(), 0.0);
+        let panel_after = engine.noisy_refs.clone();
+        assert_eq!(
+            panel_before.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            panel_after.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "age-0 rebuild must be byte-identical"
+        );
+        let after = engine.search_batch(&queries, &be).unwrap();
+        assert_eq!(before.pairs, after.pairs);
+        assert_eq!(before.matched, after.matched);
+        assert_eq!(before.ops, after.ops);
+
+        let h = engine.device_health();
+        assert_eq!(h.max_age_seconds, 0.0);
+        assert_eq!(h.est_conductance_loss, 0.0);
+        assert_eq!(h.injected_faults, 0);
+        assert_eq!(h.refreshes, 0);
+        assert_eq!(after.health, h);
+    }
+
+    #[test]
+    fn aging_decays_panel_and_refresh_restores_it() {
+        let ds = SearchDataset::generate("t", 53, 25, 8, 0.8, 0.2, 0, 0);
+        let be = BackendDispatcher::reference();
+        let mut engine = SearchEngine::program(small_cfg(), &ds, &be).unwrap();
+        let fresh_panel = engine.noisy_refs.clone();
+        let one_time_before = engine.program_ops().program_rounds;
+
+        let horizon = 1.0e9;
+        engine.advance_age(horizon);
+        let h = engine.device_health();
+        assert_eq!(h.max_age_seconds, horizon);
+        assert!(h.est_conductance_loss > 0.0);
+        // Every nonzero stored value shrank in magnitude.
+        let aged = engine.noisy_refs.clone();
+        assert!(aged
+            .iter()
+            .zip(&fresh_panel)
+            .all(|(a, f)| a.abs() <= f.abs()));
+        assert!(aged.iter().zip(&fresh_panel).any(|(a, f)| a != f));
+
+        // Full refresh at the aged clock: staleness resets, the panel is
+        // re-derived from epoch-1 programming events, and the work lands
+        // on the one-time ledger.
+        let out = engine.maintain(&RefreshPolicy {
+            max_age_seconds: 0.0,
+            budget: 0,
+        });
+        assert_eq!(out.rows, engine.n_refs());
+        assert!(out.buckets > 0);
+        assert!(out.ops.program_rounds > 0);
+        assert!(engine.program_ops().program_rounds > one_time_before);
+
+        let h = engine.device_health();
+        assert_eq!(h.max_age_seconds, 0.0);
+        assert_eq!(h.refreshes, engine.n_refs() as u64);
+        // Refreshed rows carry fresh (epoch-keyed) noise, not the old
+        // values — but similar magnitudes (no drift decay remains).
+        assert_ne!(engine.noisy_refs, fresh_panel);
+
+        // A second pass under a high threshold finds nothing stale.
+        let idle = engine.maintain(&RefreshPolicy {
+            max_age_seconds: 1.0,
+            budget: 0,
+        });
+        assert_eq!(idle.rows, 0);
+        assert_eq!(idle.buckets, 0);
+    }
+
+    #[test]
+    fn refresh_outcome_independent_of_schedule_order() {
+        let ds = SearchDataset::generate("t", 55, 25, 8, 0.8, 0.2, 0, 0);
+        let be = BackendDispatcher::reference();
+        let run = |keys_rev: bool| {
+            let mut e = SearchEngine::program(small_cfg(), &ds, &be).unwrap();
+            e.advance_age(1.0e8);
+            let mut keys: Vec<BucketKey> =
+                e.refresh_candidates().into_iter().map(|(k, _)| k).collect();
+            if keys_rev {
+                keys.reverse();
+            }
+            // One bucket at a time in the given order — per-(row, epoch)
+            // roots make the result order-independent.
+            for k in keys {
+                e.refresh_buckets(&[k]);
+            }
+            e.noisy_refs.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn live_add_remove_updates_library_and_reuses_slots() {
+        let ds = SearchDataset::generate("t", 57, 30, 10, 0.8, 0.2, 0, 0);
+        let be = BackendDispatcher::reference();
+        let mut engine = SearchEngine::program(small_cfg(), &ds, &be).unwrap();
+        let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+        assert_eq!(engine.n_refs(), 60);
+        assert_eq!(engine.n_targets(), 30);
+        let free_before = engine.ctx.allocator.free_slots();
+
+        // Remove two targets and a decoy.
+        engine.remove_references(&[0, 7, 35]).unwrap();
+        assert_eq!(engine.n_refs(), 57);
+        assert_eq!(engine.n_targets(), 28);
+        assert_eq!(engine.ctx.allocator.free_slots(), free_before + 3);
+        let batch = engine.search_batch(&queries, &be).unwrap();
+        assert_eq!(batch.pairs.len(), queries.len());
+
+        // Errors leave state untouched: out of range, dead, duplicate.
+        assert!(engine.remove_references(&[10_000]).is_err());
+        assert!(engine.remove_references(&[0]).is_err());
+        assert!(engine.remove_references(&[1, 1]).is_err());
+        assert_eq!(engine.n_refs(), 57);
+
+        // Re-add two spectra from another dataset as targets: slots are
+        // reused, counts and layout update, and serving still works.
+        let extra = SearchDataset::generate("x", 58, 4, 1, 0.8, 0.2, 0, 0);
+        let add: Vec<&Spectrum> = extra.library.iter().take(2).collect();
+        let ops_before = engine.program_ops().program_rounds;
+        let rows = engine.add_references(&add, true, &be).unwrap();
+        assert_eq!(rows, vec![60, 61]);
+        assert_eq!(engine.n_refs(), 59);
+        assert_eq!(engine.n_targets(), 30);
+        assert_eq!(engine.ctx.allocator.free_slots(), free_before + 1);
+        assert!(engine.program_ops().program_rounds > ops_before);
+        let batch = engine.search_batch(&queries, &be).unwrap();
+        assert_eq!(batch.pairs.len(), queries.len());
+
+        // The layout still tiles the live rows exactly once.
+        let n = engine.n_refs();
+        let mut seen = std::collections::HashSet::new();
+        for &l in engine.logical_of_physical() {
+            assert!(seen.insert(l));
+        }
+        assert_eq!(seen.len(), n);
+        assert!(!seen.contains(&0) && !seen.contains(&7) && !seen.contains(&35));
     }
 }

@@ -63,11 +63,11 @@ pub mod frontend;
 pub mod pipeline;
 pub mod sharded;
 
-pub use allocator::{SegmentAllocator, Slot};
+pub use allocator::{AllocError, SegmentAllocator, Slot};
 pub use batcher::{pad_matrix, Batcher};
 pub use engine::{
-    BatchOutcome, CapacityError, GroupCharges, ProgramContext, SearchEngine, ServingCost,
-    ShardScores,
+    BatchOutcome, CapacityError, GroupCharges, ProgramContext, RefreshOutcome, RefreshPolicy,
+    SearchEngine, ServingCost, ShardScores,
 };
 pub use frontend::HdFrontend;
 pub use pipeline::{

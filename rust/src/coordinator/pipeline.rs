@@ -32,7 +32,9 @@ use super::engine::{ProgramContext, SearchEngine};
 use super::frontend::HdFrontend;
 
 /// Program packed reference HVs into PCM: applies write-verify-calibrated
-/// noise and counts programming work. Returns the noisy conductances.
+/// noise and counts programming work. Returns the noisy conductances plus
+/// the per-row injected-fault counts (all zero unless the programmer was
+/// built `with_faults` — health telemetry sums them per segment).
 pub(crate) fn program_refs(
     packed: &[f32],
     n_rows: usize,
@@ -40,21 +42,23 @@ pub(crate) fn program_refs(
     programmer: &Programmer,
     rng: &mut Rng,
     ops: &mut OpCounts,
-) -> Vec<f32> {
+) -> (Vec<f32>, Vec<u64>) {
     assert_eq!(packed.len(), n_rows * cp);
     let segments = (cp / ARRAY_DIM) as u64;
     let mut noisy = Vec::with_capacity(packed.len());
+    let mut row_faults = Vec::with_capacity(n_rows);
     for row in 0..n_rows {
-        let (stored, pulses, _reads) =
+        let (stored, pulses, _reads, faults) =
             programmer.program_slice(&packed[row * cp..(row + 1) * cp], rng);
         noisy.extend_from_slice(&stored);
+        row_faults.push(faults);
         // A row round pulses all 128 cells of one segment in parallel.
         // lint: charge-ok (program_refs IS the central programming charge — both pipelines and the engine charge rounds only through here)
         ops.program_rounds += pulses.div_ceil(ARRAY_DIM as u64).max(segments);
         // lint: charge-ok (verify reads charged alongside the rounds above)
         ops.verify_rounds += programmer.write_verify as u64 * segments;
     }
-    noisy
+    (noisy, row_faults)
 }
 
 /// Normalized distance matrix from raw IMC scores: `d_ij = 1 - s_ij /
@@ -146,7 +150,7 @@ impl ClusteringPipeline {
                 self.frontend.encode_pack(&specs, backend, &mut ops)
             })?;
 
-            let (noisy, slots) = wall.time("program", || {
+            let (noisy, slots, _faults) = wall.time("program", || {
                 ctx.program_rows(&packed, specs.len(), cp, &mut ops)
             })?;
 
@@ -313,7 +317,7 @@ mod tests {
         let mut ops = OpCounts::default();
         let packed = fe.encode_pack(&specs, &be, &mut ops).unwrap();
         let mut ctx = ProgramContext::new(&cfg, cp, 0xc1).unwrap();
-        let (noisy, _slots) = ctx.program_rows(&packed, n, cp, &mut ops).unwrap();
+        let (noisy, _slots, _faults) = ctx.program_rows(&packed, n, cp, &mut ops).unwrap();
 
         let labels_for = |order: &[usize]| -> Vec<usize> {
             let mut p = Vec::with_capacity(n * cp);

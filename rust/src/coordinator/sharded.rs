@@ -49,18 +49,31 @@
 //! boundaries. Energy/latency reports model the union bank pool
 //! (`num_banks x n_shards`) — the physical hardware the sharded system
 //! actually owns.
+//!
+//! # Drift and refresh across shards
+//!
+//! The drift-aware serving extensions stay partition-safe too:
+//! [`ShardedSearchEngine::advance_age`] ticks every shard's logical clock
+//! in lockstep, and [`ShardedSearchEngine::maintain`] pools per-shard
+//! staleness candidates into **one global** [`RefreshPolicy`] selection
+//! (deduped, budget counted per distinct bucket) before each shard
+//! refreshes its portion. Refresh draws come from per-(global row, epoch)
+//! RNG roots — shard `i`'s local row `l` is global row
+//! `plan.range(i).start + l` — so the re-programmed conductances are
+//! bit-identical to the monolithic engine refreshing the same buckets at
+//! the same clock (`rust/tests/drift_equivalence.rs`).
 
 use crate::backend::BackendDispatcher;
 use crate::config::SpecPcmConfig;
 use crate::energy::{EnergyLatencyModel, EnergyReport, OpCounts};
 use crate::ms::{SearchDataset, Spectrum};
-use crate::telemetry::{EncodeCacheStats, StageTimer};
+use crate::telemetry::{DeviceHealth, EncodeCacheStats, StageTimer};
 use crate::util::error::{Error, Result};
 
 use super::allocator::SegmentAllocator;
 use super::engine::{
     chunk_ranges, fold_batches, BatchOutcome, CapacityError, GroupCharges, ProgramContext,
-    SearchEngine, ServingCost,
+    RefreshOutcome, RefreshPolicy, SearchEngine, ServingCost,
 };
 use super::pipeline::SearchOutcomeSummary;
 
@@ -235,7 +248,11 @@ impl ShardedSearchEngine {
                 paper_queries: dataset.paper_queries,
                 paper_library: dataset.paper_library,
             };
-            let engine = SearchEngine::program_with_rng(cfg.clone(), &shard_ds, backend, rng)?;
+            let mut engine = SearchEngine::program_with_rng(cfg.clone(), &shard_ds, backend, rng)?;
+            // The shard's local row 0 is global row `range.start`: keys the
+            // per-(global row, epoch) refresh streams so a sharded refresh
+            // draws exactly what the monolithic engine would.
+            engine.set_row_base(plan.range(i).start);
             rng = engine.noise_rng_state();
             program_ops += engine.program_ops();
             for (stage, t, _) in engine.program_wall().breakdown() {
@@ -311,6 +328,56 @@ impl ShardedSearchEngine {
 
     pub fn clear_query_cache(&self) {
         self.shards[0].clear_query_cache();
+    }
+
+    /// Current logical serving clock — every shard ticks in lockstep.
+    pub fn age_seconds(&self) -> f64 {
+        self.shards[0].age_seconds()
+    }
+
+    /// Advance the deterministic serving clock on every shard (see
+    /// [`SearchEngine::advance_age`]).
+    pub fn advance_age(&mut self, seconds: f64) {
+        for shard in &mut self.shards {
+            shard.advance_age(seconds);
+        }
+    }
+
+    /// Health summary over the whole sharded library: ages and losses max
+    /// over the shards, fault and refresh counts sum ([`DeviceHealth`]'s
+    /// asymmetric merge rule) — identical to the monolithic engine's
+    /// summary because rows partition across shards.
+    pub fn device_health(&self) -> DeviceHealth {
+        self.shards.iter().map(|s| s.device_health()).sum()
+    }
+
+    /// One maintenance pass over the whole library: pool every shard's
+    /// per-bucket staleness candidates, run **one global**
+    /// [`RefreshPolicy::select`] (dedupe handles buckets straddling a
+    /// shard boundary; the budget counts each bucket once), then let each
+    /// shard refresh its portion of the picked buckets. Re-programmed
+    /// `rows` and `ops` are shard-count-invariant; `buckets` counts
+    /// per-shard segments, so a boundary bucket contributes once per
+    /// shard that holds part of it.
+    pub fn maintain(&mut self, policy: &RefreshPolicy) -> RefreshOutcome {
+        let mut candidates = Vec::new();
+        for shard in &self.shards {
+            candidates.extend(shard.refresh_candidates());
+        }
+        let keys = policy.select(candidates);
+        let mut out = RefreshOutcome::default();
+        for shard in &mut self.shards {
+            let shard_out = shard.refresh_buckets(&keys);
+            out.buckets += shard_out.buckets;
+            out.rows += shard_out.rows;
+            out.ops += &shard_out.ops;
+        }
+        if out.rows > 0 {
+            self.program_ops += &out.ops;
+            let model = Self::pool_model(&self.cfg, self.shards.len());
+            self.program_report = model.report(&self.program_ops);
+        }
+        out
     }
 
     /// Serve one query batch: encode once through shard 0's query-HV
@@ -395,6 +462,7 @@ impl ShardedSearchEngine {
             ops,
             report,
             cache: batch_cache,
+            health: self.device_health(),
             wall,
         })
     }

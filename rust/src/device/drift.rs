@@ -32,6 +32,23 @@ impl DriftModel {
     pub fn drifted(&self, w: f32, t_seconds: f64) -> f32 {
         (w as f64 * self.conductance_factor(t_seconds)) as f32
     }
+
+    /// Age a whole stored row/segment at once, bit-identical to calling
+    /// [`Self::drifted`] per element but with the `powf` behind
+    /// [`Self::conductance_factor`] hoisted to one evaluation per call —
+    /// the shape the engine's serving-panel rebuild needs (one factor per
+    /// equal-age row, `cp` multiplies).
+    ///
+    /// At `t_seconds <= 1.0` the factor is exactly `1.0`, and
+    /// `(w as f64 * 1.0) as f32` round-trips every finite f32 bit-exactly,
+    /// so a zero-age rebuild reproduces the stored panel byte for byte.
+    pub fn drift_slice_into(&self, ws: &[f32], t_seconds: f64, out: &mut [f32]) {
+        assert_eq!(ws.len(), out.len(), "drift_slice_into length mismatch");
+        let factor = self.conductance_factor(t_seconds);
+        for (o, &w) in out.iter_mut().zip(ws) {
+            *o = (w as f64 * factor) as f32;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -70,5 +87,32 @@ mod tests {
         let sb = DriftModel::for_material(Material::Sb2Te3Gst467);
         let t = 3600.0;
         assert!(ti.conductance_factor(t) > sb.conductance_factor(t));
+    }
+
+    #[test]
+    fn slice_aging_matches_per_weight_drifted() {
+        let d = DriftModel::for_material(Material::Sb2Te3Gst467);
+        let ws: Vec<f32> = vec![3.0, -3.0, 0.0, 1.5, -0.25, 2.0];
+        for t in [0.0, 1.0, 3600.0, 1e9] {
+            let mut out = vec![f32::NAN; ws.len()];
+            d.drift_slice_into(&ws, t, &mut out);
+            for (o, &w) in out.iter().zip(&ws) {
+                assert_eq!(o.to_bits(), d.drifted(w, t).to_bits(), "t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_age_slice_is_byte_identical_and_zero_stays_zero() {
+        let d = DriftModel::for_material(Material::TiTe2Gst467);
+        let ws: Vec<f32> = vec![1.0, -2.5, 0.0, -0.0, 3.0];
+        let mut out = vec![f32::NAN; ws.len()];
+        d.drift_slice_into(&ws, 0.0, &mut out);
+        for (o, w) in out.iter().zip(&ws) {
+            assert_eq!(o.to_bits(), w.to_bits());
+        }
+        // Differential zero survives any horizon.
+        d.drift_slice_into(&ws, 1e12, &mut out);
+        assert_eq!(out[2], 0.0);
     }
 }

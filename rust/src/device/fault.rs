@@ -1,0 +1,142 @@
+//! Cell fault injection at programming time (robustness extension beyond
+//! the paper's fault-free storage assumption).
+//!
+//! Two endurance fault classes are modeled, both manifesting when a cell
+//! is (re-)programmed:
+//!
+//! * **program failure** — the SET/RESET pulse train fails to move the
+//!   cell and the differential pair reads back as 0 (no stored weight);
+//! * **stuck-at-G** — the cell is pinned at a fixed conductance
+//!   `stuck_g` regardless of the target (e.g. a shorted or saturated
+//!   device).
+//!
+//! Faults are drawn from the same chained noise-RNG stream as programming
+//! noise, **one `uniform()` draw per cell, unconditionally, whenever the
+//! model is active** — never data-dependent — so a monolithic engine and
+//! a sharded one consume identical per-row draw counts and stay
+//! bit-identical (contract C4-RNG). With the model disabled (the default)
+//! zero draws are consumed, which is what makes faults-off serving
+//! byte-identical to a pre-fault-model engine.
+
+use crate::util::Rng;
+
+/// Per-programming-event fault injection rates. Rates are probabilities
+/// per cell per programming event; a refreshed cell re-rolls its faults
+/// (transient endurance failures, not permanent defect maps).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultModel {
+    /// Probability a programmed cell sticks at `stuck_g`.
+    pub stuck_at_rate: f64,
+    /// Probability the pulse train fails and the cell stores 0.
+    pub program_fail_rate: f64,
+    /// Conductance a stuck cell reads back as (packed-weight units).
+    pub stuck_g: f32,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl FaultModel {
+    /// No faults, no RNG draws — the bit-compatible default.
+    pub fn disabled() -> Self {
+        FaultModel {
+            stuck_at_rate: 0.0,
+            program_fail_rate: 0.0,
+            stuck_g: 3.0,
+        }
+    }
+
+    pub fn new(stuck_at_rate: f64, program_fail_rate: f64, stuck_g: f32) -> Self {
+        FaultModel {
+            stuck_at_rate,
+            program_fail_rate,
+            stuck_g,
+        }
+    }
+
+    /// Whether any fault class can fire (and thus whether programming
+    /// consumes fault draws).
+    pub fn is_active(&self) -> bool {
+        self.stuck_at_rate > 0.0 || self.program_fail_rate > 0.0
+    }
+
+    /// Roll the fault outcome for one just-programmed cell. Consumes
+    /// exactly one draw when active, zero when disabled. Returns the
+    /// faulty stored value, or `None` when the cell programs cleanly.
+    pub fn apply(&self, rng: &mut Rng) -> Option<f32> {
+        if !self.is_active() {
+            return None;
+        }
+        let u = rng.uniform();
+        if u < self.program_fail_rate {
+            Some(0.0)
+        } else if u < self.program_fail_rate + self.stuck_at_rate {
+            Some(self.stuck_g)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_draws_nothing() {
+        let f = FaultModel::disabled();
+        assert!(!f.is_active());
+        let mut rng = Rng::new(7);
+        let before = rng.next_u64();
+        let mut rng2 = Rng::new(7);
+        let _ = rng2.next_u64();
+        assert_eq!(f.apply(&mut rng2), None);
+        // The stream is untouched: the next draw matches a fresh clone.
+        let mut rng3 = Rng::new(7);
+        let _ = rng3.next_u64();
+        assert_eq!(rng2.next_u64(), rng3.next_u64());
+        let _ = before;
+    }
+
+    #[test]
+    fn active_model_draws_exactly_once_per_apply() {
+        let f = FaultModel::new(0.1, 0.1, 3.0);
+        assert!(f.is_active());
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        let _ = f.apply(&mut a);
+        let _ = b.uniform();
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn fault_classes_fire_at_roughly_their_rates() {
+        let f = FaultModel::new(0.05, 0.02, 3.0);
+        let mut rng = Rng::new(11);
+        let n = 100_000;
+        let (mut stuck, mut failed) = (0u32, 0u32);
+        for _ in 0..n {
+            match f.apply(&mut rng) {
+                Some(v) if v == 3.0 => stuck += 1,
+                Some(_) => failed += 1,
+                None => {}
+            }
+        }
+        let stuck_rate = stuck as f64 / n as f64;
+        let fail_rate = failed as f64 / n as f64;
+        assert!((stuck_rate - 0.05).abs() < 0.005, "stuck {stuck_rate}");
+        assert!((fail_rate - 0.02).abs() < 0.005, "fail {fail_rate}");
+    }
+
+    #[test]
+    fn certain_failure_always_zeroes() {
+        let f = FaultModel::new(0.0, 1.0, 3.0);
+        let mut rng = Rng::new(13);
+        for _ in 0..32 {
+            assert_eq!(f.apply(&mut rng), Some(0.0));
+        }
+    }
+}

@@ -14,10 +14,12 @@ pub mod material;
 pub mod mlc;
 pub mod noise;
 pub mod drift;
+pub mod fault;
 pub mod programming;
 
 pub use material::{Material, MaterialParams};
 pub use mlc::MlcConfig;
 pub use noise::NoiseModel;
 pub use drift::DriftModel;
+pub use fault::FaultModel;
 pub use programming::{ProgramOutcome, Programmer};

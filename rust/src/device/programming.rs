@@ -9,6 +9,7 @@
 //! pulse count — which determines energy and latency — follows the
 //! iterative procedure.
 
+use super::fault::FaultModel;
 use super::mlc::MlcConfig;
 use super::noise::NoiseModel;
 use crate::util::Rng;
@@ -29,6 +30,9 @@ pub struct ProgramOutcome {
 pub struct Programmer {
     pub noise: NoiseModel,
     pub write_verify: u32,
+    /// Cell fault injection applied after each cell's pulse train
+    /// (disabled by default; see [`FaultModel`] for the draw discipline).
+    pub fault: FaultModel,
     /// Precomputed sigma(k) for k = 0..=write_verify. `NoiseModel::sigma`
     /// inverts the BER fit by bisection (hundreds of erfc evaluations);
     /// caching it here took programming from ~87% of the clustering
@@ -42,8 +46,17 @@ impl Programmer {
         Programmer {
             noise,
             write_verify,
+            fault: FaultModel::disabled(),
             sigma_table,
         }
+    }
+
+    /// Builder: enable fault injection on every subsequent programming
+    /// event (applied per cell, after that cell's noise draws, so the
+    /// RNG interleave is fixed per cell regardless of row/shard splits).
+    pub fn with_faults(mut self, fault: FaultModel) -> Self {
+        self.fault = fault;
+        self
     }
 
     /// Residual multiplicative sigma after the configured verify cycles.
@@ -100,18 +113,29 @@ impl Programmer {
         }
     }
 
-    /// Program a full row/segment; returns stored values plus total pulse
-    /// and verify-read counts for the energy model.
-    pub fn program_slice(&self, targets: &[f32], rng: &mut Rng) -> (Vec<f32>, u64, u64) {
+    /// Program a full row/segment; returns stored values plus total pulse,
+    /// verify-read, and injected-fault counts for the energy model and
+    /// health telemetry. Fault draws interleave per cell — one uniform
+    /// draw after each cell's noise draws when the model is active, zero
+    /// draws when disabled — so per-row RNG consumption is identical
+    /// whether rows are programmed monolithically or shard by shard.
+    pub fn program_slice(&self, targets: &[f32], rng: &mut Rng) -> (Vec<f32>, u64, u64, u64) {
         let mut stored = Vec::with_capacity(targets.len());
-        let (mut pulses, mut reads) = (0u64, 0u64);
+        let (mut pulses, mut reads, mut faults) = (0u64, 0u64, 0u64);
         for &t in targets {
             let o = self.program(t, rng);
-            stored.push(o.stored);
+            let v = match self.fault.apply(rng) {
+                Some(faulty) => {
+                    faults += 1;
+                    faulty
+                }
+                None => o.stored,
+            };
+            stored.push(v);
             pulses += o.pulses as u64;
             reads += o.verify_reads as u64;
         }
-        (stored, pulses, reads)
+        (stored, pulses, reads, faults)
     }
 }
 
@@ -171,10 +195,64 @@ mod tests {
         let p = programmer(2);
         let mut rng = Rng::new(4);
         let targets = vec![3.0, -1.0, 0.0, 1.0, -3.0];
-        let (stored, pulses, reads) = p.program_slice(&targets, &mut rng);
+        let (stored, pulses, reads, faults) = p.program_slice(&targets, &mut rng);
         assert_eq!(stored.len(), 5);
         assert!(pulses >= 5);
         assert_eq!(reads, 10); // 2 verify reads per value
+        assert_eq!(faults, 0); // model disabled by default
         assert_eq!(stored[2], 0.0); // differential zero preserved
+    }
+
+    #[test]
+    fn disabled_faults_leave_stream_and_values_byte_identical() {
+        let p = programmer(3);
+        let q = programmer(3).with_faults(FaultModel::disabled());
+        let targets = vec![3.0, -2.0, 0.0, 1.0];
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = p.program_slice(&targets, &mut r1);
+        let b = q.program_slice(&targets, &mut r2);
+        assert_eq!(a, b);
+        assert_eq!(r1.next_u64(), r2.next_u64(), "stream positions diverged");
+    }
+
+    #[test]
+    fn certain_program_failure_zeroes_every_cell() {
+        let p = programmer(2).with_faults(FaultModel::new(0.0, 1.0, 3.0));
+        let mut rng = Rng::new(6);
+        let targets = vec![3.0, -3.0, 1.0];
+        let (stored, _, _, faults) = p.program_slice(&targets, &mut rng);
+        assert_eq!(stored, vec![0.0, 0.0, 0.0]);
+        assert_eq!(faults, 3);
+    }
+
+    #[test]
+    fn stuck_at_pins_cells_to_stuck_g() {
+        let p = programmer(0).with_faults(FaultModel::new(1.0, 0.0, 2.0));
+        let mut rng = Rng::new(7);
+        let (stored, _, _, faults) = p.program_slice(&[-3.0, 3.0], &mut rng);
+        assert_eq!(stored, vec![2.0, 2.0]);
+        assert_eq!(faults, 2);
+    }
+
+    #[test]
+    fn fault_draws_interleave_per_cell_across_row_splits() {
+        // Programming [a, b] in one slice call must equal programming [a]
+        // then [b] with the same live RNG — the property the sharded
+        // chained-stream contract rests on, now with fault draws in the
+        // stream.
+        let p = programmer(3).with_faults(FaultModel::new(0.2, 0.1, 3.0));
+        let targets = vec![3.0, -1.0, 2.0, -3.0];
+        let mut whole_rng = Rng::new(8);
+        let whole = p.program_slice(&targets, &mut whole_rng);
+        let mut split_rng = Rng::new(8);
+        let first = p.program_slice(&targets[..2], &mut split_rng);
+        let second = p.program_slice(&targets[2..], &mut split_rng);
+        let mut stored = first.0.clone();
+        stored.extend_from_slice(&second.0);
+        assert_eq!(whole.0, stored);
+        assert_eq!(whole.1, first.1 + second.1);
+        assert_eq!(whole.3, first.3 + second.3);
+        assert_eq!(whole_rng.next_u64(), split_rng.next_u64());
     }
 }

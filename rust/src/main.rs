@@ -15,7 +15,8 @@ use specpcm::baselines::latency_model;
 use specpcm::cluster::quality::clustered_at_incorrect;
 use specpcm::config::{SpecPcmConfig, Task};
 use specpcm::coordinator::{
-    ClusteringPipeline, SearchEngine, SearchPipeline, ShardPlan, ShardedSearchEngine,
+    ClusteringPipeline, RefreshPolicy, SearchEngine, SearchPipeline, ShardPlan,
+    ShardedSearchEngine,
 };
 use specpcm::encode::EncodeKind;
 use specpcm::energy::area_breakdown;
@@ -34,6 +35,7 @@ USAGE:
                   [--backend ref|parallel|pjrt] [--threads N] [--num-banks N]
                   [--encode-backend scalar|bitpacked|parallel]
                   [--serve-batches N] [--shards N|auto] [--no-artifacts]
+                  [--age-seconds T] [--refresh-age A] [--refresh-budget N]
   specpcm info                  print the hardware model (Tables 1/S3, Fig. 8)
   specpcm config [clustering|search]   print a config preset
   specpcm isa <file>            assemble + run an ISA program
@@ -44,6 +46,19 @@ SERVING:
                       persistent SearchEngine; reports the one-time
                       programming cost vs the marginal per-batch cost and
                       the amortized total.
+
+DRIFT (serving mode):
+  --age-seconds T     advance the engine's deterministic serving clock by
+                      T seconds after programming, so the stored
+                      conductances serve with t^-nu drift applied. Implies
+                      serving mode (one batch) when --serve-batches is 0.
+  --refresh-age A     run one background refresh epoch before serving:
+                      every bucket whose stalest row exceeds A seconds is
+                      re-programmed in place (charged to the one-time
+                      ledger). Requires serving mode; reports the epoch
+                      and the device-health telemetry.
+  --refresh-budget N  cap a refresh epoch at the N stalest buckets
+                      (0 = unbounded; needs --refresh-age).
 
 SHARDING:
   --shards N|auto     split a library that overflows one engine's banks
@@ -180,7 +195,15 @@ fn known_flags(cmd: &str) -> Vec<&'static str> {
     ];
     match cmd {
         "cluster" => v.extend(["dataset", "scale"]),
-        "search" => v.extend(["dataset", "scale", "serve-batches", "shards"]),
+        "search" => v.extend([
+            "dataset",
+            "scale",
+            "serve-batches",
+            "shards",
+            "age-seconds",
+            "refresh-age",
+            "refresh-budget",
+        ]),
         _ => v.clear(), // info/config/isa take positionals only
     }
     v
@@ -214,6 +237,60 @@ fn load_cfg(args: &Args, default: SpecPcmConfig) -> Result<SpecPcmConfig> {
     }
     cfg.validate()?;
     Ok(cfg)
+}
+
+/// Drift-aware serving options (`--age-seconds` / `--refresh-age` /
+/// `--refresh-budget`). `refresh` is `Some` only when `--refresh-age`
+/// was given; a budget without a threshold is a usage error.
+struct DriftOpts {
+    age_seconds: f64,
+    refresh: Option<RefreshPolicy>,
+}
+
+impl DriftOpts {
+    fn parse(args: &Args) -> Result<Self> {
+        let age_seconds = args.get_f64("age-seconds", 0.0)?;
+        specpcm::ensure!(
+            age_seconds.is_finite() && age_seconds >= 0.0,
+            "--age-seconds: '{age_seconds}' is not a non-negative duration"
+        );
+        let refresh = if args.has("refresh-age") {
+            let max_age_seconds = args.get_f64("refresh-age", 0.0)?;
+            specpcm::ensure!(
+                max_age_seconds.is_finite() && max_age_seconds >= 0.0,
+                "--refresh-age: '{max_age_seconds}' is not a non-negative age threshold"
+            );
+            Some(RefreshPolicy {
+                max_age_seconds,
+                budget: args.get_usize("refresh-budget", 0)?,
+            })
+        } else {
+            specpcm::ensure!(
+                !args.has("refresh-budget"),
+                "--refresh-budget needs --refresh-age (the refresh threshold)"
+            );
+            None
+        };
+        Ok(DriftOpts {
+            age_seconds,
+            refresh,
+        })
+    }
+
+    fn active(&self) -> bool {
+        self.age_seconds > 0.0 || self.refresh.is_some()
+    }
+}
+
+fn print_health(h: &specpcm::telemetry::DeviceHealth) {
+    println!(
+        "device health: max age {:.3e} s, est conductance loss {:.2}%, \
+         {} injected faults, {} refresh epochs",
+        h.max_age_seconds,
+        h.est_conductance_loss * 100.0,
+        h.injected_faults,
+        h.refreshes
+    );
 }
 
 fn open_backend(cfg: &SpecPcmConfig) -> BackendDispatcher {
@@ -276,7 +353,14 @@ fn cmd_search(args: &Args) -> Result<()> {
         other => specpcm::bail!("unknown dataset '{other}'"),
     };
     let backend = open_backend(&cfg);
-    let n_batches = args.get_usize("serve-batches", 0)?;
+    let drift = DriftOpts::parse(args)?;
+    // Drift and refresh are serving-mode concepts (they act on a
+    // programmed, persistent engine), so the drift flags imply one served
+    // batch when --serve-batches was not given.
+    let n_batches = match args.get_usize("serve-batches", 0)? {
+        0 if drift.active() => 1,
+        n => n,
+    };
     let plan = ShardPlan::for_capacity(
         &cfg,
         ds.library.len(),
@@ -284,10 +368,10 @@ fn cmd_search(args: &Args) -> Result<()> {
         cfg.backend.shards,
     )?;
     if plan.n_shards() > 1 {
-        return cmd_search_sharded(cfg, &ds, &backend, plan, n_batches);
+        return cmd_search_sharded(cfg, &ds, &backend, plan, n_batches, &drift);
     }
     if n_batches > 0 {
-        return cmd_serve(cfg, &ds, &backend, n_batches);
+        return cmd_serve(cfg, &ds, &backend, n_batches, &drift);
     }
     let fdr = cfg.fdr;
     let out = SearchPipeline::new(cfg).run(&ds, &backend)?;
@@ -325,12 +409,13 @@ fn cmd_search_sharded(
     backend: &BackendDispatcher,
     plan: ShardPlan,
     n_batches: usize,
+    drift: &DriftOpts,
 ) -> Result<()> {
     let fdr = cfg.fdr;
     let per_shard_banks = cfg.num_banks;
     // The plan cmd_search validated (and routes on) is exactly the plan
     // the engine programs — one planning call site.
-    let engine = ShardedSearchEngine::program_with_plan(cfg, ds, backend, plan)?;
+    let mut engine = ShardedSearchEngine::program_with_plan(cfg, ds, backend, plan)?;
     println!(
         "sharded library: {} reference rows across {} shards ({} banks each, {} total); \
          rows/shard: {:?}",
@@ -352,6 +437,21 @@ fn cmd_search_sharded(
         prog.total_latency_s() * 1e3,
         engine.program_ops().program_rounds
     );
+    if drift.age_seconds > 0.0 {
+        engine.advance_age(drift.age_seconds);
+        println!("aged the library {:.3e} s before serving", drift.age_seconds);
+    }
+    if let Some(policy) = &drift.refresh {
+        let r = engine.maintain(policy);
+        println!(
+            "refresh epoch (age > {:.3e} s, budget {}): {} rows in {} bucket \
+             segments re-programmed ({} program rounds, one-time ledger)",
+            policy.max_age_seconds, policy.budget, r.rows, r.buckets, r.ops.program_rounds
+        );
+    }
+    if drift.active() {
+        print_health(&engine.device_health());
+    }
 
     let queries: Vec<&Spectrum> = ds.queries.iter().collect();
     let outcomes = engine.serve_chunked(&queries, n_batches.max(1), backend)?;
@@ -407,9 +507,10 @@ fn cmd_serve(
     ds: &SearchDataset,
     backend: &BackendDispatcher,
     n_batches: usize,
+    drift: &DriftOpts,
 ) -> Result<()> {
     let fdr = cfg.fdr;
-    let engine = SearchEngine::program(cfg, ds, backend)?;
+    let mut engine = SearchEngine::program(cfg, ds, backend)?;
     let prog = *engine.program_report();
     println!(
         "programmed {} reference rows once: {:.4} mJ, {:.4} ms ({} program rounds)",
@@ -418,6 +519,21 @@ fn cmd_serve(
         prog.total_latency_s() * 1e3,
         engine.program_ops().program_rounds
     );
+    if drift.age_seconds > 0.0 {
+        engine.advance_age(drift.age_seconds);
+        println!("aged the library {:.3e} s before serving", drift.age_seconds);
+    }
+    if let Some(policy) = &drift.refresh {
+        let r = engine.maintain(policy);
+        println!(
+            "refresh epoch (age > {:.3e} s, budget {}): {} rows in {} bucket \
+             segments re-programmed ({} program rounds, one-time ledger)",
+            policy.max_age_seconds, policy.budget, r.rows, r.buckets, r.ops.program_rounds
+        );
+    }
+    if drift.active() {
+        print_health(&engine.device_health());
+    }
 
     let queries: Vec<&Spectrum> = ds.queries.iter().collect();
     let outcomes = engine.serve_chunked(&queries, n_batches, backend)?;
@@ -457,8 +573,16 @@ fn cmd_serve(
     );
 
     let out = engine.finalize(&queries, &outcomes)?;
+    // At age 0 with no refresh epoch the drift machinery is a strict
+    // no-op, so batched serving reproduces the one-shot pipeline byte for
+    // byte; an aged/refreshed panel deliberately serves different scores.
+    let note = if drift.active() {
+        format!(" — served at age {:.3e} s", engine.age_seconds())
+    } else {
+        " — bit-identical to one-shot".to_string()
+    };
     println!(
-        "identified {}/{} queries at {:.0}% FDR ({} correct) — bit-identical to one-shot",
+        "identified {}/{} queries at {:.0}% FDR ({} correct){note}",
         out.identified,
         out.total_queries,
         fdr * 100.0,
@@ -642,6 +766,45 @@ mod tests {
 
         let bad = Args::parse(&argv(&["--shards", "many"])).unwrap();
         assert!(load_cfg(&bad, SpecPcmConfig::paper_search()).is_err());
+    }
+
+    #[test]
+    fn drift_flags_parse_and_validate() {
+        let a = Args::parse(&argv(&[
+            "--age-seconds",
+            "1e9",
+            "--refresh-age",
+            "0",
+            "--refresh-budget",
+            "5",
+        ]))
+        .unwrap();
+        let d = DriftOpts::parse(&a).unwrap();
+        assert_eq!(d.age_seconds, 1.0e9);
+        assert!(d.active());
+        let p = d.refresh.unwrap();
+        assert_eq!(p.max_age_seconds, 0.0);
+        assert_eq!(p.budget, 5);
+        // The drift flags belong to search, not cluster.
+        assert!(a.check_known("search", &known_flags("search")).is_ok());
+        assert!(a.check_known("cluster", &known_flags("cluster")).is_err());
+
+        // A budget without a threshold is a usage error, not a silent no-op.
+        let a = Args::parse(&argv(&["--refresh-budget", "3"])).unwrap();
+        let err = DriftOpts::parse(&a).unwrap_err();
+        assert!(err.to_string().contains("--refresh-age"), "{err}");
+
+        // Negative / malformed values report typed errors.
+        let a = Args::parse(&argv(&["--age-seconds", "-5"])).unwrap();
+        assert!(DriftOpts::parse(&a).is_err());
+        let a = Args::parse(&argv(&["--refresh-age", "banana"])).unwrap();
+        assert!(DriftOpts::parse(&a).is_err());
+
+        // Absent flags leave serving untouched.
+        let none = Args::parse(&argv(&[])).unwrap();
+        let d = DriftOpts::parse(&none).unwrap();
+        assert_eq!(d.age_seconds, 0.0);
+        assert!(d.refresh.is_none() && !d.active());
     }
 
     #[test]

@@ -57,6 +57,60 @@ impl std::iter::Sum for EncodeCacheStats {
     }
 }
 
+/// Per-engine device staleness/health snapshot (drift-aware serving; see
+/// `coordinator::SearchEngine::device_health`). Attached to every
+/// `BatchOutcome`, so serving loops can watch the panel age and trigger a
+/// `RefreshPolicy` pass between batches.
+///
+/// Aggregation rule (deliberately asymmetric, like `OpCounts::features`):
+/// ages and losses are *workload properties* — merged via max, the
+/// stalest segment dominates — while fault/refresh counts are event
+/// counts over disjoint rows and sum across shards.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DeviceHealth {
+    /// Seconds since the stalest live row was last programmed.
+    pub max_age_seconds: f64,
+    /// Estimated conductance fraction lost on that stalest row
+    /// (`1 - drift_factor(max_age)`), in [0, 1).
+    pub est_conductance_loss: f64,
+    /// Fault cells injected at the live rows' latest programming events.
+    pub injected_faults: u64,
+    /// Row re-programming (refresh epoch) events among live rows.
+    pub refreshes: u64,
+}
+
+impl DeviceHealth {
+    /// Fold another snapshot in (max ages/losses, sum counts) — the shard
+    /// aggregation used by `ShardedSearchEngine`.
+    pub fn merge(&mut self, other: &DeviceHealth) {
+        self.max_age_seconds = self.max_age_seconds.max(other.max_age_seconds);
+        self.est_conductance_loss = self.est_conductance_loss.max(other.est_conductance_loss);
+        self.injected_faults += other.injected_faults;
+        self.refreshes += other.refreshes;
+    }
+}
+
+impl std::ops::AddAssign<&DeviceHealth> for DeviceHealth {
+    fn add_assign(&mut self, rhs: &DeviceHealth) {
+        self.merge(rhs);
+    }
+}
+
+impl std::ops::AddAssign for DeviceHealth {
+    fn add_assign(&mut self, rhs: Self) {
+        self.merge(&rhs);
+    }
+}
+
+impl std::iter::Sum for DeviceHealth {
+    fn sum<I: Iterator<Item = DeviceHealth>>(iter: I) -> DeviceHealth {
+        iter.fold(DeviceHealth::default(), |mut acc, s| {
+            acc.merge(&s);
+            acc
+        })
+    }
+}
+
 /// Named wall-clock stage timings (the Fig. 3-style latency breakdown).
 #[derive(Debug, Default, Clone)]
 pub struct StageTimer {
@@ -230,6 +284,31 @@ mod tests {
 
         // Shard aggregation as one fold.
         let folded: EncodeCacheStats = [a, b, EncodeCacheStats::default()].into_iter().sum();
+        assert_eq!(folded, m);
+    }
+
+    #[test]
+    fn device_health_merges_max_ages_and_sums_counts() {
+        let a = DeviceHealth {
+            max_age_seconds: 100.0,
+            est_conductance_loss: 0.01,
+            injected_faults: 3,
+            refreshes: 1,
+        };
+        let b = DeviceHealth {
+            max_age_seconds: 40.0,
+            est_conductance_loss: 0.04,
+            injected_faults: 2,
+            refreshes: 4,
+        };
+        let mut m = a;
+        m += &b;
+        assert_eq!(m.max_age_seconds, 100.0);
+        assert_eq!(m.est_conductance_loss, 0.04);
+        assert_eq!(m.injected_faults, 5);
+        assert_eq!(m.refreshes, 5);
+
+        let folded: DeviceHealth = [a, b, DeviceHealth::default()].into_iter().sum();
         assert_eq!(folded, m);
     }
 

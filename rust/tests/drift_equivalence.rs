@@ -1,0 +1,241 @@
+//! Drift-aware serving equivalence (the "Drift, faults, and refresh
+//! epochs" contract in `coordinator::engine`):
+//!
+//! * At age 0 with fault injection disabled, the drift-aware engine is
+//!   **byte-identical** to the pre-drift serving path — same pairs, same
+//!   ops, same energy as the one-shot `SearchPipeline` — and
+//!   `advance_age(0.0)` is a strict no-op.
+//! * At any fixed (age, fault seed, refresh schedule) state, scores and
+//!   `OpCounts` are bit-identical across MVM backends and across 1/2/3
+//!   shard counts: drift uses per-row logical clocks, fault draws
+//!   interleave deterministically in the chained programming-noise
+//!   stream, and refresh draws come from per-(global row, epoch) roots,
+//!   so no partitioning choice can leak into results.
+
+use specpcm::backend::BackendDispatcher;
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::{RefreshPolicy, SearchEngine, SearchPipeline, ShardedSearchEngine};
+use specpcm::device::FaultModel;
+use specpcm::ms::{SearchDataset, Spectrum};
+
+fn cfg() -> SpecPcmConfig {
+    SpecPcmConfig {
+        hd_dim: 2048,
+        bucket_width: 5.0,
+        num_banks: 64,
+        ..SpecPcmConfig::paper_search()
+    }
+}
+
+/// The same config with mild fault injection enabled.
+fn faulty_cfg() -> SpecPcmConfig {
+    SpecPcmConfig {
+        fault: FaultModel::new(0.003, 0.002, 2.0),
+        ..cfg()
+    }
+}
+
+#[test]
+fn age_zero_faults_off_is_byte_identical_to_pre_drift_serving() {
+    let ds = SearchDataset::generate("t", 11, 60, 80, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::reference();
+
+    let one_shot = SearchPipeline::new(cfg()).run(&ds, &be).unwrap();
+    let mut engine = SearchEngine::program(cfg(), &ds, &be).unwrap();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+    let batch = engine.search_batch(&queries, &be).unwrap();
+    let out = engine.finalize(&queries, std::slice::from_ref(&batch)).unwrap();
+    assert_eq!(out.pairs, one_shot.pairs);
+    assert_eq!(out.fdr.accepted, one_shot.fdr.accepted);
+    assert_eq!(out.ops, one_shot.ops);
+    assert_eq!(out.report.total_j(), one_shot.report.total_j());
+
+    // The health snapshot confirms a fresh, fault-free device.
+    assert_eq!(batch.health.max_age_seconds, 0.0);
+    assert_eq!(batch.health.injected_faults, 0);
+    assert_eq!(batch.health.refreshes, 0);
+
+    // advance_age(0.0) must not perturb a single bit.
+    engine.advance_age(0.0);
+    let again = engine.search_batch(&queries, &be).unwrap();
+    assert_eq!(again.pairs, batch.pairs);
+    assert_eq!(again.matched, batch.matched);
+    assert_eq!(again.ops, batch.ops);
+}
+
+#[test]
+fn aged_faulted_state_is_identical_across_backends() {
+    let ds = SearchDataset::generate("t", 17, 60, 50, 0.8, 0.2, 0, 0);
+    let run = |be: &BackendDispatcher| {
+        let mut engine = SearchEngine::program(faulty_cfg(), &ds, be).unwrap();
+        engine.advance_age(3.0e8);
+        let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+        let batch = engine.search_batch(&queries, be).unwrap();
+        (batch, engine.device_health())
+    };
+    let (ref_batch, ref_health) = run(&BackendDispatcher::reference());
+    let (par_batch, par_health) = run(&BackendDispatcher::parallel(4));
+    assert_eq!(ref_batch.pairs, par_batch.pairs);
+    assert_eq!(ref_batch.matched, par_batch.matched);
+    assert_eq!(ref_batch.ops, par_batch.ops);
+    assert_eq!(ref_health, par_health);
+    // The workload actually exercised injection and aging.
+    assert!(ref_health.injected_faults > 0, "fault rates too low to fire");
+    assert_eq!(ref_health.max_age_seconds, 3.0e8);
+}
+
+/// 36 banks at D=2048 n=3 (6 segments) = 6 bank groups x 128 = 768 slots.
+const UNION_BANKS: usize = 36;
+
+#[test]
+fn aged_faulted_refresh_schedule_is_identical_across_shard_counts() {
+    // 120 targets + 120 decoys, served through a drift/refresh schedule:
+    // age, budgeted partial refresh, age again, serve. Every step must be
+    // bit-identical between one monolithic engine owning the union pool
+    // and k shards of 36/k banks each.
+    let ds = SearchDataset::generate("t", 11, 120, 60, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::reference();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let partial = RefreshPolicy {
+        max_age_seconds: 1.0,
+        budget: 5,
+    };
+    let full = RefreshPolicy {
+        max_age_seconds: 0.0,
+        budget: 0,
+    };
+
+    // Monolithic oracle, driven through the shard layer with one shard so
+    // both sides run the exact same schedule code path.
+    let mono_cfg = SpecPcmConfig {
+        num_banks: UNION_BANKS,
+        ..faulty_cfg()
+    };
+    let mut mono = ShardedSearchEngine::program(mono_cfg, &ds, &be, 1).unwrap();
+    let mono_initial_ops = *mono.program_ops();
+    let mono_initial_health = mono.device_health();
+    mono.advance_age(2.0e8);
+    let mono_partial = mono.maintain(&partial);
+    mono.advance_age(5.0e8);
+    let mono_batch = mono.search_batch(&queries, &be).unwrap();
+    let mono_full = mono.maintain(&full);
+    let mono_after = mono.search_batch(&queries, &be).unwrap();
+    let mono_out = mono
+        .finalize(&queries, &[mono_batch.clone(), mono_after.clone()])
+        .unwrap();
+    assert!(mono_partial.rows > 0 && mono_full.rows > 0);
+
+    for shards in [2usize, 3] {
+        let shard_cfg = SpecPcmConfig {
+            num_banks: UNION_BANKS / shards,
+            ..faulty_cfg()
+        };
+        let mut engine = ShardedSearchEngine::program(shard_cfg, &ds, &be, shards).unwrap();
+        assert_eq!(engine.n_shards(), shards);
+        // Chained noise + interleaved fault draws: one-time programming
+        // (including which cells faulted) matches the monolithic engine.
+        assert_eq!(*engine.program_ops(), mono_initial_ops, "{shards} shards");
+        assert_eq!(engine.device_health(), mono_initial_health, "{shards} shards");
+
+        engine.advance_age(2.0e8);
+        let p = engine.maintain(&partial);
+        // Global selection: the same rows refresh no matter the partition
+        // (bucket segment counts may differ at shard boundaries).
+        assert_eq!(p.rows, mono_partial.rows, "{shards} shards");
+        assert_eq!(p.ops, mono_partial.ops, "{shards} shards");
+
+        engine.advance_age(5.0e8);
+        let batch = engine.search_batch(&queries, &be).unwrap();
+        assert_eq!(batch.pairs, mono_batch.pairs, "{shards} shards");
+        assert_eq!(batch.matched, mono_batch.matched, "{shards} shards");
+        assert_eq!(batch.ops, mono_batch.ops, "{shards} shards");
+        assert_eq!(batch.report.total_j(), mono_batch.report.total_j());
+        assert_eq!(batch.health, mono_batch.health, "{shards} shards");
+
+        let f = engine.maintain(&full);
+        assert_eq!(f.rows, mono_full.rows, "{shards} shards");
+        assert_eq!(f.ops, mono_full.ops, "{shards} shards");
+
+        let after = engine.search_batch(&queries, &be).unwrap();
+        assert_eq!(after.pairs, mono_after.pairs, "{shards} shards");
+        assert_eq!(after.health, mono_after.health, "{shards} shards");
+
+        let out = engine
+            .finalize(&queries, &[batch.clone(), after.clone()])
+            .unwrap();
+        assert_eq!(out.pairs, mono_out.pairs, "{shards} shards");
+        assert_eq!(out.fdr.accepted, mono_out.fdr.accepted);
+        assert_eq!(out.identified, mono_out.identified);
+        assert_eq!(out.correct, mono_out.correct);
+        assert_eq!(out.ops, mono_out.ops, "{shards} shards");
+        assert_eq!(out.report.total_j(), mono_out.report.total_j());
+        assert_eq!(engine.program_ops(), mono.program_ops(), "{shards} shards");
+    }
+}
+
+#[test]
+fn refresh_resets_staleness_without_touching_marginal_accounting() {
+    let ds = SearchDataset::generate("t", 19, 60, 40, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::reference();
+    let mut engine = SearchEngine::program(faulty_cfg(), &ds, &be).unwrap();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+    engine.advance_age(1.0e9);
+    let stale = engine.search_batch(&queries, &be).unwrap();
+    assert_eq!(stale.health.max_age_seconds, 1.0e9);
+    assert!(stale.health.est_conductance_loss > 0.0);
+
+    let one_time_before = engine.program_ops().program_rounds;
+    let out = engine.maintain(&RefreshPolicy {
+        max_age_seconds: 0.0,
+        budget: 0,
+    });
+    assert_eq!(out.rows, engine.n_refs());
+
+    let fresh = engine.search_batch(&queries, &be).unwrap();
+    assert_eq!(fresh.health.max_age_seconds, 0.0);
+    assert_eq!(fresh.health.est_conductance_loss, 0.0);
+    assert_eq!(fresh.health.refreshes, engine.n_refs() as u64);
+    // Refresh work lands on the one-time ledger; batches stay marginal.
+    assert!(engine.program_ops().program_rounds > one_time_before);
+    assert_eq!(fresh.ops.program_rounds, 0);
+    assert_eq!(fresh.ops.verify_rounds, 0);
+    // Same queries, same candidate sets: marginal work is unchanged by
+    // aging or refreshing — only scores move.
+    assert_eq!(fresh.ops, stale.ops);
+}
+
+#[test]
+fn live_mutation_keeps_serving_and_age_zero_identity() {
+    // Remove + re-add on a programmed engine, then check the engine still
+    // serves every query and that an untouched twin remains byte-identical
+    // to the pre-drift path (the mutation machinery must not perturb the
+    // default-constructed serving state).
+    let ds = SearchDataset::generate("t", 23, 60, 30, 0.8, 0.2, 0, 0);
+    let be = BackendDispatcher::reference();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+    let mut engine = SearchEngine::program(cfg(), &ds, &be).unwrap();
+    let baseline = engine.search_batch(&queries, &be).unwrap();
+
+    engine.remove_references(&[2, 3, 61]).unwrap();
+    assert_eq!(engine.n_refs(), 117);
+    let extra = SearchDataset::generate("x", 29, 6, 1, 0.8, 0.2, 0, 0);
+    let add: Vec<&Spectrum> = extra.library.iter().take(3).collect();
+    let rows = engine.add_references(&add, true, &be).unwrap();
+    assert_eq!(rows, vec![120, 121, 122]);
+    assert_eq!(engine.n_refs(), 120);
+    engine.advance_age(1.0e6);
+    let mutated = engine.search_batch(&queries, &be).unwrap();
+    assert_eq!(mutated.pairs.len(), queries.len());
+    assert!(mutated.health.max_age_seconds >= 1.0e6 - 1.0);
+
+    // An identically-programmed engine that never mutated still matches
+    // the baseline bit for bit.
+    let twin = SearchEngine::program(cfg(), &ds, &be).unwrap();
+    let twin_batch = twin.search_batch(&queries, &be).unwrap();
+    assert_eq!(twin_batch.pairs, baseline.pairs);
+    assert_eq!(twin_batch.matched, baseline.matched);
+    assert_eq!(twin_batch.ops, baseline.ops);
+}
