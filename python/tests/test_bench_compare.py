@@ -1,9 +1,11 @@
 """Tests for `python/tools/bench_compare.py` (the serving-bench
 regression gate): regression / no-regression / sentinel-skip /
 dropped-record behavior, plus the parse-error and tiny-mismatch paths,
-and the `BENCH_drift.json` shape (accuracy fields compared absolutely,
-records keyed by (section, threads, age_seconds, refresh)).
-stdlib + pytest only.
+the `BENCH_drift.json` shape (accuracy fields compared absolutely,
+records keyed by (section, threads, age_seconds, refresh)), and the
+`BENCH_frontdoor.json` shape (records additionally keyed by coalescing
+`policy`, `qps_served` throughput, and inverted-direction latency
+percentile fields in logical ticks). stdlib + pytest only.
 """
 
 import importlib.util
@@ -223,4 +225,99 @@ def test_drift_records_matched_by_age_and_refresh(tmp_path, capsys):
 
 def test_committed_drift_baseline_self_compares_clean():
     baseline = os.path.join(REPO_ROOT, "BENCH_drift.json")
+    assert bc.main([baseline, baseline]) == 0
+
+
+# ---- BENCH_frontdoor.json shape: policy keys + latency fields ---------------
+
+
+def frontdoor_record(policy, threads, qps, p50=2.0, p99=8.0, tiny=False):
+    return {
+        "section": "serving_frontdoor",
+        "policy": policy,
+        "threads": threads,
+        "qps_served": qps,
+        "p50_wait_ticks": p50,
+        "p99_wait_ticks": p99,
+        "tiny": tiny,
+    }
+
+
+def test_frontdoor_records_matched_by_policy(tmp_path, capsys):
+    # The same section/threads under different coalescing policies are
+    # distinct measurements; dropping one of them must fail.
+    base = [
+        frontdoor_record("off", 4, 100.0),
+        frontdoor_record("size", 4, 300.0),
+        frontdoor_record("deadline", 4, 280.0),
+    ]
+    curr = [r for r in base if r["policy"] != "size"]
+    assert compare(tmp_path, base, base) == 0
+    assert compare(tmp_path, base, curr) == 1
+    assert "policy=size" in capsys.readouterr().err
+
+
+def test_qps_served_regression_fails(tmp_path, capsys):
+    base = [frontdoor_record("size", 4, 300.0)]
+    curr = [frontdoor_record("size", 4, 200.0)]  # -33% < default 15% budget
+    assert compare(tmp_path, base, curr) == 1
+    assert "qps_served" in capsys.readouterr().err
+
+
+def test_latency_growth_beyond_tolerance_fails(tmp_path, capsys):
+    # Latency direction is inverted: higher ticks are worse.
+    base = [frontdoor_record("deadline", 4, 280.0, p99=8.0)]
+    curr = [frontdoor_record("deadline", 4, 280.0, p99=12.0)]  # +50% > 25%
+    assert compare(tmp_path, base, curr) == 1
+    assert "p99_wait_ticks" in capsys.readouterr().err
+
+
+def test_latency_growth_within_tolerance_passes(tmp_path):
+    base = [frontdoor_record("deadline", 4, 280.0, p99=8.0)]
+    curr = [frontdoor_record("deadline", 4, 280.0, p99=9.0)]  # +12.5% < 25%
+    assert compare(tmp_path, base, curr) == 0
+    # ...but a zero tolerance catches any growth.
+    assert compare(tmp_path, base, curr, ["--latency-tolerance", "0.0"]) == 1
+
+
+def test_latency_improvement_passes(tmp_path, capsys):
+    base = [frontdoor_record("size", 4, 300.0, p50=5.0, p99=20.0)]
+    curr = [frontdoor_record("size", 4, 310.0, p50=1.0, p99=4.0)]
+    assert compare(tmp_path, base, curr) == 0
+    assert "FAIL" not in capsys.readouterr().out
+
+
+def test_zero_latency_baseline_is_a_real_measurement(tmp_path, capsys):
+    # A burst trace under a size trigger waits 0 ticks — that is a
+    # measurement, not a sentinel; only negative values are sentinels.
+    base = [frontdoor_record("size", 1, 50.0, p50=0.0, p99=0.0)]
+    curr = [frontdoor_record("size", 1, 50.0, p50=0.0, p99=0.0)]
+    assert compare(tmp_path, base, curr) == 0
+    assert "p50_wait_ticks: 0.0 -> 0.0" in capsys.readouterr().out
+
+
+def test_negative_latency_baseline_is_a_sentinel(tmp_path, capsys):
+    base = [frontdoor_record("off", 1, 0.0, p50=-1.0, p99=-1.0)]
+    curr = [frontdoor_record("off", 1, 120.0, p50=0.0, p99=0.0)]
+    assert compare(tmp_path, base, curr) == 0
+    out = capsys.readouterr().out
+    assert "skip" in out and "sentinel" in out
+
+
+def test_negative_current_latency_is_a_failure(tmp_path, capsys):
+    base = [frontdoor_record("off", 1, 120.0, p50=0.0, p99=0.0)]
+    curr = [frontdoor_record("off", 1, 120.0, p50=-1.0, p99=-1.0)]
+    assert compare(tmp_path, base, curr) == 1
+    assert "unmeasured" in capsys.readouterr().err
+
+
+def test_latency_tolerance_bounds_enforced(tmp_path):
+    b = write(tmp_path, "b.json", [])
+    c = write(tmp_path, "c.json", [])
+    with pytest.raises(SystemExit):
+        bc.main([b, c, "--latency-tolerance", "-0.1"])
+
+
+def test_committed_frontdoor_baseline_self_compares_clean():
+    baseline = os.path.join(REPO_ROOT, "BENCH_frontdoor.json")
     assert bc.main([baseline, baseline]) == 0

@@ -3,21 +3,29 @@
 
 Usage:
     python3 python/tools/bench_compare.py BASELINE.json CURRENT.json \
-        [--max-regression 0.15] [--accuracy-tolerance 0.02]
+        [--max-regression 0.15] [--accuracy-tolerance 0.02] \
+        [--latency-tolerance 0.25]
 
-Both inputs are `BENCH_serving.json` / `BENCH_drift.json`-shaped files: a
-flat JSON array of records, each carrying a `section` ("batch_scoring",
-"single_query", "engine_search_batch", "drift_serving", ...), a `threads`
-count, and one or more queries-per-second fields (`qps_gathered`,
-`qps_segmented`) and/or accuracy fields (`accuracy`). Records are matched
-across files by `(section, threads, age_seconds, refresh)` — the last two
-are absent (None) for serving-throughput records, so old-shape files keep
-their `(section, threads)` identity. For every qps field present in both,
-the tool reports the current/baseline ratio and **exits 1** if any
-measurement dropped by more than `--max-regression` (default 15%).
-Accuracy fields are compared *absolutely* (they are deterministic
-fractions, not noisy wall-clock rates): fail when
-`current < baseline - --accuracy-tolerance` (default 0.02).
+Both inputs are `BENCH_serving.json` / `BENCH_drift.json` /
+`BENCH_frontdoor.json`-shaped files: a flat JSON array of records, each
+carrying a `section` ("batch_scoring", "single_query",
+"engine_search_batch", "drift_serving", "serving_frontdoor", ...), a
+`threads` count, and one or more queries-per-second fields
+(`qps_gathered`, `qps_segmented`, `qps_served`), accuracy fields
+(`accuracy`), and/or queue-latency fields (`p50_wait_ticks`,
+`p99_wait_ticks`). Records are matched across files by
+`(section, threads, age_seconds, refresh, policy)` — fields absent from a
+record are None in its key, so old-shape files keep their
+`(section, threads)` identity and front-door records add their coalescing
+`policy`. For every qps field present in both, the tool reports the
+current/baseline ratio and **exits 1** if any measurement dropped by more
+than `--max-regression` (default 15%). Accuracy fields are compared
+*absolutely* (they are deterministic fractions, not noisy wall-clock
+rates): fail when `current < baseline - --accuracy-tolerance` (default
+0.02). Latency fields invert the qps direction — *higher* is worse: fail
+when `current > baseline * (1 + --latency-tolerance)` (default 0.25;
+queue waits are in deterministic logical ticks, but the tolerance leaves
+room for intentional policy retuning to be reviewed, not auto-rejected).
 
 Conventions:
 * A baseline qps of 0 (or any non-positive / missing value) is an
@@ -28,7 +36,9 @@ Conventions:
   it (`cargo bench --bench serving_throughput`, then copy the emitted
   BENCH_serving.json over the committed one). For accuracy fields 0.0 is
   a legitimate measurement, so only *negative* baselines (-1.0 by
-  convention) are sentinels.
+  convention) are sentinels; the same rule applies to latency fields
+  (a 0-tick wait is a real measurement — an all-burst trace under a
+  size trigger waits nothing).
 * Records with neither a qps nor an accuracy field (e.g. a `meta`
   provenance record) are ignored.
 * When the two records disagree on the `tiny` flag the comparison is
@@ -51,8 +61,9 @@ import argparse
 import json
 import sys
 
-QPS_FIELDS = ("qps_gathered", "qps_segmented")
+QPS_FIELDS = ("qps_gathered", "qps_segmented", "qps_served")
 ACC_FIELDS = ("accuracy",)
+LAT_FIELDS = ("p50_wait_ticks", "p99_wait_ticks")
 
 
 def record_key(rec):
@@ -61,16 +72,19 @@ def record_key(rec):
         rec.get("threads"),
         rec.get("age_seconds"),
         rec.get("refresh"),
+        rec.get("policy"),
     )
 
 
 def key_tag(key):
-    section, threads, age, refresh = key
+    section, threads, age, refresh, policy = key
     tag = f"{section} x{threads}"
     if age is not None:
         tag += f" age={age:g}s"
     if refresh is not None:
         tag += f" refresh={'on' if refresh else 'off'}"
+    if policy is not None:
+        tag += f" policy={policy}"
     return tag
 
 
@@ -88,7 +102,7 @@ def load_records(path):
     for rec in data:
         if not isinstance(rec, dict) or "section" not in rec:
             continue
-        if not any(f in rec for f in QPS_FIELDS + ACC_FIELDS):
+        if not any(f in rec for f in QPS_FIELDS + ACC_FIELDS + LAT_FIELDS):
             continue  # meta/provenance record
         key = record_key(rec)
         if key in out:
@@ -115,22 +129,32 @@ def main(argv=None):
         metavar="ABS",
         help="fail when current accuracy < baseline - ABS (default 0.02)",
     )
+    ap.add_argument(
+        "--latency-tolerance",
+        type=float,
+        default=0.25,
+        metavar="FRAC",
+        help="fail when current wait > baseline * (1 + FRAC) (default 0.25)",
+    )
     args = ap.parse_args(argv)
     if not 0.0 <= args.max_regression < 1.0:
         ap.error("--max-regression must be in [0, 1)")
     if not 0.0 <= args.accuracy_tolerance < 1.0:
         ap.error("--accuracy-tolerance must be in [0, 1)")
+    if args.latency_tolerance < 0.0:
+        ap.error("--latency-tolerance must be >= 0")
 
     base = load_records(args.baseline)
     curr = load_records(args.current)
 
     def sort_key(k):
-        section, threads, age, refresh = k
+        section, threads, age, refresh, policy = k
         return (
             section,
             threads if threads is not None else -1,
             age if age is not None else -1.0,
             refresh if refresh is not None else False,
+            policy if policy is not None else "",
         )
 
     failures = []
@@ -184,6 +208,29 @@ def main(argv=None):
                 failures.append(
                     f"{tag} {field}: {c:.3f} below baseline {b:.3f} "
                     f"- tolerance {args.accuracy_tolerance:.3f}"
+                )
+        for field in LAT_FIELDS:
+            if field not in base[key] or field not in curr[key]:
+                continue
+            b, c = base[key][field], curr[key][field]
+            if not isinstance(b, (int, float)) or b < 0:
+                print(f"skip  {tag} {field}: baseline unmeasured (sentinel {b!r})")
+                skipped += 1
+                continue
+            if not isinstance(c, (int, float)) or c < 0:
+                failures.append(f"{tag} {field}: current run unmeasured ({c!r})")
+                continue
+            compared += 1
+            ceiling = b * (1.0 + args.latency_tolerance)
+            verdict = "FAIL" if c > ceiling else "ok"
+            print(
+                f"{verdict:<5} {tag} {field}: {b:.1f} -> {c:.1f} ticks "
+                f"(ceiling {ceiling:.1f})"
+            )
+            if verdict == "FAIL":
+                failures.append(
+                    f"{tag} {field}: {c:.1f} ticks above baseline {b:.1f} "
+                    f"* (1 + {args.latency_tolerance:.2f})"
                 )
 
     print(f"\ncompared {compared} measurement(s), skipped {skipped} sentinel(s)")

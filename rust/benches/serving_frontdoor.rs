@@ -1,0 +1,223 @@
+//! Front-door coalescing benchmark (the closed-loop instrument for
+//! `coordinator::scheduler`): queries/sec of serving one seeded
+//! Poisson-like arrival trace through the dynamic-batching front door,
+//! sweeping coalescing policy — **batch-size-1 naive** (`off`, every
+//! request flushes alone, the pre-front-door behavior), **size-triggered**
+//! (`size`, flush at the tile-fill target derived from the config-default
+//! `min_utilization = 0.3`, i.e. 39 queries/tile), and **size+deadline**
+//! (`deadline`, same fill target plus a logical-tick latency bound) — at
+//! 1 and 4 worker threads. Every policy run is asserted bit-identical to
+//! a single arrival-order `search_batch` oracle before its time means
+//! anything, so the only thing compared is host wall time; the
+//! queue-latency price of each policy is reported alongside in logical
+//! ticks (p50/p99), which are deterministic per trace.
+//!
+//! Writes the machine-readable `BENCH_frontdoor.json` next to the text
+//! table (`python/tools/bench_compare.py` diffs two such files, keyed by
+//! section/policy/threads, with inverted tolerance for the latency
+//! percentiles).
+//!
+//! `--tiny` runs a seconds-scale smoke configuration (CI's default
+//! step); the >=2x coalesced-vs-naive throughput assert at 4 threads is
+//! opt-in via `SPECPCM_ASSERT_SPEEDUP=1` and guarded on >=4 real cores,
+//! mirroring `serving_throughput`.
+
+use std::time::Instant;
+
+use specpcm::backend::BackendDispatcher;
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::{
+    tile_fill_target, ArrivalTrace, CoalescePolicy, FrontDoor, SearchEngine,
+};
+use specpcm::ms::{SearchDataset, Spectrum};
+use specpcm::telemetry::{render_json_records, render_table, JsonField};
+use specpcm::util::Rng;
+
+fn median_time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
+    f(); // warmup
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(f64::total_cmp);
+    times[times.len() / 2]
+}
+
+struct Scale {
+    targets: usize,
+    queries: usize,
+    reps: usize,
+}
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let scale = if tiny {
+        Scale {
+            targets: 40,
+            queries: 24,
+            reps: 3,
+        }
+    } else {
+        // ~5 full 39-query tiles per trace for the coalescing policies
+        // vs. 192 singleton flushes for the naive baseline.
+        Scale {
+            targets: 300,
+            queries: 192,
+            reps: 5,
+        }
+    };
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "host parallelism: {cores} logical cores{}\n",
+        if tiny { " (tiny smoke scale)" } else { "" }
+    );
+
+    let cfg = SpecPcmConfig {
+        hd_dim: 2048,
+        bucket_width: 5.0,
+        num_banks: 64,
+        ..SpecPcmConfig::paper_search()
+    };
+    let ds = SearchDataset::generate(
+        "frontdoor",
+        77,
+        scale.targets,
+        scale.queries,
+        0.8,
+        0.2,
+        0,
+        0,
+    );
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+    // One seeded trace shared by every policy and thread count, so each
+    // cell serves the exact same request schedule (C4-RNG: the RNG is
+    // constructed here, outside engine code, and threaded in).
+    let mut trace_rng = Rng::new(0xf00d);
+    let trace = ArrivalTrace::poisson_from_rng(&mut trace_rng, queries.len(), 1.0);
+    let fill = tile_fill_target(cfg.backend.min_utilization);
+    let policies = [
+        CoalescePolicy::Off,
+        CoalescePolicy::Size { max_batch: fill },
+        CoalescePolicy::SizeDeadline {
+            max_batch: fill,
+            deadline_ticks: 64,
+        },
+    ];
+    println!(
+        "workload: {} requests over {} logical ticks, fill target {fill} \
+         (min_utilization {:.2})",
+        queries.len(),
+        trace.ticks.last().copied().unwrap_or(0),
+        cfg.backend.min_utilization
+    );
+
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    let mut qps_naive_4t = 0.0f64;
+    let mut qps_size_4t = 0.0f64;
+    for threads in [1usize, 4] {
+        let be = BackendDispatcher::parallel(threads);
+        let mut engine = SearchEngine::program(cfg.clone(), &ds, &be).unwrap();
+        let oracle = engine.search_batch(&queries, &be).unwrap();
+        for policy in policies {
+            let fd = FrontDoor::new(policy);
+            let t = median_time(
+                || {
+                    engine.clear_query_cache();
+                    std::hint::black_box(
+                        fd.serve_trace(&mut engine, &queries, &trace, &be).unwrap(),
+                    );
+                },
+                scale.reps,
+            );
+            // Results must match the arrival-order oracle bit for bit
+            // before the time means anything (the telemetry is
+            // deterministic per trace, so this run's stats are the
+            // timed runs' stats).
+            let served = fd.serve_trace(&mut engine, &queries, &trace, &be).unwrap();
+            assert_eq!(served.pairs, oracle.pairs, "fan-back diverged from oracle");
+            assert_eq!(served.matched, oracle.matched, "matches diverged");
+            assert_eq!(served.ops, oracle.ops, "marginal ops diverged");
+
+            let qps = queries.len() as f64 / t;
+            if threads == 4 {
+                match policy {
+                    CoalescePolicy::Off => qps_naive_4t = qps,
+                    CoalescePolicy::Size { .. } => qps_size_4t = qps,
+                    CoalescePolicy::SizeDeadline { .. } => {}
+                }
+            }
+            let st = &served.stats;
+            rows.push(vec![
+                format!("{} x{threads}", policy.name()),
+                format!("{qps:.1}"),
+                format!("{}", st.batches),
+                format!("{:.0}%", st.mean_fill_fraction * 100.0),
+                format!("{}/{}", st.p50_wait_ticks, st.p99_wait_ticks),
+            ]);
+            records.push(vec![
+                ("section", JsonField::S("serving_frontdoor".into())),
+                ("policy", JsonField::S(policy.name().into())),
+                ("threads", JsonField::U(threads as u64)),
+                ("requests", JsonField::U(st.requests)),
+                ("batches", JsonField::U(st.batches)),
+                ("fill_target", JsonField::U(st.fill_target)),
+                ("mean_fill_fraction", JsonField::F(st.mean_fill_fraction)),
+                ("qps_served", JsonField::F(qps)),
+                ("p50_wait_ticks", JsonField::F(st.p50_wait_ticks as f64)),
+                ("p99_wait_ticks", JsonField::F(st.p99_wait_ticks as f64)),
+                ("tiny", JsonField::B(tiny)),
+            ]);
+        }
+    }
+
+    println!(
+        "{}",
+        render_table(
+            "front-door serving throughput (host wall clock)",
+            &["policy", "served q/s", "batches", "fill", "wait p50/p99 ticks"],
+            &rows
+        )
+    );
+
+    let json = render_json_records(&records);
+    let json_path = "BENCH_frontdoor.json";
+    std::fs::write(json_path, &json).expect("write BENCH_frontdoor.json");
+    println!("wrote {json_path} ({} records)", records.len());
+
+    // Reproduction contract: with >=4 real cores, size-triggered
+    // coalescing should serve >=2x the naive batch-size-1 rate at 4
+    // threads — full tiles amortize per-call overhead and give the
+    // parallel backend whole query tiles to shard, while naive serving
+    // pays both on every request. The hard assert is opt-in (wall-clock
+    // ratios are noisy on shared runners) and meaningless at tiny scale.
+    let speedup = if qps_naive_4t > 0.0 {
+        qps_size_4t / qps_naive_4t
+    } else {
+        0.0
+    };
+    let enforce = std::env::var("SPECPCM_ASSERT_SPEEDUP").as_deref() == Ok("1");
+    if tiny {
+        println!("tiny smoke scale: speedup assert skipped by design.");
+    } else if cores >= 4 && enforce {
+        assert!(
+            speedup > 2.0,
+            "size-triggered coalescing should be >=2x naive serving at 4 threads \
+             (got {speedup:.2}x)"
+        );
+        println!("shape check OK: size coalescing = {speedup:.2}x naive at 4 threads.");
+    } else if cores >= 4 {
+        println!(
+            "shape check (informational; SPECPCM_ASSERT_SPEEDUP=1 to enforce): \
+             size coalescing = {speedup:.2}x naive at 4 threads."
+        );
+    } else {
+        println!("shape check skipped: only {cores} cores available.");
+    }
+}

@@ -131,6 +131,14 @@ impl BackendDispatcher {
         self.primary.name()
     }
 
+    /// The padded-utilization floor below which jobs fall through to the
+    /// scalar backend. The serving front door derives its tile-fill
+    /// target from this same heuristic (`coordinator::scheduler`), so
+    /// coalesced batches clear the routing bar they are sized for.
+    pub fn min_utilization(&self) -> f64 {
+        self.min_utilization
+    }
+
     /// Name of the configured encode backend.
     pub fn encode_name(&self) -> &'static str {
         self.encode.name()

@@ -96,4 +96,88 @@ mod tests {
         assert_eq!(&p[..4], &m[..]);
         assert!(p[4..].iter().all(|&x| x == 0.0));
     }
+
+    #[test]
+    fn pad_matrix_noop_at_target_and_empty() {
+        let m = vec![5.0, 6.0, 7.0];
+        assert_eq!(pad_matrix(&m, 1, 3, 1), m);
+        // Zero rows pad to pure zeros; zero target stays empty.
+        assert_eq!(pad_matrix(&[], 0, 4, 2), vec![0.0; 8]);
+        assert!(pad_matrix(&[], 0, 4, 0).is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_matrix_rejects_shrinking() {
+        pad_matrix(&[0.0; 8], 2, 4, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pad_matrix_rejects_mismatched_shape() {
+        pad_matrix(&[0.0; 7], 2, 4, 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn batcher_rejects_zero_chunk() {
+        Batcher::new(10, 0);
+    }
+
+    #[test]
+    fn chunk_of_one_preserves_every_index() {
+        let batches = Batcher::new(5, 1).batches();
+        assert_eq!(batches.len(), 5);
+        for (i, b) in batches.iter().enumerate() {
+            assert_eq!((b.start, b.end), (i, i + 1));
+        }
+    }
+
+    /// Property sweep over a seeded grid of (total, chunk): batches tile
+    /// [0, total) exactly, in order, every one nonempty, only the last
+    /// ragged — the invariant the front door's flush path leans on when
+    /// it splits a drained queue with `Batcher`.
+    #[test]
+    fn batches_tile_in_order_property() {
+        let mut rng = crate::util::Rng::new(0xba7c4);
+        let mut cases: Vec<(usize, usize)> =
+            vec![(0, 1), (1, 1), (1, 64), (63, 64), (64, 64), (65, 64)];
+        for _ in 0..200 {
+            cases.push((rng.below(300), 1 + rng.below(80)));
+        }
+        for (total, chunk) in cases {
+            let b = Batcher::new(total, chunk);
+            let batches = b.batches();
+            assert_eq!(batches.len(), b.num_batches(), "({total}, {chunk})");
+            let mut cursor = 0;
+            for (i, batch) in batches.iter().enumerate() {
+                assert_eq!(batch.start, cursor, "gap/overlap at ({total}, {chunk})");
+                assert!(!batch.is_empty(), "empty batch at ({total}, {chunk})");
+                let full = batch.len() == chunk;
+                let last = i + 1 == batches.len();
+                assert!(full || last, "ragged non-tail at ({total}, {chunk})");
+                cursor = batch.end;
+            }
+            assert_eq!(cursor, total, "coverage at ({total}, {chunk})");
+        }
+    }
+
+    /// Padding then slicing the original row range back is the identity,
+    /// for a seeded grid of shapes.
+    #[test]
+    fn pad_matrix_roundtrip_property() {
+        let mut rng = crate::util::Rng::new(0x9ad5);
+        for _ in 0..100 {
+            let rows = rng.below(12);
+            let width = 1 + rng.below(9);
+            let target = rows + rng.below(8);
+            let data: Vec<f32> = (0..rows * width)
+                .map(|_| rng.range_f64(-1.0, 1.0) as f32)
+                .collect();
+            let padded = pad_matrix(&data, rows, width, target);
+            assert_eq!(padded.len(), target * width);
+            assert_eq!(&padded[..rows * width], &data[..]);
+            assert!(padded[rows * width..].iter().all(|&x| x == 0.0));
+        }
+    }
 }

@@ -26,6 +26,7 @@
 //!   that overflows one engine's banks into contiguous per-engine row
 //!   ranges, and [`ShardedSearchEngine`] programs one engine per range
 //!   and fans query batches across them on scoped threads.
+//! * [`scheduler`] — the serving front door (see below).
 //! * [`pipeline`] — the end-to-end clustering and DB-search drivers that
 //!   the CLI, examples and benches call; both execute score tiles through
 //!   the `backend::BackendDispatcher` they are handed. `SearchPipeline` is
@@ -48,6 +49,26 @@
 //!    concurrent per-shard fan-out. Selected by `[backend] shards` /
 //!    `--shards N|auto`.
 //!
+//! # Serving front door
+//!
+//! [`scheduler::FrontDoor`] is what a stream of single-spectrum requests
+//! hits before any engine does: requests enter a **bounded FIFO queue**,
+//! a [`scheduler::CoalescePolicy`] **coalesces** them into dynamic
+//! batches (size-triggered at the tile-fill target derived from
+//! `BackendDispatcher::min_utilization`, and/or deadline-triggered on
+//! the logical clock), each **flush** drains the queue through
+//! [`batcher::Batcher`]-chunked `search_batch` calls and fans results
+//! back in arrival order, and idle gaps between flushes run
+//! **refresh-in-gaps** `RefreshPolicy::maintain` increments without ever
+//! delaying a deadline-due batch (deadlines fire before the clock
+//! advances — structural, not tuned). Everything is on the same
+//! deterministic **logical clock** as `SearchEngine::advance_age`; wall
+//! time never enters, so traces replay tick-for-tick. Coalescing is
+//! invisible to results and accounting: for any trace, policy, backend
+//! and shard count, the fan-back and cumulative marginal `OpCounts` are
+//! bit-identical to one arrival-order `search_batch`
+//! (`rust/tests/scheduler_equivalence.rs`).
+//!
 //! Accounting composes across the seams: backends never touch op counts
 //! (the dispatcher charges the physical job regardless of route), the
 //! encode cache only removes host arithmetic, and the shard layer charges
@@ -61,6 +82,7 @@ pub mod batcher;
 pub mod engine;
 pub mod frontend;
 pub mod pipeline;
+pub mod scheduler;
 pub mod sharded;
 
 pub use allocator::{AllocError, SegmentAllocator, Slot};
@@ -72,5 +94,8 @@ pub use engine::{
 pub use frontend::HdFrontend;
 pub use pipeline::{
     ClusteringOutcome, ClusteringPipeline, SearchOutcomeSummary, SearchPipeline,
+};
+pub use scheduler::{
+    tile_fill_target, ArrivalTrace, CoalescePolicy, FrontDoor, ServeEngine, ServeTraceOutcome,
 };
 pub use sharded::{ShardPlan, ShardedSearchEngine};

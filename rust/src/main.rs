@@ -15,14 +15,15 @@ use specpcm::baselines::latency_model;
 use specpcm::cluster::quality::clustered_at_incorrect;
 use specpcm::config::{SpecPcmConfig, Task};
 use specpcm::coordinator::{
-    ClusteringPipeline, RefreshPolicy, SearchEngine, SearchPipeline, ShardPlan,
-    ShardedSearchEngine,
+    tile_fill_target, ArrivalTrace, BatchOutcome, ClusteringPipeline, CoalescePolicy, FrontDoor,
+    RefreshPolicy, SearchEngine, SearchPipeline, ServeEngine, ShardPlan, ShardedSearchEngine,
 };
 use specpcm::encode::EncodeKind;
 use specpcm::energy::area_breakdown;
 use specpcm::ms::{ClusteringDataset, SearchDataset, Spectrum};
 use specpcm::telemetry::render_table;
 use specpcm::util::error::{Error, Result};
+use specpcm::util::Rng;
 
 const USAGE: &str = "\
 specpcm — PCM-based analog IMC accelerator for MS analysis
@@ -36,6 +37,8 @@ USAGE:
                   [--encode-backend scalar|bitpacked|parallel]
                   [--serve-batches N] [--shards N|auto] [--no-artifacts]
                   [--age-seconds T] [--refresh-age A] [--refresh-budget N]
+                  [--coalesce size|deadline|off] [--max-batch N]
+                  [--deadline-ticks N] [--trace-seed N]
   specpcm info                  print the hardware model (Tables 1/S3, Fig. 8)
   specpcm config [clustering|search]   print a config preset
   specpcm isa <file>            assemble + run an ISA program
@@ -46,6 +49,29 @@ SERVING:
                       persistent SearchEngine; reports the one-time
                       programming cost vs the marginal per-batch cost and
                       the amortized total.
+
+FRONT DOOR (serving mode):
+  --coalesce P        serve the queries as a stream of single-spectrum
+                      requests through the dynamic-batching front door
+                      instead of fixed chunks: requests enter a bounded
+                      FIFO queue and coalesce into batches. P = size
+                      (flush at the tile-fill target), deadline (size
+                      trigger plus a logical-tick latency bound), off
+                      (batch-size-1 naive baseline). Implies serving
+                      mode; mutually exclusive with --serve-batches.
+                      Arrivals follow a seeded Poisson-like trace on the
+                      engine's logical clock (~1 request/tick); results
+                      are bit-identical to any other serving split. The
+                      report prints queue depth, batch fill, and p50/p99
+                      queue latency next to the device-health line; with
+                      --refresh-age, idle gaps between flushes also run
+                      maintain increments (refresh-in-the-gaps).
+  --max-batch N       override the tile-fill target (default/0: derive
+                      from the backend's min_utilization heuristic — 39
+                      queries/tile at the config default 0.3).
+  --deadline-ticks N  latency bound for --coalesce deadline (default 64
+                      logical ticks; rejected with other policies).
+  --trace-seed N      seed for the arrival trace (default: config seed).
 
 DRIFT (serving mode):
   --age-seconds T     advance the engine's deterministic serving clock by
@@ -203,6 +229,10 @@ fn known_flags(cmd: &str) -> Vec<&'static str> {
             "age-seconds",
             "refresh-age",
             "refresh-budget",
+            "coalesce",
+            "max-batch",
+            "deadline-ticks",
+            "trace-seed",
         ]),
         _ => v.clear(), // info/config/isa take positionals only
     }
@@ -282,6 +312,109 @@ impl DriftOpts {
     }
 }
 
+/// Front-door serving options (`--coalesce` / `--max-batch` /
+/// `--deadline-ticks` / `--trace-seed`). `policy` is `Some` only when
+/// `--coalesce` was given; the dependent flags without it are usage
+/// errors, as is `--deadline-ticks` under a policy with no deadline.
+struct CoalesceOpts {
+    policy: Option<CoalescePolicy>,
+    trace_seed: Option<u64>,
+}
+
+impl CoalesceOpts {
+    fn parse(args: &Args, min_utilization: f64) -> Result<Self> {
+        if !args.has("coalesce") {
+            for dep in ["max-batch", "deadline-ticks", "trace-seed"] {
+                specpcm::ensure!(
+                    !args.has(dep),
+                    "--{dep} needs --coalesce (the front-door policy)"
+                );
+            }
+            return Ok(CoalesceOpts {
+                policy: None,
+                trace_seed: None,
+            });
+        }
+        let name = args.get("coalesce", "size");
+        let max_batch = match args.get_usize("max-batch", 0)? {
+            0 => tile_fill_target(min_utilization),
+            n => n,
+        };
+        let policy = match name.as_str() {
+            "off" => {
+                specpcm::ensure!(
+                    !args.has("max-batch"),
+                    "--max-batch is meaningless with --coalesce off (batch size is 1)"
+                );
+                specpcm::ensure!(
+                    !args.has("deadline-ticks"),
+                    "--deadline-ticks needs --coalesce deadline"
+                );
+                CoalescePolicy::Off
+            }
+            "size" => {
+                specpcm::ensure!(
+                    !args.has("deadline-ticks"),
+                    "--deadline-ticks needs --coalesce deadline"
+                );
+                CoalescePolicy::Size { max_batch }
+            }
+            "deadline" => CoalescePolicy::SizeDeadline {
+                max_batch,
+                deadline_ticks: args.get_usize("deadline-ticks", 64)? as u64,
+            },
+            other => {
+                specpcm::bail!("--coalesce: unknown policy '{other}' (size|deadline|off)")
+            }
+        };
+        let trace_seed = if args.has("trace-seed") {
+            Some(args.get_usize("trace-seed", 0)? as u64)
+        } else {
+            None
+        };
+        Ok(CoalesceOpts { policy, trace_seed })
+    }
+
+    fn active(&self) -> bool {
+        self.policy.is_some()
+    }
+}
+
+/// Serve the queries as a request stream through the front door (the
+/// `--coalesce` path, shared by the monolithic and sharded engines):
+/// generate the seeded arrival trace, run it, and print the queue/fill/
+/// latency telemetry next to the device-health line. Returns the flushed
+/// batches for the usual cost/finalize reporting — bit-identical to any
+/// other serving split of the same queries.
+fn serve_front_door<E: ServeEngine>(
+    engine: &mut E,
+    policy: CoalescePolicy,
+    trace_seed: u64,
+    queries: &[&Spectrum],
+    backend: &BackendDispatcher,
+    refresh: Option<RefreshPolicy>,
+) -> Result<Vec<BatchOutcome>> {
+    let mut fd = FrontDoor::new(policy);
+    if let Some(p) = refresh {
+        fd = fd.with_refresh(p);
+    }
+    let mut rng = Rng::new(trace_seed);
+    let trace = ArrivalTrace::poisson_from_rng(&mut rng, queries.len(), 1.0);
+    println!(
+        "front door: coalesce={} fill target {} (queue capacity {}), {} requests \
+         over {} logical ticks (trace seed {trace_seed:#x})",
+        policy.name(),
+        policy.max_batch(),
+        fd.capacity(),
+        queries.len(),
+        trace.ticks.last().copied().unwrap_or(0)
+    );
+    let served = fd.serve_trace(engine, queries, &trace, backend)?;
+    println!("{}", served.stats.summary());
+    print_health(&engine.device_health());
+    Ok(served.outcomes)
+}
+
 fn print_health(h: &specpcm::telemetry::DeviceHealth) {
     println!(
         "device health: max age {:.3e} s, est conductance loss {:.2}%, \
@@ -347,18 +480,25 @@ fn cmd_search(args: &Args) -> Result<()> {
     // banks is auto-sharded (`--shards auto`), so --scale no longer needs
     // shrunken per-dataset defaults to fit 640 slots.
     let scale = args.get_f64("scale", 1.0)?;
+    // Serving-mode flags validate before the (much more expensive)
+    // dataset generation so usage errors surface immediately.
+    let drift = DriftOpts::parse(args)?;
+    let coalesce = CoalesceOpts::parse(args, cfg.backend.min_utilization)?;
+    specpcm::ensure!(
+        !(coalesce.active() && args.has("serve-batches")),
+        "--serve-batches and --coalesce are mutually exclusive serving modes"
+    );
     let ds = match dataset.as_str() {
         "iprg2012" => SearchDataset::iprg2012_like(cfg.seed, scale),
         "hek293" => SearchDataset::hek293_like(cfg.seed, scale),
         other => specpcm::bail!("unknown dataset '{other}'"),
     };
     let backend = open_backend(&cfg);
-    let drift = DriftOpts::parse(args)?;
-    // Drift and refresh are serving-mode concepts (they act on a
-    // programmed, persistent engine), so the drift flags imply one served
-    // batch when --serve-batches was not given.
+    // Drift, refresh, and coalescing are serving-mode concepts (they act
+    // on a programmed, persistent engine), so those flags imply one
+    // served batch when --serve-batches was not given.
     let n_batches = match args.get_usize("serve-batches", 0)? {
-        0 if drift.active() => 1,
+        0 if drift.active() || coalesce.active() => 1,
         n => n,
     };
     let plan = ShardPlan::for_capacity(
@@ -368,10 +508,10 @@ fn cmd_search(args: &Args) -> Result<()> {
         cfg.backend.shards,
     )?;
     if plan.n_shards() > 1 {
-        return cmd_search_sharded(cfg, &ds, &backend, plan, n_batches, &drift);
+        return cmd_search_sharded(cfg, &ds, &backend, plan, n_batches, &drift, &coalesce);
     }
     if n_batches > 0 {
-        return cmd_serve(cfg, &ds, &backend, n_batches, &drift);
+        return cmd_serve(cfg, &ds, &backend, n_batches, &drift, &coalesce);
     }
     let fdr = cfg.fdr;
     let out = SearchPipeline::new(cfg).run(&ds, &backend)?;
@@ -410,9 +550,11 @@ fn cmd_search_sharded(
     plan: ShardPlan,
     n_batches: usize,
     drift: &DriftOpts,
+    co: &CoalesceOpts,
 ) -> Result<()> {
     let fdr = cfg.fdr;
     let per_shard_banks = cfg.num_banks;
+    let seed = cfg.seed;
     // The plan cmd_search validated (and routes on) is exactly the plan
     // the engine programs — one planning call site.
     let mut engine = ShardedSearchEngine::program_with_plan(cfg, ds, backend, plan)?;
@@ -454,8 +596,22 @@ fn cmd_search_sharded(
     }
 
     let queries: Vec<&Spectrum> = ds.queries.iter().collect();
-    let outcomes = engine.serve_chunked(&queries, n_batches.max(1), backend)?;
-    if outcomes.len() > 1 {
+    let outcomes = if let Some(policy) = co.policy {
+        serve_front_door(
+            &mut engine,
+            policy,
+            co.trace_seed.unwrap_or(seed),
+            &queries,
+            backend,
+            drift.refresh,
+        )?
+    } else {
+        engine.serve_chunked(&queries, n_batches.max(1), backend)?
+    };
+    // Per-flush tables are a --serve-batches report; under --coalesce off
+    // they would print one row per request, and the front door already
+    // summarizes its schedule in the telemetry line above.
+    if !co.active() && outcomes.len() > 1 {
         let rows: Vec<Vec<String>> = outcomes
             .iter()
             .enumerate()
@@ -508,8 +664,10 @@ fn cmd_serve(
     backend: &BackendDispatcher,
     n_batches: usize,
     drift: &DriftOpts,
+    co: &CoalesceOpts,
 ) -> Result<()> {
     let fdr = cfg.fdr;
+    let seed = cfg.seed;
     let mut engine = SearchEngine::program(cfg, ds, backend)?;
     let prog = *engine.program_report();
     println!(
@@ -536,27 +694,43 @@ fn cmd_serve(
     }
 
     let queries: Vec<&Spectrum> = ds.queries.iter().collect();
-    let outcomes = engine.serve_chunked(&queries, n_batches, backend)?;
-    let rows: Vec<Vec<String>> = outcomes
-        .iter()
-        .enumerate()
-        .map(|(bi, out)| {
-            vec![
-                format!("{bi}"),
-                format!("{}", out.pairs.len()),
-                format!("{:.4}", out.report.total_j() * 1e3),
-                format!("{:.4}", out.report.overlapped_latency_s() * 1e3),
-            ]
-        })
-        .collect();
-    println!(
-        "{}",
-        render_table(
-            "marginal per-batch cost (library programming excluded)",
-            &["batch", "queries", "energy mJ", "latency ms"],
-            &rows
-        )
-    );
+    let outcomes = if let Some(policy) = co.policy {
+        serve_front_door(
+            &mut engine,
+            policy,
+            co.trace_seed.unwrap_or(seed),
+            &queries,
+            backend,
+            drift.refresh,
+        )?
+    } else {
+        engine.serve_chunked(&queries, n_batches, backend)?
+    };
+    // Per-flush tables are a --serve-batches report; under --coalesce off
+    // they would print one row per request, and the front door already
+    // summarizes its schedule in the telemetry line above.
+    if !co.active() {
+        let rows: Vec<Vec<String>> = outcomes
+            .iter()
+            .enumerate()
+            .map(|(bi, out)| {
+                vec![
+                    format!("{bi}"),
+                    format!("{}", out.pairs.len()),
+                    format!("{:.4}", out.report.total_j() * 1e3),
+                    format!("{:.4}", out.report.overlapped_latency_s() * 1e3),
+                ]
+            })
+            .collect();
+        println!(
+            "{}",
+            render_table(
+                "marginal per-batch cost (library programming excluded)",
+                &["batch", "queries", "energy mJ", "latency ms"],
+                &rows
+            )
+        );
+    }
 
     let cost = engine.serving_cost(&outcomes);
     println!(
@@ -808,6 +982,88 @@ mod tests {
     }
 
     #[test]
+    fn coalesce_flags_parse_and_validate() {
+        // Absent flags leave serving untouched.
+        let none = Args::parse(&argv(&[])).unwrap();
+        let c = CoalesceOpts::parse(&none, 0.3).unwrap();
+        assert!(c.policy.is_none() && c.trace_seed.is_none() && !c.active());
+
+        // The size policy defaults its batch to the tile-fill target the
+        // backend routing heuristic implies (ceil(128 * 0.3) = 39).
+        let a = Args::parse(&argv(&["--coalesce", "size"])).unwrap();
+        let c = CoalesceOpts::parse(&a, 0.3).unwrap();
+        assert_eq!(
+            c.policy,
+            Some(CoalescePolicy::Size {
+                max_batch: tile_fill_target(0.3)
+            })
+        );
+        assert_eq!(c.policy.unwrap().max_batch(), 39);
+        assert!(c.trace_seed.is_none() && c.active());
+
+        // An explicit batch size wins over the derived target.
+        let a = Args::parse(&argv(&["--coalesce", "size", "--max-batch", "16"])).unwrap();
+        let c = CoalesceOpts::parse(&a, 0.3).unwrap();
+        assert_eq!(c.policy, Some(CoalescePolicy::Size { max_batch: 16 }));
+
+        // Deadline policy: explicit tick budget + trace seed, and the
+        // 64-tick default when --deadline-ticks is omitted.
+        let a = Args::parse(&argv(&[
+            "--coalesce",
+            "deadline",
+            "--deadline-ticks",
+            "7",
+            "--trace-seed",
+            "7",
+        ]))
+        .unwrap();
+        let c = CoalesceOpts::parse(&a, 0.3).unwrap();
+        assert_eq!(
+            c.policy,
+            Some(CoalescePolicy::SizeDeadline {
+                max_batch: 39,
+                deadline_ticks: 7
+            })
+        );
+        assert_eq!(c.trace_seed, Some(7));
+        // The front-door flags belong to search, not cluster.
+        assert!(a.check_known("search", &known_flags("search")).is_ok());
+        assert!(a.check_known("cluster", &known_flags("cluster")).is_err());
+        let a = Args::parse(&argv(&["--coalesce", "deadline"])).unwrap();
+        let c = CoalesceOpts::parse(&a, 0.3).unwrap();
+        assert_eq!(c.policy.unwrap().deadline_ticks(), Some(64));
+
+        // --coalesce off is the naive batch-size-1 baseline; sizing flags
+        // alongside it are usage errors, not silent no-ops.
+        let a = Args::parse(&argv(&["--coalesce", "off"])).unwrap();
+        assert_eq!(
+            CoalesceOpts::parse(&a, 0.3).unwrap().policy,
+            Some(CoalescePolicy::Off)
+        );
+        let a = Args::parse(&argv(&["--coalesce", "off", "--max-batch", "8"])).unwrap();
+        assert!(CoalesceOpts::parse(&a, 0.3).is_err());
+        let a = Args::parse(&argv(&["--coalesce", "size", "--deadline-ticks", "9"])).unwrap();
+        let err = CoalesceOpts::parse(&a, 0.3).unwrap_err();
+        assert!(err.to_string().contains("--coalesce deadline"), "{err}");
+
+        // Unknown policy names report a typed error listing the options.
+        let a = Args::parse(&argv(&["--coalesce", "banana"])).unwrap();
+        let err = CoalesceOpts::parse(&a, 0.3).unwrap_err();
+        assert!(err.to_string().contains("size|deadline|off"), "{err}");
+
+        // Dependent flags without --coalesce are usage errors.
+        for dep in [
+            &["--max-batch", "8"][..],
+            &["--deadline-ticks", "4"],
+            &["--trace-seed", "1"],
+        ] {
+            let a = Args::parse(&argv(dep)).unwrap();
+            let err = CoalesceOpts::parse(&a, 0.3).unwrap_err();
+            assert!(err.to_string().contains("--coalesce"), "{err}");
+        }
+    }
+
+    #[test]
     fn full_scale_presets_auto_shard() {
         // The satellite contract: `--scale 1.0 --dataset hek293` must
         // resolve to a runnable shard plan instead of a CapacityError.
@@ -863,6 +1119,11 @@ mod tests {
         assert!(err.to_string().contains("--striperows"), "{err}");
         assert!(err.to_string().contains("--stripe-rows"), "{err}");
 
+        // Near-miss front-door flags suggest the real spelling.
+        let a = Args::parse(&argv(&["--maxbatch", "8"])).unwrap();
+        let err = a.check_known("search", &known_flags("search")).unwrap_err();
+        assert!(err.to_string().contains("--max-batch"), "{err}");
+
         // `--shards` belongs to search, not cluster.
         let a = Args::parse(&argv(&["--shards", "4"])).unwrap();
         assert!(a.check_known("cluster", &known_flags("cluster")).is_err());
@@ -882,5 +1143,17 @@ mod tests {
         assert!(err.to_string().contains("--shards"), "{err}");
         let err = run(&argv(&["cluster", "--bogus-flag", "1"])).unwrap_err();
         assert!(err.to_string().contains("--bogus-flag"), "{err}");
+        // Front-door validation fires before any dataset is generated.
+        let err = run(&argv(&["search", "--coalesce", "banana"])).unwrap_err();
+        assert!(err.to_string().contains("--coalesce"), "{err}");
+        let err = run(&argv(&[
+            "search",
+            "--coalesce",
+            "size",
+            "--serve-batches",
+            "4",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err}");
     }
 }

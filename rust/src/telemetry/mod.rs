@@ -111,6 +111,78 @@ impl std::iter::Sum for DeviceHealth {
     }
 }
 
+/// Per-trace serving-front-door telemetry (see `coordinator::scheduler`):
+/// how well the dynamic batcher kept the 128x128 tiles full and how long
+/// requests waited in the queue. Every duration is in **logical ticks**
+/// (the front door's deterministic clock, same discipline as
+/// `SearchEngine::advance_age`), never wall time, so identical traces
+/// produce identical telemetry on any host.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FrontDoorStats {
+    /// Requests accepted from the arrival trace.
+    pub requests: u64,
+    /// Batches flushed into `search_batch`.
+    pub batches: u64,
+    /// Flushes fired by the tile-fill size trigger.
+    pub size_flushes: u64,
+    /// Flushes fired by the logical-tick deadline trigger.
+    pub deadline_flushes: u64,
+    /// Flushes forced by a full bounded queue (backpressure).
+    pub backpressure_flushes: u64,
+    /// End-of-trace drain flushes.
+    pub drain_flushes: u64,
+    /// Deepest queue occupancy observed (after enqueue, before flush).
+    pub max_queue_depth: u64,
+    /// The tile-fill target batches aim for (queries per flush).
+    pub fill_target: u64,
+    /// Mean batch fill fraction in [0, 1]: batch length / fill target,
+    /// averaged over flushed batches.
+    pub mean_fill_fraction: f64,
+    /// Queue-latency percentiles over every request, in logical ticks
+    /// (flush tick minus arrival tick; nearest-rank).
+    pub p50_wait_ticks: u64,
+    pub p99_wait_ticks: u64,
+    pub max_wait_ticks: u64,
+    /// `RefreshPolicy::maintain` increments run in idle gaps.
+    pub maintain_calls: u64,
+    /// Rows re-programmed by those in-gap maintain increments.
+    pub refreshed_rows: u64,
+}
+
+impl FrontDoorStats {
+    /// One-line human summary, printed by the CLI serve report next to
+    /// the device-health line.
+    pub fn summary(&self) -> String {
+        format!(
+            "front door: {} requests in {} batches (fill {:.0}% of target {}), \
+             max queue depth {}, wait p50/p99/max {}/{}/{} ticks, \
+             {} in-gap maintains ({} rows refreshed)",
+            self.requests,
+            self.batches,
+            self.mean_fill_fraction * 100.0,
+            self.fill_target,
+            self.max_queue_depth,
+            self.p50_wait_ticks,
+            self.p99_wait_ticks,
+            self.max_wait_ticks,
+            self.maintain_calls,
+            self.refreshed_rows
+        )
+    }
+}
+
+/// Nearest-rank percentile over a **sorted ascending** slice; `p` in
+/// [0, 1]. Returns 0 for an empty slice (the front door's "no requests"
+/// case). `p = 0` is the minimum, `p = 1` the maximum.
+pub fn percentile_u64(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let p = p.clamp(0.0, 1.0);
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1) - 1]
+}
+
 /// Named wall-clock stage timings (the Fig. 3-style latency breakdown).
 #[derive(Debug, Default, Clone)]
 pub struct StageTimer {

@@ -1,0 +1,311 @@
+//! Front-door scheduling equivalence (the "Serving front door" contract
+//! in `coordinator::scheduler`):
+//!
+//! For **any** arrival trace, **any** coalescing policy, **any** MVM
+//! backend and **any** shard count, the front door's arrival-order
+//! fan-back (per-query `(target, decoy)` pairs and matched peptides)
+//! and its cumulative marginal `OpCounts` are **bit-identical** to one
+//! `search_batch` over the same spectra in arrival order. Coalescing is
+//! a host-side scheduling choice, exactly like backend or shard
+//! selection — it can change wall time and telemetry, never results or
+//! simulated ASIC cost.
+//!
+//! Refresh-in-gaps composes with the invariant: maintain increments
+//! charge the one-time ledger, so batch ops stay oracle-identical even
+//! while idle gaps re-program stale rows on an aged engine (and on a
+//! fresh engine, the age-0 threshold makes maintain select nothing, so
+//! scores are untouched too).
+
+use specpcm::backend::BackendDispatcher;
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::{
+    tile_fill_target, ArrivalTrace, CoalescePolicy, FrontDoor, RefreshPolicy, SearchEngine,
+    ServeTraceOutcome, ShardedSearchEngine,
+};
+use specpcm::energy::OpCounts;
+use specpcm::ms::{SearchDataset, Spectrum};
+use specpcm::util::Rng;
+
+fn cfg() -> SpecPcmConfig {
+    SpecPcmConfig {
+        hd_dim: 2048,
+        bucket_width: 5.0,
+        num_banks: 64,
+        ..SpecPcmConfig::paper_search()
+    }
+}
+
+/// The policy grid every test sweeps: naive, size-triggered at two fill
+/// targets (one matching the config-default utilization floor), and
+/// size+deadline with a tight bound.
+fn policies() -> Vec<CoalescePolicy> {
+    vec![
+        CoalescePolicy::Off,
+        CoalescePolicy::Size { max_batch: 7 },
+        CoalescePolicy::Size {
+            max_batch: tile_fill_target(0.3),
+        },
+        CoalescePolicy::SizeDeadline {
+            max_batch: 16,
+            deadline_ticks: 5,
+        },
+    ]
+}
+
+/// The trace grid: Poisson at two intensities, an all-at-once burst,
+/// and a sparse trickle (deadline/drain heavy).
+fn traces(n: usize) -> Vec<(&'static str, ArrivalTrace)> {
+    let mut rng = Rng::new(0x7ace);
+    vec![
+        ("poisson-1", ArrivalTrace::poisson_from_rng(&mut rng, n, 1.0)),
+        ("poisson-7", ArrivalTrace::poisson_from_rng(&mut rng, n, 7.0)),
+        ("burst", ArrivalTrace::uniform(n, 0)),
+        ("trickle", ArrivalTrace::uniform(n, 50)),
+    ]
+}
+
+fn assert_matches_oracle(
+    served: &ServeTraceOutcome,
+    oracle_pairs: &[(f32, f32)],
+    oracle_matched: &[Option<u32>],
+    oracle_ops: &OpCounts,
+    tag: &str,
+) {
+    assert_eq!(served.pairs, oracle_pairs, "{tag}: pairs diverged");
+    assert_eq!(served.matched, oracle_matched, "{tag}: matches diverged");
+    assert_eq!(&served.ops, oracle_ops, "{tag}: marginal ops diverged");
+    // The per-field fold sanity: outcome concatenation == fan-back.
+    let concat: Vec<(f32, f32)> = served
+        .outcomes
+        .iter()
+        .flat_map(|o| o.pairs.iter().copied())
+        .collect();
+    assert_eq!(concat, served.pairs, "{tag}: fan-back is not FIFO");
+    assert_eq!(served.stats.requests as usize, served.pairs.len(), "{tag}");
+    assert_eq!(served.stats.batches as usize, served.outcomes.len(), "{tag}");
+}
+
+#[test]
+fn every_policy_and_trace_matches_the_arrival_order_oracle() {
+    let ds = SearchDataset::generate("fd", 31, 60, 48, 0.8, 0.2, 0, 0);
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+    for be in [BackendDispatcher::reference(), BackendDispatcher::parallel(4)] {
+        let mut engine = SearchEngine::program(cfg(), &ds, &be).unwrap();
+        let oracle = engine.search_batch(&queries, &be).unwrap();
+        for (tname, trace) in traces(queries.len()) {
+            for policy in policies() {
+                let tag = format!("{}/{tname}/{}", be.primary_name(), policy.name());
+                let fd = FrontDoor::new(policy);
+                let served = fd.serve_trace(&mut engine, &queries, &trace, &be).unwrap();
+                assert_matches_oracle(
+                    &served,
+                    &oracle.pairs,
+                    &oracle.matched,
+                    &oracle.ops,
+                    &tag,
+                );
+                if policy == CoalescePolicy::Off {
+                    // Naive serving really is one batch per request.
+                    assert_eq!(served.outcomes.len(), queries.len(), "{tag}");
+                    assert_eq!(served.stats.max_queue_depth, 1, "{tag}");
+                }
+            }
+        }
+    }
+}
+
+/// 36 banks at D=2048 n=3 (6 segments) = 6 bank groups x 128 = 768 slots.
+const UNION_BANKS: usize = 36;
+
+#[test]
+fn sharded_front_door_matches_the_monolithic_oracle() {
+    let ds = SearchDataset::generate("fd", 37, 120, 40, 0.8, 0.2, 0, 0);
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let be = BackendDispatcher::reference();
+
+    // Monolithic oracle over the union pool, one arrival-order batch.
+    let mono_cfg = SpecPcmConfig {
+        num_banks: UNION_BANKS,
+        ..cfg()
+    };
+    let mono = ShardedSearchEngine::program(mono_cfg, &ds, &be, 1).unwrap();
+    let oracle = mono.search_batch(&queries, &be).unwrap();
+
+    for shards in [1usize, 2, 3] {
+        let shard_cfg = SpecPcmConfig {
+            num_banks: UNION_BANKS / shards,
+            ..cfg()
+        };
+        let mut engine = ShardedSearchEngine::program(shard_cfg, &ds, &be, shards).unwrap();
+        assert_eq!(engine.n_shards(), shards);
+        for (tname, trace) in traces(queries.len()) {
+            for policy in policies() {
+                let tag = format!("{shards}-shard/{tname}/{}", policy.name());
+                let fd = FrontDoor::new(policy);
+                let served = fd.serve_trace(&mut engine, &queries, &trace, &be).unwrap();
+                assert_matches_oracle(
+                    &served,
+                    &oracle.pairs,
+                    &oracle.matched,
+                    &oracle.ops,
+                    &tag,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn refresh_in_gaps_is_result_neutral_on_a_fresh_engine() {
+    // At age 0 every candidate fails `age > max_age`, so maintain selects
+    // nothing — but the code path runs in every idle gap, and serving
+    // stays bit-identical to a front door with no refresh policy at all.
+    let ds = SearchDataset::generate("fd", 41, 60, 32, 0.8, 0.2, 0, 0);
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let be = BackendDispatcher::reference();
+    let mut engine = SearchEngine::program(cfg(), &ds, &be).unwrap();
+    let oracle = engine.search_batch(&queries, &be).unwrap();
+
+    let trace = ArrivalTrace::uniform(queries.len(), 50); // gap-heavy
+    let policy = CoalescePolicy::SizeDeadline {
+        max_batch: 8,
+        deadline_ticks: 5,
+    };
+    let plain = FrontDoor::new(policy)
+        .serve_trace(&mut engine, &queries, &trace, &be)
+        .unwrap();
+    let refreshing = FrontDoor::new(policy)
+        .with_refresh(RefreshPolicy {
+            max_age_seconds: 1.0,
+            budget: 2,
+        })
+        .serve_trace(&mut engine, &queries, &trace, &be)
+        .unwrap();
+
+    assert_matches_oracle(&plain, &oracle.pairs, &oracle.matched, &oracle.ops, "plain");
+    assert_matches_oracle(
+        &refreshing,
+        &oracle.pairs,
+        &oracle.matched,
+        &oracle.ops,
+        "refreshing",
+    );
+    // The gaps really ran maintain — it just had nothing stale to pick.
+    assert!(refreshing.stats.maintain_calls > 0, "no idle gaps exercised");
+    assert_eq!(refreshing.stats.refreshed_rows, 0);
+    assert_eq!(plain.stats.maintain_calls, 0);
+}
+
+#[test]
+fn refresh_in_gaps_reprograms_an_aged_engine_without_touching_batch_ops() {
+    // On an aged engine the in-gap maintain increments genuinely
+    // re-program rows (one-time ledger), while cumulative marginal batch
+    // ops still match the aged oracle bit for bit — marginal work is a
+    // function of the workload, not of device state or refresh activity.
+    let ds = SearchDataset::generate("fd", 43, 60, 32, 0.8, 0.2, 0, 0);
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let be = BackendDispatcher::reference();
+
+    let mut oracle_engine = SearchEngine::program(cfg(), &ds, &be).unwrap();
+    oracle_engine.advance_age(1.0e9);
+    let oracle = oracle_engine.search_batch(&queries, &be).unwrap();
+
+    let mut engine = SearchEngine::program(cfg(), &ds, &be).unwrap();
+    engine.advance_age(1.0e9);
+    let rounds_before = engine.program_ops().program_rounds;
+
+    let trace = ArrivalTrace::uniform(queries.len(), 50);
+    let served = FrontDoor::new(CoalescePolicy::SizeDeadline {
+        max_batch: 8,
+        deadline_ticks: 5,
+    })
+    .with_refresh(RefreshPolicy {
+        max_age_seconds: 1.0,
+        budget: 2,
+    })
+    .serve_trace(&mut engine, &queries, &trace, &be)
+    .unwrap();
+
+    // Marginal ops are oracle-identical even though rows re-programmed
+    // mid-trace (scores legitimately differ once refresh heals drift —
+    // that is the point of refreshing).
+    assert_eq!(served.ops, oracle.ops, "refresh leaked into marginal ops");
+    assert!(served.stats.maintain_calls > 0);
+    assert!(served.stats.refreshed_rows > 0, "aged rows never refreshed");
+    assert!(
+        engine.program_ops().program_rounds > rounds_before,
+        "refresh work missing from the one-time ledger"
+    );
+    for out in &served.outcomes {
+        assert_eq!(out.ops.program_rounds, 0, "programming charged to a batch");
+    }
+    // Later batches saw healed rows: refresh telemetry reached serving.
+    assert!(served.outcomes.last().unwrap().health.refreshes > 0);
+}
+
+#[test]
+fn bounded_queue_backpressure_preserves_results() {
+    // A queue bound below the fill target forces partial-tile
+    // backpressure flushes on a burst — results still match the oracle.
+    let ds = SearchDataset::generate("fd", 47, 60, 40, 0.8, 0.2, 0, 0);
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let be = BackendDispatcher::reference();
+    let mut engine = SearchEngine::program(cfg(), &ds, &be).unwrap();
+    let oracle = engine.search_batch(&queries, &be).unwrap();
+
+    let trace = ArrivalTrace::uniform(queries.len(), 0);
+    let served = FrontDoor::new(CoalescePolicy::Size { max_batch: 64 })
+        .with_capacity(6)
+        .serve_trace(&mut engine, &queries, &trace, &be)
+        .unwrap();
+
+    assert_matches_oracle(&served, &oracle.pairs, &oracle.matched, &oracle.ops, "bp");
+    assert!(served.stats.backpressure_flushes > 0, "bound never hit");
+    assert!(served.stats.max_queue_depth <= 6);
+    // 40 requests through a 6-slot queue: 6 backpressure flushes of 6
+    // plus the final drain of 4.
+    assert_eq!(served.stats.batches, 7);
+    assert_eq!(served.stats.drain_flushes, 1);
+}
+
+#[test]
+fn telemetry_reflects_the_schedule_not_just_the_results() {
+    // Deadline policy under a trickle: every flush is deadline-fired,
+    // wait percentiles equal the deadline, fill fraction is 1/max_batch.
+    let ds = SearchDataset::generate("fd", 53, 60, 16, 0.8, 0.2, 0, 0);
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let be = BackendDispatcher::reference();
+    let mut engine = SearchEngine::program(cfg(), &ds, &be).unwrap();
+
+    let trace = ArrivalTrace::uniform(queries.len(), 100);
+    let served = FrontDoor::new(CoalescePolicy::SizeDeadline {
+        max_batch: 8,
+        deadline_ticks: 10,
+    })
+    .serve_trace(&mut engine, &queries, &trace, &be)
+    .unwrap();
+
+    // Interarrival (100) >> deadline (10): every request waits exactly
+    // the deadline, alone in its batch.
+    assert_eq!(served.stats.batches as usize, queries.len());
+    assert_eq!(
+        served.stats.deadline_flushes + served.stats.drain_flushes,
+        served.stats.batches
+    );
+    assert_eq!(served.stats.size_flushes, 0);
+    assert_eq!(served.stats.p50_wait_ticks, 10);
+    assert_eq!(served.stats.p99_wait_ticks, 10);
+    assert_eq!(served.stats.max_wait_ticks, 10);
+    assert!((served.stats.mean_fill_fraction - 1.0 / 8.0).abs() < 1e-12);
+
+    // Size policy on a burst: one full flush per fill target, zero wait.
+    let trace = ArrivalTrace::uniform(queries.len(), 0);
+    let served = FrontDoor::new(CoalescePolicy::Size { max_batch: 8 })
+        .serve_trace(&mut engine, &queries, &trace, &be)
+        .unwrap();
+    assert_eq!(served.stats.batches, 2);
+    assert_eq!(served.stats.size_flushes, 2);
+    assert_eq!(served.stats.max_wait_ticks, 0);
+    assert!((served.stats.mean_fill_fraction - 1.0).abs() < 1e-12);
+}
