@@ -5,7 +5,9 @@ the `BENCH_drift.json` shape (accuracy fields compared absolutely,
 records keyed by (section, threads, age_seconds, refresh)), and the
 `BENCH_frontdoor.json` shape (records additionally keyed by coalescing
 `policy`, `qps_served` throughput, and inverted-direction latency
-percentile fields in logical ticks). stdlib + pytest only.
+percentile fields in logical ticks), and the `BENCH_remote.json` shape
+(records additionally keyed by `workers` count and `chaos` mode, with
+`workers` 0 rows as the in-process baseline). stdlib + pytest only.
 """
 
 import importlib.util
@@ -320,4 +322,68 @@ def test_latency_tolerance_bounds_enforced(tmp_path):
 
 def test_committed_frontdoor_baseline_self_compares_clean():
     baseline = os.path.join(REPO_ROOT, "BENCH_frontdoor.json")
+    assert bc.main([baseline, baseline]) == 0
+
+
+# ---- BENCH_remote.json shape: (workers, chaos) keys -------------------------
+
+
+def remote_record(workers, chaos, qps, tiny=False):
+    return {
+        "section": "serving_remote",
+        "workers": workers,
+        "chaos": chaos,
+        "requests": 96,
+        "qps_served": qps,
+        "retries": 0,
+        "respawns": 0,
+        "worst_coverage": 1.0,
+        "tiny": tiny,
+    }
+
+
+def test_remote_records_matched_by_workers_and_chaos(tmp_path, capsys):
+    # The same section under different worker counts / chaos modes are
+    # distinct measurements; dropping one of them must fail.
+    base = [
+        remote_record(0, "in-process-x2", 400.0),
+        remote_record(2, "none", 300.0),
+        remote_record(2, "kill", 250.0),
+        remote_record(2, "degrade", 350.0),
+        remote_record(4, "none", 280.0),
+    ]
+    curr = [r for r in base if not (r["workers"] == 2 and r["chaos"] == "kill")]
+    assert compare(tmp_path, base, base) == 0
+    assert compare(tmp_path, base, curr) == 1
+    err = capsys.readouterr().err
+    assert "workers=2" in err and "chaos=kill" in err
+
+
+def test_remote_qps_regression_fails(tmp_path, capsys):
+    base = [remote_record(2, "none", 300.0)]
+    curr = [remote_record(2, "none", 200.0)]  # -33% < default 15% budget
+    assert compare(tmp_path, base, curr) == 1
+    assert "qps_served" in capsys.readouterr().err
+
+
+def test_remote_workers_zero_is_a_distinct_baseline_row(tmp_path):
+    # workers=0 (in-process) and workers=2 (remote) must never collide
+    # into one key even when their chaos tags were equal.
+    base = [remote_record(0, "none", 400.0), remote_record(2, "none", 300.0)]
+    curr = [remote_record(0, "none", 400.0), remote_record(2, "none", 290.0)]
+    assert compare(tmp_path, base, curr) == 0
+    curr = [remote_record(0, "none", 400.0)]
+    assert compare(tmp_path, base, curr) == 1
+
+
+def test_remote_sentinel_baseline_skipped_not_failed(tmp_path, capsys):
+    base = [remote_record(2, "degrade", 0.0)]
+    curr = [remote_record(2, "degrade", 123.0)]
+    assert compare(tmp_path, base, curr) == 0
+    out = capsys.readouterr().out
+    assert "skip" in out and "sentinel" in out
+
+
+def test_committed_remote_baseline_self_compares_clean():
+    baseline = os.path.join(REPO_ROOT, "BENCH_remote.json")
     assert bc.main([baseline, baseline]) == 0

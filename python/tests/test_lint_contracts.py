@@ -450,6 +450,139 @@ def test_c5_unsafe_in_comments_ignored(tmp_path):
 
 
 # -------------------------------------------------------------------------
+# C6-TIME
+# -------------------------------------------------------------------------
+
+VIOLATING_TIME = """\
+use std::time::{Duration, SystemTime};
+
+pub fn age(epoch: SystemTime) -> u64 {
+    let now = Instant::now();
+    now.elapsed().as_secs()
+}
+"""
+
+CONFORMING_TICKS = """\
+pub fn deadline_passed(clock: u64, start: u64, deadline_ticks: u64) -> bool {
+    clock.saturating_sub(start) > deadline_ticks
+}
+"""
+
+
+def test_c6_fires_on_std_time_instant_and_systemtime(tmp_path):
+    root = write_tree(tmp_path, {"coordinator/remote/timey.rs": VIOLATING_TIME})
+    hits = rule_hits(lint.lint_tree(root), "C6-TIME")
+    # line 1: std::time import; line 3: SystemTime in a signature;
+    # line 4: Instant::now().
+    assert [h.line for h in hits] == [1, 3, 4]
+    assert all("logical" in h.message for h in hits)
+
+
+def test_c6_logical_tick_code_passes(tmp_path):
+    root = write_tree(tmp_path, {"coordinator/remote/ticks.rs": CONFORMING_TICKS})
+    assert rule_hits(lint.lint_tree(root), "C6-TIME") == []
+
+
+def test_c6_applies_to_every_src_dir(tmp_path):
+    # Unlike C1/C4 there is no scoped dir list — wall time is banned
+    # crate-wide in non-test code, including util/ and telemetry/.
+    text = "pub fn t() -> std::time::Instant { std::time::Instant::now() }\n"
+    root = write_tree(tmp_path, {"util/clock.rs": text})
+    assert len(rule_hits(lint.lint_tree(root), "C6-TIME")) == 1
+
+
+def test_c6_test_code_may_use_wall_time(tmp_path):
+    text = """\
+pub fn f() -> u64 { 3 }
+#[cfg(test)]
+mod tests {
+    use std::time::Instant;
+    #[test]
+    fn perf_probe() {
+        let t0 = Instant::now();
+        assert!(super::f() == 3);
+        let _ = t0.elapsed();
+    }
+}
+"""
+    root = write_tree(tmp_path, {"coordinator/ok.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C6-TIME") == []
+
+
+def test_c6_marker_allows_with_reason(tmp_path):
+    text = VIOLATING_TIME.replace(
+        "    let now = Instant::now();",
+        "    // lint: time-ok (host-side telemetry only, never drives scheduling)\n"
+        "    let now = Instant::now();",
+    ).replace(
+        "use std::time::{Duration, SystemTime};",
+        "// lint: time-ok (host-side telemetry only, never drives scheduling)\n"
+        "use std::time::{Duration, SystemTime};",
+    ).replace(
+        "pub fn age(epoch: SystemTime) -> u64 {",
+        "// lint: time-ok (host-side telemetry only, never drives scheduling)\n"
+        "pub fn age(epoch: SystemTime) -> u64 {",
+    )
+    root = write_tree(tmp_path, {"coordinator/remote/timey.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C6-TIME") == []
+
+
+def test_c6_marker_without_reason_is_a_finding(tmp_path):
+    text = "let _ = Instant::now(); // lint: time-ok ()\n"
+    root = write_tree(tmp_path, {"telemetry/t.rs": "pub fn f() {\n    " + text + "}\n"})
+    hits = rule_hits(lint.lint_tree(root), "C6-TIME")
+    assert len(hits) == 2
+    assert any("non-empty reason" in h.message for h in hits)
+
+
+# -------------------------------------------------------------------------
+# Scanner scope tracking
+# -------------------------------------------------------------------------
+
+def test_return_position_impl_trait_does_not_break_blessed_sites(tmp_path):
+    # Regression: `-> impl Iterator<...>` used to push a phantom
+    # `impl Iterator` scope that swallowed the next brace, so a blessed
+    # `GroupCharges::charge` following such a method lost its (impl, fn)
+    # attribution and C2 fired on the central charging site itself.
+    text = """\
+use crate::energy::OpCounts;
+
+pub struct GroupCharges;
+
+impl GroupCharges {
+    pub fn entries(&self) -> impl Iterator<Item = u32> {
+        [1u32].into_iter()
+    }
+
+    pub fn charge(&self, ops: &mut OpCounts, n: u64) {
+        for _ in 0..n {
+            ops.mvm_ops += 1;
+            ops.merge_elements += 1;
+        }
+    }
+}
+"""
+    root = write_tree(tmp_path, {"coordinator/gc.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C2-CHARGE") == []
+
+
+def test_argument_position_impl_trait_does_not_shadow_scopes(tmp_path):
+    text = """\
+use crate::energy::OpCounts;
+
+pub struct GroupCharges;
+
+impl GroupCharges {
+    pub fn charge(&self, sink: impl FnMut(u64), ops: &mut OpCounts) {
+        ops.mvm_ops += 1;
+    }
+}
+"""
+    root = write_tree(tmp_path, {"coordinator/gc2.rs": text})
+    assert rule_hits(lint.lint_tree(root), "C2-CHARGE") == []
+
+
+# -------------------------------------------------------------------------
 # Marker hygiene, CLI surface, self-check
 # -------------------------------------------------------------------------
 

@@ -7,17 +7,20 @@ Usage:
         [--latency-tolerance 0.25]
 
 Both inputs are `BENCH_serving.json` / `BENCH_drift.json` /
-`BENCH_frontdoor.json`-shaped files: a flat JSON array of records, each
-carrying a `section` ("batch_scoring", "single_query",
-"engine_search_batch", "drift_serving", "serving_frontdoor", ...), a
+`BENCH_frontdoor.json` / `BENCH_remote.json`-shaped files: a flat JSON
+array of records, each carrying a `section` ("batch_scoring",
+"single_query", "engine_search_batch", "drift_serving",
+"serving_frontdoor", "serving_remote", ...), a
 `threads` count, and one or more queries-per-second fields
 (`qps_gathered`, `qps_segmented`, `qps_served`), accuracy fields
 (`accuracy`), and/or queue-latency fields (`p50_wait_ticks`,
 `p99_wait_ticks`). Records are matched across files by
-`(section, threads, age_seconds, refresh, policy)` — fields absent from a
-record are None in its key, so old-shape files keep their
-`(section, threads)` identity and front-door records add their coalescing
-`policy`. For every qps field present in both, the tool reports the
+`(section, threads, age_seconds, refresh, policy, workers, chaos)` —
+fields absent from a record are None in its key, so old-shape files keep
+their `(section, threads)` identity, front-door records add their
+coalescing `policy`, and remote-worker records add their `workers` count
+and `chaos` mode (`none` / `kill` / `degrade`; `workers` 0 rows are the
+in-process baseline). For every qps field present in both, the tool reports the
 current/baseline ratio and **exits 1** if any measurement dropped by more
 than `--max-regression` (default 15%). Accuracy fields are compared
 *absolutely* (they are deterministic fractions, not noisy wall-clock
@@ -73,11 +76,13 @@ def record_key(rec):
         rec.get("age_seconds"),
         rec.get("refresh"),
         rec.get("policy"),
+        rec.get("workers"),
+        rec.get("chaos"),
     )
 
 
 def key_tag(key):
-    section, threads, age, refresh, policy = key
+    section, threads, age, refresh, policy, workers, chaos = key
     tag = f"{section} x{threads}"
     if age is not None:
         tag += f" age={age:g}s"
@@ -85,6 +90,10 @@ def key_tag(key):
         tag += f" refresh={'on' if refresh else 'off'}"
     if policy is not None:
         tag += f" policy={policy}"
+    if workers is not None:
+        tag += f" workers={workers}"
+    if chaos is not None:
+        tag += f" chaos={chaos}"
     return tag
 
 
@@ -148,13 +157,15 @@ def main(argv=None):
     curr = load_records(args.current)
 
     def sort_key(k):
-        section, threads, age, refresh, policy = k
+        section, threads, age, refresh, policy, workers, chaos = k
         return (
             section,
             threads if threads is not None else -1,
             age if age is not None else -1.0,
             refresh if refresh is not None else False,
             policy if policy is not None else "",
+            workers if workers is not None else -1,
+            chaos if chaos is not None else "",
         )
 
     failures = []

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Static contract linter for `rust/src/**` — the five standing invariants.
+"""Static contract linter for `rust/src/**` — the six standing invariants.
 
 Usage:
     python3 python/tools/lint_contracts.py [--root DIR]
@@ -20,6 +20,7 @@ tracked) with one small rule per contract:
   C3-SYNC      RefCell/Rc in Sync engine code; bare `Mutex::lock()`
   C4-RNG       noise-RNG construction outside `ProgramContext`
   C5-UNSAFE    `unsafe` without a `// SAFETY:` comment
+  C6-TIME      `std::time` (Instant/SystemTime) in non-test src code
 
 Every rule supports a per-line allowlist marker, placed on the offending
 line or the line directly above it:
@@ -228,6 +229,38 @@ Dynamic backing: the allowed-to-fail nightly Miri CI step over the
 `array`/`hd` kernel unit tests, which would catch UB dynamically if
 unsafe code ever lands.""",
     ),
+    "C6-TIME": Rule(
+        "C6-TIME",
+        "time",
+        "logical-clock discipline (no wall time in src)",
+        """\
+Invariant: serving *behavior* — front-door flush deadlines, drift aging,
+refresh scheduling, the remote supervisor's request deadlines, retry
+backoff and circuit breakers — runs on the deterministic logical clock
+(`SearchEngine::advance_age`, `ArrivalTrace` ticks, the supervisor's
+attempt clock), never on wall time. That is what makes every serving
+trace and every injected fault schedule (`ChaosPlan`, the wire-level
+mirror of `device::FaultModel`) replay tick-for-tick: the fault-tolerance
+and scheduler equivalence suites re-run byte-identical scenarios and
+assert bit-identical results, which a single `Instant::now()` on a
+decision path silently destroys. Wall time is host-side *telemetry*
+only: `StageTimer` reports how long the host took, it never feeds back
+into what gets computed.
+
+Flagged shape: `std::time` / `Instant` / `SystemTime` anywhere in
+`rust/src` non-test code. Benches (`rust/benches/`) are out of scope —
+measuring host wall time is their job.
+
+Blessed: `#[cfg(test)]` code and lines carrying
+`// lint: time-ok (<reason>)` — today exactly the `StageTimer`
+wall-clock capture sites in `telemetry/`, which are telemetry by
+definition and never influence scores, op counts, or scheduling.
+
+Dynamic backing: the zero-wall-clock seeded chaos schedules in
+`rust/tests/worker_fault_tolerance.rs` (kill/hang/corrupt at logical
+ticks, exact final clock values asserted) and the trace replay
+determinism asserts in `rust/tests/scheduler_equivalence.rs`.""",
+    ),
 }
 
 TAG_TO_RULE = {r.tag: r.rule_id for r in RULES.values()}
@@ -306,7 +339,12 @@ class LineInfo:
 
 
 FN_RE = re.compile(r"\bfn\s+([A-Za-z_]\w*)")
-IMPL_RE = re.compile(r"\bimpl\b(?:\s*<[^>]*>)?\s+(?:([\w:]+)\s+for\s+)?([\w:]+)")
+# Anchored at line start (modulo indentation / `unsafe`): `impl` in return
+# position (`-> impl Iterator<...>`) or argument position (`x: impl Trait`)
+# is a type, not a block opener, and must not push a phantom impl scope —
+# that would mis-attribute every later brace in the file and break the
+# (impl, fn) blessing of the central charging sites.
+IMPL_RE = re.compile(r"^\s*(?:unsafe\s+)?impl\b(?:\s*<[^>]*>)?\s+(?:([\w:]+)\s+for\s+)?([\w:]+)")
 TEST_ATTR_RE = re.compile(r"#\s*\[\s*(?:cfg\s*\(\s*test\s*\)|test\b)")
 
 
@@ -329,7 +367,7 @@ def scan_file(text):
         m = FN_RE.search(code)
         if m:
             pending_fn = m.group(1)
-        m = IMPL_RE.search(code)
+        m = IMPL_RE.match(code)
         if m:
             target = m.group(2)
             pending_impl = target.rsplit("::", 1)[-1].split("<", 1)[0]
@@ -635,7 +673,30 @@ def rule_markers(relpath, records, findings):
                 )
 
 
-RULE_FNS = (rule_c1, rule_c2, rule_c3, rule_c4, rule_c5, rule_markers)
+TIME_RE = re.compile(r"\bstd\s*::\s*time\b|\bInstant\b|\bSystemTime\b")
+
+
+def rule_c6(relpath, records, findings):
+    prev = None
+    for rec in records:
+        skip = rec.in_test or allowed(rec, prev, "time")
+        if not skip and TIME_RE.search(rec.code):
+            findings.append(
+                Finding(
+                    relpath,
+                    rec.lineno,
+                    "C6-TIME",
+                    "wall-clock time in src — serving behavior (deadlines, "
+                    "backoff, refresh, drift) runs on the deterministic logical "
+                    "clock so traces and fault schedules replay tick-for-tick; "
+                    "move the measurement to a bench or annotate "
+                    "`// lint: time-ok (<reason>)` if it is pure host telemetry",
+                )
+            )
+        prev = rec
+
+
+RULE_FNS = (rule_c1, rule_c2, rule_c3, rule_c4, rule_c5, rule_c6, rule_markers)
 
 
 # --------------------------------------------------------------------------
@@ -715,7 +776,7 @@ def main(argv=None):
             file=sys.stderr,
         )
         return 1
-    print("contract lint clean: all five contracts hold")
+    print("contract lint clean: all six contracts hold")
     return 0
 
 

@@ -1,0 +1,260 @@
+//! Remote-worker serving benchmark (the closed-loop instrument for
+//! `coordinator::remote`): queries/sec of serving chunked query batches
+//! through supervised per-shard **worker processes**, against the
+//! in-process sharded engine as the zero-overhead baseline
+//! (`workers = 0` records), sweeping worker count and injected chaos —
+//! **none** (the pure wire/process-boundary overhead), **kill** (a
+//! seeded worker kill that the retry/respawn machinery must absorb;
+//! results are asserted bit-identical to in-process serving before the
+//! time means anything), and **degrade** (retry budget zero, so the
+//! killed shard degrades coverage instead of recovering — the reported
+//! worst-batch coverage must drop below 1.0, proving degradation is
+//! visible, never silent).
+//!
+//! Writes the machine-readable `BENCH_remote.json` next to the text
+//! table (`python/tools/bench_compare.py` diffs two such files, keyed by
+//! section/workers/chaos).
+//!
+//! `--tiny` runs a seconds-scale smoke configuration (CI's default
+//! step; CI greps the DEGRADED line as its chaos smoke check).
+
+use std::time::Instant;
+
+use specpcm::backend::BackendDispatcher;
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::{
+    BatchOutcome, ChaosEvent, ChaosKind, ChaosPlan, RemoteEngine, ShardedSearchEngine,
+};
+use specpcm::ms::{SearchDataset, Spectrum};
+use specpcm::telemetry::{render_json_records, render_table, JsonField};
+
+/// The serving binary whose hidden `worker` subcommand the supervisor
+/// spawns (cargo sets this for bench builds exactly like test builds).
+const EXE: &str = env!("CARGO_BIN_EXE_specpcm");
+
+struct Scale {
+    targets: usize,
+    queries: usize,
+    reps: usize,
+    worker_counts: &'static [usize],
+}
+
+/// One chaos mode of the sweep.
+struct Mode {
+    name: &'static str,
+    /// Retry budget override (None = config default of 3).
+    retries: Option<u32>,
+    kill_shard: Option<usize>,
+}
+
+fn modes() -> Vec<Mode> {
+    vec![
+        Mode {
+            name: "none",
+            retries: None,
+            kill_shard: None,
+        },
+        Mode {
+            name: "kill",
+            retries: None,
+            kill_shard: Some(0),
+        },
+        Mode {
+            name: "degrade",
+            retries: Some(0),
+            kill_shard: Some(1),
+        },
+    ]
+}
+
+fn chaos_for(mode: &Mode) -> ChaosPlan {
+    match mode.kill_shard {
+        Some(shard) => ChaosPlan::new(vec![ChaosEvent {
+            // Fires at the victim's first score attempt.
+            tick: 1,
+            shard,
+            kind: ChaosKind::Kill,
+        }]),
+        None => ChaosPlan::none(),
+    }
+}
+
+fn worst_coverage(batches: &[BatchOutcome]) -> f64 {
+    batches
+        .iter()
+        .map(|b| b.coverage.fraction())
+        .fold(1.0f64, f64::min)
+}
+
+fn main() {
+    let tiny = std::env::args().any(|a| a == "--tiny");
+    let scale = if tiny {
+        // Same worker-count cells as the full run (the compare tool
+        // hard-fails on baseline keys missing from the current file, and
+        // a small CI runner only ever produces the tiny file) — only the
+        // workload shrinks.
+        Scale {
+            targets: 40,
+            queries: 24,
+            reps: 2,
+            worker_counts: &[2, 4],
+        }
+    } else {
+        Scale {
+            targets: 300,
+            queries: 96,
+            reps: 3,
+            worker_counts: &[2, 4],
+        }
+    };
+    let n_batches = 4usize;
+    println!(
+        "remote-worker serving bench{}\n",
+        if tiny { " (tiny smoke scale)" } else { "" }
+    );
+
+    let cfg = SpecPcmConfig {
+        hd_dim: 2048,
+        bucket_width: 5.0,
+        num_banks: 64,
+        ..SpecPcmConfig::paper_search()
+    };
+    let ds = SearchDataset::generate(
+        "remote",
+        91,
+        scale.targets,
+        scale.queries,
+        0.8,
+        0.2,
+        0,
+        0,
+    );
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let be = BackendDispatcher::from_config(&cfg);
+
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    for &workers in scale.worker_counts {
+        // In-process sharded serving at the same shard count: the
+        // zero-process-boundary baseline (workers = 0 in the JSON key)
+        // and the bit-identity oracle for the recovered chaos modes.
+        let sharded = ShardedSearchEngine::program(cfg.clone(), &ds, &be, workers).unwrap();
+        let oracle = sharded.serve_chunked(&queries, n_batches, &be).unwrap();
+        let mut in_process_times: Vec<f64> = (0..=scale.reps)
+            .map(|_| {
+                let t0 = Instant::now();
+                std::hint::black_box(sharded.serve_chunked(&queries, n_batches, &be).unwrap());
+                t0.elapsed().as_secs_f64()
+            })
+            .collect();
+        in_process_times.remove(0); // warmup
+        in_process_times.sort_by(f64::total_cmp);
+        let qps_in_process =
+            queries.len() as f64 / in_process_times[in_process_times.len() / 2];
+        rows.push(vec![
+            format!("in-process x{workers}"),
+            format!("{qps_in_process:.1}"),
+            "0".into(),
+            "0".into(),
+            "100%".into(),
+        ]);
+        records.push(vec![
+            ("section", JsonField::S("serving_remote".into())),
+            ("workers", JsonField::U(0)),
+            ("chaos", JsonField::S(format!("in-process-x{workers}"))),
+            ("requests", JsonField::U(queries.len() as u64)),
+            ("qps_served", JsonField::F(qps_in_process)),
+            ("retries", JsonField::U(0)),
+            ("respawns", JsonField::U(0)),
+            ("worst_coverage", JsonField::F(1.0)),
+            ("tiny", JsonField::B(tiny)),
+        ]);
+
+        for mode in modes() {
+            let mut c = cfg.clone();
+            if let Some(r) = mode.retries {
+                c.remote.retries = r;
+                c.remote.breaker_threshold = 1;
+            }
+            // Chaos plans are consumed as their events fire, so every rep
+            // programs a fresh supervisor (spawn/program cost is outside
+            // the timed serving window).
+            let mut times = Vec::with_capacity(scale.reps);
+            let mut last = None;
+            for rep in 0..=scale.reps {
+                let engine =
+                    RemoteEngine::program(c.clone(), &ds, workers, EXE, chaos_for(&mode))
+                        .unwrap();
+                let t0 = Instant::now();
+                let out = engine.serve_chunked(&queries, n_batches, &be).unwrap();
+                let dt = t0.elapsed().as_secs_f64();
+                if rep > 0 {
+                    times.push(dt); // rep 0 is warmup
+                }
+                last = Some((engine.worker_stats(), out));
+            }
+            let (stats, out) = last.unwrap();
+            times.sort_by(f64::total_cmp);
+            let qps = queries.len() as f64 / times[times.len() / 2];
+            let coverage = worst_coverage(&out);
+
+            if mode.name == "degrade" {
+                // The whole point of the mode: degradation must be
+                // *reported*, not silently absorbed into full results.
+                assert!(
+                    coverage < 1.0,
+                    "degrade mode served full coverage — chaos never fired?"
+                );
+                assert!(stats.degraded_batches > 0);
+                println!(
+                    "chaos smoke: DEGRADED coverage reported, worst batch {:.1}% \
+                     ({} degraded batches, breaker open on the dead shard)",
+                    coverage * 100.0,
+                    stats.degraded_batches
+                );
+            } else {
+                // Recovered modes are bit-identical to in-process serving.
+                assert_eq!(out.len(), oracle.len());
+                for (r, s) in out.iter().zip(&oracle) {
+                    assert_eq!(r.pairs, s.pairs, "{}: pairs diverged", mode.name);
+                    assert_eq!(r.matched, s.matched, "{}: matches diverged", mode.name);
+                    assert_eq!(r.ops, s.ops, "{}: marginal ops diverged", mode.name);
+                    assert!(r.coverage.is_full(), "{}: coverage dropped", mode.name);
+                }
+            }
+
+            rows.push(vec![
+                format!("{} x{workers}", mode.name),
+                format!("{qps:.1}"),
+                format!("{}", stats.retries),
+                format!("{}", stats.respawns),
+                format!("{:.0}%", coverage * 100.0),
+            ]);
+            records.push(vec![
+                ("section", JsonField::S("serving_remote".into())),
+                ("workers", JsonField::U(workers as u64)),
+                ("chaos", JsonField::S(mode.name.into())),
+                ("requests", JsonField::U(queries.len() as u64)),
+                ("qps_served", JsonField::F(qps)),
+                ("retries", JsonField::U(stats.retries)),
+                ("respawns", JsonField::U(stats.respawns)),
+                ("worst_coverage", JsonField::F(coverage)),
+                ("tiny", JsonField::B(tiny)),
+            ]);
+        }
+    }
+
+    println!(
+        "{}",
+        render_table(
+            "remote-worker serving throughput (host wall clock)",
+            &["mode", "served q/s", "retries", "respawns", "worst coverage"],
+            &rows
+        )
+    );
+
+    let json = render_json_records(&records);
+    let json_path = "BENCH_remote.json";
+    std::fs::write(json_path, &json).expect("write BENCH_remote.json");
+    println!("wrote {json_path} ({} records)", records.len());
+}

@@ -88,6 +88,39 @@ impl Default for BackendConfig {
     }
 }
 
+/// `[remote]` section: the supervision policy of the multi-process shard
+/// serving layer (`coordinator::remote`). Every duration is in **logical
+/// ticks** on the supervisor's deterministic clock — the same discipline
+/// as `SearchEngine::advance_age`; wall time never enters (contract
+/// C6-TIME), so retry/timeout behavior replays bit-identically.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RemoteConfig {
+    /// Logical ticks a shard request may take before the supervisor
+    /// declares it timed out (must be >= 1).
+    pub deadline_ticks: u64,
+    /// Wire attempts retried per request after the first failure (0
+    /// disables retries: one failure degrades the shard immediately).
+    pub retries: u32,
+    /// Base of the exponential retry backoff: attempt `k` waits
+    /// `backoff_base_ticks << k` logical ticks (must be >= 1).
+    pub backoff_base_ticks: u64,
+    /// Consecutive failures that open a worker's circuit breaker (must be
+    /// >= 1); an open breaker skips the worker until a respawn probe
+    /// succeeds.
+    pub breaker_threshold: u32,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        RemoteConfig {
+            deadline_ticks: 1024,
+            retries: 3,
+            backoff_base_ticks: 8,
+            breaker_threshold: 4,
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct SpecPcmConfig {
     pub task: Task,
@@ -127,6 +160,8 @@ pub struct SpecPcmConfig {
     /// section; disabled in every preset so defaults reproduce the
     /// fault-free results byte-for-byte).
     pub fault: FaultModel,
+    /// Remote shard-worker supervision policy (`[remote]` section).
+    pub remote: RemoteConfig,
 }
 
 impl Default for SpecPcmConfig {
@@ -159,6 +194,7 @@ impl SpecPcmConfig {
             artifacts_dir: "artifacts".into(),
             backend: BackendConfig::default(),
             fault: FaultModel::disabled(),
+            remote: RemoteConfig::default(),
         }
     }
 
@@ -238,6 +274,16 @@ impl SpecPcmConfig {
                 "fault.stuck_g" => {
                     cfg.fault.stuck_g = val.as_f64().ok_or("fault.stuck_g")? as f32
                 }
+                "remote.deadline_ticks" => {
+                    cfg.remote.deadline_ticks = get_usize(val, key)? as u64
+                }
+                "remote.retries" => cfg.remote.retries = get_usize(val, key)? as u32,
+                "remote.backoff_base_ticks" => {
+                    cfg.remote.backoff_base_ticks = get_usize(val, key)? as u64
+                }
+                "remote.breaker_threshold" => {
+                    cfg.remote.breaker_threshold = get_usize(val, key)? as u32
+                }
                 other => return Err(format!("unknown config key '{other}'")),
             }
         }
@@ -274,6 +320,11 @@ impl SpecPcmConfig {
         s += &kv::fmt_num("stuck_at_rate", self.fault.stuck_at_rate);
         s += &kv::fmt_num("program_fail_rate", self.fault.program_fail_rate);
         s += &kv::fmt_num("stuck_g", self.fault.stuck_g);
+        s += &kv::fmt_section("remote");
+        s += &kv::fmt_num("deadline_ticks", self.remote.deadline_ticks);
+        s += &kv::fmt_num("retries", self.remote.retries);
+        s += &kv::fmt_num("backoff_base_ticks", self.remote.backoff_base_ticks);
+        s += &kv::fmt_num("breaker_threshold", self.remote.breaker_threshold);
         s
     }
 
@@ -317,6 +368,15 @@ impl SpecPcmConfig {
                 "fault rates sum to {} > 1",
                 self.fault.stuck_at_rate + self.fault.program_fail_rate
             ));
+        }
+        if self.remote.deadline_ticks == 0 {
+            return Err("remote.deadline_ticks must be >= 1".into());
+        }
+        if self.remote.backoff_base_ticks == 0 {
+            return Err("remote.backoff_base_ticks must be >= 1".into());
+        }
+        if self.remote.breaker_threshold == 0 {
+            return Err("remote.breaker_threshold must be >= 1".into());
         }
         Ok(())
     }
@@ -453,5 +513,40 @@ mod tests {
             "[fault]\nstuck_at_rate = 0.7\nprogram_fail_rate = 0.7\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn remote_section_roundtrip_defaults_and_validation() {
+        let d = SpecPcmConfig::paper_search();
+        assert_eq!(d.remote, RemoteConfig::default());
+        assert_eq!(d.remote.deadline_ticks, 1024);
+        assert_eq!(d.remote.retries, 3);
+        assert_eq!(d.remote.backoff_base_ticks, 8);
+        assert_eq!(d.remote.breaker_threshold, 4);
+
+        let c = SpecPcmConfig::from_toml(
+            "hd_dim = 1024\n[remote]\ndeadline_ticks = 64\nretries = 1\n\
+             backoff_base_ticks = 2\nbreaker_threshold = 1\n",
+        )
+        .unwrap();
+        assert_eq!(c.remote.deadline_ticks, 64);
+        assert_eq!(c.remote.retries, 1);
+        assert_eq!(c.remote.backoff_base_ticks, 2);
+        assert_eq!(c.remote.breaker_threshold, 1);
+
+        // Zero retries is a valid policy (fail fast, degrade immediately).
+        let c = SpecPcmConfig::from_toml("[remote]\nretries = 0\n").unwrap();
+        assert_eq!(c.remote.retries, 0);
+
+        // to_toml emits the section and parses back identically.
+        let back = SpecPcmConfig::from_toml(&c.to_toml()).unwrap();
+        assert_eq!(back.remote, c.remote);
+
+        // Zero/negative durations and thresholds are typed-out.
+        assert!(SpecPcmConfig::from_toml("[remote]\ndeadline_ticks = 0").is_err());
+        assert!(SpecPcmConfig::from_toml("[remote]\nbackoff_base_ticks = 0").is_err());
+        assert!(SpecPcmConfig::from_toml("[remote]\nbreaker_threshold = 0").is_err());
+        assert!(SpecPcmConfig::from_toml("[remote]\nretries = -1").is_err());
+        assert!(SpecPcmConfig::from_toml("[remote]\ndeadline_ticks = 1.5").is_err());
     }
 }

@@ -288,6 +288,50 @@ impl ProgramContext {
     }
 }
 
+/// How much of the programmed library a batch's results actually cover.
+///
+/// In-process engines always search every live row, so coverage is full;
+/// the remote supervisor ([`super::remote`]) degrades gracefully instead
+/// of failing a batch when a shard worker stays down past its retry
+/// budget, and tags the merged results with the surviving row fraction so
+/// partial answers are visible, never silent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Coverage {
+    /// Live reference rows whose scores contributed to the merge.
+    pub rows_searched: u64,
+    /// Live reference rows the engine has programmed in total.
+    pub rows_total: u64,
+}
+
+impl Coverage {
+    /// Full coverage over `rows_total` rows (the in-process case).
+    pub fn full(rows_total: u64) -> Coverage {
+        Coverage {
+            rows_searched: rows_total,
+            rows_total,
+        }
+    }
+
+    /// Searched fraction in [0, 1]; an empty library counts as full.
+    pub fn fraction(&self) -> f64 {
+        if self.rows_total == 0 {
+            1.0
+        } else {
+            self.rows_searched as f64 / self.rows_total as f64
+        }
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.rows_searched == self.rows_total
+    }
+}
+
+impl Default for Coverage {
+    fn default() -> Coverage {
+        Coverage::full(0)
+    }
+}
+
 /// Marginal result of serving one query batch against the programmed
 /// library. Ops/report cover *only* this batch's work (query encode, IMC
 /// scoring, top-1 merge) — the one-time library programming lives on the
@@ -308,6 +352,15 @@ pub struct BatchOutcome {
     /// Device staleness/health snapshot the batch was served under (see
     /// the module docs' "Drift, faults, and refresh epochs" section).
     pub health: DeviceHealth,
+    /// Library rows this batch's merge actually covered (always full for
+    /// in-process engines; see [`Coverage`]).
+    pub coverage: Coverage,
+    /// Wire-level retries the remote supervisor spent on this batch
+    /// (0 in process).
+    pub retries: u64,
+    /// Shard workers whose rows are missing from this batch's merge
+    /// (0 = no degradation).
+    pub degraded_shards: u64,
     pub wall: StageTimer,
 }
 
@@ -486,6 +539,17 @@ impl GroupCharges {
                 self.by_group.insert(keys.clone(), (nq, nc));
             }
         }
+    }
+
+    /// Iterate the recorded groups as `(candidate keys, queries,
+    /// candidate rows)` triples — what the remote wire ships back per
+    /// shard so the *coordinator* merges and charges centrally (contract
+    /// C2-CHARGE: pre-charging per worker would distort the tile counts
+    /// exactly like per-shard charging would).
+    pub fn entries(&self) -> impl Iterator<Item = (&[BucketKey], usize, usize)> {
+        self.by_group
+            .iter()
+            .map(|(keys, &(nq, nc))| (keys.as_slice(), nq, nc))
     }
 
     /// Charge the batch's IMC scoring + ASIC top-1 merge ops: per group
@@ -1350,6 +1414,9 @@ impl SearchEngine {
             report,
             cache: batch_cache,
             health: self.device_health(),
+            coverage: Coverage::full(self.n_refs() as u64),
+            retries: 0,
+            degraded_shards: 0,
             wall,
         })
     }

@@ -26,6 +26,9 @@
 //!   that overflows one engine's banks into contiguous per-engine row
 //!   ranges, and [`ShardedSearchEngine`] programs one engine per range
 //!   and fans query batches across them on scoped threads.
+//! * [`remote`] — the same shard layer across worker **processes**: a
+//!   supervising [`remote::RemoteEngine`] speaks a length-prefixed
+//!   binary wire protocol to per-shard workers (see below).
 //! * [`scheduler`] — the serving front door (see below).
 //! * [`pipeline`] — the end-to-end clustering and DB-search drivers that
 //!   the CLI, examples and benches call; both execute score tiles through
@@ -76,25 +79,60 @@
 //! candidate counts ([`engine::GroupCharges`]) — so total simulated ASIC
 //! work is one fixed function of the workload, no matter which seam
 //! choices execute it.
+//!
+//! # Remote shard workers
+//!
+//! [`remote::RemoteEngine`] serves the shard plan through supervised
+//! worker processes (`specpcm worker`, stdin/stdout pipes, the
+//! [`remote::wire`] codec). The supervisor owns the whole failure story
+//! on the deterministic logical clock — per-request deadlines, bounded
+//! retries with exponential backoff, per-worker circuit breakers — and
+//! any failed attempt tears the worker down and **respawns it
+//! bit-identically**: each slot stores its shard's initial chained
+//! noise-RNG state plus a replay log of age/refresh mutations, so a
+//! reborn worker's conductances and refresh epochs match a shard that
+//! never died. The failure-handling state machine per worker:
+//!
+//! ```text
+//!            spawn+Program+replay ok
+//!   [DOWN] ---------------------------> [UP] --score ok--> [UP]
+//!     ^  \-- respawn fails --> [DOWN]    |
+//!     |                                  | attempt fails (kill/hang/
+//!     |   consecutive_failures >=        |  corrupt/app error)
+//!     |   breaker_threshold              v
+//!     +--------- [BREAKER OPEN] <--- [RETRYING] --budget spent--> skip
+//!                     |                  | backoff += base << attempt,
+//!                     | one half-open    | respawn, retry
+//!                     v probe per batch  v
+//!                  [UP on success]    [UP on success]
+//! ```
+//!
+//! A shard that exhausts its retry budget degrades the batch instead of
+//! failing it: the merge returns the survivors' results tagged with a
+//! partial [`engine::Coverage`] (`rows_searched / rows_total`). With no
+//! faults, results and cumulative marginal ops are bit-identical to
+//! [`ShardedSearchEngine`] (`rust/tests/worker_fault_tolerance.rs`).
 
 pub mod allocator;
 pub mod batcher;
 pub mod engine;
 pub mod frontend;
 pub mod pipeline;
+pub mod remote;
 pub mod scheduler;
 pub mod sharded;
 
 pub use allocator::{AllocError, SegmentAllocator, Slot};
 pub use batcher::{pad_matrix, Batcher};
 pub use engine::{
-    BatchOutcome, CapacityError, GroupCharges, ProgramContext, RefreshOutcome, RefreshPolicy,
-    SearchEngine, ServingCost, ShardScores,
+    BatchOutcome, CapacityError, Coverage, GroupCharges, ProgramContext, RefreshOutcome,
+    RefreshPolicy, SearchEngine, ServingCost, ShardScores,
 };
 pub use frontend::HdFrontend;
 pub use pipeline::{
     ClusteringOutcome, ClusteringPipeline, SearchOutcomeSummary, SearchPipeline,
 };
+pub use remote::{ChaosEvent, ChaosKind, ChaosPlan, RemoteEngine, WorkerStats};
 pub use scheduler::{
     tile_fill_target, ArrivalTrace, CoalescePolicy, FrontDoor, ServeEngine, ServeTraceOutcome,
 };

@@ -1,0 +1,41 @@
+//! Remote shard serving: per-shard worker **processes** behind a
+//! supervising coordinator (ROADMAP "distributed serving").
+//!
+//! The in-process shard layer ([`super::sharded`]) fans batches out on
+//! scoped threads; this module moves each shard into its own OS process
+//! — the serving binary re-exec'd under the hidden `worker` subcommand —
+//! and talks to it over stdin/stdout pipes with a compact length-prefixed
+//! binary codec ([`wire`]; `util/json.rs` stays off the hot path).
+//! Process isolation buys fault containment: a crashing, hanging, or
+//! babbling shard can no longer take the whole serving session down.
+//!
+//! The split of responsibilities:
+//!
+//! * [`wire`] — the frame codec and message types. Floats travel as raw
+//!   bits so a round trip is bit-exact; decoding is bounds-checked and
+//!   returns typed [`wire::FrameError`]s on corrupt or truncated input —
+//!   never a panic.
+//! * [`worker`] — the request loop a worker process runs: program one
+//!   shard from the wire (chained noise-RNG state, global row base),
+//!   then score/age/refresh on demand. Workers return *chargeless*
+//!   per-group candidate counts (contract C2-CHARGE) and never write
+//!   anything but response frames to stdout.
+//! * [`supervisor`] — [`RemoteEngine`]: deadline/retry/backoff on the
+//!   deterministic logical clock, per-worker circuit breakers, respawn
+//!   with bit-identical re-programming (stored RNG state + replay log),
+//!   and graceful degradation to partial [`super::engine::Coverage`]
+//!   when a shard stays down. A seeded [`ChaosPlan`] injects
+//!   kill/hang/corrupt-frame faults deterministically for the
+//!   fault-tolerance suite.
+//!
+//! With no faults injected, remote serving is **bit-identical** — scores
+//! and cumulative op counts — to the in-process sharded engine
+//! (`rust/tests/worker_fault_tolerance.rs`).
+
+pub mod supervisor;
+pub mod wire;
+pub mod worker;
+
+pub use supervisor::{ChaosEvent, ChaosKind, ChaosPlan, RemoteEngine, WorkerStats};
+pub use wire::FrameError;
+pub use worker::run_worker;

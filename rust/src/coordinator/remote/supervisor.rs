@@ -1,0 +1,841 @@
+//! Supervisor: a [`RemoteEngine`] that serves a sharded library through
+//! per-shard **worker processes** instead of in-process
+//! [`super::super::sharded::ShardedSearchEngine`] threads.
+//!
+//! One worker process per shard is spawned from the serving binary's
+//! hidden `worker` subcommand and spoken to over stdin/stdout pipes with
+//! the [`super::wire`] codec. The supervisor owns everything the fault
+//! story needs:
+//!
+//! * **Deadlines, retries, backoff** — all on the deterministic logical
+//!   clock ([`crate::config::RemoteConfig`]), never wall time (contract
+//!   C6-TIME): each score attempt ticks the clock once, a failed attempt
+//!   adds `backoff_base_ticks << attempt`, and a hang charges the full
+//!   `deadline_ticks` before it is declared dead.
+//! * **Respawn with bit-identical re-programming** — every slot stores
+//!   its shard's initial chained noise-RNG state, row base, and reference
+//!   slices, plus a global replay log of age/refresh mutations; respawn =
+//!   spawn + `Program` + replay, after which the worker's conductances
+//!   are bit-identical to a shard that never died.
+//! * **Circuit breaker** — `breaker_threshold` consecutive failures open
+//!   the breaker; an open shard gets exactly one half-open probe per
+//!   batch instead of the full retry budget.
+//! * **Graceful degradation** — a shard that exhausts its budget is
+//!   skipped and the batch merges the survivors, tagging the outcome
+//!   with a partial [`Coverage`] instead of failing.
+//!
+//! Failure handling state machine (per worker):
+//!
+//! ```text
+//!            spawn+Program+replay ok
+//!   [DOWN] ---------------------------> [UP] --score ok--> [UP]
+//!     ^  \-- respawn fails --> [DOWN]    |
+//!     |                                  | attempt fails (kill/hang/
+//!     |   consecutive_failures >=        |  corrupt/app error)
+//!     |   breaker_threshold              v
+//!     +--------- [BREAKER OPEN] <--- [RETRYING] --budget spent--> skip
+//!                     |                  | backoff += base << attempt,
+//!                     | one half-open    | respawn, retry
+//!                     v probe per batch  v
+//!                  [UP on success]    [UP on success]
+//! ```
+//!
+//! A seeded [`ChaosPlan`] injects kill/hang/corrupt-frame events at
+//! logical ticks — the wire-level mirror of [`crate::device::FaultModel`]'s
+//! seeded cell faults — so every fault-tolerance test is deterministic.
+//!
+//! Accounting follows the shard layer exactly: workers return
+//! *chargeless* per-group candidate counts, the supervisor merges them
+//! and charges once (contract C2-CHARGE), encode is charged once per
+//! batch, and the energy model covers the union bank pool. With no
+//! faults injected, results and cumulative [`OpCounts`] are bit-identical
+//! to the in-process sharded engine (`rust/tests/worker_fault_tolerance.rs`).
+
+use std::io::BufReader;
+use std::path::PathBuf;
+use std::process::{Child, ChildStdin, ChildStdout, Command, Stdio};
+use std::sync::Mutex;
+
+use crate::backend::BackendDispatcher;
+use crate::config::{RemoteConfig, SpecPcmConfig};
+use crate::energy::{EnergyLatencyModel, EnergyReport, OpCounts};
+use crate::ms::bucket::BucketKey;
+use crate::ms::{SearchDataset, Spectrum};
+use crate::telemetry::{DeviceHealth, EncodeCacheStats, StageTimer};
+use crate::util::error::{Error, Result};
+use crate::util::sync::lock_unpoisoned;
+use crate::util::RngState;
+
+use super::super::engine::{
+    chunk_ranges, fold_batches, BatchOutcome, Coverage, GroupCharges, ProgramContext,
+    RefreshOutcome, RefreshPolicy, ServingCost,
+};
+use super::super::frontend::HdFrontend;
+use super::super::pipeline::SearchOutcomeSummary;
+use super::super::scheduler::ServeEngine;
+use super::super::sharded::ShardPlan;
+use super::wire::{self, FrameError, Request, Response};
+
+/// A fault the chaos plan injects into one wire attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosKind {
+    /// Kill the worker process before the attempt; the attempt then
+    /// observes a dead pipe (broken pipe or EOF).
+    Kill,
+    /// The worker never answers: the attempt is charged the full
+    /// `deadline_ticks` on the logical clock and declared dead. (Blocking
+    /// pipe reads cannot be wall-clock-timed without violating C6-TIME,
+    /// so the deadline is modeled at the transport seam.)
+    Hang,
+    /// The response frame arrives with its opcode byte corrupted — the
+    /// codec rejects it with a typed decode error.
+    CorruptFrame,
+}
+
+/// One scheduled fault: fires at the first score attempt against `shard`
+/// whose logical tick is `>= tick`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChaosEvent {
+    pub tick: u64,
+    pub shard: usize,
+    pub kind: ChaosKind,
+}
+
+/// A deterministic schedule of injected wire faults, in logical ticks —
+/// the transport-level counterpart of [`crate::device::FaultModel`]'s
+/// seeded cell faults. Events are consumed exactly once, in tick order
+/// per shard.
+#[derive(Clone, Debug, Default)]
+pub struct ChaosPlan {
+    events: Vec<ChaosEvent>,
+}
+
+impl ChaosPlan {
+    /// No injected faults (production serving).
+    pub fn none() -> ChaosPlan {
+        ChaosPlan::default()
+    }
+
+    pub fn new(mut events: Vec<ChaosEvent>) -> ChaosPlan {
+        events.sort_by_key(|e| e.tick);
+        ChaosPlan { events }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Consume the earliest event due for `shard` at logical time `now`.
+    fn take(&mut self, shard: usize, now: u64) -> Option<ChaosKind> {
+        let idx = self
+            .events
+            .iter()
+            .position(|e| e.shard == shard && e.tick <= now)?;
+        Some(self.events.remove(idx).kind)
+    }
+}
+
+/// Counters the supervisor accumulates across the serving session.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    pub workers: usize,
+    pub workers_up: usize,
+    pub breakers_open: usize,
+    pub respawns: u64,
+    pub retries: u64,
+    pub degraded_batches: u64,
+}
+
+/// A live worker process: child + both pipe ends. Dropping it kills and
+/// reaps the child (best-effort `Shutdown` first so a healthy worker
+/// exits its loop cleanly).
+struct WorkerProc {
+    child: Child,
+    stdin: ChildStdin,
+    stdout: BufReader<ChildStdout>,
+}
+
+impl WorkerProc {
+    /// One request/response round trip. `Ok` carries any decoded
+    /// response, including `Response::Error` — the caller classifies.
+    fn call(&mut self, req: &Request) -> Result<Response, FrameError> {
+        wire::write_frame(&mut self.stdin, &req.encode())?;
+        match wire::read_frame(&mut self.stdout)? {
+            Some(payload) => Response::decode(&payload),
+            None => Err(FrameError::Io("worker closed its response pipe".into())),
+        }
+    }
+
+    /// The round trip with the response frame's opcode byte corrupted in
+    /// flight (chaos only).
+    fn call_corrupted(&mut self, req: &Request) -> Result<Response, FrameError> {
+        wire::write_frame(&mut self.stdin, &req.encode())?;
+        match wire::read_frame(&mut self.stdout)? {
+            Some(mut payload) => {
+                if let Some(b) = payload.first_mut() {
+                    *b ^= 0xff;
+                }
+                Response::decode(&payload)
+            }
+            None => Err(FrameError::Io("worker closed its response pipe".into())),
+        }
+    }
+}
+
+impl Drop for WorkerProc {
+    fn drop(&mut self) {
+        let _ = wire::write_frame(&mut self.stdin, &Request::Shutdown.encode());
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// A mutation that must be replayed, in order, when a worker respawns so
+/// its logical clock and refresh epochs match the shards that never died.
+/// Replayed outcomes are discarded — their ops were charged when the
+/// mutation first ran.
+#[derive(Clone, Debug)]
+enum ReplayOp {
+    AdvanceAge(f64),
+    Refresh(Vec<BucketKey>),
+}
+
+/// Everything one shard's supervision needs, including what a respawn
+/// must re-program: the initial chained RNG state, the row base, and the
+/// shard's reference slices.
+struct WorkerSlot {
+    proc: Option<WorkerProc>,
+    initial_rng: RngState,
+    row_base: u64,
+    library: Vec<Spectrum>,
+    decoys: Vec<Spectrum>,
+    consecutive_failures: u32,
+    breaker_open: bool,
+    health: DeviceHealth,
+}
+
+impl WorkerSlot {
+    fn up(&self) -> bool {
+        self.proc.is_some()
+    }
+}
+
+/// Mutable supervision state, behind one mutex (contract C3-SYNC) so
+/// `search_batch` can keep the engine-shaped `&self` signature.
+struct Supervisor {
+    /// Logical serving clock: +1 per score attempt, +backoff on failure,
+    /// +deadline_ticks on a hang. Deterministic — no wall time anywhere.
+    clock: u64,
+    /// Rendered config every (re)spawned worker programs from.
+    cfg_toml: String,
+    slots: Vec<WorkerSlot>,
+    chaos: ChaosPlan,
+    replay: Vec<ReplayOp>,
+    stats: WorkerStats,
+}
+
+/// What one successful score attempt brings back from a shard.
+struct ShardScored {
+    best: Vec<(f32, f32, Option<u32>)>,
+    charges: Vec<(Vec<BucketKey>, u64, u64)>,
+    health: DeviceHealth,
+}
+
+/// The engine-shaped remote serving unit (see module docs). Constructed
+/// by [`RemoteEngine::program`]; implements
+/// [`super::super::scheduler::ServeEngine`] so the front door drives it
+/// exactly like the in-process engines.
+pub struct RemoteEngine {
+    pub cfg: SpecPcmConfig,
+    remote: RemoteConfig,
+    plan: ShardPlan,
+    exe: PathBuf,
+    frontend: HdFrontend,
+    program_ops: OpCounts,
+    program_report: EnergyReport,
+    program_wall: StageTimer,
+    inner: Mutex<Supervisor>,
+}
+
+impl RemoteEngine {
+    /// Partition the dataset like the in-process shard layer, spawn one
+    /// worker per shard from `exe` (the serving binary; workers run its
+    /// hidden `worker` subcommand), and program each over the wire with
+    /// the chained noise-RNG state. `n_shards = 0` auto-computes the
+    /// minimum count that fits `cfg`'s per-engine banks. Launch is
+    /// fail-fast: a worker that cannot program is a hard error (chaos
+    /// only ever targets serving attempts).
+    pub fn program(
+        cfg: SpecPcmConfig,
+        dataset: &SearchDataset,
+        n_shards: usize,
+        exe: impl Into<PathBuf>,
+        chaos: ChaosPlan,
+    ) -> Result<Self> {
+        let exe = exe.into();
+        let plan = ShardPlan::for_capacity(
+            &cfg,
+            dataset.library.len(),
+            dataset.decoys.len(),
+            n_shards,
+        )?;
+        let remote = cfg.remote;
+        let frontend = HdFrontend::new(&cfg);
+        let cfg_toml = cfg.to_toml();
+
+        // Chain the programming-noise RNG through the shards in row
+        // order, exactly like the in-process shard layer, so the
+        // concatenated noise stream equals the monolithic one.
+        let mut rng = ProgramContext::noise_rng(&cfg, ProgramContext::SEARCH_SEED_TAG).state();
+        let mut slots = Vec::with_capacity(plan.n_shards());
+        let mut program_ops = OpCounts::default();
+        let mut n_refs = 0u64;
+        for i in 0..plan.n_shards() {
+            let mut slot = WorkerSlot {
+                proc: None,
+                initial_rng: rng,
+                row_base: plan.range(i).start as u64,
+                library: dataset.library[plan.target_range(i)].to_vec(),
+                decoys: dataset.decoys[plan.decoy_range(i)].to_vec(),
+                consecutive_failures: 0,
+                breaker_open: false,
+                health: DeviceHealth::default(),
+            };
+            let mut proc = spawn_worker(&exe).map_err(|e| e.context(format!("shard {i}")))?;
+            match proc
+                .call(&Request::Program {
+                    cfg_toml: cfg_toml.clone(),
+                    row_base: slot.row_base,
+                    rng,
+                    library: slot.library.clone(),
+                    decoys: slot.decoys.clone(),
+                })
+                .map_err(|e| Error::msg(format!("shard {i} program: {e}")))?
+            {
+                Response::Programmed {
+                    rng: next,
+                    ops,
+                    n_refs: refs,
+                } => {
+                    rng = next;
+                    program_ops += &ops;
+                    n_refs += refs;
+                }
+                Response::Error(msg) => {
+                    return Err(Error::msg(format!("shard {i} program failed: {msg}")))
+                }
+                other => {
+                    return Err(Error::msg(format!(
+                        "shard {i} program: unexpected response {other:?}"
+                    )))
+                }
+            }
+            slot.proc = Some(proc);
+            slots.push(slot);
+        }
+        crate::ensure!(
+            n_refs as usize == plan.n_rows(),
+            "workers programmed {n_refs} rows, plan covers {}",
+            plan.n_rows()
+        );
+
+        let program_report = pool_model(&cfg, plan.n_shards()).report(&program_ops);
+        let stats = WorkerStats {
+            workers: plan.n_shards(),
+            workers_up: plan.n_shards(),
+            ..WorkerStats::default()
+        };
+        Ok(RemoteEngine {
+            cfg,
+            remote,
+            plan,
+            exe,
+            frontend,
+            program_ops,
+            program_report,
+            program_wall: StageTimer::new(),
+            inner: Mutex::new(Supervisor {
+                clock: 0,
+                cfg_toml,
+                slots,
+                chaos,
+                replay: Vec::new(),
+                stats,
+            }),
+        })
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.plan.n_shards()
+    }
+
+    /// Reference rows programmed across every worker (targets + decoys).
+    pub fn n_refs(&self) -> usize {
+        self.plan.n_rows()
+    }
+
+    /// One-time library ops summed over every worker (grows when
+    /// maintenance refreshes rows, mirroring the in-process layers).
+    pub fn program_ops(&self) -> &OpCounts {
+        &self.program_ops
+    }
+
+    pub fn program_report(&self) -> &EnergyReport {
+        &self.program_report
+    }
+
+    /// Supervision counters (respawns, retries, degradation, breakers).
+    pub fn worker_stats(&self) -> WorkerStats {
+        let sup = lock_unpoisoned(&self.inner, "remote supervisor");
+        let mut stats = sup.stats;
+        stats.workers_up = sup.slots.iter().filter(|s| s.up()).count();
+        stats.breakers_open = sup.slots.iter().filter(|s| s.breaker_open).count();
+        stats
+    }
+
+    /// Current logical clock (ticks; tests assert deadline/backoff math).
+    pub fn clock(&self) -> u64 {
+        lock_unpoisoned(&self.inner, "remote supervisor").clock
+    }
+
+    /// Serve one query batch over the wire: encode once on the
+    /// supervisor, fan the packed rows out to every worker with the full
+    /// retry/breaker machinery, merge survivors in shard order (strict
+    /// `>`, ties to the lowest global row) and charge ops from the merged
+    /// per-group counts. Shards that exhaust their budget degrade the
+    /// batch's [`Coverage`] instead of failing it; a batch with **zero**
+    /// surviving shards is an error.
+    pub fn search_batch(
+        &self,
+        queries: &[&Spectrum],
+        backend: &BackendDispatcher,
+    ) -> Result<BatchOutcome> {
+        let mut ops = OpCounts::default();
+        let mut wall = StageTimer::new();
+        self.frontend.count_encode_ops(queries.len(), &mut ops);
+        let levels = self.frontend.levels_of(queries);
+        let packed = wall.time("encode queries", || {
+            self.frontend.encode_pack_levels(&levels, backend)
+        })?;
+        // The supervisor encodes fresh per batch (no shared query-HV
+        // cache across processes yet — ROADMAP headroom): all misses.
+        let cache = EncodeCacheStats {
+            hits: 0,
+            misses: queries.len() as u64,
+        };
+
+        let req = Request::Score {
+            cp: self.frontend.packed_width as u32,
+            packed,
+            meta: queries
+                .iter()
+                .map(|q| (q.charge, q.precursor_mz))
+                .collect(),
+        };
+
+        let mut sup = lock_unpoisoned(&self.inner, "remote supervisor");
+        let n_shards = self.plan.n_shards();
+        let mut scored: Vec<Option<ShardScored>> = Vec::with_capacity(n_shards);
+        let mut batch_retries = 0u64;
+        for i in 0..n_shards {
+            let got = wall.time("score shards", || {
+                sup.score_shard(i, &req, &self.remote, &self.exe, &mut batch_retries)
+            });
+            scored.push(got);
+        }
+        let degraded_shards = scored.iter().filter(|s| s.is_none()).count() as u64;
+        if degraded_shards > 0 {
+            sup.stats.degraded_batches += 1;
+        }
+        sup.stats.retries += batch_retries;
+
+        let mut rows_searched = 0u64;
+        let mut best: Vec<(f32, f32, Option<u32>)> =
+            vec![(f32::NEG_INFINITY, f32::NEG_INFINITY, None); queries.len()];
+        let mut charges = GroupCharges::default();
+        let mut any = false;
+        for (i, shard) in scored.into_iter().enumerate() {
+            let Some(shard) = shard else { continue };
+            any = true;
+            rows_searched += self.plan.range(i).len() as u64;
+            for (qi, &(t, d, m)) in shard.best.iter().enumerate() {
+                if t > best[qi].0 {
+                    best[qi].0 = t;
+                    best[qi].2 = m;
+                }
+                if d > best[qi].1 {
+                    best[qi].1 = d;
+                }
+            }
+            for (keys, nq, nc) in shard.charges {
+                charges.record(keys, nq as usize, nc as usize);
+            }
+            sup.slots[i].health = shard.health;
+        }
+        crate::ensure!(
+            any || n_shards == 0,
+            "all {n_shards} shards down: no coverage left to serve from"
+        );
+        charges.charge(self.frontend.packed_width, &mut ops);
+        let health = sup.slots.iter().map(|s| s.health).sum();
+        drop(sup);
+
+        let pairs: Vec<(f32, f32)> = best.iter().map(|&(t, d, _)| (t, d)).collect();
+        let matched: Vec<Option<u32>> = best.iter().map(|&(_, _, m)| m).collect();
+        let report = pool_model(&self.cfg, n_shards).report(&ops);
+        Ok(BatchOutcome {
+            pairs,
+            matched,
+            ops,
+            report,
+            cache,
+            health,
+            coverage: Coverage {
+                rows_searched,
+                rows_total: self.plan.n_rows() as u64,
+            },
+            retries: batch_retries,
+            degraded_shards,
+            wall,
+        })
+    }
+
+    /// Advance the deterministic serving clock on every worker and log
+    /// the mutation for respawn replay. Wire failures mark the worker
+    /// down (it catches up from the log when it respawns).
+    pub fn advance_age(&mut self, seconds: f64) {
+        let sup = self.inner.get_mut().unwrap_or_else(|e| e.into_inner());
+        sup.replay.push(ReplayOp::AdvanceAge(seconds));
+        for slot in &mut sup.slots {
+            if let Some(proc) = slot.proc.as_mut() {
+                if !matches!(proc.call(&Request::AdvanceAge(seconds)), Ok(Response::Aged)) {
+                    slot.proc = None;
+                }
+            }
+        }
+    }
+
+    /// One maintenance pass, shaped like the in-process shard layer: pool
+    /// live workers' staleness candidates, one global policy selection,
+    /// then each live worker refreshes its portion of the picked buckets.
+    /// Down workers miss the pass live but replay it on respawn; wire
+    /// failures mark the worker down and its outcome is dropped.
+    pub fn maintain(&mut self, policy: &RefreshPolicy) -> RefreshOutcome {
+        let sup = self.inner.get_mut().unwrap_or_else(|e| e.into_inner());
+        let mut candidates = Vec::new();
+        for slot in &mut sup.slots {
+            if let Some(proc) = slot.proc.as_mut() {
+                match proc.call(&Request::Candidates) {
+                    Ok(Response::CandidateList(c)) => candidates.extend(c),
+                    _ => slot.proc = None,
+                }
+            }
+        }
+        let keys = policy.select(candidates);
+        let mut out = RefreshOutcome::default();
+        for slot in &mut sup.slots {
+            if let Some(proc) = slot.proc.as_mut() {
+                match proc.call(&Request::Refresh(keys.clone())) {
+                    Ok(Response::Refreshed {
+                        buckets,
+                        rows,
+                        ops,
+                    }) => {
+                        out.buckets += buckets as usize;
+                        out.rows += rows as usize;
+                        out.ops += &ops;
+                    }
+                    _ => slot.proc = None,
+                }
+            }
+        }
+        sup.replay.push(ReplayOp::Refresh(keys));
+        if out.rows > 0 {
+            self.program_ops += &out.ops;
+            self.program_report =
+                pool_model(&self.cfg, self.plan.n_shards()).report(&self.program_ops);
+        }
+        out
+    }
+
+    /// Latest health over every worker (live workers refresh their
+    /// snapshot on each served batch; down workers contribute their last
+    /// known state).
+    pub fn device_health(&self) -> DeviceHealth {
+        let mut sup = lock_unpoisoned(&self.inner, "remote supervisor");
+        for slot in &mut sup.slots {
+            if let Some(proc) = slot.proc.as_mut() {
+                if let Ok(Response::HealthReport(h)) = proc.call(&Request::Health) {
+                    slot.health = h;
+                }
+            }
+        }
+        sup.slots.iter().map(|s| s.health).sum()
+    }
+
+    /// Same chunking contract as the in-process engines' `serve_chunked`.
+    pub fn serve_chunked(
+        &self,
+        queries: &[&Spectrum],
+        n_batches: usize,
+        backend: &BackendDispatcher,
+    ) -> Result<Vec<BatchOutcome>> {
+        chunk_ranges(queries.len(), n_batches)
+            .into_iter()
+            .map(|r| self.search_batch(&queries[r], backend))
+            .collect()
+    }
+
+    pub fn serving_cost(&self, batches: &[BatchOutcome]) -> ServingCost {
+        ServingCost::from_reports(&self.program_report, batches)
+    }
+
+    /// Fold served batches into the one-shot summary shape — identical to
+    /// the in-process layers' fold, so a no-fault remote session's
+    /// summary is bit-identical to the sharded engine's.
+    pub fn finalize(
+        &self,
+        queries: &[&Spectrum],
+        batches: &[BatchOutcome],
+    ) -> Result<SearchOutcomeSummary> {
+        let model = pool_model(&self.cfg, self.plan.n_shards());
+        fold_batches(
+            self.cfg.fdr,
+            &model,
+            &self.program_ops,
+            &self.program_wall,
+            queries,
+            batches,
+        )
+    }
+}
+
+impl ServeEngine for RemoteEngine {
+    fn search_batch(
+        &self,
+        queries: &[&Spectrum],
+        backend: &BackendDispatcher,
+    ) -> Result<BatchOutcome> {
+        RemoteEngine::search_batch(self, queries, backend)
+    }
+
+    fn maintain(&mut self, policy: &RefreshPolicy) -> RefreshOutcome {
+        RemoteEngine::maintain(self, policy)
+    }
+
+    fn device_health(&self) -> DeviceHealth {
+        RemoteEngine::device_health(self)
+    }
+}
+
+impl Supervisor {
+    /// Score one shard with the full supervision machinery: chaos
+    /// injection, logical-clock deadline accounting, bounded retries with
+    /// exponential backoff, respawn-before-retry, and the circuit
+    /// breaker. `None` means the shard degraded out of this batch.
+    fn score_shard(
+        &mut self,
+        i: usize,
+        req: &Request,
+        remote: &RemoteConfig,
+        exe: &PathBuf,
+        batch_retries: &mut u64,
+    ) -> Option<ShardScored> {
+        // An open breaker gets one half-open probe instead of the full
+        // retry budget.
+        let budget = if self.slots[i].breaker_open {
+            0
+        } else {
+            remote.retries
+        };
+        let mut attempt = 0u32;
+        loop {
+            if !self.slots[i].up() && !self.respawn(i, exe) {
+                // Can't even get a process: burn the attempt.
+            } else {
+                self.clock += 1;
+                let chaos = self.chaos.take(i, self.clock);
+                match self.attempt(i, req, chaos, remote) {
+                    Ok(scored) => {
+                        let slot = &mut self.slots[i];
+                        slot.consecutive_failures = 0;
+                        slot.breaker_open = false;
+                        return Some(scored);
+                    }
+                    Err(_) => {
+                        // Any failed attempt poisons the worker: the pipe
+                        // may hold half a frame, and a retry against live
+                        // state could double-apply. Respawn-from-log is
+                        // the only safe path (module docs).
+                        let slot = &mut self.slots[i];
+                        slot.proc = None;
+                        slot.consecutive_failures += 1;
+                        if slot.consecutive_failures >= remote.breaker_threshold {
+                            slot.breaker_open = true;
+                        }
+                    }
+                }
+            }
+            if attempt >= budget {
+                return None;
+            }
+            self.clock += remote.backoff_base_ticks << attempt;
+            attempt += 1;
+            *batch_retries += 1;
+        }
+    }
+
+    /// One wire attempt (with optional injected fault) against a live
+    /// worker.
+    fn attempt(
+        &mut self,
+        i: usize,
+        req: &Request,
+        chaos: Option<ChaosKind>,
+        remote: &RemoteConfig,
+    ) -> Result<ShardScored, FrameError> {
+        let proc = self.slots[i]
+            .proc
+            .as_mut()
+            .expect("attempt against a down worker");
+        let resp = match chaos {
+            Some(ChaosKind::Kill) => {
+                let _ = proc.child.kill();
+                let _ = proc.child.wait();
+                proc.call(req)
+            }
+            Some(ChaosKind::Hang) => {
+                self.clock += remote.deadline_ticks;
+                Err(FrameError::Io(format!(
+                    "deadline exceeded after {} ticks",
+                    remote.deadline_ticks
+                )))
+            }
+            Some(ChaosKind::CorruptFrame) => proc.call_corrupted(req),
+            None => proc.call(req),
+        }?;
+        match resp {
+            Response::Scored {
+                best,
+                charges,
+                health,
+            } => Ok(ShardScored {
+                best,
+                charges,
+                health,
+            }),
+            Response::Error(msg) => Err(FrameError::BadPayload(format!("worker error: {msg}"))),
+            other => Err(FrameError::BadPayload(format!(
+                "unexpected response {other:?}"
+            ))),
+        }
+    }
+
+    /// Spawn + re-program a worker bit-identically (stored initial RNG
+    /// state and row base), then replay the logged mutations so its
+    /// logical clock and refresh epochs match the survivors. Replayed
+    /// outcomes are discarded — already charged when they first ran.
+    fn respawn(&mut self, i: usize, exe: &PathBuf) -> bool {
+        let slot = &mut self.slots[i];
+        let Ok(mut proc) = spawn_worker(exe) else {
+            return false;
+        };
+        let programmed = proc.call(&Request::Program {
+            cfg_toml: self.cfg_toml.clone(),
+            row_base: slot.row_base,
+            rng: slot.initial_rng,
+            library: slot.library.clone(),
+            decoys: slot.decoys.clone(),
+        });
+        if !matches!(programmed, Ok(Response::Programmed { .. })) {
+            return false;
+        }
+        for op in &self.replay {
+            let ok = match op {
+                ReplayOp::AdvanceAge(s) => {
+                    matches!(proc.call(&Request::AdvanceAge(*s)), Ok(Response::Aged))
+                }
+                ReplayOp::Refresh(keys) => matches!(
+                    proc.call(&Request::Refresh(keys.clone())),
+                    Ok(Response::Refreshed { .. })
+                ),
+            };
+            if !ok {
+                return false;
+            }
+        }
+        slot.proc = Some(proc);
+        self.stats.respawns += 1;
+        true
+    }
+}
+
+/// Energy/latency model of the union bank pool, same rule as the
+/// in-process shard layer.
+fn pool_model(cfg: &SpecPcmConfig, n_shards: usize) -> EnergyLatencyModel {
+    EnergyLatencyModel::new(cfg.material, cfg.adc_bits, cfg.num_banks * n_shards.max(1))
+}
+
+/// Spawn one worker process running the hidden `worker` subcommand, both
+/// pipes attached. Stderr passes through so worker panics surface.
+fn spawn_worker(exe: &PathBuf) -> Result<WorkerProc> {
+    let mut child = Command::new(exe)
+        .arg("worker")
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .map_err(|e| Error::msg(format!("spawn worker {}: {e}", exe.display())))?;
+    let stdin = child.stdin.take().ok_or_else(|| Error::msg("worker stdin missing"))?;
+    let stdout = child
+        .stdout
+        .take()
+        .map(BufReader::new)
+        .ok_or_else(|| Error::msg("worker stdout missing"))?;
+    Ok(WorkerProc {
+        child,
+        stdin,
+        stdout,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_plan_consumes_events_in_tick_order_per_shard() {
+        let mut plan = ChaosPlan::new(vec![
+            ChaosEvent {
+                tick: 5,
+                shard: 1,
+                kind: ChaosKind::Hang,
+            },
+            ChaosEvent {
+                tick: 2,
+                shard: 0,
+                kind: ChaosKind::Kill,
+            },
+            ChaosEvent {
+                tick: 3,
+                shard: 0,
+                kind: ChaosKind::CorruptFrame,
+            },
+        ]);
+        assert!(!plan.is_empty());
+        // Not due yet.
+        assert_eq!(plan.take(0, 1), None);
+        // Due events come back in tick order, shard-filtered.
+        assert_eq!(plan.take(0, 4), Some(ChaosKind::Kill));
+        assert_eq!(plan.take(0, 4), Some(ChaosKind::CorruptFrame));
+        assert_eq!(plan.take(0, 100), None);
+        assert_eq!(plan.take(1, 4), None);
+        assert_eq!(plan.take(1, 5), Some(ChaosKind::Hang));
+        assert!(plan.is_empty());
+        assert_eq!(ChaosPlan::none().take(0, u64::MAX), None);
+    }
+}

@@ -1,0 +1,1048 @@
+//! Compact length-prefixed binary wire format between the supervisor and
+//! its shard worker processes.
+//!
+//! Every message is one **frame**: a little-endian `u32` byte length
+//! followed by exactly that many payload bytes, the first of which is the
+//! opcode. The framing layer is deliberately paranoid — a corrupt or
+//! truncated pipe must surface as a typed [`FrameError`], never a panic
+//! or an unbounded allocation:
+//!
+//! * zero-length frames are rejected (`Empty` — every payload carries at
+//!   least an opcode),
+//! * lengths above [`MAX_FRAME`] are rejected *before* allocating
+//!   (`Oversized`),
+//! * EOF in the middle of a prefix or payload is `Truncated` (EOF **at**
+//!   a frame boundary is the clean shutdown signal, `Ok(None)`),
+//! * unknown opcodes and short/overlong payloads are `BadOpcode` /
+//!   `BadPayload`.
+//!
+//! Scalar fields are fixed-width little-endian; floats travel as raw IEEE
+//! bits (`to_bits`/`from_bits`), so a decoded [`RngState`] or score is
+//! **bit-identical** to the encoded one — the whole remote layer's
+//! equivalence contract rests on this round trip. `util::json` stays off
+//! this path: JSON rendering is for artifacts, not the per-batch hot
+//! loop.
+
+use std::io::{Read, Write};
+
+use crate::energy::OpCounts;
+use crate::ms::bucket::BucketKey;
+use crate::ms::{Peak, Spectrum};
+use crate::telemetry::DeviceHealth;
+use crate::util::error::Error;
+use crate::util::rng::RngState;
+
+use super::super::engine::RefreshOutcome;
+
+/// Hard ceiling on one frame's payload (64 MiB) — far above any real
+/// query batch, low enough that a corrupt length prefix can never drive
+/// an unbounded allocation.
+pub const MAX_FRAME: u32 = 1 << 26;
+
+/// Typed failure of the framing / codec layer. Corrupt pipes produce one
+/// of these — never a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FrameError {
+    /// Length prefix exceeds [`MAX_FRAME`].
+    Oversized { len: u32 },
+    /// Zero-length frame (a payload always carries at least an opcode).
+    Empty,
+    /// EOF mid-prefix or mid-payload.
+    Truncated { expected: usize, got: usize },
+    /// First payload byte is not a known opcode.
+    BadOpcode(u8),
+    /// Payload structure disagrees with its opcode.
+    BadPayload(String),
+    /// Underlying pipe I/O failure.
+    Io(String),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversized { len } => {
+                write!(f, "frame length {len} exceeds the {MAX_FRAME}-byte cap")
+            }
+            FrameError::Empty => write!(f, "zero-length frame"),
+            FrameError::Truncated { expected, got } => {
+                write!(f, "truncated frame: wanted {expected} bytes, got {got}")
+            }
+            FrameError::BadOpcode(op) => write!(f, "unknown opcode 0x{op:02x}"),
+            FrameError::BadPayload(msg) => write!(f, "malformed payload: {msg}"),
+            FrameError::Io(msg) => write!(f, "wire i/o: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<FrameError> for Error {
+    fn from(e: FrameError) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// Read one length-prefixed frame. `Ok(None)` is a clean EOF at a frame
+/// boundary (the peer closed its pipe between messages); everything else
+/// that is not a complete well-sized frame is a typed [`FrameError`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut prefix = [0u8; 4];
+    match read_exact_or_eof(r, &mut prefix)? {
+        0 => return Ok(None),
+        4 => {}
+        got => return Err(FrameError::Truncated { expected: 4, got }),
+    }
+    let len = u32::from_le_bytes(prefix);
+    if len == 0 {
+        return Err(FrameError::Empty);
+    }
+    if len > MAX_FRAME {
+        return Err(FrameError::Oversized { len });
+    }
+    let mut payload = vec![0u8; len as usize];
+    match read_exact_or_eof(r, &mut payload)? {
+        n if n == payload.len() => Ok(Some(payload)),
+        got => Err(FrameError::Truncated {
+            expected: len as usize,
+            got,
+        }),
+    }
+}
+
+/// Write one length-prefixed frame and flush it (pipes buffer; the peer
+/// blocks on the frame, so partial writes must never linger).
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<(), FrameError> {
+    if payload.is_empty() {
+        return Err(FrameError::Empty);
+    }
+    if payload.len() > MAX_FRAME as usize {
+        return Err(FrameError::Oversized {
+            len: payload.len().min(u32::MAX as usize) as u32,
+        });
+    }
+    let io = |e: std::io::Error| FrameError::Io(e.to_string());
+    w.write_all(&(payload.len() as u32).to_le_bytes()).map_err(io)?;
+    w.write_all(payload).map_err(io)?;
+    w.flush().map_err(io)
+}
+
+/// Fill `buf`, tolerating EOF: returns how many bytes were read (equal to
+/// `buf.len()` on success, less at EOF). Non-EOF I/O errors are `Io`.
+fn read_exact_or_eof<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize, FrameError> {
+    let mut got = 0;
+    while got < buf.len() {
+        match r.read(&mut buf[got..]) {
+            Ok(0) => break,
+            Ok(n) => got += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e.to_string())),
+        }
+    }
+    Ok(got)
+}
+
+// ---------------------------------------------------------------------
+// Payload codec helpers: fixed-width little-endian scalars on a plain
+// byte vector (writing) and a bounds-checked cursor (reading).
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i64(out: &mut Vec<u8>, v: i64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    put_u32(out, v.to_bits());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_opt_u32(out: &mut Vec<u8>, v: Option<u32>) {
+    match v {
+        Some(x) => {
+            put_u8(out, 1);
+            put_u32(out, x);
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+fn put_opt_f64(out: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        Some(x) => {
+            put_u8(out, 1);
+            put_f64(out, x);
+        }
+        None => put_u8(out, 0),
+    }
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_rng_state(out: &mut Vec<u8>, st: &RngState) {
+    for &w in &st.s {
+        put_u64(out, w);
+    }
+    put_opt_f64(out, st.gauss_spare);
+}
+
+fn put_op_counts(out: &mut Vec<u8>, ops: &OpCounts) {
+    put_u64(out, ops.mvm_ops);
+    put_u64(out, ops.program_rounds);
+    put_u64(out, ops.verify_rounds);
+    put_u64(out, ops.row_reads);
+    put_u64(out, ops.encode_spectra);
+    put_u64(out, ops.features);
+    put_u64(out, ops.pack_elements);
+    put_u64(out, ops.merge_elements);
+}
+
+fn put_health(out: &mut Vec<u8>, h: &DeviceHealth) {
+    put_f64(out, h.max_age_seconds);
+    put_f64(out, h.est_conductance_loss);
+    put_u64(out, h.injected_faults);
+    put_u64(out, h.refreshes);
+}
+
+fn put_bucket_key(out: &mut Vec<u8>, key: &BucketKey) {
+    put_u8(out, key.0);
+    put_i64(out, key.1);
+}
+
+fn put_spectrum(out: &mut Vec<u8>, s: &Spectrum) {
+    put_u64(out, s.scan_id);
+    put_f64(out, s.precursor_mz);
+    put_u8(out, s.charge);
+    put_opt_u32(out, s.peptide_id);
+    put_u8(out, u8::from(s.is_decoy));
+    put_f64(out, s.mod_shift);
+    put_u32(out, s.peaks.len() as u32);
+    for p in &s.peaks {
+        put_f64(out, p.mz);
+        put_f32(out, p.intensity);
+    }
+}
+
+/// Bounds-checked payload cursor: every take reports a typed underrun
+/// instead of panicking on a short slice.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        if self.buf.len() - self.pos < n {
+            return Err(FrameError::BadPayload(format!(
+                "underrun: wanted {n} bytes at offset {}, payload is {} bytes",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn i64(&mut self) -> Result<i64, FrameError> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32, FrameError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64(&mut self) -> Result<f64, FrameError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Element count for a sequence of `elem_size`-byte items, validated
+    /// against the bytes actually remaining so a corrupt count can never
+    /// drive an unbounded allocation.
+    fn seq_len(&mut self, elem_size: usize, what: &str) -> Result<usize, FrameError> {
+        let n = self.u32()? as usize;
+        let remaining = self.buf.len() - self.pos;
+        if n.saturating_mul(elem_size.max(1)) > remaining {
+            return Err(FrameError::BadPayload(format!(
+                "{what} count {n} exceeds the {remaining} payload bytes left"
+            )));
+        }
+        Ok(n)
+    }
+
+    fn bool(&mut self) -> Result<bool, FrameError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            t => Err(FrameError::BadPayload(format!("bad bool tag {t}"))),
+        }
+    }
+
+    fn opt_u32(&mut self) -> Result<Option<u32>, FrameError> {
+        Ok(if self.bool()? { Some(self.u32()?) } else { None })
+    }
+
+    fn opt_f64(&mut self) -> Result<Option<f64>, FrameError> {
+        Ok(if self.bool()? { Some(self.f64()?) } else { None })
+    }
+
+    fn str(&mut self) -> Result<String, FrameError> {
+        let n = self.seq_len(1, "string")?;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|e| FrameError::BadPayload(format!("non-utf8 string: {e}")))
+    }
+
+    fn rng_state(&mut self) -> Result<RngState, FrameError> {
+        let mut s = [0u64; 4];
+        for w in &mut s {
+            *w = self.u64()?;
+        }
+        Ok(RngState {
+            s,
+            gauss_spare: self.opt_f64()?,
+        })
+    }
+
+    fn op_counts(&mut self) -> Result<OpCounts, FrameError> {
+        Ok(OpCounts {
+            mvm_ops: self.u64()?,
+            program_rounds: self.u64()?,
+            verify_rounds: self.u64()?,
+            row_reads: self.u64()?,
+            encode_spectra: self.u64()?,
+            features: self.u64()?,
+            pack_elements: self.u64()?,
+            merge_elements: self.u64()?,
+        })
+    }
+
+    fn health(&mut self) -> Result<DeviceHealth, FrameError> {
+        Ok(DeviceHealth {
+            max_age_seconds: self.f64()?,
+            est_conductance_loss: self.f64()?,
+            injected_faults: self.u64()?,
+            refreshes: self.u64()?,
+        })
+    }
+
+    fn bucket_key(&mut self) -> Result<BucketKey, FrameError> {
+        Ok((self.u8()?, self.i64()?))
+    }
+
+    fn spectrum(&mut self) -> Result<Spectrum, FrameError> {
+        let scan_id = self.u64()?;
+        let precursor_mz = self.f64()?;
+        let charge = self.u8()?;
+        let peptide_id = self.opt_u32()?;
+        let is_decoy = self.bool()?;
+        let mod_shift = self.f64()?;
+        let n_peaks = self.seq_len(12, "peak")?;
+        let mut peaks = Vec::with_capacity(n_peaks);
+        for _ in 0..n_peaks {
+            peaks.push(Peak {
+                mz: self.f64()?,
+                intensity: self.f32()?,
+            });
+        }
+        Ok(Spectrum {
+            scan_id,
+            precursor_mz,
+            charge,
+            peaks,
+            peptide_id,
+            is_decoy,
+            mod_shift,
+        })
+    }
+
+    fn spectra(&mut self, what: &str) -> Result<Vec<Spectrum>, FrameError> {
+        // A peak-less spectrum is 35 bytes; use that as the per-element
+        // floor for the count sanity check.
+        let n = self.seq_len(35, what)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.spectrum()?);
+        }
+        Ok(out)
+    }
+
+    /// Reject trailing garbage — a well-formed frame is consumed exactly.
+    fn finish(self) -> Result<(), FrameError> {
+        if self.pos != self.buf.len() {
+            return Err(FrameError::BadPayload(format!(
+                "{} trailing bytes after message",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Messages.
+
+const OP_PROGRAM: u8 = 0x01;
+const OP_SCORE: u8 = 0x02;
+const OP_ADVANCE_AGE: u8 = 0x03;
+const OP_CANDIDATES: u8 = 0x04;
+const OP_REFRESH: u8 = 0x05;
+const OP_HEALTH: u8 = 0x06;
+const OP_SHUTDOWN: u8 = 0x07;
+
+const OP_PROGRAMMED: u8 = 0x81;
+const OP_SCORED: u8 = 0x82;
+const OP_AGED: u8 = 0x83;
+const OP_CANDIDATE_LIST: u8 = 0x84;
+const OP_REFRESHED: u8 = 0x85;
+const OP_HEALTH_REPORT: u8 = 0x86;
+const OP_SHUTTING_DOWN: u8 = 0x87;
+const OP_ERROR: u8 = 0xff;
+
+/// Supervisor → worker messages.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Program this worker's shard: full config, the shard's global row
+    /// offset, the chained noise-RNG state to start from, and the shard's
+    /// slice of the reference library (targets then decoys).
+    Program {
+        cfg_toml: String,
+        row_base: u64,
+        rng: RngState,
+        library: Vec<Spectrum>,
+        decoys: Vec<Spectrum>,
+    },
+    /// Score a batch of pre-packed query HVs (row-major `meta.len() x cp`
+    /// rows). `meta` carries the only per-query fields candidate
+    /// selection reads — `(charge, precursor_mz)` — so full spectra never
+    /// cross the wire twice.
+    Score {
+        cp: u32,
+        packed: Vec<f32>,
+        meta: Vec<(u8, f64)>,
+    },
+    /// Advance the shard's deterministic serving clock.
+    AdvanceAge(f64),
+    /// Report per-bucket staleness candidates for global refresh selection.
+    Candidates,
+    /// Refresh the given bucket segments (the worker skips buckets it
+    /// doesn't hold).
+    Refresh(Vec<BucketKey>),
+    /// Report the shard's device-health snapshot.
+    Health,
+    /// Clean shutdown.
+    Shutdown,
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Request::Program {
+                cfg_toml,
+                row_base,
+                rng,
+                library,
+                decoys,
+            } => {
+                put_u8(&mut out, OP_PROGRAM);
+                put_str(&mut out, cfg_toml);
+                put_u64(&mut out, *row_base);
+                put_rng_state(&mut out, rng);
+                put_u32(&mut out, library.len() as u32);
+                for s in library {
+                    put_spectrum(&mut out, s);
+                }
+                put_u32(&mut out, decoys.len() as u32);
+                for s in decoys {
+                    put_spectrum(&mut out, s);
+                }
+            }
+            Request::Score { cp, packed, meta } => {
+                put_u8(&mut out, OP_SCORE);
+                put_u32(&mut out, *cp);
+                put_u32(&mut out, meta.len() as u32);
+                for &(charge, mz) in meta {
+                    put_u8(&mut out, charge);
+                    put_f64(&mut out, mz);
+                }
+                put_u32(&mut out, packed.len() as u32);
+                for &x in packed {
+                    put_f32(&mut out, x);
+                }
+            }
+            Request::AdvanceAge(seconds) => {
+                put_u8(&mut out, OP_ADVANCE_AGE);
+                put_f64(&mut out, *seconds);
+            }
+            Request::Candidates => put_u8(&mut out, OP_CANDIDATES),
+            Request::Refresh(keys) => {
+                put_u8(&mut out, OP_REFRESH);
+                put_u32(&mut out, keys.len() as u32);
+                for k in keys {
+                    put_bucket_key(&mut out, k);
+                }
+            }
+            Request::Health => put_u8(&mut out, OP_HEALTH),
+            Request::Shutdown => put_u8(&mut out, OP_SHUTDOWN),
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Request, FrameError> {
+        let mut r = Reader::new(payload);
+        let req = match r.u8()? {
+            OP_PROGRAM => {
+                let cfg_toml = r.str()?;
+                let row_base = r.u64()?;
+                let rng = r.rng_state()?;
+                let library = r.spectra("library spectrum")?;
+                let decoys = r.spectra("decoy spectrum")?;
+                Request::Program {
+                    cfg_toml,
+                    row_base,
+                    rng,
+                    library,
+                    decoys,
+                }
+            }
+            OP_SCORE => {
+                let cp = r.u32()?;
+                let n_meta = r.seq_len(9, "query meta")?;
+                let mut meta = Vec::with_capacity(n_meta);
+                for _ in 0..n_meta {
+                    meta.push((r.u8()?, r.f64()?));
+                }
+                let n_packed = r.seq_len(4, "packed element")?;
+                let mut packed = Vec::with_capacity(n_packed);
+                for _ in 0..n_packed {
+                    packed.push(r.f32()?);
+                }
+                // Checked arithmetic: a corrupt `cp` must produce a typed
+                // error, not a debug-build multiply overflow.
+                let want = (meta.len() as u64).checked_mul(cp as u64);
+                if want != Some(packed.len() as u64) {
+                    return Err(FrameError::BadPayload(format!(
+                        "{} packed elements for {} queries of width {cp}",
+                        packed.len(),
+                        meta.len()
+                    )));
+                }
+                Request::Score { cp, packed, meta }
+            }
+            OP_ADVANCE_AGE => Request::AdvanceAge(r.f64()?),
+            OP_CANDIDATES => Request::Candidates,
+            OP_REFRESH => {
+                let n = r.seq_len(9, "bucket key")?;
+                let mut keys = Vec::with_capacity(n);
+                for _ in 0..n {
+                    keys.push(r.bucket_key()?);
+                }
+                Request::Refresh(keys)
+            }
+            OP_HEALTH => Request::Health,
+            OP_SHUTDOWN => Request::Shutdown,
+            op => return Err(FrameError::BadOpcode(op)),
+        };
+        r.finish()?;
+        Ok(req)
+    }
+}
+
+/// Worker → supervisor messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    /// Shard programmed: the noise-RNG state after this shard (the chain
+    /// hand-off for the next shard), the one-time programming ops, and
+    /// the programmed row count.
+    Programmed {
+        rng: RngState,
+        ops: OpCounts,
+        n_refs: u64,
+    },
+    /// Batch scored: per-query `(best target, best decoy, matched
+    /// peptide)` triples plus the **chargeless** per-group candidate
+    /// counts — the coordinator merges groups across shards and charges
+    /// centrally (contract C2-CHARGE; tile rounding is non-linear across
+    /// shard splits).
+    Scored {
+        best: Vec<(f32, f32, Option<u32>)>,
+        charges: Vec<(Vec<BucketKey>, u64, u64)>,
+        health: DeviceHealth,
+    },
+    Aged,
+    CandidateList(Vec<(BucketKey, f64)>),
+    Refreshed {
+        buckets: u64,
+        rows: u64,
+        ops: OpCounts,
+    },
+    HealthReport(DeviceHealth),
+    ShuttingDown,
+    /// The worker caught a handler error; the supervisor treats this like
+    /// any other failed attempt (respawn + retry).
+    Error(String),
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            Response::Programmed { rng, ops, n_refs } => {
+                put_u8(&mut out, OP_PROGRAMMED);
+                put_rng_state(&mut out, rng);
+                put_op_counts(&mut out, ops);
+                put_u64(&mut out, *n_refs);
+            }
+            Response::Scored {
+                best,
+                charges,
+                health,
+            } => {
+                put_u8(&mut out, OP_SCORED);
+                put_u32(&mut out, best.len() as u32);
+                for &(t, d, m) in best {
+                    put_f32(&mut out, t);
+                    put_f32(&mut out, d);
+                    put_opt_u32(&mut out, m);
+                }
+                put_u32(&mut out, charges.len() as u32);
+                for (keys, nq, nc) in charges {
+                    put_u32(&mut out, keys.len() as u32);
+                    for k in keys {
+                        put_bucket_key(&mut out, k);
+                    }
+                    put_u64(&mut out, *nq);
+                    put_u64(&mut out, *nc);
+                }
+                put_health(&mut out, health);
+            }
+            Response::Aged => put_u8(&mut out, OP_AGED),
+            Response::CandidateList(cands) => {
+                put_u8(&mut out, OP_CANDIDATE_LIST);
+                put_u32(&mut out, cands.len() as u32);
+                for (k, age) in cands {
+                    put_bucket_key(&mut out, k);
+                    put_f64(&mut out, *age);
+                }
+            }
+            Response::Refreshed { buckets, rows, ops } => {
+                put_u8(&mut out, OP_REFRESHED);
+                put_u64(&mut out, *buckets);
+                put_u64(&mut out, *rows);
+                put_op_counts(&mut out, ops);
+            }
+            Response::HealthReport(h) => {
+                put_u8(&mut out, OP_HEALTH_REPORT);
+                put_health(&mut out, h);
+            }
+            Response::ShuttingDown => put_u8(&mut out, OP_SHUTTING_DOWN),
+            Response::Error(msg) => {
+                put_u8(&mut out, OP_ERROR);
+                put_str(&mut out, msg);
+            }
+        }
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Response, FrameError> {
+        let mut r = Reader::new(payload);
+        let resp = match r.u8()? {
+            OP_PROGRAMMED => Response::Programmed {
+                rng: r.rng_state()?,
+                ops: r.op_counts()?,
+                n_refs: r.u64()?,
+            },
+            OP_SCORED => {
+                let n_best = r.seq_len(9, "best triple")?;
+                let mut best = Vec::with_capacity(n_best);
+                for _ in 0..n_best {
+                    best.push((r.f32()?, r.f32()?, r.opt_u32()?));
+                }
+                let n_groups = r.seq_len(20, "charge group")?;
+                let mut charges = Vec::with_capacity(n_groups);
+                for _ in 0..n_groups {
+                    let n_keys = r.seq_len(9, "group key")?;
+                    let mut keys = Vec::with_capacity(n_keys);
+                    for _ in 0..n_keys {
+                        keys.push(r.bucket_key()?);
+                    }
+                    charges.push((keys, r.u64()?, r.u64()?));
+                }
+                Response::Scored {
+                    best,
+                    charges,
+                    health: r.health()?,
+                }
+            }
+            OP_AGED => Response::Aged,
+            OP_CANDIDATE_LIST => {
+                let n = r.seq_len(17, "staleness candidate")?;
+                let mut cands = Vec::with_capacity(n);
+                for _ in 0..n {
+                    cands.push((r.bucket_key()?, r.f64()?));
+                }
+                Response::CandidateList(cands)
+            }
+            OP_REFRESHED => Response::Refreshed {
+                buckets: r.u64()?,
+                rows: r.u64()?,
+                ops: r.op_counts()?,
+            },
+            OP_HEALTH_REPORT => Response::HealthReport(r.health()?),
+            OP_SHUTTING_DOWN => Response::ShuttingDown,
+            OP_ERROR => Response::Error(r.str()?),
+            op => return Err(FrameError::BadOpcode(op)),
+        };
+        r.finish()?;
+        Ok(resp)
+    }
+}
+
+/// Convert a [`RefreshOutcome`] into the wire's `Refreshed` fields.
+pub fn refreshed_of(out: &RefreshOutcome) -> Response {
+    Response::Refreshed {
+        buckets: out.buckets as u64,
+        rows: out.rows as u64,
+        ops: out.ops,
+    }
+}
+
+/// Convert a decoded `Refreshed` back into a [`RefreshOutcome`].
+pub fn outcome_of(buckets: u64, rows: u64, ops: OpCounts) -> RefreshOutcome {
+    RefreshOutcome {
+        buckets: buckets as usize,
+        rows: rows as usize,
+        ops,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spectrum(scan: u64) -> Spectrum {
+        Spectrum {
+            scan_id: scan,
+            precursor_mz: 512.75,
+            charge: 2,
+            peaks: vec![
+                Peak {
+                    mz: 101.25,
+                    intensity: 0.5,
+                },
+                Peak {
+                    mz: 230.0,
+                    intensity: 1.0,
+                },
+            ],
+            peptide_id: Some(7),
+            is_decoy: false,
+            mod_shift: -16.0,
+        }
+    }
+
+    fn round_trip_request(req: &Request) -> Request {
+        let mut pipe = Vec::new();
+        write_frame(&mut pipe, &req.encode()).unwrap();
+        let payload = read_frame(&mut pipe.as_slice()).unwrap().unwrap();
+        Request::decode(&payload).unwrap()
+    }
+
+    #[test]
+    fn request_round_trips_bit_exactly() {
+        let req = Request::Program {
+            cfg_toml: "hd_dim = 2048\n".into(),
+            row_base: 96,
+            rng: RngState {
+                s: [1, 2, 3, u64::MAX],
+                gauss_spare: Some(-0.25),
+            },
+            library: vec![spectrum(1), spectrum(2)],
+            decoys: vec![spectrum(3)],
+        };
+        match round_trip_request(&req) {
+            Request::Program {
+                cfg_toml,
+                row_base,
+                rng,
+                library,
+                decoys,
+            } => {
+                assert_eq!(cfg_toml, "hd_dim = 2048\n");
+                assert_eq!(row_base, 96);
+                assert_eq!(
+                    rng,
+                    RngState {
+                        s: [1, 2, 3, u64::MAX],
+                        gauss_spare: Some(-0.25)
+                    }
+                );
+                assert_eq!(library.len(), 2);
+                assert_eq!(library[0].scan_id, 1);
+                assert_eq!(library[0].peaks.len(), 2);
+                assert_eq!(library[0].peaks[1].mz, 230.0);
+                assert_eq!(library[0].peptide_id, Some(7));
+                assert_eq!(decoys[0].scan_id, 3);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+
+        let req = Request::Score {
+            cp: 2,
+            packed: vec![1.0, -2.0, 0.5, f32::NEG_INFINITY],
+            meta: vec![(2, 500.25), (3, 777.0)],
+        };
+        match round_trip_request(&req) {
+            Request::Score { cp, packed, meta } => {
+                assert_eq!(cp, 2);
+                // NEG_INFINITY must survive bitwise — scores merge on it.
+                assert_eq!(
+                    packed.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    [1.0f32, -2.0, 0.5, f32::NEG_INFINITY]
+                        .iter()
+                        .map(|x| x.to_bits())
+                        .collect::<Vec<_>>()
+                );
+                assert_eq!(meta, vec![(2, 500.25), (3, 777.0)]);
+            }
+            other => panic!("decoded {other:?}"),
+        }
+
+        match round_trip_request(&Request::AdvanceAge(3600.5)) {
+            Request::AdvanceAge(s) => assert_eq!(s, 3600.5),
+            other => panic!("decoded {other:?}"),
+        }
+        match round_trip_request(&Request::Refresh(vec![(2, -3), (3, 40)])) {
+            Request::Refresh(keys) => assert_eq!(keys, vec![(2, -3), (3, 40)]),
+            other => panic!("decoded {other:?}"),
+        }
+        assert!(matches!(
+            round_trip_request(&Request::Candidates),
+            Request::Candidates
+        ));
+        assert!(matches!(
+            round_trip_request(&Request::Health),
+            Request::Health
+        ));
+        assert!(matches!(
+            round_trip_request(&Request::Shutdown),
+            Request::Shutdown
+        ));
+    }
+
+    #[test]
+    fn response_round_trips_bit_exactly() {
+        let cases = vec![
+            Response::Programmed {
+                rng: RngState {
+                    s: [9, 8, 7, 6],
+                    gauss_spare: None,
+                },
+                ops: OpCounts {
+                    mvm_ops: 1,
+                    program_rounds: 2,
+                    verify_rounds: 3,
+                    row_reads: 4,
+                    encode_spectra: 5,
+                    features: 6,
+                    pack_elements: 7,
+                    merge_elements: 8,
+                },
+                n_refs: 360,
+            },
+            Response::Scored {
+                best: vec![
+                    (1.5, -0.25, Some(3)),
+                    (f32::NEG_INFINITY, f32::NEG_INFINITY, None),
+                ],
+                charges: vec![(vec![(2, 100), (2, 101)], 4, 250), (vec![(3, -1)], 1, 0)],
+                health: DeviceHealth {
+                    max_age_seconds: 10.0,
+                    est_conductance_loss: 0.01,
+                    injected_faults: 2,
+                    refreshes: 5,
+                },
+            },
+            Response::Aged,
+            Response::CandidateList(vec![((2, 7), 120.5), ((3, -2), 0.0)]),
+            Response::Refreshed {
+                buckets: 3,
+                rows: 17,
+                ops: OpCounts::default(),
+            },
+            Response::HealthReport(DeviceHealth::default()),
+            Response::ShuttingDown,
+            Response::Error("shard exploded".into()),
+        ];
+        for resp in cases {
+            let mut pipe = Vec::new();
+            write_frame(&mut pipe, &resp.encode()).unwrap();
+            let payload = read_frame(&mut pipe.as_slice()).unwrap().unwrap();
+            assert_eq!(Response::decode(&payload).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn clean_eof_at_frame_boundary_is_none() {
+        let mut empty: &[u8] = &[];
+        assert_eq!(read_frame(&mut empty).unwrap(), None);
+
+        // A complete frame followed by EOF: one Some, then None.
+        let mut pipe = Vec::new();
+        write_frame(&mut pipe, &Request::Health.encode()).unwrap();
+        let mut r = pipe.as_slice();
+        assert!(read_frame(&mut r).unwrap().is_some());
+        assert_eq!(read_frame(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn truncated_streams_are_typed_errors_not_panics() {
+        // EOF mid-prefix.
+        let mut r: &[u8] = &[5, 0];
+        assert_eq!(
+            read_frame(&mut r).unwrap_err(),
+            FrameError::Truncated {
+                expected: 4,
+                got: 2
+            }
+        );
+
+        // EOF mid-payload.
+        let mut pipe = Vec::new();
+        write_frame(&mut pipe, &Request::AdvanceAge(1.0).encode()).unwrap();
+        let cut = pipe.len() - 3;
+        let mut r = &pipe[..cut];
+        match read_frame(&mut r).unwrap_err() {
+            FrameError::Truncated { expected, got } => {
+                assert_eq!(expected, 9);
+                assert_eq!(got, 6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_length_and_oversized_frames_are_rejected() {
+        let zero = 0u32.to_le_bytes();
+        let mut r: &[u8] = &zero;
+        assert_eq!(read_frame(&mut r).unwrap_err(), FrameError::Empty);
+
+        // An oversized length prefix errors *before* allocating: the
+        // pipe holds only 4 bytes, so surviving this proves no 2 GiB
+        // buffer was attempted.
+        let huge = (MAX_FRAME + 1).to_le_bytes();
+        let mut r: &[u8] = &huge[..];
+        assert_eq!(
+            read_frame(&mut r).unwrap_err(),
+            FrameError::Oversized { len: MAX_FRAME + 1 }
+        );
+
+        assert_eq!(
+            write_frame(&mut Vec::new(), &[]).unwrap_err(),
+            FrameError::Empty
+        );
+    }
+
+    #[test]
+    fn corrupt_payloads_are_typed_errors_not_panics() {
+        // Unknown opcode.
+        assert_eq!(
+            Request::decode(&[0x44]).unwrap_err(),
+            FrameError::BadOpcode(0x44)
+        );
+        assert_eq!(
+            Response::decode(&[0x02]).unwrap_err(),
+            FrameError::BadOpcode(0x02)
+        );
+
+        // Underrun inside a field.
+        assert!(matches!(
+            Request::decode(&[OP_ADVANCE_AGE, 1, 2]).unwrap_err(),
+            FrameError::BadPayload(_)
+        ));
+
+        // A corrupt sequence count larger than the remaining payload is
+        // rejected before allocation.
+        let mut buf = vec![OP_REFRESH];
+        put_u32(&mut buf, u32::MAX);
+        assert!(matches!(
+            Request::decode(&buf).unwrap_err(),
+            FrameError::BadPayload(_)
+        ));
+
+        // Packed length inconsistent with nq * cp.
+        let mut buf = vec![OP_SCORE];
+        put_u32(&mut buf, 4); // cp
+        put_u32(&mut buf, 1); // one query
+        put_u8(&mut buf, 2);
+        put_f64(&mut buf, 500.0);
+        put_u32(&mut buf, 2); // but only 2 packed elements
+        put_f32(&mut buf, 1.0);
+        put_f32(&mut buf, 2.0);
+        assert!(matches!(
+            Request::decode(&buf).unwrap_err(),
+            FrameError::BadPayload(_)
+        ));
+
+        // Trailing garbage after a complete message.
+        let mut buf = Request::Health.encode();
+        buf.push(0);
+        assert!(matches!(
+            Request::decode(&buf).unwrap_err(),
+            FrameError::BadPayload(_)
+        ));
+
+        // Bad bool tag inside an Option.
+        let mut buf = vec![OP_PROGRAMMED];
+        for _ in 0..4 {
+            put_u64(&mut buf, 0);
+        }
+        put_u8(&mut buf, 7); // gauss_spare tag must be 0/1
+        assert!(matches!(
+            Response::decode(&buf).unwrap_err(),
+            FrameError::BadPayload(_)
+        ));
+
+        // Bit-flipped frames decode to *some* typed result, never panic:
+        // sweep every single-bit corruption of a small frame.
+        let good = Response::HealthReport(DeviceHealth::default()).encode();
+        for byte in 0..good.len() {
+            for bit in 0..8 {
+                let mut bad = good.clone();
+                bad[byte] ^= 1 << bit;
+                let _ = Response::decode(&bad); // must not panic
+            }
+        }
+    }
+}

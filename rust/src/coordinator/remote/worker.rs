@@ -1,0 +1,391 @@
+//! Shard worker: the request loop a `specpcm worker` process runs over
+//! its stdin/stdout pipes.
+//!
+//! The loop is generic over `Read`/`Write` so it unit-tests on in-memory
+//! byte pipes; the hidden CLI subcommand binds it to the real stdio. A
+//! worker owns exactly one [`SearchEngine`] shard, programmed from the
+//! supervisor's `Program` request — full config text, the shard's global
+//! row offset, and the **chained noise-RNG state** — so its stored
+//! conductances are bit-identical to the corresponding in-process shard,
+//! and the state it hands back lets the supervisor chain the next shard
+//! (or respawn this one) bit-identically.
+//!
+//! Error discipline: anything recoverable — a malformed payload, an
+//! engine error, a request before `Program` — becomes a
+//! [`Response::Error`] frame and the loop continues; the supervisor
+//! decides what to do. Only a lost framing layer (truncated/oversized
+//! frame on the request pipe) or a dead response pipe exits the process,
+//! because no further request boundary can be trusted. The worker never
+//! writes anything to its stdout except response frames.
+
+use std::io::{Read, Write};
+
+use crate::backend::BackendDispatcher;
+use crate::config::SpecPcmConfig;
+use crate::ms::{SearchDataset, Spectrum};
+use crate::util::error::Result;
+use crate::util::Rng;
+
+use super::super::engine::SearchEngine;
+use super::wire::{self, Request, Response};
+
+/// Dataset label of every remote shard (datasets carry a `&'static str`
+/// name; the real name lives with the supervisor, not the shard).
+const SHARD_DATASET_NAME: &str = "remote-shard";
+
+struct WorkerState {
+    engine: SearchEngine,
+    backend: BackendDispatcher,
+}
+
+/// Serve requests until `Shutdown`, clean EOF, or a fatal wire failure.
+pub fn run_worker<R: Read, W: Write>(input: &mut R, output: &mut W) -> Result<()> {
+    let mut state: Option<WorkerState> = None;
+    loop {
+        let payload = match wire::read_frame(input) {
+            Ok(Some(p)) => p,
+            // Clean EOF at a frame boundary: the supervisor dropped the
+            // pipe (its own shutdown path); exit without complaint.
+            Ok(None) => return Ok(()),
+            Err(e) => {
+                // The request framing is lost — no later byte can be
+                // trusted as a boundary. Best-effort error frame, then
+                // exit.
+                let _ = wire::write_frame(output, &Response::Error(format!("request frame: {e}")).encode());
+                return Err(e.into());
+            }
+        };
+        let (resp, shutdown) = match Request::decode(&payload) {
+            Ok(Request::Shutdown) => (Response::ShuttingDown, true),
+            Ok(req) => (handle(&mut state, req), false),
+            // Framing held but the payload is corrupt: report and keep
+            // serving — the next frame is still well-delimited.
+            Err(e) => (Response::Error(format!("bad request: {e}")), false),
+        };
+        wire::write_frame(output, &resp.encode())?;
+        if shutdown {
+            return Ok(());
+        }
+    }
+}
+
+/// Dispatch one decoded request. Every failure becomes `Response::Error`
+/// — a worker must never panic on wire-supplied data.
+fn handle(state: &mut Option<WorkerState>, req: Request) -> Response {
+    match req {
+        Request::Program {
+            cfg_toml,
+            row_base,
+            rng,
+            library,
+            decoys,
+        } => {
+            let cfg = match SpecPcmConfig::from_toml(&cfg_toml) {
+                Ok(c) => c,
+                Err(e) => return Response::Error(format!("config: {e}")),
+            };
+            let dataset = SearchDataset {
+                name: SHARD_DATASET_NAME,
+                library,
+                decoys,
+                queries: Vec::new(),
+                identifiable_fraction: 0.0,
+                paper_queries: 0,
+                paper_library: 0,
+            };
+            let backend = BackendDispatcher::from_config(&cfg);
+            let mut engine = match SearchEngine::program_with_rng(
+                cfg,
+                &dataset,
+                &backend,
+                Rng::from_state(rng),
+            ) {
+                Ok(e) => e,
+                Err(e) => return Response::Error(format!("program: {e}")),
+            };
+            engine.set_row_base(row_base as usize);
+            let resp = Response::Programmed {
+                rng: engine.noise_rng_state().state(),
+                ops: *engine.program_ops(),
+                n_refs: engine.n_refs() as u64,
+            };
+            *state = Some(WorkerState { engine, backend });
+            resp
+        }
+        Request::Score { cp, packed, meta } => {
+            let Some(ws) = state.as_ref() else {
+                return Response::Error("score before program".into());
+            };
+            if cp as usize != ws.engine.packed_width() {
+                return Response::Error(format!(
+                    "packed width {cp} != shard width {}",
+                    ws.engine.packed_width()
+                ));
+            }
+            // Candidate selection reads only (charge, precursor_mz);
+            // rebuild minimal spectra around the wire meta — the peak
+            // data already lives inside the packed HVs.
+            let specs: Vec<Spectrum> = meta
+                .iter()
+                .map(|&(charge, precursor_mz)| Spectrum {
+                    scan_id: 0,
+                    precursor_mz,
+                    charge,
+                    peaks: Vec::new(),
+                    peptide_id: None,
+                    is_decoy: false,
+                    mod_shift: 0.0,
+                })
+                .collect();
+            let refs: Vec<&Spectrum> = specs.iter().collect();
+            match ws.engine.score_packed(&refs, &packed, &ws.backend) {
+                Ok(scored) => Response::Scored {
+                    best: scored.best,
+                    charges: scored
+                        .charges
+                        .entries()
+                        .map(|(keys, nq, nc)| (keys.to_vec(), nq as u64, nc as u64))
+                        .collect(),
+                    health: ws.engine.device_health(),
+                },
+                Err(e) => Response::Error(format!("score: {e}")),
+            }
+        }
+        Request::AdvanceAge(seconds) => {
+            let Some(ws) = state.as_mut() else {
+                return Response::Error("advance-age before program".into());
+            };
+            // `advance_age` asserts on bad durations; wire data must turn
+            // into a typed response instead.
+            if !(seconds.is_finite() && seconds >= 0.0) {
+                return Response::Error(format!(
+                    "advance-age: {seconds} is not a finite non-negative duration"
+                ));
+            }
+            ws.engine.advance_age(seconds);
+            Response::Aged
+        }
+        Request::Candidates => match state.as_ref() {
+            Some(ws) => Response::CandidateList(ws.engine.refresh_candidates()),
+            None => Response::Error("candidates before program".into()),
+        },
+        Request::Refresh(keys) => match state.as_mut() {
+            Some(ws) => wire::refreshed_of(&ws.engine.refresh_buckets(&keys)),
+            None => Response::Error("refresh before program".into()),
+        },
+        Request::Health => match state.as_ref() {
+            Some(ws) => Response::HealthReport(ws.engine.device_health()),
+            None => Response::Error("health before program".into()),
+        },
+        // Handled by the loop before dispatch.
+        Request::Shutdown => Response::ShuttingDown,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::super::engine::ProgramContext;
+    use super::*;
+    use crate::ms::SearchDataset;
+
+    fn small_cfg() -> SpecPcmConfig {
+        SpecPcmConfig {
+            hd_dim: 2048,
+            bucket_width: 5.0,
+            num_banks: 64,
+            ..SpecPcmConfig::paper_search()
+        }
+    }
+
+    /// Encode requests into one byte pipe, run the worker loop over it,
+    /// and decode every response frame.
+    fn drive(requests: &[Request]) -> Vec<Response> {
+        let mut input = Vec::new();
+        for req in requests {
+            wire::write_frame(&mut input, &req.encode()).unwrap();
+        }
+        let mut output = Vec::new();
+        run_worker(&mut input.as_slice(), &mut output).unwrap();
+        let mut out = Vec::new();
+        let mut r = output.as_slice();
+        while let Some(payload) = wire::read_frame(&mut r).unwrap() {
+            out.push(Response::decode(&payload).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn worker_loop_matches_in_process_engine_bitwise() {
+        let cfg = small_cfg();
+        let ds = SearchDataset::generate("t", 41, 30, 8, 0.8, 0.2, 0, 0);
+        let be = BackendDispatcher::reference();
+
+        // In-process oracle.
+        let oracle = SearchEngine::program(cfg.clone(), &ds, &be).unwrap();
+        let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+        let (packed, _) = oracle.encode_queries(&queries, &be).unwrap();
+        let want = oracle.score_packed(&queries, &packed, &be).unwrap();
+
+        // The same work over the wire.
+        let rng0 = ProgramContext::noise_rng(&cfg, ProgramContext::SEARCH_SEED_TAG).state();
+        let meta: Vec<(u8, f64)> =
+            queries.iter().map(|q| (q.charge, q.precursor_mz)).collect();
+        let responses = drive(&[
+            Request::Program {
+                cfg_toml: cfg.to_toml(),
+                row_base: 0,
+                rng: rng0,
+                library: ds.library.clone(),
+                decoys: ds.decoys.clone(),
+            },
+            Request::Score {
+                cp: oracle.packed_width() as u32,
+                packed: packed.clone(),
+                meta,
+            },
+            Request::Health,
+            Request::Shutdown,
+        ]);
+        assert_eq!(responses.len(), 4);
+
+        match &responses[0] {
+            Response::Programmed { rng, ops, n_refs } => {
+                assert_eq!(*rng, oracle.noise_rng_state().state());
+                assert_eq!(*ops, *oracle.program_ops());
+                assert_eq!(*n_refs, oracle.n_refs() as u64);
+            }
+            other => panic!("{other:?}"),
+        }
+        match &responses[1] {
+            Response::Scored {
+                best,
+                charges,
+                health,
+            } => {
+                assert_eq!(best.len(), want.best.len());
+                for (got, want) in best.iter().zip(&want.best) {
+                    assert_eq!(got.0.to_bits(), want.0.to_bits());
+                    assert_eq!(got.1.to_bits(), want.1.to_bits());
+                    assert_eq!(got.2, want.2);
+                }
+                let want_charges: Vec<(Vec<_>, u64, u64)> = want
+                    .charges
+                    .entries()
+                    .map(|(k, nq, nc)| (k.to_vec(), nq as u64, nc as u64))
+                    .collect();
+                assert_eq!(*charges, want_charges);
+                assert_eq!(*health, oracle.device_health());
+            }
+            other => panic!("{other:?}"),
+        }
+        assert_eq!(responses[2], Response::HealthReport(oracle.device_health()));
+        assert_eq!(responses[3], Response::ShuttingDown);
+    }
+
+    #[test]
+    fn requests_before_program_are_typed_errors() {
+        let responses = drive(&[
+            Request::Score {
+                cp: 4,
+                packed: vec![0.0; 4],
+                meta: vec![(2, 500.0)],
+            },
+            Request::Candidates,
+            Request::Health,
+            Request::AdvanceAge(1.0),
+            Request::Refresh(vec![(2, 1)]),
+            Request::Shutdown,
+        ]);
+        assert_eq!(responses.len(), 6);
+        for resp in &responses[..5] {
+            assert!(
+                matches!(resp, Response::Error(msg) if msg.contains("before program")),
+                "{resp:?}"
+            );
+        }
+        assert_eq!(responses[5], Response::ShuttingDown);
+    }
+
+    #[test]
+    fn bad_wire_data_is_reported_never_panics() {
+        let cfg = small_cfg();
+        let ds = SearchDataset::generate("t", 42, 10, 2, 0.8, 0.2, 0, 0);
+        let rng0 = ProgramContext::noise_rng(&cfg, ProgramContext::SEARCH_SEED_TAG).state();
+        let program = Request::Program {
+            cfg_toml: cfg.to_toml(),
+            row_base: 0,
+            rng: rng0,
+            library: ds.library.clone(),
+            decoys: ds.decoys.clone(),
+        };
+        let responses = drive(&[
+            Request::Program {
+                cfg_toml: "mlc_bits = 99\n".into(),
+                row_base: 0,
+                rng: rng0,
+                library: Vec::new(),
+                decoys: Vec::new(),
+            },
+            program,
+            // Wrong packed width for this shard.
+            Request::Score {
+                cp: 4,
+                packed: vec![0.0; 4],
+                meta: vec![(2, 500.0)],
+            },
+            // Engine would assert on these; the worker must type them out.
+            Request::AdvanceAge(f64::NAN),
+            Request::AdvanceAge(-1.0),
+            Request::Shutdown,
+        ]);
+        assert!(matches!(&responses[0], Response::Error(m) if m.contains("config")));
+        assert!(matches!(&responses[1], Response::Programmed { .. }));
+        assert!(matches!(&responses[2], Response::Error(m) if m.contains("width")));
+        assert!(matches!(&responses[3], Response::Error(m) if m.contains("finite")));
+        assert!(matches!(&responses[4], Response::Error(m) if m.contains("finite")));
+        assert_eq!(responses[5], Response::ShuttingDown);
+    }
+
+    #[test]
+    fn corrupt_request_payload_keeps_the_loop_alive() {
+        // A well-framed but undecodable payload: the worker reports it
+        // and keeps serving the next frame.
+        let mut input = Vec::new();
+        wire::write_frame(&mut input, &[0x42, 1, 2, 3]).unwrap();
+        wire::write_frame(&mut input, &Request::Health.encode()).unwrap();
+        wire::write_frame(&mut input, &Request::Shutdown.encode()).unwrap();
+        let mut output = Vec::new();
+        run_worker(&mut input.as_slice(), &mut output).unwrap();
+
+        let mut r = output.as_slice();
+        let mut responses = Vec::new();
+        while let Some(p) = wire::read_frame(&mut r).unwrap() {
+            responses.push(Response::decode(&p).unwrap());
+        }
+        assert_eq!(responses.len(), 3);
+        assert!(matches!(&responses[0], Response::Error(m) if m.contains("bad request")));
+        // Health before program — still a typed response, loop alive.
+        assert!(matches!(&responses[1], Response::Error(_)));
+        assert_eq!(responses[2], Response::ShuttingDown);
+    }
+
+    #[test]
+    fn truncated_request_stream_is_a_fatal_typed_error() {
+        let mut input = Vec::new();
+        wire::write_frame(&mut input, &Request::Health.encode()).unwrap();
+        // A second frame cut off mid-payload.
+        let mut second = Vec::new();
+        wire::write_frame(&mut second, &Request::Shutdown.encode()).unwrap();
+        input.extend_from_slice(&second[..second.len() - 1]);
+
+        let mut output = Vec::new();
+        let err = run_worker(&mut input.as_slice(), &mut output).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // The worker still flagged the failure on its response pipe.
+        let mut r = output.as_slice();
+        let first = Response::decode(&wire::read_frame(&mut r).unwrap().unwrap()).unwrap();
+        assert!(matches!(first, Response::Error(_)));
+        let last = Response::decode(&wire::read_frame(&mut r).unwrap().unwrap()).unwrap();
+        assert!(matches!(last, Response::Error(m) if m.contains("request frame")));
+    }
+}

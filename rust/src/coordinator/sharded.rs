@@ -72,8 +72,8 @@ use crate::util::error::{Error, Result};
 
 use super::allocator::SegmentAllocator;
 use super::engine::{
-    chunk_ranges, fold_batches, BatchOutcome, CapacityError, GroupCharges, ProgramContext,
-    RefreshOutcome, RefreshPolicy, SearchEngine, ServingCost,
+    chunk_ranges, fold_batches, BatchOutcome, CapacityError, Coverage, GroupCharges,
+    ProgramContext, RefreshOutcome, RefreshPolicy, SearchEngine, ServingCost,
 };
 use super::pipeline::SearchOutcomeSummary;
 
@@ -463,6 +463,9 @@ impl ShardedSearchEngine {
             report,
             cache: batch_cache,
             health: self.device_health(),
+            coverage: Coverage::full(self.n_refs() as u64),
+            retries: 0,
+            degraded_shards: 0,
             wall,
         })
     }

@@ -45,7 +45,7 @@
 //! suites in `rust/tests/` enforce it dynamically; the contract linter
 //! (`python3 python/tools/lint_contracts.py`, run in CI as the
 //! `Contract lint` step) rejects the code shapes that historically broke
-//! it *statically*. Five rules, each with a per-line allowlist marker
+//! it *statically*. Six rules, each with a per-line allowlist marker
 //! `// lint: <tag>-ok (<reason>)` and an `--explain RULE` mode:
 //!
 //! * **C1-REASSOC — float-accumulation discipline.** Every f32 sum on
@@ -84,6 +84,15 @@
 //!   exception must carry a `// SAFETY:` comment. Backed by the
 //!   allowed-to-fail nightly Miri CI step over the `array`/`hd` kernel
 //!   tests.
+//! * **C6-TIME — logical-clock discipline.** No `std::time`
+//!   (`Instant`/`SystemTime`) in `rust/src` non-test code: serving
+//!   behavior — deadlines, backoff, refresh scheduling, drift — runs on
+//!   the deterministic logical clock (`SearchEngine::advance_age`, the
+//!   front door's tick stream, the remote supervisor's attempt clock) so
+//!   traces and fault schedules replay tick-for-tick. Wall time is
+//!   host-side *telemetry* only (`StageTimer`, benches). Backed by the
+//!   zero-wall-clock chaos schedules in `worker_fault_tolerance.rs` and
+//!   the replay determinism asserts in `scheduler_equivalence.rs`.
 
 // The deny wall is deliberately conservative: lints that are true today
 // and must stay true, not aspirational style lints. C5-UNSAFE (above)

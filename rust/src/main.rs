@@ -15,8 +15,9 @@ use specpcm::baselines::latency_model;
 use specpcm::cluster::quality::clustered_at_incorrect;
 use specpcm::config::{SpecPcmConfig, Task};
 use specpcm::coordinator::{
-    tile_fill_target, ArrivalTrace, BatchOutcome, ClusteringPipeline, CoalescePolicy, FrontDoor,
-    RefreshPolicy, SearchEngine, SearchPipeline, ServeEngine, ShardPlan, ShardedSearchEngine,
+    tile_fill_target, ArrivalTrace, BatchOutcome, ChaosPlan, ClusteringPipeline, CoalescePolicy,
+    FrontDoor, RefreshPolicy, RemoteEngine, SearchEngine, SearchPipeline, ServeEngine, ShardPlan,
+    ShardedSearchEngine,
 };
 use specpcm::encode::EncodeKind;
 use specpcm::energy::area_breakdown;
@@ -35,7 +36,8 @@ USAGE:
   specpcm search  [--dataset iprg2012|hek293]     [--scale F] [--config FILE]
                   [--backend ref|parallel|pjrt] [--threads N] [--num-banks N]
                   [--encode-backend scalar|bitpacked|parallel]
-                  [--serve-batches N] [--shards N|auto] [--no-artifacts]
+                  [--serve-batches N] [--shards N|auto] [--workers N|auto]
+                  [--no-artifacts]
                   [--age-seconds T] [--refresh-age A] [--refresh-budget N]
                   [--coalesce size|deadline|off] [--max-batch N]
                   [--deadline-ticks N] [--trace-seed N]
@@ -94,6 +96,21 @@ SHARDING:
                       'auto' (the default) computes the minimum shard
                       count from the capacity pre-flight, so the full
                       presets run at --scale 1.0 without shrinking.
+
+REMOTE WORKERS:
+  --workers N|auto    like --shards, but each shard lives in its own
+                      supervised worker *process* (this binary re-exec'd,
+                      stdin/stdout wire protocol): per-request deadlines,
+                      bounded retries with exponential backoff, circuit
+                      breakers, and bit-identical respawn — all on the
+                      deterministic logical clock. A shard down past its
+                      retry budget degrades the batch to partial coverage
+                      instead of failing it. With no faults, results and
+                      op counts are bit-identical to --shards. Tuned by
+                      the [remote] config section (deadline_ticks,
+                      retries, backoff_base_ticks, breaker_threshold).
+                      Mutually exclusive with --shards (remote serving
+                      plans its own shard-per-worker split).
 
 CAPACITY:
   The engine places every reference HV on a physical bank row; at the
@@ -226,6 +243,7 @@ fn known_flags(cmd: &str) -> Vec<&'static str> {
             "scale",
             "serve-batches",
             "shards",
+            "workers",
             "age-seconds",
             "refresh-age",
             "refresh-budget",
@@ -488,6 +506,21 @@ fn cmd_search(args: &Args) -> Result<()> {
         !(coalesce.active() && args.has("serve-batches")),
         "--serve-batches and --coalesce are mutually exclusive serving modes"
     );
+    let workers: Option<usize> = match args.flags.get("workers") {
+        None => None,
+        Some(w) if w == "auto" => Some(0),
+        Some(w) => Some(w.parse().map_err(|_| {
+            Error::msg(format!("--workers: '{w}' is not a worker count or 'auto'"))
+        })?),
+    };
+    // Resolution order is explicit, not positional: remote serving plans
+    // its own shard-per-worker split, so any --shards (even 'auto') next
+    // to --workers is a conflict, never a silently ignored flag.
+    specpcm::ensure!(
+        workers.is_none() || !args.has("shards"),
+        "--workers and --shards are mutually exclusive: remote serving plans its own \
+         shard-per-worker split (drop --shards, including --shards auto)"
+    );
     let ds = match dataset.as_str() {
         "iprg2012" => SearchDataset::iprg2012_like(cfg.seed, scale),
         "hek293" => SearchDataset::hek293_like(cfg.seed, scale),
@@ -501,6 +534,9 @@ fn cmd_search(args: &Args) -> Result<()> {
         0 if drift.active() || coalesce.active() => 1,
         n => n,
     };
+    if let Some(n_workers) = workers {
+        return cmd_search_remote(cfg, &ds, &backend, n_workers, n_batches, &drift, &coalesce);
+    }
     let plan = ShardPlan::for_capacity(
         &cfg,
         ds.library.len(),
@@ -651,6 +687,132 @@ fn cmd_search_sharded(
         fdr * 100.0,
         out.correct,
         engine.total_banks()
+    );
+    Ok(())
+}
+
+/// `--workers N|auto`: serve the shard plan through supervised worker
+/// processes (this binary re-exec'd under the hidden `worker`
+/// subcommand) instead of in-process threads. Same report shape as the
+/// sharded path, plus the supervision counters and the batch coverage —
+/// a degraded batch prints its surviving row fraction instead of
+/// failing.
+fn cmd_search_remote(
+    cfg: SpecPcmConfig,
+    ds: &SearchDataset,
+    backend: &BackendDispatcher,
+    n_workers: usize,
+    n_batches: usize,
+    drift: &DriftOpts,
+    co: &CoalesceOpts,
+) -> Result<()> {
+    let fdr = cfg.fdr;
+    let seed = cfg.seed;
+    let remote_cfg = cfg.remote;
+    let exe = std::env::current_exe().map_err(|e| {
+        Error::msg(format!("cannot locate the serving binary to spawn workers: {e}"))
+    })?;
+    let mut engine = RemoteEngine::program(cfg, ds, n_workers, exe, ChaosPlan::none())?;
+    println!(
+        "remote workers: {} reference rows across {} worker processes; rows/worker: {:?}",
+        engine.n_refs(),
+        engine.n_shards(),
+        engine
+            .plan()
+            .ranges()
+            .iter()
+            .map(|r| r.len())
+            .collect::<Vec<_>>()
+    );
+    println!(
+        "supervision: deadline {} ticks, {} retries, backoff base {} ticks, \
+         breaker at {} consecutive failures",
+        remote_cfg.deadline_ticks,
+        remote_cfg.retries,
+        remote_cfg.backoff_base_ticks,
+        remote_cfg.breaker_threshold
+    );
+    let prog = *engine.program_report();
+    println!(
+        "programmed once over the wire: {:.4} mJ, {:.4} ms ({} program rounds)",
+        prog.total_j() * 1e3,
+        prog.total_latency_s() * 1e3,
+        engine.program_ops().program_rounds
+    );
+    if drift.age_seconds > 0.0 {
+        engine.advance_age(drift.age_seconds);
+        println!("aged the library {:.3e} s before serving", drift.age_seconds);
+    }
+    if let Some(policy) = &drift.refresh {
+        let r = engine.maintain(policy);
+        println!(
+            "refresh epoch (age > {:.3e} s, budget {}): {} rows in {} bucket \
+             segments re-programmed ({} program rounds, one-time ledger)",
+            policy.max_age_seconds, policy.budget, r.rows, r.buckets, r.ops.program_rounds
+        );
+    }
+    if drift.active() {
+        print_health(&engine.device_health());
+    }
+
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let outcomes = if let Some(policy) = co.policy {
+        serve_front_door(
+            &mut engine,
+            policy,
+            co.trace_seed.unwrap_or(seed),
+            &queries,
+            backend,
+            drift.refresh,
+        )?
+    } else {
+        engine.serve_chunked(&queries, n_batches.max(1), backend)?
+    };
+
+    let stats = engine.worker_stats();
+    println!(
+        "workers: {}/{} up, {} respawns, {} retries, {} degraded batches, {} breakers open",
+        stats.workers_up,
+        stats.workers,
+        stats.respawns,
+        stats.retries,
+        stats.degraded_batches,
+        stats.breakers_open
+    );
+    // Partial answers must be visible, never silent (graceful
+    // degradation contract): report the worst batch's coverage.
+    match outcomes
+        .iter()
+        .map(|o| o.coverage)
+        .min_by(|a, b| a.fraction().total_cmp(&b.fraction()))
+    {
+        Some(worst) if !worst.is_full() => println!(
+            "coverage: DEGRADED — worst batch searched {}/{} rows ({:.1}%)",
+            worst.rows_searched,
+            worst.rows_total,
+            worst.fraction() * 100.0
+        ),
+        Some(worst) => println!("coverage: full ({} rows) on every batch", worst.rows_total),
+        None => {}
+    }
+
+    let cost = engine.serving_cost(&outcomes);
+    println!(
+        "energy:  one-time {:.4} mJ | marginal total {:.4} mJ | amortized/batch {:.4} mJ",
+        cost.one_time_j * 1e3,
+        cost.marginal_j * 1e3,
+        cost.amortized_j_per_batch() * 1e3
+    );
+
+    let out = engine.finalize(&queries, &outcomes)?;
+    println!(
+        "identified {}/{} queries at {:.0}% FDR ({} correct) — bit-identical to \
+         --shards {} when no worker faulted",
+        out.identified,
+        out.total_queries,
+        fdr * 100.0,
+        out.correct,
+        engine.n_shards()
     );
     Ok(())
 }
@@ -825,7 +987,7 @@ fn run(argv: &[String]) -> Result<()> {
     };
     let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
-        "cluster" | "search" | "info" | "config" | "isa" => {
+        "cluster" | "search" | "info" | "config" | "isa" | "worker" => {
             args.check_known(cmd, &known_flags(cmd))?
         }
         _ => {}
@@ -833,6 +995,15 @@ fn run(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "cluster" => cmd_cluster(&args)?,
         "search" => cmd_search(&args)?,
+        // Hidden: the remote supervisor re-execs this binary as `specpcm
+        // worker` and owns both stdio pipes — stdout is the wire, so the
+        // worker loop never prints. Not in USAGE on purpose.
+        "worker" => {
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            // lint: sync-ok (StdinLock/StdoutLock are stdio handles, not poisonable Mutex guards)
+            specpcm::coordinator::remote::run_worker(&mut stdin.lock(), &mut stdout.lock())?;
+        }
         "info" => cmd_info(),
         "config" => {
             let cfg = match args.positional.first().map(String::as_str).unwrap_or("clustering") {
@@ -1133,6 +1304,69 @@ mod tests {
         let a = Args::parse(&argv(&["--scale", "1.0"])).unwrap();
         let err = a.check_known("info", &known_flags("info")).unwrap_err();
         assert!(err.to_string().contains("takes no flags"), "{err}");
+    }
+
+    #[test]
+    fn workers_flag_is_serve_scoped_and_excludes_shards() {
+        // --workers belongs to search; a non-serving command rejects it
+        // as unknown (exit 2 via main's error path).
+        let a = Args::parse(&argv(&["--workers", "2"])).unwrap();
+        let err = a.check_known("cluster", &known_flags("cluster")).unwrap_err();
+        assert!(err.to_string().contains("--workers"), "{err}");
+        assert!(a.check_known("search", &known_flags("search")).is_ok());
+        let err = run(&argv(&["info", "--workers", "2"])).unwrap_err();
+        assert!(err.to_string().contains("takes no flags"), "{err}");
+
+        // Malformed counts report typed errors before any dataset work.
+        let err = run(&argv(&["search", "--workers", "banana"])).unwrap_err();
+        assert!(err.to_string().contains("--workers"), "{err}");
+        let err = run(&argv(&["search", "--workers", "-1"])).unwrap_err();
+        assert!(err.to_string().contains("--workers"), "{err}");
+
+        // Resolution order is explicit: --shards next to --workers is a
+        // conflict even in its 'auto' spelling, never silently ignored.
+        for shards in ["auto", "4"] {
+            let err =
+                run(&argv(&["search", "--workers", "2", "--shards", shards])).unwrap_err();
+            assert!(err.to_string().contains("mutually exclusive"), "{err}");
+        }
+        // The hidden worker subcommand takes no flags.
+        let err = run(&argv(&["worker", "--workers", "2"])).unwrap_err();
+        assert!(err.to_string().contains("takes no flags"), "{err}");
+    }
+
+    #[test]
+    fn invalid_remote_config_values_are_typed_errors() {
+        // A config file with a broken [remote] section fails in load_cfg
+        // (typed error -> exit 2), long before any worker spawns.
+        let dir = std::env::temp_dir();
+        for (i, (key, val)) in [
+            ("deadline_ticks", "0"),
+            ("retries", "-1"),
+            ("backoff_base_ticks", "0"),
+            ("breaker_threshold", "0"),
+            ("deadline_ticks", "1.5"),
+        ]
+        .iter()
+        .enumerate()
+        {
+            let path = dir.join(format!(
+                "specpcm_remote_cfg_{}_{i}.toml",
+                std::process::id()
+            ));
+            let text = format!("task = \"search\"\n[remote]\n{key} = {val}\n");
+            std::fs::write(&path, text).unwrap();
+            let err = run(&argv(&[
+                "search",
+                "--config",
+                path.to_str().unwrap(),
+                "--workers",
+                "2",
+            ]))
+            .unwrap_err();
+            assert!(err.to_string().contains(key), "{key}={val}: {err}");
+            let _ = std::fs::remove_file(&path);
+        }
     }
 
     #[test]

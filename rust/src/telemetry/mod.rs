@@ -2,6 +2,7 @@
 //! the pipelines, benches and the CLI.
 
 use std::collections::BTreeMap;
+// lint: time-ok (StageTimer is host wall-time telemetry, never results-affecting)
 use std::time::Instant;
 
 /// Query-HV cache hit/miss counters (the engine's encode cache; see
@@ -169,6 +170,58 @@ impl FrontDoorStats {
             self.refreshed_rows
         )
     }
+
+    /// Fold another trace's stats in, so multi-flush / multi-trace serving
+    /// (the remote supervisor's per-epoch segments) aggregates to one
+    /// panel. Event counters sum; occupancy/latency extrema take the max.
+    /// Percentiles cannot be re-derived without the raw waits, so the
+    /// merged p50/p99 are the max over segments — a deliberately
+    /// conservative (pessimistic) bound, same spirit as
+    /// [`DeviceHealth::merge`] letting the stalest segment dominate.
+    /// `mean_fill_fraction` is re-weighted by each side's batch count so
+    /// the merged mean equals the mean over all flushed batches.
+    pub fn merge(&mut self, other: &FrontDoorStats) {
+        let total_batches = self.batches + other.batches;
+        if total_batches > 0 {
+            self.mean_fill_fraction = (self.mean_fill_fraction * self.batches as f64
+                + other.mean_fill_fraction * other.batches as f64)
+                / total_batches as f64;
+        }
+        self.requests += other.requests;
+        self.batches = total_batches;
+        self.size_flushes += other.size_flushes;
+        self.deadline_flushes += other.deadline_flushes;
+        self.backpressure_flushes += other.backpressure_flushes;
+        self.drain_flushes += other.drain_flushes;
+        self.max_queue_depth = self.max_queue_depth.max(other.max_queue_depth);
+        self.fill_target = self.fill_target.max(other.fill_target);
+        self.p50_wait_ticks = self.p50_wait_ticks.max(other.p50_wait_ticks);
+        self.p99_wait_ticks = self.p99_wait_ticks.max(other.p99_wait_ticks);
+        self.max_wait_ticks = self.max_wait_ticks.max(other.max_wait_ticks);
+        self.maintain_calls += other.maintain_calls;
+        self.refreshed_rows += other.refreshed_rows;
+    }
+}
+
+impl std::ops::AddAssign<&FrontDoorStats> for FrontDoorStats {
+    fn add_assign(&mut self, rhs: &FrontDoorStats) {
+        self.merge(rhs);
+    }
+}
+
+impl std::ops::AddAssign for FrontDoorStats {
+    fn add_assign(&mut self, rhs: Self) {
+        self.merge(&rhs);
+    }
+}
+
+impl std::iter::Sum for FrontDoorStats {
+    fn sum<I: Iterator<Item = FrontDoorStats>>(iter: I) -> FrontDoorStats {
+        iter.fold(FrontDoorStats::default(), |mut acc, s| {
+            acc.merge(&s);
+            acc
+        })
+    }
 }
 
 /// Nearest-rank percentile over a **sorted ascending** slice; `p` in
@@ -197,6 +250,7 @@ impl StageTimer {
 
     /// Time a closure under a stage name (accumulates across calls).
     pub fn time<T>(&mut self, stage: &str, f: impl FnOnce() -> T) -> T {
+        // lint: time-ok (stage breakdown is host telemetry; results never read it)
         let t0 = Instant::now();
         let out = f();
         self.add(stage, t0.elapsed().as_secs_f64());
@@ -381,6 +435,97 @@ mod tests {
         assert_eq!(m.refreshes, 5);
 
         let folded: DeviceHealth = [a, b, DeviceHealth::default()].into_iter().sum();
+        assert_eq!(folded, m);
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // Empty slice: the front door's "no requests" case is 0, not a panic.
+        assert_eq!(percentile_u64(&[], 0.0), 0);
+        assert_eq!(percentile_u64(&[], 0.5), 0);
+        assert_eq!(percentile_u64(&[], 1.0), 0);
+
+        // Single element: every percentile is that element.
+        for p in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile_u64(&[7], p), 7, "p={p}");
+        }
+
+        // All-equal values: rank arithmetic can't matter.
+        let eq = [5u64; 9];
+        for p in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(percentile_u64(&eq, p), 5, "p={p}");
+        }
+
+        // p=0 is the minimum, p=1 the maximum; out-of-range p clamps.
+        let sorted = [1u64, 2, 3, 4, 100];
+        assert_eq!(percentile_u64(&sorted, 0.0), 1);
+        assert_eq!(percentile_u64(&sorted, 1.0), 100);
+        assert_eq!(percentile_u64(&sorted, -3.0), 1);
+        assert_eq!(percentile_u64(&sorted, 2.0), 100);
+        // Nearest-rank median of five.
+        assert_eq!(percentile_u64(&sorted, 0.5), 3);
+    }
+
+    #[test]
+    fn front_door_stats_merge_across_flush_batches() {
+        let a = FrontDoorStats {
+            requests: 100,
+            batches: 4,
+            size_flushes: 3,
+            deadline_flushes: 1,
+            backpressure_flushes: 0,
+            drain_flushes: 0,
+            max_queue_depth: 9,
+            fill_target: 128,
+            mean_fill_fraction: 0.5,
+            p50_wait_ticks: 2,
+            p99_wait_ticks: 10,
+            max_wait_ticks: 12,
+            maintain_calls: 2,
+            refreshed_rows: 64,
+        };
+        let b = FrontDoorStats {
+            requests: 50,
+            batches: 1,
+            size_flushes: 0,
+            deadline_flushes: 0,
+            backpressure_flushes: 1,
+            drain_flushes: 1,
+            max_queue_depth: 30,
+            fill_target: 128,
+            mean_fill_fraction: 1.0,
+            p50_wait_ticks: 5,
+            p99_wait_ticks: 8,
+            max_wait_ticks: 40,
+            maintain_calls: 0,
+            refreshed_rows: 0,
+        };
+        let mut m = a.clone();
+        m += &b;
+        // Counters sum.
+        assert_eq!(m.requests, 150);
+        assert_eq!(m.batches, 5);
+        assert_eq!(m.size_flushes, 3);
+        assert_eq!(m.deadline_flushes, 1);
+        assert_eq!(m.backpressure_flushes, 1);
+        assert_eq!(m.drain_flushes, 1);
+        assert_eq!(m.maintain_calls, 2);
+        assert_eq!(m.refreshed_rows, 64);
+        // Extrema max; percentiles take the pessimistic max per side.
+        assert_eq!(m.max_queue_depth, 30);
+        assert_eq!(m.max_wait_ticks, 40);
+        assert_eq!(m.p50_wait_ticks, 5);
+        assert_eq!(m.p99_wait_ticks, 10);
+        // Batch-weighted mean fill: (0.5*4 + 1.0*1) / 5.
+        assert!((m.mean_fill_fraction - 0.6).abs() < 1e-12);
+
+        // Merging an empty (default) side is a no-op on the mean.
+        let mut e = FrontDoorStats::default();
+        e += &a;
+        assert_eq!(e, a);
+
+        // Sum folds the same way.
+        let folded: FrontDoorStats = [a, b].into_iter().sum();
         assert_eq!(folded, m);
     }
 

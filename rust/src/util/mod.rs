@@ -9,7 +9,7 @@ pub mod sync;
 
 pub use error::{Error, Result};
 pub use json::Json;
-pub use rng::Rng;
+pub use rng::{Rng, RngState};
 pub use sync::lock_unpoisoned;
 
 /// Round half away from zero — matches `jnp.sign(x)*jnp.floor(|x|+0.5)` used

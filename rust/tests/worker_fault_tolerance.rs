@@ -1,0 +1,421 @@
+//! Fault-tolerant remote shard serving (the "Remote shard workers"
+//! contract in `coordinator::remote`): three properties, all under the
+//! seeded deterministic [`ChaosPlan`] — zero wall-clock dependence
+//! anywhere (contract C6-TIME):
+//!
+//! 1. **No-fault bit-identity** — with no injected faults, serving
+//!    through per-shard worker *processes* is bit-identical — per-query
+//!    scores, matched peptides, cumulative marginal `OpCounts`, health,
+//!    coverage, final summary — to the in-process
+//!    `ShardedSearchEngine`, for every backend, shard count, batch
+//!    split, and front-door coalescing policy.
+//! 2. **Kill-and-respawn convergence** — killed, hung, and
+//!    frame-corrupted workers are respawned from the stored initial
+//!    chained RNG state plus the age/refresh replay log, and serving
+//!    converges back to bit-identity (even when the fault lands *after*
+//!    drift and a refresh pass). The logical clock's exact final value
+//!    pins the attempt/backoff/deadline tick math.
+//! 3. **Graceful degradation** — a shard that exhausts its retry budget
+//!    degrades the batch to the surviving shards: results equal an
+//!    oracle merged over the surviving shards only, and the partial
+//!    [`Coverage`] is reported, never silently dropped.
+//!
+//! Worker processes are the serving binary itself re-exec'd under the
+//! hidden `worker` subcommand (`CARGO_BIN_EXE_specpcm`).
+
+use specpcm::backend::BackendDispatcher;
+use specpcm::config::SpecPcmConfig;
+use specpcm::coordinator::{
+    ArrivalTrace, BatchOutcome, ChaosEvent, ChaosKind, ChaosPlan, CoalescePolicy, Coverage,
+    FrontDoor, GroupCharges, HdFrontend, RefreshPolicy, RemoteEngine, ShardedSearchEngine,
+};
+use specpcm::energy::OpCounts;
+use specpcm::ms::{SearchDataset, Spectrum};
+use specpcm::util::Rng;
+
+/// The serving binary; its hidden `worker` subcommand is what the
+/// supervisor spawns per shard.
+const EXE: &str = env!("CARGO_BIN_EXE_specpcm");
+
+/// 12 banks per engine so the 90+90-row dataset genuinely needs
+/// multiple shards (same geometry as the sharded-serving suite).
+fn cfg() -> SpecPcmConfig {
+    SpecPcmConfig {
+        hd_dim: 2048,
+        bucket_width: 5.0,
+        num_banks: 12,
+        ..SpecPcmConfig::paper_search()
+    }
+}
+
+fn dataset() -> SearchDataset {
+    SearchDataset::generate("wft", 53, 90, 40, 0.8, 0.2, 0, 0)
+}
+
+fn bits(pairs: &[(f32, f32)]) -> Vec<(u32, u32)> {
+    pairs.iter().map(|&(t, d)| (t.to_bits(), d.to_bits())).collect()
+}
+
+/// Remote batches must equal in-process batches bit-for-bit in every
+/// result-bearing field. Telemetry that legitimately differs across the
+/// process boundary (cache hit/miss split, wall timers, retry counts) is
+/// deliberately not compared here.
+fn assert_batches_match(remote: &[BatchOutcome], sharded: &[BatchOutcome], tag: &str) {
+    assert_eq!(remote.len(), sharded.len(), "{tag}: batch counts");
+    for (bi, (r, s)) in remote.iter().zip(sharded).enumerate() {
+        assert_eq!(bits(&r.pairs), bits(&s.pairs), "{tag}[{bi}]: pairs");
+        assert_eq!(r.matched, s.matched, "{tag}[{bi}]: matched peptides");
+        assert_eq!(r.ops, s.ops, "{tag}[{bi}]: marginal ops");
+        assert_eq!(r.health, s.health, "{tag}[{bi}]: device health");
+        assert_eq!(r.coverage, s.coverage, "{tag}[{bi}]: coverage");
+        assert!(r.coverage.is_full(), "{tag}[{bi}]: expected full coverage");
+        assert_eq!(r.degraded_shards, 0, "{tag}[{bi}]: degraded shards");
+    }
+}
+
+/// Property 1: for every backend x shard count x batch split, no-fault
+/// remote serving is bit-identical to the in-process sharded engine —
+/// programming ops, per-batch results, and the folded summary — and the
+/// logical clock advances exactly one tick per (batch, shard) attempt.
+#[test]
+fn no_fault_remote_serving_is_bit_identical_to_sharded() {
+    let ds = dataset();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+
+    for n_shards in [2usize, 3] {
+        for be in [BackendDispatcher::reference(), BackendDispatcher::parallel(4)] {
+            let tag = format!("{}x{n_shards}", be.primary_name());
+            let sharded = ShardedSearchEngine::program(cfg(), &ds, &be, n_shards).unwrap();
+            let remote =
+                RemoteEngine::program(cfg(), &ds, n_shards, EXE, ChaosPlan::none()).unwrap();
+
+            assert_eq!(remote.n_shards(), n_shards, "{tag}");
+            assert_eq!(remote.n_refs(), sharded.n_refs(), "{tag}: programmed rows");
+            assert_eq!(
+                remote.program_ops(),
+                sharded.program_ops(),
+                "{tag}: one-time programming ops"
+            );
+
+            let mut served = 0u64;
+            for n_batches in [1usize, 3] {
+                let r = remote.serve_chunked(&queries, n_batches, &be).unwrap();
+                let s = sharded.serve_chunked(&queries, n_batches, &be).unwrap();
+                assert_batches_match(&r, &s, &format!("{tag}/b{n_batches}"));
+                for b in &r {
+                    assert_eq!(b.retries, 0, "{tag}: no-fault retries");
+                }
+                served += r.len() as u64;
+            }
+            // One score attempt per (batch, shard), nothing else ticks.
+            assert_eq!(remote.clock(), served * n_shards as u64, "{tag}: clock");
+
+            let stats = remote.worker_stats();
+            assert_eq!(stats.workers, n_shards, "{tag}");
+            assert_eq!(stats.workers_up, n_shards, "{tag}");
+            assert_eq!(stats.respawns, 0, "{tag}");
+            assert_eq!(stats.retries, 0, "{tag}");
+            assert_eq!(stats.degraded_batches, 0, "{tag}");
+            assert_eq!(stats.breakers_open, 0, "{tag}");
+
+            // The folded summary — FDR, ops, energy — is the same fold.
+            let rb = remote.serve_chunked(&queries, 2, &be).unwrap();
+            let sb = sharded.serve_chunked(&queries, 2, &be).unwrap();
+            let rs = remote.finalize(&queries, &rb).unwrap();
+            let ss = sharded.finalize(&queries, &sb).unwrap();
+            assert_eq!(rs.identified, ss.identified, "{tag}: identified");
+            assert_eq!(rs.correct, ss.correct, "{tag}: correct");
+            assert_eq!(bits(&rs.pairs), bits(&ss.pairs), "{tag}: summary pairs");
+            assert_eq!(rs.ops, ss.ops, "{tag}: summary ops");
+            assert_eq!(
+                rs.report.total_j().to_bits(),
+                ss.report.total_j().to_bits(),
+                "{tag}: summary energy"
+            );
+        }
+    }
+}
+
+/// Property 1, front-door leg: the remote engine behind `ServeEngine` is
+/// indistinguishable from in-process serving for every coalescing
+/// policy — fan-back and cumulative marginal ops match the one-batch
+/// arrival-order oracle.
+#[test]
+fn front_door_drives_remote_workers_identically_to_in_process() {
+    let ds = dataset();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let be = BackendDispatcher::reference();
+
+    let sharded = ShardedSearchEngine::program(cfg(), &ds, &be, 2).unwrap();
+    let oracle = sharded.search_batch(&queries, &be).unwrap();
+    let mut remote = RemoteEngine::program(cfg(), &ds, 2, EXE, ChaosPlan::none()).unwrap();
+
+    let mut rng = Rng::new(0xfau64);
+    let traces = [
+        ("poisson", ArrivalTrace::poisson_from_rng(&mut rng, queries.len(), 3.0)),
+        ("burst", ArrivalTrace::uniform(queries.len(), 0)),
+    ];
+    let policies = [
+        CoalescePolicy::Off,
+        CoalescePolicy::Size { max_batch: 7 },
+        CoalescePolicy::SizeDeadline {
+            max_batch: 16,
+            deadline_ticks: 5,
+        },
+    ];
+    for (tname, trace) in &traces {
+        for policy in policies {
+            let tag = format!("{tname}/{}", policy.name());
+            let fd = FrontDoor::new(policy);
+            let served = fd.serve_trace(&mut remote, &queries, trace, &be).unwrap();
+            assert_eq!(bits(&served.pairs), bits(&oracle.pairs), "{tag}: fan-back");
+            assert_eq!(served.matched, oracle.matched, "{tag}: matched");
+            assert_eq!(served.ops, oracle.ops, "{tag}: cumulative marginal ops");
+        }
+    }
+    assert_eq!(remote.worker_stats().retries, 0);
+}
+
+/// Property 2: kill and corrupt-frame faults are retried through
+/// respawn-from-log and serving stays bit-identical — including a kill
+/// that lands *after* `advance_age` + a refresh pass, which forces the
+/// respawn to replay both mutations to reconverge. The exact final clock
+/// pins the attempt (+1) and backoff (+base << attempt) tick model.
+#[test]
+fn killed_and_corrupted_workers_respawn_and_converge_to_bit_identity() {
+    let ds = dataset();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let be = BackendDispatcher::reference();
+
+    // Tick trace (2 shards, 3+2 batches, backoff base 8, retries 3):
+    //   batch 1: s0 attempt@1 killed -> backoff to 9, respawn, ok@10;
+    //            s1 attempt@11 corrupted -> backoff to 19, respawn, ok@20
+    //   batches 2-3: 21, 22, 23, 24  (age + maintain do not tick)
+    //   batch 4: s0 attempt@25 killed -> backoff to 33, respawn replays
+    //            the age+refresh log, ok@34; s1 ok@35
+    //   batch 5: 36, 37
+    let chaos = ChaosPlan::new(vec![
+        ChaosEvent { tick: 1, shard: 0, kind: ChaosKind::Kill },
+        ChaosEvent { tick: 2, shard: 1, kind: ChaosKind::CorruptFrame },
+        ChaosEvent { tick: 25, shard: 0, kind: ChaosKind::Kill },
+    ]);
+    let mut sharded = ShardedSearchEngine::program(cfg(), &ds, &be, 2).unwrap();
+    let mut remote = RemoteEngine::program(cfg(), &ds, 2, EXE, chaos).unwrap();
+
+    let r1 = remote.serve_chunked(&queries, 3, &be).unwrap();
+    let s1 = sharded.serve_chunked(&queries, 3, &be).unwrap();
+    assert_batches_match(&r1, &s1, "pre-maintain");
+    assert_eq!(r1[0].retries, 2, "both faults land in batch 1");
+    assert_eq!(r1[1].retries + r1[2].retries, 0);
+    assert_eq!(remote.clock(), 24);
+
+    // Drift + one refresh pass on both engines: identical selection and
+    // identical one-time ledger growth.
+    sharded.advance_age(500.0);
+    remote.advance_age(500.0);
+    let policy = RefreshPolicy {
+        max_age_seconds: 0.0,
+        budget: 6,
+    };
+    let so = sharded.maintain(&policy);
+    let ro = remote.maintain(&policy);
+    assert_eq!((ro.buckets, ro.rows), (so.buckets, so.rows), "refresh outcome");
+    assert_eq!(ro.ops, so.ops, "refresh ops");
+    assert_eq!(remote.program_ops(), sharded.program_ops(), "one-time ledger");
+
+    // The post-maintain kill: the respawn must replay age + refresh to
+    // stay bit-identical to the shard that never died.
+    let r2 = remote.serve_chunked(&queries, 2, &be).unwrap();
+    let s2 = sharded.serve_chunked(&queries, 2, &be).unwrap();
+    assert_batches_match(&r2, &s2, "post-maintain");
+    assert_eq!(r2[0].retries, 1, "post-maintain kill lands in batch 4");
+    assert_eq!(remote.clock(), 37);
+    assert_eq!(remote.device_health(), sharded.device_health());
+
+    let stats = remote.worker_stats();
+    assert_eq!(stats.respawns, 3);
+    assert_eq!(stats.retries, 3);
+    assert_eq!(stats.degraded_batches, 0);
+    assert_eq!(stats.workers_up, 2);
+    assert_eq!(stats.breakers_open, 0);
+
+    let all_r: Vec<BatchOutcome> = r1.into_iter().chain(r2).collect();
+    let all_s: Vec<BatchOutcome> = s1.into_iter().chain(s2).collect();
+    let rs = remote.finalize(&queries, &all_r).unwrap();
+    let ss = sharded.finalize(&queries, &all_s).unwrap();
+    assert_eq!(rs.identified, ss.identified);
+    assert_eq!(rs.ops, ss.ops, "chaos never leaks into the op ledger");
+}
+
+/// Property 2, hang leg: a hang charges the full deadline on the logical
+/// clock before the worker is declared dead, then retry converges.
+/// Trace: attempt@1 hangs (+1024 deadline -> 1025), backoff +8 -> 1033,
+/// respawn ok@1034, s1 ok@1035.
+#[test]
+fn hung_worker_is_charged_the_deadline_and_recovers() {
+    let ds = dataset();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let be = BackendDispatcher::reference();
+
+    let chaos = ChaosPlan::new(vec![ChaosEvent {
+        tick: 1,
+        shard: 0,
+        kind: ChaosKind::Hang,
+    }]);
+    let sharded = ShardedSearchEngine::program(cfg(), &ds, &be, 2).unwrap();
+    let remote = RemoteEngine::program(cfg(), &ds, 2, EXE, chaos).unwrap();
+
+    let r = remote.search_batch(&queries, &be).unwrap();
+    let s = sharded.search_batch(&queries, &be).unwrap();
+    assert_batches_match(&[r], &[s], "hang");
+    assert_eq!(remote.clock(), 1035, "deadline + backoff tick math");
+    let stats = remote.worker_stats();
+    assert_eq!(stats.respawns, 1);
+    assert_eq!(stats.retries, 1);
+    assert_eq!(stats.workers_up, 2);
+}
+
+/// Property 3: a shard that exhausts its retry budget degrades the batch
+/// instead of failing it. The degraded results equal an oracle merged
+/// over the surviving shards only (same strict-`>` shard-order merge,
+/// same central charging), the partial coverage is reported exactly, the
+/// breaker opens — and the next batch's half-open probe heals the shard
+/// back to full bit-identical coverage.
+#[test]
+fn exhausted_budget_degrades_to_surviving_shards_with_reported_coverage() {
+    let ds = dataset();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let be = BackendDispatcher::reference();
+
+    let mut c = cfg();
+    c.remote.retries = 0; // fail-fast: no second attempt
+    c.remote.breaker_threshold = 1;
+    // Batch 1 ticks: s0 ok@1, s1 killed@2 (budget spent -> degraded,
+    // breaker opens), s2 ok@3.
+    let chaos = ChaosPlan::new(vec![ChaosEvent {
+        tick: 2,
+        shard: 1,
+        kind: ChaosKind::Kill,
+    }]);
+    let sharded = ShardedSearchEngine::program(c.clone(), &ds, &be, 3).unwrap();
+    let remote = RemoteEngine::program(c.clone(), &ds, 3, EXE, chaos).unwrap();
+
+    let batch = remote.search_batch(&queries, &be).unwrap();
+    let surviving =
+        (remote.plan().range(0).len() + remote.plan().range(2).len()) as u64;
+    assert_eq!(batch.degraded_shards, 1);
+    assert_eq!(batch.retries, 0, "retries = 0 means fail-fast");
+    assert_eq!(
+        batch.coverage,
+        Coverage {
+            rows_searched: surviving,
+            rows_total: remote.n_refs() as u64,
+        },
+        "partial coverage is reported exactly"
+    );
+    assert!(!batch.coverage.is_full());
+    assert!(batch.coverage.fraction() < 1.0);
+
+    // Oracle: the full-plan in-process shards (identical noise chaining),
+    // merged over shards 0 and 2 only, charged centrally.
+    let (packed, _) = sharded.shard(0).encode_queries(&queries, &be).unwrap();
+    let mut oracle_ops = OpCounts::default();
+    HdFrontend::new(&c).count_encode_ops(queries.len(), &mut oracle_ops);
+    let mut best: Vec<(f32, f32, Option<u32>)> =
+        vec![(f32::NEG_INFINITY, f32::NEG_INFINITY, None); queries.len()];
+    let mut charges = GroupCharges::default();
+    for si in [0usize, 2] {
+        let scored = sharded.shard(si).score_packed(&queries, &packed, &be).unwrap();
+        for (qi, &(t, d, m)) in scored.best.iter().enumerate() {
+            if t > best[qi].0 {
+                best[qi].0 = t;
+                best[qi].2 = m;
+            }
+            if d > best[qi].1 {
+                best[qi].1 = d;
+            }
+        }
+        charges.merge(&scored.charges);
+    }
+    charges.charge(sharded.shard(0).packed_width(), &mut oracle_ops);
+    let oracle_pairs: Vec<(f32, f32)> = best.iter().map(|&(t, d, _)| (t, d)).collect();
+    let oracle_matched: Vec<Option<u32>> = best.iter().map(|&(_, _, m)| m).collect();
+    assert_eq!(bits(&batch.pairs), bits(&oracle_pairs), "degraded pairs");
+    assert_eq!(batch.matched, oracle_matched, "degraded matches");
+    assert_eq!(batch.ops, oracle_ops, "degraded ops cover survivors only");
+
+    let stats = remote.worker_stats();
+    assert_eq!(stats.degraded_batches, 1);
+    assert_eq!(stats.workers_up, 2);
+    assert_eq!(stats.breakers_open, 1);
+    assert_eq!(stats.respawns, 0);
+
+    // The open breaker's single half-open probe respawns the shard; the
+    // next batch is back to full coverage and bit-identity.
+    let b2 = remote.search_batch(&queries, &be).unwrap();
+    let s2 = sharded.search_batch(&queries, &be).unwrap();
+    assert_batches_match(&[b2], &[s2], "healed");
+    let stats = remote.worker_stats();
+    assert_eq!(stats.respawns, 1);
+    assert_eq!(stats.workers_up, 3);
+    assert_eq!(stats.breakers_open, 0);
+    assert_eq!(stats.degraded_batches, 1, "only the first batch degraded");
+}
+
+/// Degradation has a floor: a batch with zero surviving shards is a
+/// typed error, not an empty result set.
+#[test]
+fn zero_surviving_shards_is_a_typed_error() {
+    let ds = dataset();
+    let queries: Vec<&Spectrum> = ds.queries.iter().collect();
+    let be = BackendDispatcher::reference();
+
+    let mut c = cfg();
+    c.num_banks = 36; // whole library fits one worker
+    c.remote.retries = 0;
+    let chaos = ChaosPlan::new(vec![ChaosEvent {
+        tick: 1,
+        shard: 0,
+        kind: ChaosKind::Kill,
+    }]);
+    let remote = RemoteEngine::program(c, &ds, 1, EXE, chaos).unwrap();
+    let err = remote.search_batch(&queries, &be).unwrap_err();
+    assert!(
+        err.to_string().contains("all 1 shards down"),
+        "got: {err}"
+    );
+}
+
+/// The CLI seam (satellite checks at the binary level): misuse of the
+/// remote flags and the hidden worker subcommand exits 2 with a typed
+/// one-line error, and a worker fed a clean EOF exits 0.
+#[test]
+fn cli_worker_misuse_exits_2_and_clean_worker_eof_exits_0() {
+    let run = |args: &[&str]| {
+        std::process::Command::new(EXE)
+            .args(args)
+            .stdin(std::process::Stdio::null())
+            .output()
+            .unwrap()
+    };
+
+    let out = run(&["search", "--workers", "2", "--shards", "auto"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("mutually exclusive"),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    let out = run(&["search", "--workers", "banana"]);
+    assert_eq!(out.status.code(), Some(2));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--workers"));
+
+    let out = run(&["worker", "--workers", "2"]);
+    assert_eq!(out.status.code(), Some(2));
+
+    // A worker that reads EOF before any request exits its loop cleanly.
+    let out = run(&["worker"]);
+    assert_eq!(out.status.code(), Some(0));
+    assert!(out.stdout.is_empty(), "no unsolicited response frames");
+}
